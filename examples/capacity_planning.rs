@@ -1,0 +1,47 @@
+//! Capacity planning across all five Table 1 workloads — the headline
+//! claim: Tuna + TPP saves 8.5% of fast memory on average (up to 16% for
+//! Btree) at a 5% performance-loss target, vs the 5% Pond reports.
+//!
+//! ```sh
+//! cargo run --release --example capacity_planning
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::report::{pct, Table};
+use tuna::workloads::{ALL_NAMES, TABLE1};
+
+fn main() -> tuna::Result<()> {
+    let db = Arc::new(ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?);
+    let tuna_cfg = TunaConfig::default();
+
+    let mut t = Table::new(
+        "Capacity planning: Tuna + TPP at τ = 5% (vs Pond's 5% saving)",
+        &["Workload", "paper RSS", "mean FM saving", "max FM saving", "overall loss"],
+    );
+    let mut savings = Vec::new();
+    for name in ALL_NAMES {
+        let spec = RunSpec::new(name).with_intervals(300);
+        let baseline = coordinator::run_fm_only(&spec)?;
+        let run = coordinator::run_tuna_native(&spec, db.clone(), &tuna_cfg)?;
+        let loss = coordinator::overall_loss(&run.result, &baseline);
+        let rss = TABLE1.iter().find(|w| w.name == name).unwrap().paper_rss_gb;
+        t.row(vec![
+            name.to_string(),
+            format!("{rss:.1} G"),
+            pct(run.mean_saving()),
+            pct(run.max_saving()),
+            pct(loss),
+        ]);
+        savings.push(run.mean_saving());
+        eprintln!("{name}: done");
+    }
+    t.print();
+    let avg = savings.iter().sum::<f64>() / savings.len() as f64;
+    println!("\naverage FM saving: {}  (paper: 8.5%)", pct(avg));
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: the smallest end-to-end Tuna run.
+//!
+//! Builds a tiny performance database (offline component), runs the Btree
+//! workload under TPP with the Tuna tuner attached (online component,
+//! native query backend), and reports fast-memory saving vs performance
+//! loss against the fast-memory-only baseline.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{build_database, BuildParams};
+use tuna::report::pct;
+
+fn main() -> tuna::Result<()> {
+    // 1. Offline: a small database (400 configs × 20 fast-memory sizes).
+    let params = BuildParams {
+        n_configs: 400,
+        fractions: (0..20).map(|i| 1.0 - 0.04 * i as f32).collect(),
+        ..BuildParams::default()
+    };
+    println!("building performance database ({} configs)...", params.n_configs);
+    let db = Arc::new(build_database(&params));
+
+    // 2. Online: Btree under TPP + Tuna, τ = 5%, period 2.5 s.
+    let spec = RunSpec::new("Btree").with_intervals(200);
+    let tuna_cfg = TunaConfig::default();
+    println!("running {} for {} intervals...", spec.workload, spec.intervals);
+    let baseline = coordinator::run_fm_only(&spec)?;
+    let run = coordinator::run_tuna_native(&spec, db, &tuna_cfg)?;
+    let loss = coordinator::overall_loss(&run.result, &baseline);
+
+    println!();
+    println!("Tuna on {}:", spec.workload);
+    println!("  tuning decisions   : {}", run.decisions.len());
+    println!("  mean FM saving     : {}", pct(run.mean_saving()));
+    println!("  max  FM saving     : {}", pct(run.max_saving()));
+    println!("  overall perf loss  : {} (target {})", pct(loss), pct(tuna_cfg.loss_target));
+    println!("  promotions         : {}", run.result.total_promoted());
+    println!("  demotions          : {}", run.result.total_demoted());
+    assert!(run.mean_saving() > 0.0, "expected some fast-memory saving");
+    println!("\nquickstart OK");
+    Ok(())
+}

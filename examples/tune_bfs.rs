@@ -1,0 +1,85 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): the full system
+//! on a real small workload.
+//!
+//! All three layers compose here:
+//!   L1/L2 — the AOT JAX+Pallas perf-DB query executable (HLO text from
+//!           `make artifacts`) loaded and run via PJRT;
+//!   L3    — the rust coordinator: BFS over a real synthetic power-law
+//!           graph in the tiered-memory simulator under TPP, with the
+//!           Tuna tuner reprogramming the reclaim watermarks every 2.5 s.
+//!
+//! Reports the paper's headline metric for BFS: fast-memory saving at a
+//! 5% performance-loss target (paper: ~10.5% saving at 4.4% loss in the
+//! motivation study; ~2% overall loss in §6.2).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example tune_bfs
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::perfdb::native::{NativeNn, NnQuery};
+use tuna::report::{ascii_series, pct};
+use tuna::runtime::XlaNn;
+
+fn main() -> tuna::Result<()> {
+    // Performance database: load the cached artifact or build it.
+    let db = Arc::new(ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?);
+
+    // Query backend: the AOT XLA executable if artifacts exist, else the
+    // native oracle (with a warning — the point of this example is the
+    // full three-layer stack).
+    let artifacts = Path::new("artifacts");
+    let (query, backend): (Box<dyn NnQuery>, &str) =
+        match XlaNn::from_manifest(artifacts, &db) {
+            Ok(x) => (Box::new(x), "xla (AOT pallas kernel via PJRT)"),
+            Err(e) => {
+                eprintln!("WARNING: XLA backend unavailable ({e:#}); run `make artifacts`.");
+                (Box::new(NativeNn::new(&db)), "native (fallback)")
+            }
+        };
+    println!("query backend: {backend}");
+
+    // The workload: BFS at paper scale (12.4 paper-GB RSS), 500 intervals
+    // ≈ 50 paper-seconds, tuning every 2.5 s with τ = 5%.
+    let spec = RunSpec::new("BFS").with_intervals(500);
+    let tuna_cfg = TunaConfig::default();
+
+    println!("baseline: BFS with all of RSS in fast memory...");
+    let baseline = coordinator::run_fm_only(&spec)?;
+    println!("tuned: BFS under TPP + Tuna...");
+    let run = coordinator::run_tuna(&spec, db, query, &tuna_cfg)?;
+    let loss = coordinator::overall_loss(&run.result, &baseline);
+
+    // FM-fraction trace (Fig. 4-style series).
+    let rss = run.result.trace[0].fast_used.max(1); // alloc epoch fills RSS
+    let fm = coordinator::fm_fraction_series(&run.result, rss);
+    let xs: Vec<f64> = (0..fm.len()).map(|i| i as f64 * 0.1).collect();
+    println!("\n{}", ascii_series("fast-memory fraction over time (paper-s)", &xs, &fm, 8));
+
+    println!("== headline (BFS, τ = 5%) ==");
+    println!("  decisions          : {}", run.decisions.len());
+    println!("  mean FM saving     : {}  (paper motivation: ~10.5%)", pct(run.mean_saving()));
+    println!("  max  FM saving     : {}", pct(run.max_saving()));
+    println!("  overall perf loss  : {}  (paper §6.2: 2%)", pct(loss));
+    println!(
+        "  promotions/failures: {}/{}",
+        run.result.total_promoted(),
+        run.result.total_promote_failed()
+    );
+    if !run.decisions.is_empty() {
+        println!(
+            "  query path/decision: {}",
+            tuna::util::human_ns((run.decide_ns / run.decisions.len() as u128) as u64)
+        );
+    }
+
+    assert!(run.mean_saving() > 0.03, "BFS should save >3% fast memory");
+    assert!(loss < 0.10, "loss {loss} should be near the 5% target");
+    println!("\ntune_bfs OK");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! What-if exploration of §4's watermark mechanism without the tuner:
+//! apply a manual fast-memory schedule (shrink → hold → shrink further →
+//! restore) to BFS and watch kswapd demotions, promotion failures and
+//! per-period loss respond.
+//!
+//! This is the example to read to understand *how* Tuna's only actuator
+//! (the min/low/high reclaim watermarks) changes system behaviour.
+//!
+//! ```sh
+//! cargo run --release --example whatif_watermarks
+//! ```
+
+use tuna::coordinator::{self, RunSpec};
+use tuna::report::{ascii_series, pct, Table};
+use tuna::sim::Engine;
+use tuna::tpp::{Tpp, Watermarks};
+use tuna::sim::{IntervalModel, MachineModel};
+use tuna::workloads;
+
+fn main() -> tuna::Result<()> {
+    let spec = RunSpec::new("BFS").with_intervals(400);
+    let baseline = coordinator::run_fm_only(&spec)?;
+
+    // Manual schedule: fraction of RSS usable in fast memory.
+    let schedule = [
+        (0u32, 1.00f64),
+        (50, 0.92),
+        (150, 0.84),
+        (250, 0.70), // aggressive — expect loss + failures
+        (330, 0.95), // restore
+    ];
+
+    let mut w = workloads::by_name(&spec.workload, spec.seed, spec.intervals).unwrap();
+    let rss = w.rss_pages() as u64;
+    let cap = Engine::fm_capacity(w.rss_pages(), 1.0);
+    let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+    let engine = Engine::new(IntervalModel::new(MachineModel::default()));
+    let run = engine.run(w.as_mut(), &mut tpp, cap, |t| {
+        schedule
+            .iter()
+            .find(|&&(at, _)| at == t.interval)
+            .map(|&(_, frac)| {
+                Watermarks::for_target_fm(cap, (rss as f64 * frac).ceil() as u64)
+            })
+    });
+
+    let period = 25u32;
+    let loss = coordinator::period_loss_series(&run, &baseline, period);
+    let xs: Vec<f64> = (0..loss.len()).map(|i| (i as f64 + 1.0) * 2.5).collect();
+    println!("{}", ascii_series("per-period loss (vs fast-only)", &xs, &loss, 8));
+
+    let fm = coordinator::fm_fraction_series(&run, rss);
+    let xf: Vec<f64> = (0..fm.len()).map(|i| i as f64 * 0.1).collect();
+    println!("{}", ascii_series("usable FM fraction", &xf, &fm, 6));
+
+    let mut t = Table::new(
+        "watermark schedule response",
+        &["phase start (s)", "FM fraction", "kswapd demotions", "promo failures", "period loss"],
+    );
+    for (i, &(at, frac)) in schedule.iter().enumerate() {
+        let end = schedule.get(i + 1).map(|&(e, _)| e).unwrap_or(spec.intervals);
+        let seg: Vec<_> = run
+            .trace
+            .iter()
+            .filter(|tr| tr.interval > at && tr.interval <= end)
+            .collect();
+        let dem: u64 = seg.iter().map(|tr| tr.demoted_kswapd).sum();
+        let fail: u64 = seg.iter().map(|tr| tr.promote_failed).sum();
+        let t_run: f64 = seg.iter().map(|tr| tr.wall_ns).sum();
+        let t_base: f64 = baseline
+            .trace
+            .iter()
+            .filter(|tr| tr.interval > at && tr.interval <= end)
+            .map(|tr| tr.wall_ns)
+            .sum();
+        t.row(vec![
+            format!("{:.1}", at as f64 * 0.1),
+            pct(frac),
+            dem.to_string(),
+            fail.to_string(),
+            pct((t_run - t_base) / t_base),
+        ]);
+    }
+    t.print();
+    println!("\nwhatif_watermarks OK");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT pipeline: lower the L2 query model (wrapping the L1 Pallas kernel)
+to HLO **text** and write the artifacts the rust runtime loads via PJRT.
+
+HLO text — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (under --out-dir, default ../artifacts):
+  perfdb_query_n{N}.hlo.txt       1-query executable  (the tuner's path)
+  perfdb_query_q{Q}_n{N}.hlo.txt  batched executable  (throughput bench)
+  manifest.txt                    key=value index the rust side parses
+
+Python runs ONCE, at build time (`make artifacts`); it is never on the
+request path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.distance import BLOCK_N, DIMS
+from .model import perfdb_query, perfdb_query_topk
+
+# Database slots in the default artifact. The rust runtime pads its record
+# matrix up to this count (PAD_VALUE rows never win the argmin); builds
+# needing more records regenerate with --n-records.
+DEFAULT_N = 4096
+BATCH_Q = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_query(n_q: int, n_records: int) -> str:
+    q_spec = jax.ShapeDtypeStruct((n_q, DIMS), jnp.float32)
+    db_spec = jax.ShapeDtypeStruct((n_records, DIMS), jnp.float32)
+    lowered = jax.jit(perfdb_query).lower(q_spec, db_spec)
+    return to_hlo_text(lowered)
+
+
+# Top-k variant: the tuner averages the k nearest records' loss curves
+# (distance-weighted), which smooths the step-function character of
+# individual micro-benchmark records.
+TOP_K = 8
+
+
+def lower_query_topk(n_q: int, n_records: int, k: int = TOP_K) -> str:
+    q_spec = jax.ShapeDtypeStruct((n_q, DIMS), jnp.float32)
+    db_spec = jax.ShapeDtypeStruct((n_records, DIMS), jnp.float32)
+    lowered = jax.jit(lambda q, db: perfdb_query_topk(q, db, k=k)).lower(q_spec, db_spec)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, n_records: int, batch_q: int) -> dict:
+    assert n_records % min(BLOCK_N, n_records) == 0
+    os.makedirs(out_dir, exist_ok=True)
+    files = {}
+
+    single = f"perfdb_query_n{n_records}.hlo.txt"
+    with open(os.path.join(out_dir, single), "w") as f:
+        f.write(lower_query(1, n_records))
+    files["single"] = single
+
+    batched = f"perfdb_query_q{batch_q}_n{n_records}.hlo.txt"
+    with open(os.path.join(out_dir, batched), "w") as f:
+        f.write(lower_query(batch_q, n_records))
+    files["batched"] = batched
+
+    topk = f"perfdb_query_top{TOP_K}_n{n_records}.hlo.txt"
+    with open(os.path.join(out_dir, topk), "w") as f:
+        f.write(lower_query_topk(1, n_records))
+    files["topk"] = topk
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# Tuna AOT artifact manifest (parsed by rust/src/runtime)\n")
+        f.write("[artifacts]\n")
+        f.write(f'single = "{single}"\n')
+        f.write(f'batched = "{batched}"\n')
+        f.write(f'topk = "{topk}"\n')
+        f.write(f"top_k = {TOP_K}\n")
+        f.write(f"n_records = {n_records}\n")
+        f.write(f"batch_q = {batch_q}\n")
+        f.write(f"dims = {DIMS}\n")
+        f.write(f"block_n = {min(BLOCK_N, n_records)}\n")
+    files["manifest"] = manifest
+    return files
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n-records", type=int, default=DEFAULT_N)
+    ap.add_argument("--batch-q", type=int, default=BATCH_Q)
+    args = ap.parse_args()
+    files = build(args.out_dir, args.n_records, args.batch_q)
+    for k, v in files.items():
+        print(f"wrote {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: blocked squared-L2 distance between query vectors and
+the performance-database matrix.
+
+This is Tuna's compute hot-spot (the Faiss-index stand-in, DESIGN.md §2):
+every tuning period the runtime searches the database of micro-benchmark
+execution records for the nearest configuration vector. The kernel computes
+
+    dist[q, n] = ||Q[q] - D[n]||^2 = ||Q[q]||^2 - 2 Q[q]·D[n] + ||D[n]||^2
+
+with the cross term as one matmul per database block — the MXU-friendly
+formulation (a (BLOCK_N, DIMS) x (DIMS, Q) systolic matmul per grid step)
+rather than an elementwise diff-square-reduce, which would waste the MXU
+and triple VMEM traffic.
+
+TPU mapping (DESIGN.md §3):
+  * grid over N: each step streams one (BLOCK_N, DIMS) database tile
+    HBM -> VMEM via its BlockSpec (the analogue of Faiss scanning one
+    inverted list);
+  * the query tile (Q, DIMS) is broadcast to every step (index_map pins
+    it to block (0, 0));
+  * f32 accumulate; BLOCK_N = 1024 keeps the working set
+    (1024x8 + 8xQ + 1024xQ floats ~ 40 KiB at Q=1) far under VMEM.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the block shapes in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Database tile size along N. See the VMEM budget note above.
+BLOCK_N = 1024
+
+# Configuration-vector dimensionality (must match rust perfdb::DIMS).
+DIMS = 8
+
+
+def _distance_kernel(q_ref, db_ref, out_ref):
+    """One grid step: distances from all queries to one database block.
+
+    q_ref:   (Q, DIMS)        broadcast query tile
+    db_ref:  (BLOCK_N, DIMS)  database tile for this step
+    out_ref: (Q, BLOCK_N)     output tile
+    """
+    q = q_ref[...]
+    db = db_ref[...]
+    # ||d||^2 per database row: (BLOCK_N,)
+    d_sq = jnp.sum(db * db, axis=1)
+    # ||q||^2 per query row: (Q, 1)
+    q_sq = jnp.sum(q * q, axis=1, keepdims=True)
+    # cross term on the MXU: (Q, BLOCK_N)
+    cross = jnp.dot(q, db.T, preferred_element_type=jnp.float32)
+    out_ref[...] = q_sq - 2.0 * cross + d_sq[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_sq_dists(q, db, block_n=BLOCK_N):
+    """Squared L2 distances, (Q, N), via the blocked Pallas kernel.
+
+    Requires N % block_n == 0 (the AOT pipeline pads the database; the
+    padding rows use a large sentinel so they never win the argmin).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    db = jnp.asarray(db, jnp.float32)
+    n_q, dims = q.shape
+    n, dims2 = db.shape
+    assert dims == DIMS and dims2 == DIMS, f"expected {DIMS}-dim vectors"
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _distance_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_q, DIMS), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, DIMS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_q, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_q, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, db)
+
+
+def vmem_bytes(block_n=BLOCK_N, n_q=1):
+    """Estimated VMEM working set of one grid step (perf accounting)."""
+    f32 = 4
+    db_tile = block_n * DIMS * f32
+    q_tile = n_q * DIMS * f32
+    out_tile = n_q * block_n * f32
+    return db_tile + q_tile + out_tile

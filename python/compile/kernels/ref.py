@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the distance kernel and the query pipeline.
+
+The CORE correctness signal: pytest asserts the Pallas kernel (and the
+whole lowered query model) match these references to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(q, db):
+    """Naive O(Q*N*D) squared L2 distances, (Q, N)."""
+    q = jnp.asarray(q, jnp.float32)
+    db = jnp.asarray(db, jnp.float32)
+    diff = q[:, None, :] - db[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def nearest_ref(q, db):
+    """(indices (Q,), distances (Q,)) of each query's nearest db row."""
+    d = pairwise_sq_dists_ref(q, db)
+    idx = jnp.argmin(d, axis=1)
+    return idx.astype(jnp.int32), jnp.take_along_axis(d, idx[:, None], axis=1)[:, 0]

@@ -1,0 +1,69 @@
+"""L2 JAX model: the performance-database nearest-neighbour query.
+
+The pipeline the rust coordinator executes via PJRT every tuning period:
+
+    perfdb_query(q, db) -> (idx, dist)
+
+where `q` is the (already-normalized — normalization is defined once, in
+rust `perfdb::normalize`) telemetry configuration vector(s) and `db` the
+normalized record matrix (padded to a multiple of the kernel block). The
+distance computation is the L1 Pallas kernel; argmin + gather fuse around
+it in one HLO module, so a query is a single executable invocation with a
+scalar-sized result (no O(N) transfer back to the host).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.distance import pairwise_sq_dists
+
+# Sentinel coordinate for padding rows (real normalized coords are ~[0,1.3],
+# so padded rows sit at distance >= (100-1.3)^2 * 8 from any query).
+PAD_VALUE = 100.0
+
+
+def perfdb_query(q, db):
+    """Nearest database record per query.
+
+    q:  (Q, 8) f32 normalized query vectors
+    db: (N, 8) f32 normalized record vectors, N % BLOCK_N == 0
+    returns (idx (Q,) i32, dist (Q,) f32)
+    """
+    dists = pairwise_sq_dists(q, db)
+    idx = jnp.argmin(dists, axis=1).astype(jnp.int32)
+    dist = jnp.take_along_axis(dists, idx[:, None], axis=1)[:, 0]
+    return idx, dist
+
+
+def perfdb_query_topk(q, db, k=4):
+    """Top-k variant (the tuner's k-NN curve averaging).
+
+    Implemented as k argmin+mask passes rather than `lax.top_k`: the
+    image's XLA 0.5.1 HLO-text parser predates the dedicated `topk` op
+    (its `largest=` attribute fails to parse), while argmin + scatter
+    round-trip cleanly. k is tiny (≤ 8), so the extra passes are noise.
+
+    returns (idx (Q, k) i32, dist (Q, k) f32), ascending by distance.
+    """
+    dists = pairwise_sq_dists(q, db)
+    n_q = dists.shape[0]
+    rows = jnp.arange(n_q)
+    idxs, vals = [], []
+    d = dists
+    for _ in range(k):
+        i = jnp.argmin(d, axis=1)
+        v = jnp.take_along_axis(d, i[:, None], axis=1)[:, 0]
+        idxs.append(i.astype(jnp.int32))
+        vals.append(v)
+        d = d.at[rows, i].set(jnp.float32(3.4e38))
+    return jnp.stack(idxs, axis=1), jnp.stack(vals, axis=1)
+
+
+def pad_db(db, block_n):
+    """Pad the record matrix to a multiple of `block_n` with PAD_VALUE."""
+    n = db.shape[0]
+    padded_n = ((n + block_n - 1) // block_n) * block_n
+    if padded_n == n:
+        return db
+    pad = jnp.full((padded_n - n, db.shape[1]), PAD_VALUE, db.dtype)
+    return jnp.concatenate([db, pad], axis=0)

@@ -1,0 +1,87 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes and value ranges; fixed cases cover the edges
+(single block, multi-block, duplicate rows, extreme values).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.distance import BLOCK_N, DIMS, pairwise_sq_dists, vmem_bytes
+from compile.kernels.ref import pairwise_sq_dists_ref
+
+
+def rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [8, 64, 1024, 4096])
+@pytest.mark.parametrize("n_q", [1, 4])
+def test_kernel_matches_ref(n, n_q):
+    q = rand((n_q, DIMS), seed=n + n_q)
+    db = rand((n, DIMS), seed=n * 7 + n_q)
+    got = pairwise_sq_dists(q, db)
+    want = pairwise_sq_dists_ref(q, db)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_multi_block_grid_covers_every_block():
+    # 4 blocks; plant a distinctive row in each block and check its
+    # distance is exact (catches index_map bugs).
+    n = 4 * BLOCK_N
+    db = np.zeros((n, DIMS), dtype=np.float32)
+    for b in range(4):
+        db[b * BLOCK_N + 17, :] = b + 1.0
+    q = np.zeros((1, DIMS), dtype=np.float32)
+    d = np.asarray(pairwise_sq_dists(q, db))
+    for b in range(4):
+        np.testing.assert_allclose(d[0, b * BLOCK_N + 17], DIMS * (b + 1.0) ** 2, rtol=1e-6)
+
+
+def test_identical_rows_have_zero_distance():
+    db = rand((128, DIMS), seed=3)
+    q = db[42:43]
+    d = np.asarray(pairwise_sq_dists(q, db))
+    assert d[0, 42] == pytest.approx(0.0, abs=1e-5)
+    assert (d >= -1e-4).all(), "squared distances must be non-negative"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    n_q=st.integers(min_value=1, max_value=8),
+    scale=st.floats(min_value=0.01, max_value=50.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_blocks, n_q, scale, seed):
+    # small block so hypothesis can sweep multi-block grids cheaply
+    block = 64
+    n = n_blocks * block
+    q = rand((n_q, DIMS), seed=seed, lo=-scale, hi=scale)
+    db = rand((n, DIMS), seed=seed + 1, lo=-scale, hi=scale)
+    got = np.asarray(pairwise_sq_dists(q, db, block_n=block))
+    want = np.asarray(pairwise_sq_dists_ref(q, db))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+def test_non_multiple_n_is_rejected():
+    q = rand((1, DIMS), seed=1)
+    db = rand((BLOCK_N + 5, DIMS), seed=2)
+    with pytest.raises(AssertionError):
+        pairwise_sq_dists(q, db)
+
+
+def test_wrong_dims_rejected():
+    q = rand((1, DIMS + 1), seed=1)
+    db = rand((64, DIMS + 1), seed=2)
+    with pytest.raises(AssertionError):
+        pairwise_sq_dists(q, db)
+
+
+def test_vmem_budget_within_tpu_limits():
+    # one grid step must fit comfortably in a 16 MiB VMEM (we budget 2 MiB)
+    assert vmem_bytes(BLOCK_N, n_q=1) < 2 * 1024 * 1024
+    assert vmem_bytes(BLOCK_N, n_q=64) < 2 * 1024 * 1024

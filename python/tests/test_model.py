@@ -1,0 +1,81 @@
+"""L2 query-model tests: argmin/gather correctness, padding semantics,
+top-k ablation path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.distance import DIMS
+from compile.kernels.ref import nearest_ref
+from compile.model import PAD_VALUE, pad_db, perfdb_query, perfdb_query_topk
+
+
+def rand(shape, seed, lo=0.0, hi=1.3):
+    # normalized config vectors live in ~[0, 1.3] (rust perfdb::normalize)
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024])
+def test_query_matches_ref(n):
+    q = rand((4, DIMS), seed=n)
+    db = rand((n, DIMS), seed=n + 1)
+    idx, dist = perfdb_query(q, db)
+    ridx, rdist = nearest_ref(q, db)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-5, atol=1e-5)
+
+
+def test_exact_match_wins():
+    db = rand((512, DIMS), seed=9)
+    q = db[137:138]
+    idx, dist = perfdb_query(q, db)
+    assert int(idx[0]) == 137
+    assert float(dist[0]) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_padding_rows_never_win():
+    db = rand((100, DIMS), seed=5)
+    padded = pad_db(jnp.asarray(db), 64)  # pads 100 -> 128
+    assert padded.shape[0] == 128
+    assert float(padded[100, 0]) == PAD_VALUE
+    q = rand((8, DIMS), seed=6)
+    idx, _ = perfdb_query(q, padded)
+    assert (np.asarray(idx) < 100).all(), "a padding row won the argmin"
+
+
+def test_pad_db_noop_when_aligned():
+    db = jnp.asarray(rand((128, DIMS), seed=1))
+    assert pad_db(db, 64) is db
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 192]),
+    n_q=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_query_matches_ref_hypothesis(n, n_q, seed):
+    q = rand((n_q, DIMS), seed=seed)
+    db = rand((n, DIMS), seed=seed + 1)
+    idx, dist = perfdb_query(q, db)
+    ridx, rdist = nearest_ref(q, db)
+    # ties can differ in index; distances must match exactly-ish
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-4, atol=1e-5)
+    d = np.asarray(
+        ((np.asarray(q)[:, None, :] - np.asarray(db)[None, :, :]) ** 2).sum(-1)
+    )
+    got = d[np.arange(n_q), np.asarray(idx)]
+    np.testing.assert_allclose(got, np.asarray(rdist), rtol=1e-4, atol=1e-5)
+
+
+def test_topk_is_sorted_and_contains_nearest():
+    db = rand((256, DIMS), seed=2)
+    q = rand((3, DIMS), seed=3)
+    idx, dist = perfdb_query_topk(q, db, k=5)
+    assert idx.shape == (3, 5)
+    d = np.asarray(dist)
+    assert (np.diff(d, axis=1) >= -1e-6).all(), "top-k distances must ascend"
+    nidx, _ = perfdb_query(q, db)
+    assert (np.asarray(idx)[:, 0] == np.asarray(nidx)).all()

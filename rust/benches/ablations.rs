@@ -1,0 +1,134 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! (a) per-page serialization term on/off — the asymmetry that produces
+//!     Table 2's "error grows as FM shrinks" trend;
+//! (b) kswapd reclaim budget — the Fig. 1 cliff's failure dynamics;
+//! (c) TPP promotion threshold `hot_thr`;
+//! (d) k-NN averaging vs 1-NN on the query side;
+//! (e) policy family: TPP (fixed hot_thr) vs MEMTIS (dynamic hot_thr)
+//!     vs first-touch under the same fast-memory pressure.
+
+use std::path::Path;
+
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::perfdb::native::NativeNn;
+use tuna::perfdb::normalize;
+use tuna::report::{pct, results_dir, Table};
+use tuna::sim::{Engine, IntervalModel, MachineModel};
+use tuna::tpp::{Tpp, Watermarks};
+use tuna::workloads;
+
+fn main() -> tuna::Result<()> {
+    // --- (a) serialization term ---
+    let mut t_a = Table::new(
+        "(a) per-page serialization term (BFS @ 85% FM)",
+        &["model", "loss vs fast-only"],
+    );
+    for serialization in [true, false] {
+        let run_with = |fraction: f64| {
+            let mut w = workloads::by_name("BFS", 42, 200).unwrap();
+            let cap = Engine::fm_capacity(w.rss_pages(), fraction);
+            let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+            let mut model = IntervalModel::new(MachineModel::default());
+            model.serialization = serialization;
+            Engine::new(model).run(w.as_mut(), &mut tpp, cap, |_| None)
+        };
+        let base = run_with(1.0);
+        let small = run_with(0.85);
+        t_a.row(vec![
+            if serialization { "with serialization".into() } else { "without (microbench-optimistic)".into() },
+            pct(coordinator::overall_loss(&small, &base)),
+        ]);
+    }
+    t_a.print();
+    t_a.to_csv(&results_dir().join("ablation_serialization.csv"))?;
+
+    // --- (b) kswapd budget ---
+    let mut t_b = Table::new(
+        "(b) kswapd reclaim budget (BFS @ 70% FM)",
+        &["pages/interval", "loss", "promotions", "failures"],
+    );
+    for budget in [8u64, 32, 128, 512] {
+        let mut machine = MachineModel::default();
+        machine.kswapd_pages_per_interval = budget;
+        let mut spec = RunSpec::new("BFS").with_intervals(200).with_fraction(0.7);
+        spec.machine = machine.clone();
+        let base_spec = spec.clone().with_fraction(1.0);
+        let base = coordinator::run_tpp(&base_spec)?;
+        let run = coordinator::run_tpp(&spec)?;
+        t_b.row(vec![
+            budget.to_string(),
+            pct(coordinator::overall_loss(&run, &base)),
+            run.total_promoted().to_string(),
+            run.total_promote_failed().to_string(),
+        ]);
+    }
+    t_b.print();
+    t_b.to_csv(&results_dir().join("ablation_kswapd.csv"))?;
+
+    // --- (c) hot_thr ---
+    let mut t_c = Table::new(
+        "(c) TPP promotion threshold (SSSP @ 85% FM)",
+        &["hot_thr", "loss", "promotions", "failures"],
+    );
+    for hot_thr in [2u32, 4, 8] {
+        let mut spec = RunSpec::new("SSSP").with_intervals(200).with_fraction(0.85);
+        spec.hot_thr = hot_thr;
+        let base = coordinator::run_tpp(&spec.clone().with_fraction(1.0))?;
+        let run = coordinator::run_tpp(&spec)?;
+        t_c.row(vec![
+            hot_thr.to_string(),
+            pct(coordinator::overall_loss(&run, &base)),
+            run.total_promoted().to_string(),
+            run.total_promote_failed().to_string(),
+        ]);
+    }
+    t_c.print();
+    t_c.to_csv(&results_dir().join("ablation_hot_thr.csv"))?;
+
+    // --- (d) 1-NN vs k-NN averaging ---
+    let db = ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?;
+    let nn = NativeNn::new(&db);
+    let mut t_d = Table::new(
+        "(d) query: 1-NN vs k-NN-averaged predicted min fraction (BFS profile, τ=5%)",
+        &["k", "predicted min FM fraction"],
+    );
+    let spec = RunSpec::new("BFS").with_intervals(150);
+    let (_, cfg) = coordinator::profile_tpp(&spec)?;
+    let q = normalize(&cfg.as_array());
+    for k in [1usize, 3, 5] {
+        let top = nn.top_k(&q, k);
+        let frac = top
+            .iter()
+            .filter_map(|&(r, _)| db.min_fraction_within(r, 0.05))
+            .sum::<f64>()
+            / top.len() as f64;
+        t_d.row(vec![k.to_string(), format!("{frac:.3}")]);
+    }
+    t_d.print();
+    t_d.to_csv(&results_dir().join("ablation_knn.csv"))?;
+
+    // --- (e) policy family under equal pressure ---
+    let mut t_e = Table::new(
+        "(e) page-management policy (Btree @ 80% FM)",
+        &["policy", "loss", "promotions", "failures"],
+    );
+    let spec = RunSpec::new("Btree").with_intervals(200).with_fraction(0.8);
+    let base = coordinator::run_fm_only(&spec)?;
+    for (name, run) in [
+        ("TPP", coordinator::run_tpp(&spec)?),
+        ("MEMTIS (dynamic hot_thr)", coordinator::run_memtis(&spec)?),
+        ("first-touch", coordinator::run_first_touch(&spec)?),
+    ] {
+        t_e.row(vec![
+            name.to_string(),
+            pct(coordinator::overall_loss(&run, &base)),
+            run.total_promoted().to_string(),
+            run.total_promote_failed().to_string(),
+        ]);
+    }
+    t_e.print();
+    t_e.to_csv(&results_dir().join("ablation_policy.csv"))?;
+    Ok(())
+}

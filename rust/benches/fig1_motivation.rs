@@ -1,0 +1,70 @@
+//! Figure 1: BFS performance with various fast-memory sizes, with and
+//! without a page-management system (TPP vs NUMA first-touch).
+//!
+//! Paper anchors: at 89.5% fast memory, first-touch loses 8.8% and TPP
+//! 4.4%; at 26.6% even TPP loses 30.2%, with +21% migration failures and
+//! +40% migrations vs 89.5%. We reproduce the *shape*: TPP strictly above
+//! first-touch at moderate shrink, both collapsing at deep shrink, and
+//! both failure and migration counts rising from 89.5% → 26.6%.
+
+use tuna::coordinator::{self, RunSpec};
+use tuna::report::{pct, results_dir, Table};
+
+fn main() -> tuna::Result<()> {
+    let fractions = [1.0, 0.95, 0.895, 0.8, 0.7, 0.5, 0.3, 0.266];
+    let spec = RunSpec::new("BFS").with_intervals(240);
+    let baseline = coordinator::run_fm_only(&spec)?;
+
+    let mut t = Table::new(
+        "Fig. 1 — BFS vs fast-memory size (normalized performance; paper: TPP 0.956 @ 89.5%, first-touch 0.919 @ 89.5%, TPP 0.77 @ 26.6%)",
+        &["FM size", "TPP perf", "TPP loss", "first-touch perf", "first-touch loss", "TPP migrations", "TPP failures"],
+    );
+    let mut anchors = Vec::new();
+    for &f in &fractions {
+        let tpp = coordinator::run_tpp(&spec.clone().with_fraction(f))?;
+        let ft = coordinator::run_first_touch(&spec.clone().with_fraction(f))?;
+        let tpp_loss = coordinator::overall_loss(&tpp, &baseline);
+        let ft_loss = coordinator::overall_loss(&ft, &baseline);
+        t.row(vec![
+            pct(f),
+            format!("{:.3}", 1.0 / (1.0 + tpp_loss)),
+            pct(tpp_loss),
+            format!("{:.3}", 1.0 / (1.0 + ft_loss)),
+            pct(ft_loss),
+            tpp.total_migrations().to_string(),
+            tpp.total_promote_failed().to_string(),
+        ]);
+        anchors.push((f, tpp_loss, ft_loss, tpp.total_migrations(), tpp.total_promote_failed()));
+    }
+    t.print();
+    t.to_csv(&results_dir().join("fig1_motivation.csv"))?;
+
+    // Shape checks the paper's narrative rests on.
+    let at = |f: f64| anchors.iter().find(|a| (a.0 - f).abs() < 1e-9).unwrap();
+    let a895 = at(0.895);
+    let a266 = at(0.266);
+    println!("\nshape checks:");
+    println!(
+        "  first-touch worse than TPP at 89.5%: {} ({} vs {})",
+        a895.2 > a895.1,
+        pct(a895.2),
+        pct(a895.1)
+    );
+    println!(
+        "  TPP loss grows 89.5% -> 26.6%:       {} ({} -> {})",
+        a266.1 > a895.1,
+        pct(a895.1),
+        pct(a266.1)
+    );
+    println!(
+        "  migrations up (paper +40%):          {} (+{:.0}%)",
+        a266.3 > a895.3,
+        100.0 * (a266.3 as f64 / a895.3 as f64 - 1.0)
+    );
+    println!(
+        "  failures up (paper +21%):            {} (+{:.0}%)",
+        a266.4 > a895.4,
+        100.0 * (a266.4 as f64 / a895.4.max(1) as f64 - 1.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Figures 3–7: runtime fast-memory variance + per-period performance
+//! loss for each of the five workloads under TPP + Tuna (τ = 5%, tuning
+//! every 2.5 s).
+//!
+//! Paper anchors: overall losses XSBench 1.8%, BFS 2%, PageRank 4.6%,
+//! SSSP 4.7%, Btree 4.6% — all within the 5% target; savings up to 16%
+//! (Btree, Fig. 7); average saving 8.5%.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::report::{ascii_series, pct, results_dir, Table};
+use tuna::workloads::{self, ALL_NAMES};
+
+fn main() -> tuna::Result<()> {
+    let db = Arc::new(ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?);
+    let tuna_cfg = TunaConfig::default();
+    let paper_loss = [("PageRank", 4.6), ("XSBench", 1.8), ("BFS", 2.0), ("SSSP", 4.7), ("Btree", 4.6)];
+
+    let mut summary = Table::new(
+        "Figs. 3–7 — Tuna runtime traces (τ = 5%, period 2.5 s)",
+        &["Workload", "mean saving", "max saving", "overall loss", "paper loss", "decisions"],
+    );
+    let mut savings = Vec::new();
+    for (fig, name) in ALL_NAMES.iter().enumerate() {
+        let spec = RunSpec::new(name).with_intervals(500);
+        let baseline = coordinator::run_fm_only(&spec)?;
+        let run = coordinator::run_tuna_native(&spec, db.clone(), &tuna_cfg)?;
+        let loss = coordinator::overall_loss(&run.result, &baseline);
+        let rss = workloads::by_name(name, spec.seed, 1).unwrap().rss_pages() as u64;
+
+        // series
+        let fm = coordinator::fm_fraction_series(&run.result, rss);
+        let xs: Vec<f64> = (0..fm.len()).map(|i| i as f64 * 0.1).collect();
+        println!(
+            "{}",
+            ascii_series(
+                &format!("Fig. {} — {name}: usable FM fraction (paper-s)", fig + 3),
+                &xs,
+                &fm,
+                6
+            )
+        );
+        let period = tuna_cfg.period_intervals();
+        let loss_series = coordinator::period_loss_series(&run.result, &baseline, period);
+        let lx: Vec<f64> = (0..loss_series.len()).map(|i| (i as f64 + 1.0) * 2.5).collect();
+        println!(
+            "{}",
+            ascii_series(&format!("{name}: per-period loss"), &lx, &loss_series, 6)
+        );
+
+        // csv
+        let mut csv = Table::new(
+            &format!("fig{} {name} trace", fig + 3),
+            &["paper_s", "fm_fraction", "period_loss"],
+        );
+        for (i, f) in fm.iter().enumerate() {
+            let pl = loss_series.get(i / period as usize).copied().unwrap_or(f64::NAN);
+            csv.row(vec![format!("{:.1}", i as f64 * 0.1), format!("{f:.4}"), format!("{pl:.4}")]);
+        }
+        csv.to_csv(&results_dir().join(format!("fig{}_{}.csv", fig + 3, name.to_lowercase())))?;
+
+        let paper = paper_loss.iter().find(|p| p.0 == *name).unwrap().1;
+        summary.row(vec![
+            name.to_string(),
+            pct(run.mean_saving()),
+            pct(run.max_saving()),
+            pct(loss),
+            format!("{paper:.1}%"),
+            run.decisions.len().to_string(),
+        ]);
+        savings.push(run.mean_saving());
+    }
+    summary.print();
+    summary.to_csv(&results_dir().join("fig3_7_summary.csv"))?;
+    let avg = savings.iter().sum::<f64>() / savings.len() as f64;
+    println!("\naverage FM saving: {} (paper: 8.5%, Pond: 5%)", pct(avg));
+    Ok(())
+}

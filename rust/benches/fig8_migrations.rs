@@ -1,0 +1,69 @@
+//! Figure 8: TPP with and without Tuna for BFS — page migrations and
+//! fast-memory saving over time. The paper's point: Tuna's watermark
+//! changes perturb TPP's migration activity, and those bursts are what
+//! buy the fast-memory saving without a large performance loss.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::report::{ascii_series, pct, results_dir, Table};
+use tuna::workloads;
+
+fn main() -> tuna::Result<()> {
+    let db = Arc::new(ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?);
+    let tuna_cfg = TunaConfig::default();
+    let spec = RunSpec::new("BFS").with_intervals(500);
+    let rss = workloads::by_name("BFS", spec.seed, 1).unwrap().rss_pages() as u64;
+
+    let plain = coordinator::run_tpp(&spec)?; // TPP at 100% (no Tuna)
+    let tuned = coordinator::run_tuna_native(&spec, db, &tuna_cfg)?;
+
+    let period = tuna_cfg.period_intervals() as usize;
+    let bucket = |run: &tuna::sim::RunResult, f: &dyn Fn(&tuna::sim::RunTrace) -> u64| -> Vec<f64> {
+        run.trace
+            .chunks(period)
+            .map(|c| c.iter().map(|t| f(t) as f64).sum::<f64>())
+            .collect()
+    };
+    let mig_plain = bucket(&plain, &|t| t.promoted + t.demoted_kswapd + t.demoted_direct);
+    let mig_tuned = bucket(&tuned.result, &|t| t.promoted + t.demoted_kswapd + t.demoted_direct);
+    let xs: Vec<f64> = (0..mig_tuned.len()).map(|i| i as f64 * 2.5).collect();
+
+    println!("{}", ascii_series("Fig. 8a — migrations/period, TPP+Tuna", &xs, &mig_tuned, 6));
+    let xs_p: Vec<f64> = (0..mig_plain.len()).map(|i| i as f64 * 2.5).collect();
+    println!("{}", ascii_series("Fig. 8a' — migrations/period, TPP alone", &xs_p, &mig_plain, 6));
+
+    let fm = coordinator::fm_fraction_series(&tuned.result, rss);
+    let fx: Vec<f64> = (0..fm.len()).map(|i| i as f64 * 0.1).collect();
+    println!("{}", ascii_series("Fig. 8b — usable FM fraction, TPP+Tuna", &fx, &fm, 6));
+
+    let mut t = Table::new(
+        "Fig. 8 — TPP vs TPP+Tuna (BFS)",
+        &["config", "migrations", "promote failures", "mean FM saving", "max FM saving"],
+    );
+    t.row(vec![
+        "TPP".into(),
+        plain.total_migrations().to_string(),
+        plain.total_promote_failed().to_string(),
+        pct(0.0),
+        pct(0.0),
+    ]);
+    t.row(vec![
+        "TPP+Tuna".into(),
+        tuned.result.total_migrations().to_string(),
+        tuned.result.total_promote_failed().to_string(),
+        pct(tuned.mean_saving()),
+        pct(tuned.max_saving()),
+    ]);
+    t.print();
+    t.to_csv(&results_dir().join("fig8_migrations.csv"))?;
+
+    println!(
+        "\nshape check — Tuna induces migration activity TPP alone lacks: {}",
+        tuned.result.total_migrations() > plain.total_migrations()
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! §6.3: sensitivity to the tuning frequency (SSSP).
+//!
+//! Paper: period 0.5 s → up to 25% saving but 17% loss; 5 s → ~2% saving,
+//! ~3% loss; 2.5 s is the chosen balance. The tradeoff direction —
+//! faster tuning saves more memory but loses more performance — is the
+//! shape to reproduce.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::report::{pct, results_dir, Table};
+
+fn main() -> tuna::Result<()> {
+    let db = Arc::new(ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?);
+    let spec = RunSpec::new("SSSP").with_intervals(400);
+    let baseline = coordinator::run_fm_only(&spec)?;
+
+    let mut t = Table::new(
+        "§6.3 — SSSP sensitivity to tuning period (paper: 0.5s → 25%/17%, 5s → 2%/3%)",
+        &["period", "decisions", "mean saving", "max saving", "measured loss"],
+    );
+    let mut rows = Vec::new();
+    for period_s in [0.5, 1.0, 2.5, 5.0] {
+        let cfg = TunaConfig { period_s, ..TunaConfig::default() };
+        let run = coordinator::run_tuna_native(&spec, db.clone(), &cfg)?;
+        let loss = coordinator::overall_loss(&run.result, &baseline);
+        t.row(vec![
+            format!("{period_s}s"),
+            run.decisions.len().to_string(),
+            pct(run.mean_saving()),
+            pct(run.max_saving()),
+            pct(loss),
+        ]);
+        rows.push((period_s, run.max_saving(), loss));
+    }
+    t.print();
+    t.to_csv(&results_dir().join("sens_frequency.csv"))?;
+
+    let fast = rows.first().unwrap();
+    let slow = rows.last().unwrap();
+    println!(
+        "\nshape check — faster tuning saves more ({} ≥ {}) at more loss ({} ≥ {}): {}",
+        pct(fast.1),
+        pct(slow.1),
+        pct(fast.2),
+        pct(slow.2),
+        fast.1 >= slow.1 && fast.2 >= slow.2 - 0.005
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Table 1: workload descriptions + measured per-interval characteristics
+//! (RSS, access counts, arithmetic intensity) at our 1 GiB → 4 MiB scale.
+
+use tuna::report::{results_dir, Table};
+use tuna::util::human_bytes;
+use tuna::workloads::{self, TABLE1};
+use tuna::PAGE_BYTES;
+
+fn main() -> tuna::Result<()> {
+    let mut t = Table::new(
+        "Table 1 — workloads (paper RSS vs instantiated RSS; measured interval profile)",
+        &["Workload", "paper RSS", "pages", "bytes", "acc/interval", "AI", "description"],
+    );
+    for info in TABLE1 {
+        let mut w = workloads::by_name(info.name, 42, 12).unwrap();
+        let rss = w.rss_pages();
+        let _ = w.next_interval(); // allocation epoch
+        let mut acc = 0u64;
+        let mut ops = 0u64;
+        let mut n = 0u64;
+        while let Some(p) = w.next_interval() {
+            acc += p.total_accesses();
+            ops += p.flops + p.iops;
+            n += 1;
+        }
+        let ai = ops as f64 / (acc * tuna::LINE_BYTES) as f64;
+        t.row(vec![
+            info.name.to_string(),
+            format!("{:.1} G", info.paper_rss_gb),
+            rss.to_string(),
+            human_bytes(rss as u64 * PAGE_BYTES),
+            format!("{}", acc / n.max(1)),
+            format!("{ai:.3}"),
+            info.description.to_string(),
+        ]);
+    }
+    t.print();
+    t.to_csv(&results_dir().join("table1_workloads.csv"))?;
+    Ok(())
+}

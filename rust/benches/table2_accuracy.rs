@@ -1,0 +1,63 @@
+//! Table 2: model prediction error.
+//!
+//! For each workload: run with fast memory only, profile the telemetry
+//! configuration vector, query the performance database for the nearest
+//! execution record, and compare the record's predicted relative loss
+//! `pd' = (y'-x')/x'` against the measured loss `pd = (y-x)/x` at each
+//! fast-memory size. The paper reports `|pd'-pd|/pd` below 10% everywhere,
+//! with the error growing as fast memory shrinks (the micro-benchmark's
+//! best-case-MLP optimism).
+
+use std::path::Path;
+
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::perfdb::native::{NativeNn, NnQuery};
+use tuna::perfdb::normalize;
+use tuna::report::{results_dir, Table};
+use tuna::workloads::ALL_NAMES;
+
+fn main() -> tuna::Result<()> {
+    let db = ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?;
+    let mut nn = NativeNn::new(&db);
+    let fm_sizes = [0.99, 0.98, 0.97, 0.96, 0.95, 0.88, 0.85];
+
+    let mut t = Table::new(
+        "Table 2 — model prediction error |pd' - pd| / pd (paper: ≤ 8.1%, growing as FM shrinks)",
+        &["Workload", "99%", "98%", "97%", "96%", "95%", "88%", "85%"],
+    );
+    let mut abs_t = Table::new(
+        "Table 2b — absolute error |pd' - pd| (percentage points)",
+        &["Workload", "99%", "98%", "97%", "96%", "95%", "88%", "85%"],
+    );
+
+    for name in ALL_NAMES {
+        let spec = RunSpec::new(name).with_intervals(200);
+        // x: fast-memory-only run + telemetry profile
+        let (baseline, cfg) = coordinator::profile_tpp(&spec)?;
+        let (record, dist) = nn.nearest(&normalize(&cfg.as_array()))?;
+        eprintln!("{name}: nearest record {record} (d²={dist:.4})");
+
+        let base_pred = db.time_at(record, 1.0);
+        let mut rel_row = vec![name.to_string()];
+        let mut abs_row = vec![name.to_string()];
+        for &f in &fm_sizes {
+            // y: measured at this fast-memory size
+            let run = coordinator::run_tpp(&spec.clone().with_fraction(f))?;
+            let pd = coordinator::overall_loss(&run, &baseline);
+            // y': predicted from the record
+            let pd_pred = (db.time_at(record, f) - base_pred) / base_pred;
+            let rel = if pd.abs() > 1e-6 { (pd_pred - pd).abs() / pd.abs() } else { f64::NAN };
+            rel_row.push(format!("{:.1}%", rel * 100.0));
+            abs_row.push(format!("{:.2}pp", (pd_pred - pd).abs() * 100.0));
+        }
+        t.row(rel_row);
+        abs_t.row(abs_row);
+    }
+    t.print();
+    println!();
+    abs_t.print();
+    t.to_csv(&results_dir().join("table2_accuracy.csv"))?;
+    abs_t.to_csv(&results_dir().join("table2_accuracy_abs.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `tuna <subcommand> [--flag value | --switch] [positional...]`.
+//! Flags may use `--flag=value` or `--flag value`. Unknown flags are
+//! rejected by [`Args::finish`] so typos fail loudly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+    pub positional: Vec<String>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `known_switches` lists boolean flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_switches: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&flag) {
+                    args.switches.insert(flag.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{flag} expects a value"))?;
+                    args.flags.insert(flag.to_string(), v);
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<&str> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
+    pub fn switch(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    /// Error on any flag the command did not consume.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !self.consumed.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_positionals() {
+        let mut a = Args::parse(argv("run --workload BFS --fraction=0.9 extra"), &[]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("workload"), Some("BFS"));
+        assert_eq!(a.get_parse("fraction", 1.0).unwrap(), 0.9);
+        assert_eq!(a.positional, vec!["extra"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let mut a = Args::parse(argv("tune --xla --target 0.1"), &["xla"]).unwrap();
+        assert!(a.switch("xla"));
+        assert_eq!(a.get("target"), Some("0.1"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(argv("run --workload"), &[]).is_err());
+    }
+
+    #[test]
+    fn unconsumed_flag_fails_finish() {
+        let mut a = Args::parse(argv("run --oops 1"), &[]).unwrap();
+        let _ = a.get("other");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_and_bad_parses() {
+        let mut a = Args::parse(argv("run --n abc"), &[]).unwrap();
+        assert!(a.get_parse::<u32>("n", 5).is_err());
+        let mut b = Args::parse(argv("run"), &[]).unwrap();
+        assert_eq!(b.get_parse::<u32>("n", 5).unwrap(), 5);
+        assert_eq!(b.get_or("name", "dflt"), "dflt");
+    }
+}

@@ -1,0 +1,193 @@
+//! Typed experiment configuration, assembled from a parsed config document
+//! (or defaults). This is the launcher-facing config system: every CLI
+//! subcommand and bench reads one of these.
+
+use anyhow::Result;
+
+use super::parse::ConfigDoc;
+use crate::sim::machine::MachineModel;
+
+/// Tuna's online-tuner parameters (§4, §6.2).
+#[derive(Clone, Debug)]
+pub struct TunaConfig {
+    /// Performance-loss target τ (paper default 5%).
+    pub loss_target: f64,
+    /// Tuning period in paper-equivalent seconds (default 2.5 s;
+    /// §6.3 sweeps 0.5/1/2.5/5 s). One profiling interval = 0.1 s.
+    pub period_s: f64,
+    /// Smallest fast-memory fraction the tuner will ever choose.
+    pub min_fm_fraction: f64,
+    /// Largest per-period *shrink* step (fraction of RSS). The database
+    /// record is queried from telemetry measured at the *current* size,
+    /// so its prediction is only locally valid; shrinking incrementally
+    /// and re-measuring each period is the paper's runtime feedback loop
+    /// (growth is unrestricted — backing off must be fast).
+    pub max_step_down: f64,
+    /// Use the AOT XLA (PJRT) query path; falls back to the native
+    /// brute-force oracle when artifacts are unavailable.
+    pub use_xla: bool,
+}
+
+impl Default for TunaConfig {
+    fn default() -> Self {
+        TunaConfig {
+            loss_target: 0.05,
+            period_s: 2.5,
+            min_fm_fraction: 0.25,
+            max_step_down: 0.02,
+            use_xla: false,
+        }
+    }
+}
+
+impl TunaConfig {
+    /// Profiling intervals per tuning period (one interval ≡ 0.1 s).
+    pub fn period_intervals(&self) -> u32 {
+        (self.period_s / 0.1).round().max(1.0) as u32
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub machine: MachineModel,
+    /// Workload name (Table 1) — "BFS", "SSSP", "PageRank", "XSBench",
+    /// "Btree", or "microbench".
+    pub workload: String,
+    /// Run length in profiling intervals.
+    pub intervals: u32,
+    /// Initial fast-memory fraction of the workload RSS.
+    pub fm_fraction: f64,
+    /// TPP promotion threshold.
+    pub hot_thr: u32,
+    pub seed: u64,
+    pub tuna: TunaConfig,
+    /// Path to the performance database (binary, built offline).
+    pub perfdb_path: String,
+    /// Path to the AOT query artifact (HLO text).
+    pub hlo_path: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            machine: MachineModel::default(),
+            workload: "BFS".to_string(),
+            intervals: 400,
+            fm_fraction: 1.0,
+            hot_thr: 2,
+            seed: 42,
+            tuna: TunaConfig::default(),
+            perfdb_path: "artifacts/perfdb.bin".to_string(),
+            hlo_path: "artifacts/perfdb_query.hlo.txt".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Read from a parsed document; every key optional (paper defaults).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let d = ExperimentConfig::default();
+        let mut machine = MachineModel::default();
+        machine.cores = doc.i64_or("machine", "cores", machine.cores as i64) as u32;
+        machine.freq_ghz = doc.f64_or("machine", "freq_ghz", machine.freq_ghz);
+        machine.ipc = doc.f64_or("machine", "ipc", machine.ipc);
+        machine.fast_lat_ns = doc.f64_or("machine", "fast_lat_ns", machine.fast_lat_ns);
+        machine.slow_lat_ns = doc.f64_or("machine", "slow_lat_ns", machine.slow_lat_ns);
+        machine.fast_bw = doc.f64_or("machine", "fast_bw_gbps", machine.fast_bw);
+        machine.slow_read_bw = doc.f64_or("machine", "slow_read_bw_gbps", machine.slow_read_bw);
+        machine.slow_write_bw =
+            doc.f64_or("machine", "slow_write_bw_gbps", machine.slow_write_bw);
+        machine.mlp_per_core = doc.f64_or("machine", "mlp_per_core", machine.mlp_per_core);
+        machine.mlp_per_page = doc.f64_or("machine", "mlp_per_page", machine.mlp_per_page);
+        machine.kswapd_pages_per_interval = doc.i64_or(
+            "machine",
+            "kswapd_pages_per_interval",
+            machine.kswapd_pages_per_interval as i64,
+        ) as u64;
+        machine.validate()?;
+
+        let tuna = TunaConfig {
+            loss_target: doc.f64_or("tuna", "loss_target", d.tuna.loss_target),
+            period_s: doc.f64_or("tuna", "period_s", d.tuna.period_s),
+            min_fm_fraction: doc.f64_or("tuna", "min_fm_fraction", d.tuna.min_fm_fraction),
+            max_step_down: doc.f64_or("tuna", "max_step_down", d.tuna.max_step_down),
+            use_xla: doc.bool_or("tuna", "use_xla", d.tuna.use_xla),
+        };
+        anyhow::ensure!(
+            tuna.loss_target > 0.0 && tuna.loss_target < 1.0,
+            "loss_target must be in (0,1)"
+        );
+        anyhow::ensure!(tuna.period_s > 0.0, "period_s must be positive");
+
+        Ok(ExperimentConfig {
+            machine,
+            workload: doc.str_or("workload", "name", &d.workload).to_string(),
+            intervals: doc.i64_or("workload", "intervals", d.intervals as i64) as u32,
+            fm_fraction: doc.f64_or("workload", "fm_fraction", d.fm_fraction),
+            hot_thr: doc.i64_or("tpp", "hot_thr", d.hot_thr as i64) as u32,
+            seed: doc.i64_or("", "seed", d.seed as i64) as u64,
+            tuna,
+            perfdb_path: doc.str_or("paths", "perfdb", &d.perfdb_path).to_string(),
+            hlo_path: doc.str_or("paths", "hlo", &d.hlo_path).to_string(),
+        })
+    }
+
+    /// Parse from a config-file string.
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_doc(&super::parse::parse_str(text)?)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_doc(&super::parse::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.tuna.loss_target, 0.05);
+        assert_eq!(c.tuna.period_s, 2.5);
+        assert_eq!(c.tuna.period_intervals(), 25);
+        assert_eq!(c.hot_thr, 2);
+    }
+
+    #[test]
+    fn from_doc_overrides_selected_keys() {
+        let c = ExperimentConfig::from_str(
+            r#"
+            seed = 7
+            [workload]
+            name = "SSSP"
+            intervals = 100
+            fm_fraction = 0.9
+            [tuna]
+            loss_target = 0.10
+            period_s = 0.5
+            [machine]
+            cores = 8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.workload, "SSSP");
+        assert_eq!(c.intervals, 100);
+        assert_eq!(c.seed, 7);
+        assert!((c.tuna.loss_target - 0.10).abs() < 1e-12);
+        assert_eq!(c.tuna.period_intervals(), 5);
+        assert_eq!(c.machine.cores, 8);
+        // untouched keys keep defaults
+        assert_eq!(c.hot_thr, 2);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ExperimentConfig::from_str("[tuna]\nloss_target = 2.0\n").is_err());
+        assert!(ExperimentConfig::from_str("[tuna]\nperiod_s = -1.0\n").is_err());
+        assert!(ExperimentConfig::from_str("[machine]\ncores = 0\n").is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Configuration system.
+//!
+//! A TOML-subset parser (`[section]`, `key = value` with integers, floats,
+//! booleans, strings and flat arrays; `#` comments) plus the typed
+//! experiment configuration [`ExperimentConfig`] assembled from it. The
+//! full TOML spec (and `serde`) is unavailable offline; this subset covers
+//! every config file the project ships.
+
+pub mod experiment;
+pub mod parse;
+
+pub use experiment::ExperimentConfig;
+pub use parse::{parse_file, parse_str, ConfigDoc, Value};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_parse_and_typed_read() {
+        let doc = parse_str(
+            r#"
+            # comment
+            title = "demo"
+            [machine]
+            fast_lat_ns = 100
+            slow_bw_gbps = 12.5
+            numa = true
+            sizes = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "title").unwrap(), "demo");
+        assert_eq!(doc.get_i64("machine", "fast_lat_ns").unwrap(), 100);
+        assert!((doc.get_f64("machine", "slow_bw_gbps").unwrap() - 12.5).abs() < 1e-12);
+        assert!(doc.get_bool("machine", "numa").unwrap());
+        assert_eq!(
+            doc.get_array("machine", "sizes")
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap())
+                .collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+    }
+}

@@ -1,0 +1,343 @@
+//! TOML-subset parser.
+//!
+//! Supported grammar (one statement per line):
+//!
+//! ```toml
+//! # comment
+//! [section.name]
+//! key = 42            # integer
+//! key = 3.5           # float
+//! key = true          # boolean
+//! key = "string"      # string (no escapes beyond \" \\ \n \t)
+//! key = [1, 2, 3]     # flat array of the scalar types above
+//! ```
+//!
+//! Keys before any `[section]` land in the root section `""`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar or flat-array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`x = 3` readable as 3.0).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section -> key -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Result<i64> {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow!("missing integer [{section}] {key}"))
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<f64> {
+        self.get(section, key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("missing float [{section}] {key}"))
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<bool> {
+        self.get(section, key)
+            .and_then(Value::as_bool)
+            .ok_or_else(|| anyhow!("missing bool [{section}] {key}"))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<&str> {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("missing string [{section}] {key}"))
+    }
+
+    pub fn get_array(&self, section: &str, key: &str) -> Result<&[Value]> {
+        self.get(section, key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("missing array [{section}] {key}"))
+    }
+
+    /// Typed getters with defaults — the common pattern for experiment
+    /// configs where most knobs stay at their paper values.
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = (&String, &BTreeMap<String, Value>)> {
+        self.sections.iter()
+    }
+}
+
+/// Parse a config document from a string.
+pub fn parse_str(input: &str) -> Result<ConfigDoc> {
+    let mut doc = ConfigDoc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: bad value for `{key}`", lineno + 1))?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Parse a config file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<ConfigDoc> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    parse_str(&text).with_context(|| format!("parsing config {}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Honour `#` only outside string literals.
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<Value> {
+    if tok.is_empty() {
+        bail!("empty value");
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = tok.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(body) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let v = parse_value(part)?;
+            if matches!(v, Value::Array(_)) {
+                bail!("nested arrays unsupported");
+            }
+            items.push(v);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(body) = tok.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(unescape(body)?));
+    }
+    // number: int first, then float
+    if let Ok(v) = tok.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = tok.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    bail!("unrecognized value `{tok}`")
+}
+
+fn split_array_items(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for c in body.chars() {
+        match c {
+            '"' if !prev_escape => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            other => bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_value("42").unwrap(), Value::Int(42));
+        assert_eq!(parse_value("-7").unwrap(), Value::Int(-7));
+        assert_eq!(parse_value("1_000").unwrap(), Value::Int(1000));
+        assert_eq!(parse_value("2.5").unwrap(), Value::Float(2.5));
+        assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse_value("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(
+            parse_value(r#""a\"b\n""#).unwrap(),
+            Value::Str("a\"b\n".into())
+        );
+        assert!(parse_value(r#""bad\q""#).is_err());
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse_value("[1, 2.5, \"x,y\", true]").unwrap();
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0], Value::Int(1));
+        assert_eq!(arr[1], Value::Float(2.5));
+        assert_eq!(arr[2], Value::Str("x,y".into()));
+        assert_eq!(arr[3], Value::Bool(true));
+        assert!(parse_value("[[1]]").is_err());
+    }
+
+    #[test]
+    fn comments_and_sections() {
+        let doc = parse_str("a = 1 # trailing\n[s] # section comment\nb = \"has # inside\"\n")
+            .unwrap();
+        assert_eq!(doc.get_i64("", "a").unwrap(), 1);
+        assert_eq!(doc.get_str("s", "b").unwrap(), "has # inside");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = parse_str("x ==").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(parse_str("[open").is_err());
+        assert!(parse_str("k = ").is_err());
+        assert!(parse_str("justtext").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = parse_str("[m]\nx = 5\n").unwrap();
+        assert_eq!(doc.i64_or("m", "x", 9), 5);
+        assert_eq!(doc.i64_or("m", "y", 9), 9);
+        assert_eq!(doc.f64_or("m", "x", 0.0), 5.0);
+        assert_eq!(doc.str_or("m", "z", "d"), "d");
+        assert!(!doc.bool_or("m", "w", false));
+    }
+}

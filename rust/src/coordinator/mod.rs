@@ -1,0 +1,315 @@
+//! The L3 coordinator: wires workloads, the TPP policy, the simulator
+//! engine, telemetry and the Tuna tuner into complete runs, and derives
+//! the paper's reported quantities (perf loss vs the fast-memory-only
+//! baseline, fast-memory savings, migration counts).
+//!
+//! This is the module examples and benches drive; nothing here touches
+//! Python — the only external dependency is the AOT HLO artifact loaded
+//! through [`crate::runtime`] when the XLA query path is enabled.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::experiment::TunaConfig;
+use crate::perfdb::native::{NativeNn, NnQuery};
+use crate::perfdb::PerfDb;
+use crate::sim::{Engine, IntervalModel, MachineModel, RunResult};
+use crate::tpp::{FirstTouch, Tpp, Watermarks};
+use crate::tuner::{Decision, Tuner};
+use crate::workloads::{self, Workload};
+
+/// What to run and under which policy.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Table 1 workload name (or "microbench" via the library API).
+    pub workload: String,
+    pub seed: u64,
+    pub intervals: u32,
+    /// Fast-memory size as a fraction of the workload's peak RSS.
+    pub fm_fraction: f64,
+    pub hot_thr: u32,
+    pub machine: MachineModel,
+}
+
+impl RunSpec {
+    pub fn new(workload: &str) -> Self {
+        RunSpec {
+            workload: workload.to_string(),
+            seed: 42,
+            intervals: 300,
+            fm_fraction: 1.0,
+            hot_thr: 2,
+            machine: MachineModel::default(),
+        }
+    }
+
+    pub fn with_fraction(mut self, f: f64) -> Self {
+        self.fm_fraction = f;
+        self
+    }
+
+    pub fn with_intervals(mut self, n: u32) -> Self {
+        self.intervals = n;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    fn make_workload(&self) -> Result<Box<dyn Workload>> {
+        workloads::by_name(&self.workload, self.seed, self.intervals)
+            .ok_or_else(|| anyhow!("unknown workload `{}`", self.workload))
+    }
+
+    fn engine(&self) -> Engine {
+        Engine::new(IntervalModel::new(self.machine.clone()))
+    }
+}
+
+/// Run under TPP at the spec's fast-memory fraction (no Tuna).
+pub fn run_tpp(spec: &RunSpec) -> Result<RunResult> {
+    let mut w = spec.make_workload()?;
+    let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
+    Ok(spec.engine().run(w.as_mut(), &mut tpp, cap, |_| None))
+}
+
+/// Run under the NUMA first-touch baseline (no migration) — Fig. 1's
+/// "w/o TPP" configuration.
+pub fn run_first_touch(spec: &RunSpec) -> Result<RunResult> {
+    let mut w = spec.make_workload()?;
+    let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
+    let mut ft = FirstTouch::new(cap);
+    Ok(spec.engine().run(w.as_mut(), &mut ft, cap, |_| None))
+}
+
+/// Run under the MEMTIS-style dynamic-threshold policy.
+pub fn run_memtis(spec: &RunSpec) -> Result<RunResult> {
+    let mut w = spec.make_workload()?;
+    let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
+    let mut m = crate::tpp::Memtis::new(Watermarks::default_for_capacity(cap));
+    Ok(spec.engine().run(w.as_mut(), &mut m, cap, |_| None))
+}
+
+/// The fast-memory-only baseline: 100% of RSS in fast memory.
+pub fn run_fm_only(spec: &RunSpec) -> Result<RunResult> {
+    run_tpp(&spec.clone().with_fraction(1.0))
+}
+
+/// Run under TPP while profiling: returns the run plus the telemetry
+/// configuration vector aggregated over the whole run (what §6.1 does to
+/// build the query for the model-accuracy study).
+pub fn profile_tpp(
+    spec: &RunSpec,
+) -> Result<(RunResult, crate::microbench::MicrobenchConfig)> {
+    let mut w = spec.make_workload()?;
+    let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
+    let mut telemetry =
+        crate::telemetry::Telemetry::new(spec.hot_thr, w.threads(), w.rss_pages() as u64);
+    let result = spec.engine().run(w.as_mut(), &mut tpp, cap, |t| {
+        // skip the allocation epoch: its burst is not steady-state
+        if t.interval > 1 {
+            telemetry.observe(t);
+        }
+        None
+    });
+    let cfg = telemetry
+        .take_window_config()
+        .ok_or_else(|| anyhow!("empty telemetry window"))?;
+    Ok((result, cfg))
+}
+
+/// Result of a Tuna-managed run.
+pub struct TunaRun {
+    pub result: RunResult,
+    pub decisions: Vec<Decision>,
+    /// Mean / minimum fast-memory fraction across decisions.
+    pub mean_fraction: f64,
+    pub min_fraction: f64,
+    /// Cumulative vmstat counters at end of run.
+    pub vmstat: Vec<(&'static str, u64)>,
+    /// Total query-path time (ns) across all decisions.
+    pub decide_ns: u128,
+    /// Query backend used ("native" or "xla").
+    pub backend: &'static str,
+}
+
+impl TunaRun {
+    /// Fast-memory saving: `1 − mean_fraction` (what Figs. 3–7 plot; the
+    /// saving is reported against the workload's peak RSS, §6).
+    pub fn mean_saving(&self) -> f64 {
+        1.0 - self.mean_fraction
+    }
+
+    pub fn max_saving(&self) -> f64 {
+        1.0 - self.min_fraction
+    }
+}
+
+/// Run under TPP + Tuna with the given performance database and query
+/// backend. The run starts at 100% fast memory (the paper's deployment
+/// scenario: shrink from peak).
+pub fn run_tuna(
+    spec: &RunSpec,
+    db: Arc<PerfDb>,
+    query: Box<dyn NnQuery>,
+    tuna: &TunaConfig,
+) -> Result<TunaRun> {
+    let mut w = spec.make_workload()?;
+    let rss = w.rss_pages() as u64;
+    let cap = Engine::fm_capacity(w.rss_pages(), 1.0);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
+    let backend = query.backend();
+    let mut tuner = Tuner::new(
+        db,
+        query,
+        tuna.clone(),
+        cap,
+        rss,
+        spec.hot_thr,
+        w.threads(),
+    );
+    let result = spec.engine().run(w.as_mut(), &mut tpp, cap, |t| tuner.observe(t));
+    Ok(TunaRun {
+        result,
+        mean_fraction: tuner.mean_fraction(),
+        min_fraction: tuner.min_fraction(),
+        vmstat: tuner.telemetry().vmstat(),
+        decide_ns: tuner.decide_ns,
+        decisions: std::mem::take(&mut tuner.decisions),
+        backend,
+    })
+}
+
+/// Convenience: Tuna with the native (brute-force) query backend.
+pub fn run_tuna_native(spec: &RunSpec, db: Arc<PerfDb>, tuna: &TunaConfig) -> Result<TunaRun> {
+    let query = Box::new(NativeNn::new(&db));
+    run_tuna(spec, db, query, tuna)
+}
+
+/// Per-period relative loss series: windows of `period` intervals,
+/// loss = (T_window − T_base_window) / T_base_window. Skips the
+/// allocation epoch (interval 1) which is identical in both runs.
+pub fn period_loss_series(run: &RunResult, baseline: &RunResult, period: u32) -> Vec<f64> {
+    let n = run.trace.len().min(baseline.trace.len());
+    let mut out = Vec::new();
+    let mut i = 1; // skip allocation epoch
+    while i + (period as usize) <= n {
+        let t: f64 = run.trace[i..i + period as usize].iter().map(|x| x.wall_ns).sum();
+        let b: f64 = baseline.trace[i..i + period as usize]
+            .iter()
+            .map(|x| x.wall_ns)
+            .sum();
+        out.push((t - b) / b);
+        i += period as usize;
+    }
+    out
+}
+
+/// Usable-fast-memory fraction series (per interval), relative to RSS.
+pub fn fm_fraction_series(run: &RunResult, rss_pages: u64) -> Vec<f64> {
+    run.trace
+        .iter()
+        .map(|t| (t.usable_fm.min(rss_pages)) as f64 / rss_pages as f64)
+        .collect()
+}
+
+/// Overall loss of `run` vs `baseline`, excluding the allocation epoch.
+pub fn overall_loss(run: &RunResult, baseline: &RunResult) -> f64 {
+    let t: f64 = run.trace.iter().skip(1).map(|x| x.wall_ns).sum();
+    let b: f64 = baseline.trace.iter().skip(1).map(|x| x.wall_ns).sum();
+    (t - b) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::builder::{build_database, BuildParams};
+
+    fn small_spec(workload: &str) -> RunSpec {
+        let mut s = RunSpec::new(workload);
+        s.intervals = 60;
+        s
+    }
+
+    fn small_db() -> Arc<PerfDb> {
+        let params = BuildParams {
+            n_configs: 40,
+            fractions: vec![1.0, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6, 0.5],
+            intervals: 4,
+            warmup: 2,
+            seed: 11,
+            machine: MachineModel::default(),
+            threads: 4,
+        };
+        Arc::new(build_database(&params))
+    }
+
+    #[test]
+    fn fm_only_baseline_has_no_slow_accesses_after_warmup() {
+        let res = run_fm_only(&small_spec("Btree")).unwrap();
+        let slow: u64 = res.trace.iter().skip(2).map(|t| t.acc_slow).sum();
+        let total: u64 = res.trace.iter().skip(2).map(|t| t.acc_fast + t.acc_slow).sum();
+        assert!(
+            (slow as f64) < 0.01 * total as f64,
+            "slow {slow}/{total} at 100% fast memory"
+        );
+    }
+
+    #[test]
+    fn loss_grows_as_fm_shrinks() {
+        let base = run_fm_only(&small_spec("BFS")).unwrap();
+        let l90 = overall_loss(&run_tpp(&small_spec("BFS").with_fraction(0.9)).unwrap(), &base);
+        let l40 = overall_loss(&run_tpp(&small_spec("BFS").with_fraction(0.4)).unwrap(), &base);
+        assert!(l90 >= -0.01, "l90={l90}");
+        assert!(l40 > l90, "l40={l40} l90={l90}");
+    }
+
+    #[test]
+    fn tuna_run_produces_decisions_and_savings() {
+        let db = small_db();
+        let spec = small_spec("Btree");
+        let tuna = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+        let run = run_tuna_native(&spec, db, &tuna).unwrap();
+        assert!(!run.decisions.is_empty());
+        assert!(run.mean_fraction <= 1.0);
+        assert!(run.max_saving() >= run.mean_saving());
+        assert_eq!(run.backend, "native");
+        // decisions happen once per period (10 intervals at 1.0 s)
+        let expected = (spec.intervals - 1) / 10;
+        assert!(
+            (run.decisions.len() as i64 - expected as i64).abs() <= 2,
+            "decisions={} expected≈{expected}",
+            run.decisions.len()
+        );
+    }
+
+    #[test]
+    fn period_series_have_expected_length() {
+        let base = run_fm_only(&small_spec("XSBench")).unwrap();
+        let run = run_tpp(&small_spec("XSBench").with_fraction(0.9)).unwrap();
+        let series = period_loss_series(&run, &base, 10);
+        assert_eq!(series.len(), (60 - 1) / 10);
+        let fm = fm_fraction_series(&run, 1_000_000);
+        assert_eq!(fm.len(), run.trace.len());
+    }
+
+    #[test]
+    fn memtis_policy_runs_and_migrates() {
+        let res = run_memtis(&small_spec("Btree").with_fraction(0.8)).unwrap();
+        assert_eq!(res.policy, "memtis");
+        assert!(res.total_promoted() > 0);
+    }
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        assert!(run_tpp(&RunSpec::new("nope")).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! # Tuna — tuning fast memory size based on modeling of page migration
+//!
+//! Reproduction of *"Tuna: Tuning Fast Memory Size based on Modeling of Page
+//! Migration for Tiered Memory"* (CS.PF 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: a tiered-memory simulator
+//!   substrate ([`sim`]), a TPP page-management reimplementation ([`tpp`]),
+//!   the five paper workloads ([`workloads`]), the §3.2 micro-benchmark
+//!   generator ([`microbench`]), the performance database ([`perfdb`]),
+//!   runtime telemetry ([`telemetry`]) and the online tuner ([`tuner`]).
+//! * **L2/L1 (python, build-time only)** — the perf-DB nearest-neighbour
+//!   query as a JAX pipeline around a Pallas blocked-distance kernel,
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!
+//! The public entry points most users want:
+//!
+//! * [`coordinator::Session`] — run a workload under TPP (± Tuna) and get a
+//!   full trace: per-interval times, migrations, fast-memory size.
+//! * [`perfdb::builder::build_database`] — offline micro-benchmark sweep.
+//! * [`tuner::Tuner`] — the online controller (watermark programming).
+//! * [`runtime::PerfDbExec`] — the AOT query executable (PJRT CPU).
+//!
+//! See `DESIGN.md` for the hardware-substitution rationale and the
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod microbench;
+pub mod perfdb;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod tpp;
+pub mod tuner;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// A virtual page number inside one workload's address space
+/// (`0..rss_pages`). Pages are 4 KiB, as on the paper's testbed.
+pub type PageId = u32;
+
+/// Bytes per page (4 KiB, the Linux base page size used by TPP).
+pub const PAGE_BYTES: u64 = 4096;
+
+/// Bytes touched per page access (one cache line).
+pub const LINE_BYTES: u64 = 64;

@@ -1,0 +1,248 @@
+//! `tuna` — the L3 coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! ```text
+//! tuna info                             Table 1 + machine model
+//! tuna build-db [--configs N] [--out artifacts/perfdb.bin] [--seed S]
+//! tuna run  --workload BFS [--fraction 0.9] [--policy tpp|first-touch]
+//!           [--intervals N] [--seed S] [--config FILE]
+//! tuna tune --workload BFS [--target 0.05] [--period 2.5] [--xla]
+//!           [--db artifacts/perfdb.bin] [--artifacts artifacts]
+//!           [--intervals N] [--config FILE]
+//! tuna sweep --workload BFS [--fractions 1.0,0.9,0.8,...] [--memtis]
+//!           [--intervals N]                 Fig. 1-style FM sweep
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use tuna::cli::Args;
+use tuna::config::ExperimentConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::perfdb::native::{NativeNn, NnQuery};
+use tuna::report::{pct, Table};
+use tuna::runtime::XlaNn;
+use tuna::sim::MachineModel;
+use tuna::util::human_bytes;
+use tuna::workloads::{self, PAGES_PER_PAPER_GB, TABLE1};
+use tuna::PAGE_BYTES;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1), &["xla", "first-touch", "memtis"])?;
+    match args.subcommand.clone().as_deref() {
+        Some("info") => cmd_info(&mut args),
+        Some("build-db") => cmd_build_db(&mut args),
+        Some("run") => cmd_run(&mut args),
+        Some("tune") => cmd_tune(&mut args),
+        Some("sweep") => cmd_sweep(&mut args),
+        Some(other) => {
+            bail!("unknown subcommand `{other}` (try: info, build-db, run, tune, sweep)")
+        }
+        None => {
+            println!(
+                "usage: tuna <info|build-db|run|tune|sweep> [flags]  (see README)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_exp(args: &mut Args) -> Result<ExperimentConfig> {
+    match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(&path.to_string())),
+        None => Ok(ExperimentConfig::default()),
+    }
+}
+
+fn spec_from(args: &mut Args, exp: &ExperimentConfig) -> Result<RunSpec> {
+    let mut spec = RunSpec::new(&args.get_or("workload", &exp.workload));
+    spec.seed = args.get_parse("seed", exp.seed)?;
+    spec.intervals = args.get_parse("intervals", exp.intervals)?;
+    spec.fm_fraction = args.get_parse("fraction", exp.fm_fraction)?;
+    spec.hot_thr = args.get_parse("hot-thr", exp.hot_thr)?;
+    spec.machine = exp.machine.clone();
+    Ok(spec)
+}
+
+fn cmd_info(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    let mut t = Table::new(
+        "Table 1: workloads (paper RSS, scaled pages)",
+        &["Workload", "paper RSS", "pages here", "bytes here", "description"],
+    );
+    for w in TABLE1 {
+        let pages = (w.paper_rss_gb * PAGES_PER_PAPER_GB) as u64;
+        t.row(vec![
+            w.name.to_string(),
+            format!("{:.1} G", w.paper_rss_gb),
+            pages.to_string(),
+            human_bytes(pages * PAGE_BYTES),
+            w.description.to_string(),
+        ]);
+    }
+    t.print();
+    let m = MachineModel::default();
+    println!("\nmachine model (one socket of the paper's testbed):\n{m:#?}");
+    Ok(())
+}
+
+fn cmd_build_db(args: &mut Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "artifacts/perfdb.bin"));
+    let mut params = BuildParams::default();
+    params.n_configs = args.get_parse("configs", params.n_configs)?;
+    params.seed = args.get_parse("seed", params.seed)?;
+    args.finish()?;
+    let db = ensure_db(&out, &params)?;
+    println!(
+        "perfdb ready at {}: {} records x {} fm sizes",
+        out.display(),
+        db.len(),
+        db.fractions.len()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &mut Args) -> Result<()> {
+    let exp = load_exp(args)?;
+    let spec = spec_from(args, &exp)?;
+    let first_touch = args.switch("first-touch");
+    let memtis = args.switch("memtis");
+    args.finish()?;
+
+    let baseline = coordinator::run_fm_only(&spec)?;
+    let run = if first_touch {
+        coordinator::run_first_touch(&spec)?
+    } else if memtis {
+        coordinator::run_memtis(&spec)?
+    } else {
+        coordinator::run_tpp(&spec)?
+    };
+    let loss = coordinator::overall_loss(&run, &baseline);
+
+    let mut t = Table::new(
+        &format!("{} under {} at {} fast memory", spec.workload, run.policy, pct(spec.fm_fraction)),
+        &["metric", "value"],
+    );
+    t.row(vec!["intervals".into(), run.trace.len().to_string()]);
+    t.row(vec!["total time".into(), tuna::util::human_ns(run.total_ns as u64)]);
+    t.row(vec!["perf loss vs fast-only".into(), pct(loss)]);
+    t.row(vec!["promotions".into(), run.total_promoted().to_string()]);
+    t.row(vec!["promotion failures".into(), run.total_promote_failed().to_string()]);
+    t.row(vec!["demotions".into(), run.total_demoted().to_string()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_tune(args: &mut Args) -> Result<()> {
+    let exp = load_exp(args)?;
+    let spec = spec_from(args, &exp)?;
+    let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let use_xla = args.switch("xla") || exp.tuna.use_xla;
+    let mut tuna_cfg = exp.tuna.clone();
+    tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
+    tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
+    args.finish()?;
+
+    let db = Arc::new(ensure_db(&db_path, &BuildParams::default())?);
+    let query: Box<dyn NnQuery> = if use_xla {
+        Box::new(XlaNn::from_manifest(&artifacts, &db)?)
+    } else {
+        Box::new(NativeNn::new(&db))
+    };
+
+    let baseline = coordinator::run_fm_only(&spec)?;
+    let run = coordinator::run_tuna(&spec, db, query, &tuna_cfg)?;
+    let loss = coordinator::overall_loss(&run.result, &baseline);
+
+    let mut t = Table::new(
+        &format!(
+            "Tuna on {} (target {}, period {}s, backend {})",
+            spec.workload,
+            pct(tuna_cfg.loss_target),
+            tuna_cfg.period_s,
+            run.backend
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["decisions".into(), run.decisions.len().to_string()]);
+    t.row(vec!["mean FM saving".into(), pct(run.mean_saving())]);
+    t.row(vec!["max FM saving".into(), pct(run.max_saving())]);
+    t.row(vec!["overall perf loss".into(), pct(loss)]);
+    t.row(vec![
+        "query path total".into(),
+        tuna::util::human_ns(run.decide_ns as u64),
+    ]);
+    if !run.decisions.is_empty() {
+        t.row(vec![
+            "query path / decision".into(),
+            tuna::util::human_ns((run.decide_ns / run.decisions.len() as u128) as u64),
+        ]);
+    }
+    for (name, v) in &run.vmstat {
+        t.row(vec![format!("vmstat {name}"), v.to_string()]);
+    }
+    t.print();
+
+    // workloads sanity: make sure the chosen workload exists in Table 1
+    let known = workloads::ALL_NAMES;
+    if !known.iter().any(|n| n.eq_ignore_ascii_case(&spec.workload)) {
+        eprintln!("note: `{}` is not a Table 1 workload", spec.workload);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> Result<()> {
+    let exp = load_exp(args)?;
+    let spec = spec_from(args, &exp)?;
+    let fracs: Vec<f64> = args
+        .get_or("fractions", "1.0,0.95,0.895,0.8,0.7,0.5,0.3,0.266")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --fractions: {e}"))?;
+    let memtis = args.switch("memtis");
+    let first_touch = args.switch("first-touch");
+    args.finish()?;
+
+    let baseline = coordinator::run_fm_only(&spec)?;
+    let mut t = Table::new(
+        &format!("{} fast-memory sweep ({})", spec.workload, if memtis {
+            "memtis"
+        } else if first_touch {
+            "first-touch"
+        } else {
+            "tpp"
+        }),
+        &["FM size", "perf loss", "migrations", "failures"],
+    );
+    for &f in &fracs {
+        let s = spec.clone().with_fraction(f);
+        let run = if memtis {
+            coordinator::run_memtis(&s)?
+        } else if first_touch {
+            coordinator::run_first_touch(&s)?
+        } else {
+            coordinator::run_tpp(&s)?
+        };
+        t.row(vec![
+            pct(f),
+            pct(coordinator::overall_loss(&run, &baseline)),
+            run.total_migrations().to_string(),
+            run.total_promote_failed().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

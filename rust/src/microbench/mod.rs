@@ -1,0 +1,311 @@
+//! The §3.2 micro-benchmark: a parameterized workload that emulates an
+//! application *from the point of view of page migration*.
+//!
+//! Given the eight-element configuration vector
+//! `[pacc_f, pacc_s, pm_de, pm_pr, AI, RSS, hot_thr, num_threads]`
+//! the template instantiates a strided-access workload that, per profiling
+//! interval, performs the same number of fast/slow page accesses, induces
+//! the same number of promotions/demotions under the page-management
+//! policy, and executes ops to match the arithmetic intensity. Accesses
+//! are spread evenly over the page sets (maximum memory-level parallelism)
+//! — the paper's stated "Limitation": the micro-benchmark models the
+//! *best-case* memory performance.
+
+pub mod equations;
+
+pub use equations::{page_sets, PageSets};
+
+use crate::workloads::{AccessProfile, PageAccess, Workload};
+use crate::LINE_BYTES;
+
+/// The eight-element configuration vector (§3.3), raw (unnormalized).
+/// Count fields are per profiling interval.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MicrobenchConfig {
+    /// Page accesses served by fast memory per interval.
+    pub pacc_f: f64,
+    /// Page accesses served by slow memory per interval.
+    pub pacc_s: f64,
+    /// Page demotions per interval.
+    pub pm_de: f64,
+    /// Page promotions per interval.
+    pub pm_pr: f64,
+    /// Arithmetic intensity, ops per byte accessed.
+    pub ai: f64,
+    /// Resident set size in pages.
+    pub rss_pages: f64,
+    /// Page-management promotion threshold.
+    pub hot_thr: f64,
+    /// Worker threads.
+    pub num_threads: f64,
+}
+
+impl MicrobenchConfig {
+    pub fn as_array(&self) -> [f64; 8] {
+        [
+            self.pacc_f,
+            self.pacc_s,
+            self.pm_de,
+            self.pm_pr,
+            self.ai,
+            self.rss_pages,
+            self.hot_thr,
+            self.num_threads,
+        ]
+    }
+
+    pub fn from_array(a: [f64; 8]) -> Self {
+        MicrobenchConfig {
+            pacc_f: a[0],
+            pacc_s: a[1],
+            pm_de: a[2],
+            pm_pr: a[3],
+            ai: a[4],
+            rss_pages: a[5],
+            hot_thr: a[6],
+            num_threads: a[7],
+        }
+    }
+}
+
+/// The instantiated micro-benchmark workload.
+///
+/// Address-space layout (single flat array, matching the paper's two
+/// strided arrays once placement happens fast-first):
+///
+/// ```text
+/// [0, np_fast)                       resident fast set
+/// [np_fast, np_fast+np_slow)         resident slow set
+/// [resident, rss)                    churn pool: pm_pr pages heated to
+///                                    hot_thr each interval (promoted),
+///                                    previously-promoted pages go cold
+///                                    (demoted by kswapd) — this is how
+///                                    the pm_de/pm_pr targets are induced
+///                                    under a real policy rather than
+///                                    scripted.
+/// ```
+pub struct Microbench {
+    cfg: MicrobenchConfig,
+    sets: PageSets,
+    rss: usize,
+    churn_base: u64,
+    churn_len: u64,
+    churn_cursor: u64,
+    intervals_left: u32,
+    first_interval: bool,
+    threads: u32,
+}
+
+impl Microbench {
+    pub fn new(cfg: MicrobenchConfig, intervals: u32) -> Self {
+        let hot_thr = cfg.hot_thr.max(1.0) as u32;
+        let mut sets = page_sets(
+            cfg.pacc_f.max(0.0) as u64,
+            cfg.pacc_s.max(0.0) as u64,
+            cfg.pm_de.max(0.0) as u64,
+            cfg.pm_pr.max(0.0) as u64,
+            hot_thr,
+        );
+        // Sanity clamp against garbage telemetry: cap the instantiated
+        // address space at 2²¹ pages (8 GiB of 4 KiB pages — far above any
+        // real configuration at our scale), scaling the page sets
+        // proportionally so the fast/slow mix is preserved.
+        const MAX_RESIDENT: u64 = 1 << 21;
+        if sets.resident_pages() > MAX_RESIDENT {
+            let scale = MAX_RESIDENT as f64 / sets.resident_pages() as f64;
+            sets.np_fast = (sets.np_fast as f64 * scale) as u64;
+            sets.np_slow = (sets.np_slow as f64 * scale) as u64;
+        }
+        sets.pm_pr = sets.pm_pr.min(MAX_RESIDENT / 8);
+        sets.pm_de = sets.pm_de.min(MAX_RESIDENT / 8);
+        // RSS must hold the resident sets plus a churn pool; grow it if
+        // the configuration under-specifies (telemetry noise).
+        let min_rss = sets.resident_pages() + 4 * sets.pm_pr.max(sets.pm_de) + 64;
+        let rss = (cfg.rss_pages.max(0.0) as u64).max(min_rss) as usize;
+        let churn_base = sets.resident_pages();
+        let churn_len = rss as u64 - churn_base;
+        Microbench {
+            cfg,
+            sets,
+            rss,
+            churn_base,
+            churn_len,
+            churn_cursor: 0,
+            intervals_left: intervals,
+            first_interval: true,
+            threads: cfg.num_threads.max(1.0) as u32,
+        }
+    }
+
+    pub fn config(&self) -> &MicrobenchConfig {
+        &self.cfg
+    }
+
+    pub fn page_sets(&self) -> &PageSets {
+        &self.sets
+    }
+
+    fn hot_thr(&self) -> u32 {
+        self.cfg.hot_thr.max(1.0) as u32
+    }
+}
+
+impl Workload for Microbench {
+    fn name(&self) -> &'static str {
+        "microbench"
+    }
+
+    fn rss_pages(&self) -> usize {
+        self.rss
+    }
+
+    fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    fn next_interval(&mut self) -> Option<AccessProfile> {
+        if self.intervals_left == 0 {
+            return None;
+        }
+        self.intervals_left -= 1;
+
+        if self.first_interval {
+            // Initialization phase: touch every page once so the whole
+            // RSS is physically allocated (fast-first, spilling to slow —
+            // which lands the low-id resident-fast set in fast memory).
+            self.first_interval = false;
+            let accesses: Vec<PageAccess> = (0..self.rss as u32)
+                .map(|p| PageAccess { page: p, random: 1, streamed: 0 })
+                .collect();
+            return Some(AccessProfile { accesses, flops: 0, iops: self.rss as u64 * 8 });
+        }
+
+        let h = self.hot_thr();
+        // Strided accesses with maximum spread: the paper's design point.
+        // Strides are predictable, so the hardware prefetchers cover about
+        // a quarter of them (`streamed`); the rest are latency-exposed
+        // (`random`). Together with the even spread this is the
+        // best-case-MLP bias the paper's Limitation paragraph describes.
+        let mut accesses: Vec<PageAccess> = Vec::with_capacity(
+            (self.sets.np_fast + self.sets.np_slow + self.sets.pm_pr + self.sets.pm_de)
+                as usize,
+        );
+
+        // resident fast set: evenly strided, hot_thr accesses per page
+        // (Eq. 3's divisor — promotion is moot for fast-resident pages)
+        for p in 0..self.sets.np_fast {
+            // alternate fully-random and half-streamed pages → ~75% of
+            // strided accesses latency-exposed, ~25% prefetch-covered
+            let (r, st) = if p % 2 == 0 { (h, 0) } else { (h.div_ceil(2), h / 2) };
+            accesses.push(PageAccess { page: p as u32, random: r, streamed: st });
+        }
+        // resident slow set: hot_thr − 1 accesses per page, staying just
+        // below the promotion threshold (Eq. 4's divisor)
+        for p in self.sets.np_fast..self.sets.np_fast + self.sets.np_slow {
+            let c = (h - 1).max(1);
+            let (r, st) = if p % 2 == 0 { (c, 0) } else { (c.div_ceil(2), c / 2) };
+            accesses.push(PageAccess { page: p as u32, random: r, streamed: st });
+        }
+        // churn pool: heat pm_pr pages to exactly hot_thr (promotion
+        // triggers), advancing a rotating cursor; pages promoted in
+        // earlier intervals are no longer touched → they cool down and
+        // become kswapd's demotion victims (inducing pm_de).
+        for _ in 0..self.sets.pm_pr {
+            let p = self.churn_base + (self.churn_cursor % self.churn_len);
+            self.churn_cursor += 1;
+            accesses.push(PageAccess { page: p as u32, random: h, streamed: 0 });
+        }
+        // demotion feed: touch pm_de fast-resident pages once (they are
+        // "accessed once and then demoted" per §3.2) — reuse the oldest
+        // churn pages which by now live in fast memory.
+        for i in 0..self.sets.pm_de {
+            let back = self.churn_cursor + self.churn_len - self.sets.pm_pr - i - 1;
+            let p = self.churn_base + (back % self.churn_len);
+            accesses.push(PageAccess { page: p as u32, random: 1, streamed: 0 });
+        }
+
+        let total: u64 = accesses.iter().map(|a| a.total() as u64).sum();
+        let ops = (self.cfg.ai.max(0.0) * (total * LINE_BYTES) as f64) as u64;
+        Some(AccessProfile { accesses, flops: ops / 2, iops: ops - ops / 2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, IntervalModel, MachineModel};
+    use crate::tpp::{Tpp, Watermarks};
+
+    fn cfg() -> MicrobenchConfig {
+        MicrobenchConfig {
+            pacc_f: 8_000.0,
+            pacc_s: 1_500.0,
+            pm_de: 60.0,
+            pm_pr: 60.0,
+            ai: 0.5,
+            rss_pages: 8_000.0,
+            hot_thr: 2.0,
+            num_threads: 16.0,
+        }
+    }
+
+    #[test]
+    fn config_array_roundtrip() {
+        let c = cfg();
+        assert_eq!(MicrobenchConfig::from_array(c.as_array()), c);
+    }
+
+    #[test]
+    fn interval_access_counts_respect_pacc_targets() {
+        let mut mb = Microbench::new(cfg(), 4);
+        let _alloc = mb.next_interval().unwrap();
+        let p = mb.next_interval().unwrap();
+        let (want_f, want_s) = mb.page_sets().accesses_per_interval(2);
+        let total = p.total_accesses();
+        assert_eq!(total, want_f + want_s, "total accesses match equations");
+        // AI respected: ops / bytes == cfg.ai
+        let ai = p.arithmetic_intensity();
+        assert!((ai - 0.5).abs() < 0.01, "ai={ai}");
+    }
+
+    #[test]
+    fn induces_promotions_and_demotions_under_tpp() {
+        let c = cfg();
+        let mut mb = Microbench::new(c, 30);
+        // fast memory sized so the resident-fast set fits but the slow
+        // set does not: ~80% of RSS
+        let cap = Engine::fm_capacity(mb.rss_pages(), 0.8);
+        let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+        let engine = Engine::new(IntervalModel::new(MachineModel::default()));
+        let res = engine.run(&mut mb, &mut tpp, cap, |_| None);
+        let promoted = res.total_promoted();
+        let demoted = res.total_demoted();
+        assert!(promoted > 0, "churn must drive promotions");
+        assert!(demoted > 0, "and kswapd must demote (promoted={promoted})");
+        // promotion rate should be in the ballpark of pm_pr per interval
+        // (kswapd budget may throttle it below the target)
+        let per_interval = promoted as f64 / res.trace.len() as f64;
+        assert!(
+            per_interval > 10.0 && per_interval < 120.0,
+            "pm_pr/interval = {per_interval}"
+        );
+    }
+
+    #[test]
+    fn rss_grows_when_config_underspecifies() {
+        let mut c = cfg();
+        c.rss_pages = 10.0; // nonsense: smaller than the resident sets
+        let mb = Microbench::new(c, 2);
+        assert!(mb.rss_pages() as u64 >= mb.page_sets().resident_pages());
+    }
+
+    #[test]
+    fn even_spread_means_low_per_page_concentration() {
+        // §3.2 "Limitation": max per-page count must be tiny (== hot_thr)
+        let mut mb = Microbench::new(cfg(), 3);
+        let _ = mb.next_interval();
+        let p = mb.next_interval().unwrap();
+        let max = p.accesses.iter().map(|a| a.total()).max().unwrap();
+        assert!(max <= 2 + 1, "max per-page count {max}");
+    }
+}

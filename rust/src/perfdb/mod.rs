@@ -1,0 +1,268 @@
+//! The performance database (§3.3, §5).
+//!
+//! Offline, [`builder`] sweeps micro-benchmark configurations × fast-memory
+//! sizes through the simulator and collects *execution records*: for each
+//! eight-element configuration vector, the micro-benchmark's execution
+//! time at every sampled fast-memory fraction. Records are stored in a
+//! flat binary file ([`store`]) that both the Rust coordinator and the
+//! build-time AOT pipeline read.
+//!
+//! Online, the runtime queries the database with a telemetry-derived
+//! configuration vector; the nearest record (L2 over normalized vectors —
+//! exact nearest neighbour, standing in for the paper's Faiss HNSW index)
+//! supplies the loss-vs-size curve the tuner needs. Two query paths exist:
+//! [`native::NativeNn`] (brute force, the oracle/baseline) and
+//! [`crate::runtime::XlaNn`] (the AOT JAX+Pallas executable via PJRT — the
+//! production path, compared against native in `benches/perfdb_query.rs`).
+
+pub mod builder;
+pub mod native;
+pub mod store;
+
+use crate::microbench::MicrobenchConfig;
+
+/// Dimensions of the configuration vector.
+pub const DIMS: usize = 8;
+
+/// Per-dimension normalization: `ln(1+x) / scale`, with scales chosen so
+/// every dimension lands roughly in `[0, 1]` over its realistic range.
+/// MUST stay in sync across the native and XLA query paths — the XLA
+/// kernel receives *already-normalized* vectors, so this is the single
+/// place normalization is defined.
+pub const NORM_SCALES: [f64; DIMS] = [
+    14.0, // pacc_f   (ln(1+1.2e6) ≈ 14)
+    14.0, // pacc_s
+    10.0, // pm_de    (ln(1+2e4) ≈ 10)
+    10.0, // pm_pr
+    3.0,  // AI       (ln(1+20) ≈ 3)
+    11.0, // RSS pages (ln(1+6e4) ≈ 11)
+    2.2,  // hot_thr  (ln(1+8) ≈ 2.2)
+    3.2,  // threads  (ln(1+24) ≈ 3.2)
+];
+
+/// Normalize a raw configuration vector for nearest-neighbour search.
+pub fn normalize(raw: &[f64; DIMS]) -> [f32; DIMS] {
+    let mut v = [0f32; DIMS];
+    for i in 0..DIMS {
+        v[i] = ((1.0 + raw[i].max(0.0)).ln() / NORM_SCALES[i]) as f32;
+    }
+    v
+}
+
+/// One execution record: a configuration and its execution times at each
+/// of the database's fast-memory fractions.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// Raw configuration (pacc_f, pacc_s, pm_de, pm_pr, AI, RSS,
+    /// hot_thr, num_threads).
+    pub raw: [f64; DIMS],
+    /// Normalized vector (what NN search runs on).
+    pub vec: [f32; DIMS],
+    /// Execution time (ns) at each fraction in [`PerfDb::fractions`].
+    pub times_ns: Vec<f32>,
+}
+
+impl Record {
+    pub fn config(&self) -> MicrobenchConfig {
+        MicrobenchConfig::from_array(self.raw)
+    }
+}
+
+/// The database: a shared fast-memory-fraction grid plus records.
+#[derive(Clone, Debug, Default)]
+pub struct PerfDb {
+    /// Fast-memory fractions, descending from 1.0 (the "fast memory
+    /// only" baseline the paper computes `pd'` against).
+    pub fractions: Vec<f32>,
+    pub records: Vec<Record>,
+}
+
+impl PerfDb {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Predicted execution time of `record` at an arbitrary fraction
+    /// (linear interpolation over the sampled grid).
+    pub fn time_at(&self, record: usize, fraction: f64) -> f64 {
+        let r = &self.records[record];
+        // fractions descending; lerp_at wants ascending
+        let xs: Vec<f64> = self.fractions.iter().rev().map(|&f| f as f64).collect();
+        let ys: Vec<f64> = r.times_ns.iter().rev().map(|&t| t as f64).collect();
+        crate::util::stats::lerp_at(&xs, &ys, fraction)
+    }
+
+    /// Predicted relative performance loss `pd' = (y' − x') / x'` at each
+    /// fraction, baselined on the record's fast-memory-only time (§3.3).
+    pub fn loss_curve(&self, record: usize) -> Vec<(f64, f64)> {
+        let r = &self.records[record];
+        let base = r.times_ns[0] as f64; // fractions[0] == 1.0
+        self.fractions
+            .iter()
+            .zip(&r.times_ns)
+            .map(|(&f, &t)| (f as f64, (t as f64 - base) / base))
+            .collect()
+    }
+
+    /// Smallest fraction whose predicted loss is within `target`
+    /// (scanning the curve from small fractions up). Returns `None` when
+    /// even the full size misses the target (can't happen with a sane
+    /// record: loss at 1.0 is 0 by construction).
+    pub fn min_fraction_within(&self, record: usize, target: f64) -> Option<f64> {
+        let curve = self.loss_curve(record);
+        // fractions descending → iterate in reverse (ascending fraction)
+        for &(f, loss) in curve.iter().rev() {
+            if loss <= target {
+                return Some(f);
+            }
+        }
+        None
+    }
+
+    /// Distance-weighted average loss curve over several records
+    /// (weights `1/(d²+ε)`): smooths the step-function character of
+    /// individual micro-benchmark records. Returns (fraction, loss)
+    /// pairs in the grid order (descending fraction).
+    pub fn weighted_loss_curve(&self, neighbors: &[(usize, f32)]) -> Vec<(f64, f64)> {
+        assert!(!neighbors.is_empty());
+        let mut acc = vec![0.0f64; self.fractions.len()];
+        let mut wsum = 0.0f64;
+        for &(rec, d2) in neighbors {
+            let w = 1.0 / (d2 as f64 + 1e-2);
+            wsum += w;
+            for (i, (_, loss)) in self.loss_curve(rec).into_iter().enumerate() {
+                acc[i] += w * loss;
+            }
+        }
+        self.fractions
+            .iter()
+            .zip(&acc)
+            .map(|(&f, &a)| (f as f64, a / wsum))
+            .collect()
+    }
+
+    /// Smallest fraction whose *weighted-average* predicted loss over the
+    /// `neighbors` records is within `target` (the k-NN variant of
+    /// [`Self::min_fraction_within`]).
+    pub fn min_fraction_within_weighted(
+        &self,
+        neighbors: &[(usize, f32)],
+        target: f64,
+    ) -> Option<f64> {
+        let curve = self.weighted_loss_curve(neighbors);
+        for &(f, loss) in curve.iter().rev() {
+            if loss <= target {
+                return Some(f);
+            }
+        }
+        None
+    }
+
+    /// Weighted-average predicted loss at an arbitrary fraction.
+    pub fn weighted_loss_at(&self, neighbors: &[(usize, f32)], fraction: f64) -> f64 {
+        let curve = self.weighted_loss_curve(neighbors);
+        let xs: Vec<f64> = curve.iter().rev().map(|&(f, _)| f).collect();
+        let ys: Vec<f64> = curve.iter().rev().map(|&(_, l)| l).collect();
+        crate::util::stats::lerp_at(&xs, &ys, fraction)
+    }
+
+    /// Basic structural invariants (used by the property-test suite).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.fractions.is_empty() {
+            return Err("no fractions".into());
+        }
+        if (self.fractions[0] - 1.0).abs() > 1e-6 {
+            return Err(format!("fractions[0] = {} ≠ 1.0", self.fractions[0]));
+        }
+        for w in self.fractions.windows(2) {
+            if w[1] >= w[0] {
+                return Err("fractions not strictly descending".into());
+            }
+        }
+        for (i, r) in self.records.iter().enumerate() {
+            if r.times_ns.len() != self.fractions.len() {
+                return Err(format!("record {i}: wrong times length"));
+            }
+            if r.times_ns.iter().any(|t| !t.is_finite() || *t <= 0.0) {
+                return Err(format!("record {i}: non-finite/zero time"));
+            }
+            let want = normalize(&r.raw);
+            for d in 0..DIMS {
+                if (want[d] - r.vec[d]).abs() > 1e-5 {
+                    return Err(format!("record {i}: stale normalized vec dim {d}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_db() -> PerfDb {
+        let raw = [1000.0, 100.0, 10.0, 10.0, 1.0, 4000.0, 2.0, 16.0];
+        PerfDb {
+            fractions: vec![1.0, 0.9, 0.8, 0.7],
+            records: vec![Record {
+                raw,
+                vec: normalize(&raw),
+                times_ns: vec![100.0, 103.0, 110.0, 130.0],
+            }],
+        }
+    }
+
+    #[test]
+    fn normalization_is_monotone_and_bounded() {
+        let lo = normalize(&[0.0; 8]);
+        let hi = normalize(&[1.2e6, 1.2e6, 2e4, 2e4, 20.0, 6e4, 8.0, 24.0]);
+        for d in 0..DIMS {
+            assert!(lo[d] >= 0.0 && lo[d] <= hi[d]);
+            assert!(hi[d] < 1.3, "dim {d} = {}", hi[d]);
+        }
+    }
+
+    #[test]
+    fn time_interpolation() {
+        let db = tiny_db();
+        // (1e-3 tolerance: fractions are stored as f32)
+        assert!((db.time_at(0, 1.0) - 100.0).abs() < 1e-3);
+        assert!((db.time_at(0, 0.85) - 106.5).abs() < 1e-3);
+        assert!((db.time_at(0, 0.5) - 130.0).abs() < 1e-3); // clamped
+    }
+
+    #[test]
+    fn loss_curve_baselines_on_full_size() {
+        let db = tiny_db();
+        let curve = db.loss_curve(0);
+        assert_eq!(curve[0], (1.0, 0.0));
+        assert!((curve[2].1 - 0.10).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_fraction_within_target() {
+        let db = tiny_db();
+        // 5% target: losses are 0 / 3% / 10% / 30% → pick 0.9
+        let f = db.min_fraction_within(0, 0.05).unwrap();
+        assert!((f - 0.9).abs() < 1e-6);
+        // generous target: smallest fraction wins
+        let f = db.min_fraction_within(0, 0.5).unwrap();
+        assert!((f - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn invariants_hold_and_detect_corruption() {
+        let mut db = tiny_db();
+        db.check_invariants().unwrap();
+        db.records[0].times_ns[1] = f32::NAN;
+        assert!(db.check_invariants().is_err());
+        let mut db2 = tiny_db();
+        db2.fractions = vec![0.9, 1.0, 0.8, 0.7];
+        assert!(db2.check_invariants().is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Native brute-force nearest-neighbour query — the correctness oracle and
+//! CPU baseline the AOT XLA path is validated and benchmarked against.
+
+use super::{PerfDb, DIMS};
+
+/// Squared L2 distance between two normalized vectors.
+#[inline]
+pub fn dist2(a: &[f32; DIMS], b: &[f32; DIMS]) -> f32 {
+    let mut acc = 0.0f32;
+    for d in 0..DIMS {
+        let diff = a[d] - b[d];
+        acc += diff * diff;
+    }
+    acc
+}
+
+/// Query interface shared by the native and XLA paths.
+pub trait NnQuery {
+    /// Index of the nearest record and its squared distance.
+    fn nearest(&mut self, q: &[f32; DIMS]) -> crate::Result<(usize, f32)>;
+    /// `k` nearest records, ascending by distance. Backends without a
+    /// top-k path fall back to 1-NN.
+    fn top_k(&mut self, q: &[f32; DIMS], k: usize) -> crate::Result<Vec<(usize, f32)>> {
+        let _ = k;
+        Ok(vec![self.nearest(q)?])
+    }
+    /// Human-readable backend name for reports.
+    fn backend(&self) -> &'static str;
+}
+
+/// Brute-force scan over the database's normalized vectors.
+pub struct NativeNn {
+    vecs: Vec<[f32; DIMS]>,
+}
+
+impl NativeNn {
+    pub fn new(db: &PerfDb) -> Self {
+        NativeNn { vecs: db.records.iter().map(|r| r.vec).collect() }
+    }
+
+    /// k nearest records, ascending by distance (used by tests and the
+    /// ablation bench comparing 1-NN against k-NN averaging).
+    pub fn top_k(&self, q: &[f32; DIMS], k: usize) -> Vec<(usize, f32)> {
+        let mut all: Vec<(usize, f32)> = self
+            .vecs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i, dist2(q, v)))
+            .collect();
+        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+}
+
+impl NnQuery for NativeNn {
+    fn top_k(&mut self, q: &[f32; DIMS], k: usize) -> crate::Result<Vec<(usize, f32)>> {
+        anyhow::ensure!(!self.vecs.is_empty(), "empty database");
+        Ok(NativeNn::top_k(self, q, k))
+    }
+
+    fn nearest(&mut self, q: &[f32; DIMS]) -> crate::Result<(usize, f32)> {
+        anyhow::ensure!(!self.vecs.is_empty(), "empty database");
+        let mut best = (0usize, f32::INFINITY);
+        for (i, v) in self.vecs.iter().enumerate() {
+            let d = dist2(q, v);
+            if d < best.1 {
+                best = (i, d);
+            }
+        }
+        Ok(best)
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::{normalize, Record};
+
+    fn db_with(vecs: &[[f64; DIMS]]) -> PerfDb {
+        PerfDb {
+            fractions: vec![1.0, 0.5],
+            records: vecs
+                .iter()
+                .map(|raw| Record { raw: *raw, vec: normalize(raw), times_ns: vec![1.0, 2.0] })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn nearest_finds_exact_match() {
+        let raws = [
+            [100.0, 0.0, 0.0, 0.0, 1.0, 1000.0, 2.0, 8.0],
+            [50_000.0, 9_000.0, 50.0, 60.0, 4.0, 9000.0, 2.0, 16.0],
+            [500.0, 400.0, 5.0, 5.0, 0.2, 4000.0, 4.0, 24.0],
+        ];
+        let db = db_with(&raws);
+        let mut nn = NativeNn::new(&db);
+        for (i, raw) in raws.iter().enumerate() {
+            let (idx, d) = nn.nearest(&normalize(raw)).unwrap();
+            assert_eq!(idx, i);
+            assert!(d < 1e-9);
+        }
+    }
+
+    #[test]
+    fn nearest_picks_closest_not_first() {
+        let raws = [
+            [100.0, 0.0, 0.0, 0.0, 1.0, 1000.0, 2.0, 8.0],
+            [40_000.0, 8_000.0, 50.0, 60.0, 4.0, 9000.0, 2.0, 16.0],
+        ];
+        let db = db_with(&raws);
+        let mut nn = NativeNn::new(&db);
+        let q = [42_000.0, 8_500.0, 55.0, 58.0, 4.2, 9100.0, 2.0, 16.0];
+        let (idx, _) = nn.nearest(&normalize(&q)).unwrap();
+        assert_eq!(idx, 1);
+    }
+
+    #[test]
+    fn top_k_is_sorted_and_consistent_with_nearest() {
+        let raws: Vec<[f64; DIMS]> = (0..20)
+            .map(|i| {
+                let x = (i as f64 + 1.0) * 500.0;
+                [x, x / 10.0, 5.0, 5.0, 1.0, 4000.0, 2.0, 16.0]
+            })
+            .collect();
+        let db = db_with(&raws);
+        let mut nn = NativeNn::new(&db);
+        let q = normalize(&[5100.0, 510.0, 5.0, 5.0, 1.0, 4000.0, 2.0, 16.0]);
+        let top = nn.top_k(&q, 5);
+        assert_eq!(top.len(), 5);
+        for w in top.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(top[0].0, nn.nearest(&q).unwrap().0);
+    }
+
+    #[test]
+    fn empty_db_is_an_error() {
+        let db = PerfDb { fractions: vec![1.0], records: vec![] };
+        let mut nn = NativeNn::new(&db);
+        assert!(nn.nearest(&[0.0; DIMS]).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Binary (de)serialization for the performance database.
+//!
+//! Flat little-endian format (no serde offline):
+//!
+//! ```text
+//! magic    8  b"TUNADB1\0"
+//! n_sizes  u32
+//! n_recs   u32
+//! fractions f32 × n_sizes
+//! records:
+//!   raw      f64 × 8
+//!   vec      f32 × 8
+//!   times    f32 × n_sizes
+//! crc      u32   (crc32 of everything after the magic)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{PerfDb, Record, DIMS};
+
+const MAGIC: &[u8; 8] = b"TUNADB1\0";
+
+/// Simple CRC-32 (IEEE) — integrity check for the artifact file.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, t) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *t = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Serialize to bytes.
+pub fn to_bytes(db: &PerfDb) -> Vec<u8> {
+    let n_sizes = db.fractions.len() as u32;
+    let n_recs = db.records.len() as u32;
+    let mut body = Vec::with_capacity(
+        8 + (db.records.len() * (DIMS * 12 + db.fractions.len() * 4)) + db.fractions.len() * 4,
+    );
+    body.extend_from_slice(&n_sizes.to_le_bytes());
+    body.extend_from_slice(&n_recs.to_le_bytes());
+    for &f in &db.fractions {
+        body.extend_from_slice(&f.to_le_bytes());
+    }
+    for r in &db.records {
+        for &x in &r.raw {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in &r.vec {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        for &t in &r.times_ns {
+            body.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    let crc = crc32(&body);
+    let mut out = Vec::with_capacity(8 + body.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Deserialize from bytes (validates magic, CRC and structure).
+pub fn from_bytes(data: &[u8]) -> Result<PerfDb> {
+    if data.len() < 8 + 8 + 4 {
+        bail!("perfdb file truncated ({} bytes)", data.len());
+    }
+    if &data[..8] != MAGIC {
+        bail!("bad perfdb magic");
+    }
+    let body = &data[8..data.len() - 4];
+    let stored_crc = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    let crc = crc32(body);
+    if crc != stored_crc {
+        bail!("perfdb CRC mismatch: stored {stored_crc:#x}, computed {crc:#x}");
+    }
+
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > body.len() {
+            bail!("perfdb body truncated at offset {}", *pos);
+        }
+        let s = &body[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let n_sizes = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let n_recs = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    if n_sizes == 0 || n_sizes > 1_000 || n_recs > 10_000_000 {
+        bail!("implausible perfdb header: {n_sizes} sizes, {n_recs} records");
+    }
+    let mut fractions = Vec::with_capacity(n_sizes);
+    for _ in 0..n_sizes {
+        fractions.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+    }
+    let mut records = Vec::with_capacity(n_recs);
+    for _ in 0..n_recs {
+        let mut raw = [0f64; DIMS];
+        for x in &mut raw {
+            *x = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        }
+        let mut vec = [0f32; DIMS];
+        for x in &mut vec {
+            *x = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        }
+        let mut times_ns = Vec::with_capacity(n_sizes);
+        for _ in 0..n_sizes {
+            times_ns.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+        }
+        records.push(Record { raw, vec, times_ns });
+    }
+    if pos != body.len() {
+        bail!("perfdb has {} trailing bytes", body.len() - pos);
+    }
+    Ok(PerfDb { fractions, records })
+}
+
+/// Write the database to a file (atomically via a temp file).
+pub fn save(db: &PerfDb, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&to_bytes(db))?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a database from a file.
+pub fn load(path: &Path) -> Result<PerfDb> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening perfdb {}", path.display()))?
+        .read_to_end(&mut data)?;
+    from_bytes(&data).with_context(|| format!("parsing perfdb {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::normalize;
+
+    fn sample_db() -> PerfDb {
+        let mk = |seed: f64| {
+            let raw = [seed * 10.0, seed, seed, seed, 1.0, 4000.0, 2.0, 16.0];
+            Record { raw, vec: normalize(&raw), times_ns: vec![100.0 + seed as f32, 120.0, 150.0] }
+        };
+        PerfDb { fractions: vec![1.0, 0.8, 0.6], records: vec![mk(1.0), mk(2.0), mk(3.0)] }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let db = sample_db();
+        let bytes = to_bytes(&db);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.fractions, db.fractions);
+        assert_eq!(back.records.len(), db.records.len());
+        for (a, b) in db.records.iter().zip(&back.records) {
+            assert_eq!(a.raw, b.raw);
+            assert_eq!(a.vec, b.vec);
+            assert_eq!(a.times_ns, b.times_ns);
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let db = sample_db();
+        let mut bytes = to_bytes(&db);
+        // flip a byte in the middle
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(from_bytes(&bytes).is_err());
+        // bad magic
+        let mut bytes2 = to_bytes(&db);
+        bytes2[0] = b'X';
+        assert!(from_bytes(&bytes2).is_err());
+        // truncation
+        let bytes3 = &to_bytes(&db)[..20];
+        assert!(from_bytes(bytes3).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let db = sample_db();
+        let dir = std::env::temp_dir().join("tuna_store_test");
+        let path = dir.join("db.bin");
+        save(&db, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.records.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // "123456789" → 0xCBF43926 (IEEE test vector)
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

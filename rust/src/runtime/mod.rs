@@ -1,0 +1,419 @@
+//! PJRT runtime: load the AOT-compiled query executable (HLO text emitted
+//! by `python/compile/aot.py`) and run it from the L3 hot path.
+//!
+//! Python never executes at runtime — `make artifacts` lowers the L2 JAX
+//! model (wrapping the L1 Pallas kernel) to HLO text once; this module
+//! parses it with `HloModuleProto::from_text_file`, compiles it on the
+//! PJRT CPU client, and exposes a typed [`PerfDbExec`] the tuner calls.
+//!
+//! Two execution modes (compared in `benches/perfdb_query.rs` and logged
+//! in EXPERIMENTS.md §Perf):
+//! * literal mode — upload the (padded) database matrix with every call;
+//! * cached-buffer mode (default) — the database lives in a device
+//!   buffer created once at load time; per query only the 32-byte query
+//!   vector is transferred (`execute_b`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::parse::ConfigDoc;
+use crate::perfdb::native::NnQuery;
+use crate::perfdb::{PerfDb, DIMS};
+
+/// Sentinel coordinate for padding rows — must match
+/// `python/compile/model.py::PAD_VALUE`.
+pub const PAD_VALUE: f32 = 100.0;
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub single: String,
+    pub batched: String,
+    pub topk: String,
+    pub top_k: usize,
+    pub n_records: usize,
+    pub batch_q: usize,
+    pub dims: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let doc: ConfigDoc = crate::config::parse::parse_file(&path)?;
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            single: doc.get_str("artifacts", "single")?.to_string(),
+            batched: doc.get_str("artifacts", "batched")?.to_string(),
+            topk: doc.str_or("artifacts", "topk", "").to_string(),
+            top_k: doc.i64_or("artifacts", "top_k", 1) as usize,
+            n_records: doc.get_i64("artifacts", "n_records")? as usize,
+            batch_q: doc.get_i64("artifacts", "batch_q")? as usize,
+            dims: doc.get_i64("artifacts", "dims")? as usize,
+        };
+        anyhow::ensure!(m.dims == DIMS, "manifest dims {} != {}", m.dims, DIMS);
+        Ok(m)
+    }
+
+    pub fn single_path(&self) -> PathBuf {
+        self.dir.join(&self.single)
+    }
+
+    pub fn batched_path(&self) -> PathBuf {
+        self.dir.join(&self.batched)
+    }
+
+    pub fn topk_path(&self) -> PathBuf {
+        self.dir.join(&self.topk)
+    }
+}
+
+/// The AOT query executable, compiled once, plus the uploaded database.
+pub struct PerfDbExec {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    /// Padded, flattened (n_slots × DIMS) database matrix.
+    db_flat: Vec<f32>,
+    /// Device-resident database (cached-buffer mode).
+    db_buffer: Option<xla::PjRtBuffer>,
+    n_slots: usize,
+    real_records: usize,
+    /// Queries per invocation this executable was lowered for.
+    pub n_q: usize,
+    /// Neighbours returned per query (1 for argmin, k for top-k).
+    pub out_k: usize,
+}
+
+impl PerfDbExec {
+    /// Compile `hlo_path` (lowered for `n_q` queries × `n_slots` records)
+    /// and upload `db`'s normalized vectors (padded to `n_slots`).
+    pub fn load(hlo_path: &Path, db: &PerfDb, n_q: usize, n_slots: usize) -> Result<Self> {
+        Self::load_k(hlo_path, db, n_q, n_slots, 1)
+    }
+
+    /// As [`Self::load`] for an executable returning `out_k` neighbours.
+    pub fn load_k(
+        hlo_path: &Path,
+        db: &PerfDb,
+        n_q: usize,
+        n_slots: usize,
+        out_k: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            db.len() <= n_slots,
+            "database has {} records but the artifact was lowered for {n_slots}; \
+             regenerate with `python -m compile.aot --n-records <bigger>`",
+            db.len()
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+
+        let mut db_flat = vec![PAD_VALUE; n_slots * DIMS];
+        for (i, r) in db.records.iter().enumerate() {
+            db_flat[i * DIMS..(i + 1) * DIMS].copy_from_slice(&r.vec);
+        }
+        let db_buffer = client
+            .buffer_from_host_buffer(&db_flat, &[n_slots, DIMS], None)
+            .context("uploading database buffer")?;
+        Ok(PerfDbExec {
+            exe,
+            client,
+            db_flat,
+            db_buffer: Some(db_buffer),
+            n_slots,
+            real_records: db.len(),
+            n_q,
+            out_k,
+        })
+    }
+
+    /// Disable the cached device buffer (literal mode — the §Perf
+    /// baseline: re-uploads the database on every query).
+    pub fn set_cached(&mut self, cached: bool) {
+        if cached && self.db_buffer.is_none() {
+            self.db_buffer = self
+                .client
+                .buffer_from_host_buffer(&self.db_flat, &[self.n_slots, DIMS], None)
+                .ok();
+        } else if !cached {
+            self.db_buffer = None;
+        }
+    }
+
+    pub fn cached(&self) -> bool {
+        self.db_buffer.is_some()
+    }
+
+    /// Run one batch of queries (length must equal `n_q`). Returns
+    /// (record index, squared distance) per query.
+    pub fn query_batch(&self, qs: &[[f32; DIMS]]) -> Result<Vec<(usize, f32)>> {
+        anyhow::ensure!(
+            qs.len() == self.n_q,
+            "executable lowered for {} queries, got {}",
+            self.n_q,
+            qs.len()
+        );
+        let q_flat: Vec<f32> = qs.iter().flatten().copied().collect();
+        let result = match &self.db_buffer {
+            Some(db_buf) => {
+                let q_buf = self
+                    .client
+                    .buffer_from_host_buffer(&q_flat, &[self.n_q, DIMS], None)?;
+                self.exe.execute_b(&[&q_buf, db_buf])?
+            }
+            None => {
+                let q_lit = xla::Literal::vec1(&q_flat).reshape(&[self.n_q as i64, DIMS as i64])?;
+                let db_lit = xla::Literal::vec1(&self.db_flat)
+                    .reshape(&[self.n_slots as i64, DIMS as i64])?;
+                self.exe.execute::<xla::Literal>(&[q_lit, db_lit])?
+            }
+        };
+        let out = result[0][0].to_literal_sync()?;
+        let (idx_lit, dist_lit) = out.to_tuple2()?;
+        let idxs = idx_lit.to_vec::<i32>()?;
+        let dists = dist_lit.to_vec::<f32>()?;
+        let want = self.n_q * self.out_k;
+        anyhow::ensure!(idxs.len() == want && dists.len() == want, "bad output arity");
+        let mut res = Vec::with_capacity(want);
+        for (i, (&idx, &d)) in idxs.iter().zip(&dists).enumerate() {
+            let idx = idx as usize;
+            // top-k tails may reach padding rows when k > real records;
+            // the caller filters those out.
+            if self.out_k == 1 {
+                anyhow::ensure!(
+                    idx < self.real_records,
+                    "query {i}: nearest slot {idx} is a padding row ({} real records)",
+                    self.real_records
+                );
+            }
+            res.push((idx, d));
+        }
+        Ok(res)
+    }
+
+    pub fn real_records(&self) -> usize {
+        self.real_records
+    }
+
+    /// Single-query convenience (for `n_q == 1` executables).
+    pub fn query(&self, q: &[f32; DIMS]) -> Result<(usize, f32)> {
+        Ok(self.query_batch(std::slice::from_ref(q))?[0])
+    }
+}
+
+/// [`NnQuery`] backend over the AOT executable — what the tuner uses in
+/// production mode. Carries both the argmin and (when the artifact
+/// exists) the on-device top-k executables.
+pub struct XlaNn {
+    exec: PerfDbExec,
+    topk_exec: Option<PerfDbExec>,
+}
+
+impl XlaNn {
+    /// Load from the artifact manifest directory (default `artifacts/`).
+    pub fn from_manifest(dir: &Path, db: &PerfDb) -> Result<Self> {
+        let m = Manifest::load(dir)?;
+        let exec = PerfDbExec::load(&m.single_path(), db, 1, m.n_records)?;
+        let topk_exec = if !m.topk.is_empty() && m.topk_path().exists() {
+            Some(PerfDbExec::load_k(&m.topk_path(), db, 1, m.n_records, m.top_k)?)
+        } else {
+            None
+        };
+        Ok(XlaNn { exec, topk_exec })
+    }
+
+    pub fn exec(&self) -> &PerfDbExec {
+        &self.exec
+    }
+
+    pub fn exec_mut(&mut self) -> &mut PerfDbExec {
+        &mut self.exec
+    }
+}
+
+impl NnQuery for XlaNn {
+    fn nearest(&mut self, q: &[f32; DIMS]) -> Result<(usize, f32)> {
+        self.exec.query(q)
+    }
+
+    fn top_k(&mut self, q: &[f32; DIMS], k: usize) -> Result<Vec<(usize, f32)>> {
+        match &self.topk_exec {
+            Some(exec) => {
+                let all = exec.query_batch(std::slice::from_ref(q))?;
+                Ok(all
+                    .into_iter()
+                    .filter(|&(idx, _)| idx < exec.real_records())
+                    .take(k)
+                    .collect())
+            }
+            None => Ok(vec![self.exec.query(q)?]),
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::native::{dist2, NativeNn};
+    use crate::perfdb::{normalize, Record};
+    use crate::util::rng::Rng;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    fn random_db(n: usize, seed: u64) -> PerfDb {
+        let mut rng = Rng::new(seed);
+        let records = (0..n)
+            .map(|_| {
+                let raw = [
+                    rng.range_f64(100.0, 200_000.0),
+                    rng.range_f64(0.0, 50_000.0),
+                    rng.range_f64(0.0, 400.0),
+                    rng.range_f64(0.0, 400.0),
+                    rng.range_f64(0.01, 20.0),
+                    rng.range_f64(3_000.0, 40_000.0),
+                    2.0,
+                    16.0,
+                ];
+                Record { raw, vec: normalize(&raw), times_ns: vec![1.0] }
+            })
+            .collect();
+        PerfDb { fractions: vec![1.0], records }
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.dims, DIMS);
+        assert!(m.n_records >= 1024);
+        assert!(m.single_path().exists());
+        assert!(m.batched_path().exists());
+    }
+
+    #[test]
+    fn xla_query_matches_native_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let db = random_db(1000, 7);
+        let mut xla_nn = XlaNn::from_manifest(&artifacts_dir(), &db).unwrap();
+        let mut native = NativeNn::new(&db);
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let raw = [
+                rng.range_f64(100.0, 200_000.0),
+                rng.range_f64(0.0, 50_000.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.01, 20.0),
+                rng.range_f64(3_000.0, 40_000.0),
+                2.0,
+                16.0,
+            ];
+            let q = normalize(&raw);
+            let (xi, xd) = xla_nn.nearest(&q).unwrap();
+            let (ni, nd) = native.nearest(&q).unwrap();
+            // indices can differ on exact ties; distances must agree
+            assert!(
+                (xd - nd).abs() < 1e-5,
+                "dist mismatch: xla {xd} native {nd}"
+            );
+            if (dist2(&q, &db.records[xi].vec) - dist2(&q, &db.records[ni].vec)).abs() > 1e-5 {
+                panic!("xla idx {xi} is not a true nearest (native {ni})");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_record_match_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let db = random_db(500, 3);
+        let xla_nn = XlaNn::from_manifest(&artifacts_dir(), &db).unwrap();
+        let (idx, dist) = xla_nn.exec().query(&db.records[123].vec).unwrap();
+        assert_eq!(idx, 123);
+        assert!(dist.abs() < 1e-5, "dist={dist}");
+    }
+
+    #[test]
+    fn literal_mode_matches_cached_mode() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let db = random_db(700, 11);
+        let mut xla_nn = XlaNn::from_manifest(&artifacts_dir(), &db).unwrap();
+        let q = db.records[42].vec;
+        let cached = xla_nn.exec().query(&q).unwrap();
+        xla_nn.exec_mut().set_cached(false);
+        assert!(!xla_nn.exec().cached());
+        let literal = xla_nn.exec().query(&q).unwrap();
+        assert_eq!(cached.0, literal.0);
+        assert!((cached.1 - literal.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xla_topk_matches_native_topk() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let db = random_db(900, 21);
+        let mut xla_nn = XlaNn::from_manifest(&artifacts_dir(), &db).unwrap();
+        let native = NativeNn::new(&db);
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let raw = [
+                rng.range_f64(100.0, 200_000.0),
+                rng.range_f64(0.0, 50_000.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.01, 20.0),
+                rng.range_f64(3_000.0, 40_000.0),
+                2.0,
+                16.0,
+            ];
+            let q = normalize(&raw);
+            let xt = crate::perfdb::native::NnQuery::top_k(&mut xla_nn, &q, 4).unwrap();
+            let nt = native.top_k(&q, 4);
+            assert_eq!(xt.len(), 4);
+            for (a, b) in xt.iter().zip(&nt) {
+                assert!((a.1 - b.1).abs() < 1e-4, "xla {a:?} native {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_db_is_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let db = random_db(m.n_records + 1, 5);
+        assert!(PerfDbExec::load(&m.single_path(), &db, 1, m.n_records).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Machine model: the paper's evaluation platform in numbers.
+//!
+//! Defaults approximate one socket of the paper's testbed: Intel Xeon Gold
+//! 6252 (24 cores @ 2.1 GHz) with local DRAM as the fast tier and Intel
+//! Optane DC Persistent Memory as the slow tier. Sources for the Optane
+//! figures: the usual single-socket App-Direct measurements (~300–350 ns
+//! load latency, ~30 GB/s read, ~12 GB/s write for 6 interleaved DIMMs).
+
+use crate::PAGE_BYTES;
+
+/// Static hardware parameters of the simulated two-tier machine.
+#[derive(Clone, Debug)]
+pub struct MachineModel {
+    /// Physical cores available to the workload.
+    pub cores: u32,
+    /// Core frequency in GHz.
+    pub freq_ghz: f64,
+    /// Sustainable instructions per cycle per core (compute roofline).
+    pub ipc: f64,
+    /// Fast-tier (DRAM) load-to-use latency in ns.
+    pub fast_lat_ns: f64,
+    /// Slow-tier (Optane) load-to-use latency in ns.
+    pub slow_lat_ns: f64,
+    /// Fast-tier bandwidth, bytes/ns (== GB/s). Reads and writes share it.
+    pub fast_bw: f64,
+    /// Slow-tier read bandwidth, bytes/ns.
+    pub slow_read_bw: f64,
+    /// Slow-tier write bandwidth, bytes/ns (Optane writes are much slower).
+    pub slow_write_bw: f64,
+    /// Maximum outstanding memory requests per core (MLP ceiling).
+    pub mlp_per_core: f64,
+    /// Per-page serialization ceiling: how many concurrent outstanding
+    /// accesses a single page can sustain (row-buffer / bank conflicts).
+    pub mlp_per_page: f64,
+    /// CPU-side cost of one page promotion (NUMA hint fault + unmap +
+    /// remap + copy issue), ns. TPP promotes in the faulting task's
+    /// context, so this is *blocking* time for the application.
+    pub promote_cpu_ns: f64,
+    /// CPU-side cost charged for a failed promotion attempt (fault taken,
+    /// no free space found, page left in place), ns.
+    pub promote_fail_cpu_ns: f64,
+    /// CPU-side cost of one kswapd demotion, ns. kswapd runs in the
+    /// background, so this consumes bandwidth/CPU but does not block the
+    /// application.
+    pub demote_cpu_ns: f64,
+    /// Blocking cost of one *direct-reclaim* demotion, ns (the application
+    /// thread performs the reclaim itself — the case Tuna's watermark
+    /// programming is designed to avoid, §4).
+    pub direct_reclaim_ns: f64,
+    /// Pages kswapd can demote per profiling interval. One interval is
+    /// 0.1 paper-seconds and the address-space scale is 1024× (DESIGN.md
+    /// §6), so the default 32 corresponds to ~330 K pages/s of reclaim
+    /// throughput on the real testbed. When promotions need free pages
+    /// faster than this, promotion failures pile up (the Fig. 1 cliff).
+    pub kswapd_pages_per_interval: u64,
+    /// NUMA-hint-fault scan budget: promotion *attempts* per profiling
+    /// interval (AutoNUMA scans a bounded number of MBs per scan period,
+    /// so only this many hot slow pages can even take the hint fault).
+    /// Bounds how fast failures can pile up under pressure.
+    pub promote_scan_pages_per_interval: u64,
+}
+
+impl Default for MachineModel {
+    fn default() -> Self {
+        MachineModel {
+            cores: 24,
+            freq_ghz: 2.1,
+            ipc: 2.0,
+            fast_lat_ns: 100.0,
+            slow_lat_ns: 350.0,
+            fast_bw: 100.0,
+            slow_read_bw: 30.0,
+            slow_write_bw: 12.0,
+            mlp_per_core: 10.0,
+            mlp_per_page: 4.0,
+            promote_cpu_ns: 2_500.0,
+            promote_fail_cpu_ns: 400.0,
+            demote_cpu_ns: 2_000.0,
+            direct_reclaim_ns: 6_000.0,
+            kswapd_pages_per_interval: 32,
+            promote_scan_pages_per_interval: 384,
+        }
+    }
+}
+
+impl MachineModel {
+    /// Peak ops/ns for `threads` active threads (≤ cores).
+    pub fn peak_ops_per_ns(&self, threads: u32) -> f64 {
+        let t = threads.min(self.cores) as f64;
+        t * self.freq_ghz * self.ipc
+    }
+
+    /// Total MLP available to `threads` threads.
+    pub fn total_mlp(&self, threads: u32) -> f64 {
+        threads.min(self.cores) as f64 * self.mlp_per_core
+    }
+
+    /// Time for the *slow tier* to move `pages` promoted pages (reads) in
+    /// ns of tier busy time.
+    pub fn promote_slow_bytes(&self, pages: u64) -> f64 {
+        (pages * PAGE_BYTES) as f64
+    }
+
+    /// Bandwidth-balanced sanity check used by tests and config loading.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cores > 0, "cores must be > 0");
+        anyhow::ensure!(self.freq_ghz > 0.0 && self.ipc > 0.0, "compute peak must be positive");
+        anyhow::ensure!(
+            self.fast_lat_ns > 0.0 && self.slow_lat_ns >= self.fast_lat_ns,
+            "slow tier must not be faster than fast tier (lat)"
+        );
+        anyhow::ensure!(
+            self.fast_bw > 0.0
+                && self.slow_read_bw > 0.0
+                && self.slow_write_bw > 0.0
+                && self.fast_bw >= self.slow_read_bw,
+            "slow tier must not have more bandwidth than fast tier"
+        );
+        anyhow::ensure!(self.mlp_per_core >= 1.0 && self.mlp_per_page >= 1.0, "mlp >= 1");
+        anyhow::ensure!(self.kswapd_pages_per_interval > 0, "kswapd throughput must be positive");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        MachineModel::default().validate().unwrap();
+    }
+
+    #[test]
+    fn peaks_scale_with_threads_but_cap_at_cores() {
+        let m = MachineModel::default();
+        assert!(m.peak_ops_per_ns(2) < m.peak_ops_per_ns(4));
+        assert_eq!(m.peak_ops_per_ns(24), m.peak_ops_per_ns(48));
+        assert_eq!(m.total_mlp(24), m.total_mlp(200));
+    }
+
+    #[test]
+    fn invalid_models_rejected() {
+        let mut m = MachineModel::default();
+        m.slow_lat_ns = 10.0; // faster than fast tier
+        assert!(m.validate().is_err());
+        let mut m2 = MachineModel::default();
+        m2.cores = 0;
+        assert!(m2.validate().is_err());
+        let mut m3 = MachineModel::default();
+        m3.slow_read_bw = 1000.0; // more bw than fast tier
+        assert!(m3.validate().is_err());
+    }
+}

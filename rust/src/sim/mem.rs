@@ -1,0 +1,307 @@
+//! Tiered physical memory: page table, per-tier occupancy, migrations.
+//!
+//! Pages are identified by the workload's virtual page number ([`crate::PageId`]);
+//! each page carries its current tier, a decayed access counter (the
+//! "profiling window" frequency TPP uses for promotion decisions) and a
+//! last-touch timestamp (recency, used for demotion victim selection).
+
+use crate::PageId;
+
+/// Which tier a page currently resides in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Fast,
+    Slow,
+}
+
+/// Per-page metadata.
+#[derive(Clone, Copy, Debug)]
+pub struct PageState {
+    pub tier: Tier,
+    /// Decayed access count over the recent profiling window(s).
+    pub window_count: u32,
+    /// Interval index of the last access (recency).
+    pub last_touch: u32,
+    /// Whether the page has ever been touched (physically allocated).
+    pub allocated: bool,
+}
+
+impl Default for PageState {
+    fn default() -> Self {
+        PageState { tier: Tier::Slow, window_count: 0, last_touch: 0, allocated: false }
+    }
+}
+
+/// Counters for one interval's migration activity (consumed by the
+/// interval time model and telemetry, then reset).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigrationCounters {
+    /// Successful promotions (slow → fast).
+    pub promoted: u64,
+    /// Promotion attempts that failed for lack of free fast memory
+    /// ("page migration failures" in the paper's motivation study).
+    pub promote_failed: u64,
+    /// kswapd (background, non-blocking) demotions (fast → slow).
+    pub demoted_kswapd: u64,
+    /// Direct-reclaim (blocking) demotions.
+    pub demoted_direct: u64,
+    /// New-page allocations that landed in fast memory.
+    pub alloc_fast: u64,
+    /// New-page allocations that spilled to slow memory.
+    pub alloc_slow: u64,
+}
+
+impl MigrationCounters {
+    pub fn demoted_total(&self) -> u64 {
+        self.demoted_kswapd + self.demoted_direct
+    }
+}
+
+/// The two-tier physical memory state for one workload address space.
+#[derive(Clone, Debug)]
+pub struct TieredMemory {
+    pages: Vec<PageState>,
+    /// Fast-tier capacity in pages (the knob Fig. 1 sweeps; fixed for a
+    /// run — Tuna varies *watermarks*, not capacity).
+    fast_capacity: u64,
+    fast_used: u64,
+    slow_used: u64,
+    pub counters: MigrationCounters,
+}
+
+impl TieredMemory {
+    /// Create an address space of `rss_pages` (all unallocated) over a
+    /// fast tier with `fast_capacity` pages. The slow tier is unbounded
+    /// (756 GB on the testbed — never the constraint).
+    pub fn new(rss_pages: usize, fast_capacity: u64) -> Self {
+        TieredMemory {
+            pages: vec![PageState::default(); rss_pages],
+            fast_capacity,
+            fast_used: 0,
+            slow_used: 0,
+            counters: MigrationCounters::default(),
+        }
+    }
+
+    pub fn rss_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn fast_capacity(&self) -> u64 {
+        self.fast_capacity
+    }
+
+    pub fn fast_used(&self) -> u64 {
+        self.fast_used
+    }
+
+    pub fn slow_used(&self) -> u64 {
+        self.slow_used
+    }
+
+    pub fn fast_free(&self) -> u64 {
+        self.fast_capacity - self.fast_used
+    }
+
+    pub fn page(&self, id: PageId) -> &PageState {
+        &self.pages[id as usize]
+    }
+
+    pub fn page_mut(&mut self, id: PageId) -> &mut PageState {
+        &mut self.pages[id as usize]
+    }
+
+    /// Allocate a page on first touch. Fast-first (TPP and the NUMA
+    /// first-touch baseline both allocate new pages in the top tier),
+    /// spilling to slow when fewer than `reserve_free` fast pages would
+    /// remain free (the allocation-time watermark).
+    pub fn allocate(&mut self, id: PageId, now: u32, reserve_free: u64) {
+        let cap = self.fast_capacity;
+        let used = self.fast_used;
+        let p = &mut self.pages[id as usize];
+        debug_assert!(!p.allocated, "double allocation of page {id}");
+        p.allocated = true;
+        p.last_touch = now;
+        if used + reserve_free < cap {
+            p.tier = Tier::Fast;
+            self.fast_used += 1;
+            self.counters.alloc_fast += 1;
+        } else {
+            p.tier = Tier::Slow;
+            self.slow_used += 1;
+            self.counters.alloc_slow += 1;
+        }
+    }
+
+    /// Record `count` accesses to a page during interval `now`.
+    /// Returns the tier served. Saturating window counter.
+    #[inline]
+    pub fn touch(&mut self, id: PageId, count: u32, now: u32) -> Tier {
+        let p = &mut self.pages[id as usize];
+        debug_assert!(p.allocated, "touch of unallocated page {id}");
+        p.window_count = p.window_count.saturating_add(count);
+        p.last_touch = now;
+        p.tier
+    }
+
+    /// Promote a page slow → fast. Fails (returning false and counting a
+    /// migration failure) if no free fast page is available above the
+    /// `reserve_free` watermark.
+    pub fn promote(&mut self, id: PageId, reserve_free: u64) -> bool {
+        debug_assert_eq!(self.pages[id as usize].tier, Tier::Slow);
+        if self.fast_used + reserve_free >= self.fast_capacity {
+            self.counters.promote_failed += 1;
+            return false;
+        }
+        self.pages[id as usize].tier = Tier::Fast;
+        self.fast_used += 1;
+        self.slow_used -= 1;
+        self.counters.promoted += 1;
+        true
+    }
+
+    /// Demote a page fast → slow. `direct` selects which counter the
+    /// demotion is charged to (kswapd vs direct reclaim).
+    pub fn demote(&mut self, id: PageId, direct: bool) {
+        debug_assert_eq!(self.pages[id as usize].tier, Tier::Fast);
+        self.pages[id as usize].tier = Tier::Slow;
+        self.fast_used -= 1;
+        self.slow_used += 1;
+        if direct {
+            self.counters.demoted_direct += 1;
+        } else {
+            self.counters.demoted_kswapd += 1;
+        }
+    }
+
+    /// Apply the per-interval exponential decay to window counters
+    /// (right-shift = halve, the classic CLOCK-with-aging approximation).
+    pub fn decay_windows(&mut self) {
+        for p in &mut self.pages {
+            p.window_count >>= 1;
+        }
+    }
+
+    /// Iterate over allocated fast-tier page ids (demotion candidates).
+    pub fn fast_pages(&self) -> impl Iterator<Item = PageId> + '_ {
+        self.pages
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.allocated && p.tier == Tier::Fast)
+            .map(|(i, _)| i as PageId)
+    }
+
+    /// Take and reset this interval's migration counters.
+    pub fn take_counters(&mut self) -> MigrationCounters {
+        std::mem::take(&mut self.counters)
+    }
+
+    /// Internal consistency check (used by tests and the property suite):
+    /// tier occupancy counters must match the page table exactly.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut fast = 0u64;
+        let mut slow = 0u64;
+        for p in &self.pages {
+            if p.allocated {
+                match p.tier {
+                    Tier::Fast => fast += 1,
+                    Tier::Slow => slow += 1,
+                }
+            }
+        }
+        if fast != self.fast_used {
+            return Err(format!("fast_used={} but page table has {fast}", self.fast_used));
+        }
+        if slow != self.slow_used {
+            return Err(format!("slow_used={} but page table has {slow}", self.slow_used));
+        }
+        if self.fast_used > self.fast_capacity {
+            return Err(format!(
+                "fast over capacity: {}/{}",
+                self.fast_used, self.fast_capacity
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_fast_first_then_spill() {
+        let mut m = TieredMemory::new(10, 4);
+        for id in 0..10u32 {
+            m.allocate(id, 0, 0);
+        }
+        assert_eq!(m.fast_used(), 4);
+        assert_eq!(m.slow_used(), 6);
+        assert_eq!(m.counters.alloc_fast, 4);
+        assert_eq!(m.counters.alloc_slow, 6);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocation_respects_reserve_watermark() {
+        let mut m = TieredMemory::new(10, 4);
+        for id in 0..10u32 {
+            m.allocate(id, 0, 2); // keep 2 pages free
+        }
+        assert_eq!(m.fast_used(), 2);
+        assert_eq!(m.fast_free(), 2);
+    }
+
+    #[test]
+    fn promote_and_demote_roundtrip() {
+        let mut m = TieredMemory::new(4, 2);
+        for id in 0..4u32 {
+            m.allocate(id, 0, 0);
+        }
+        // fast full (pages 0,1) — promotion of 2 must fail
+        assert!(!m.promote(2, 0));
+        assert_eq!(m.counters.promote_failed, 1);
+        m.demote(0, false);
+        assert!(m.promote(2, 0));
+        assert_eq!(m.counters.promoted, 1);
+        assert_eq!(m.counters.demoted_kswapd, 1);
+        assert_eq!(m.page(0).tier, Tier::Slow);
+        assert_eq!(m.page(2).tier, Tier::Fast);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promotion_respects_reserve_watermark() {
+        let mut m = TieredMemory::new(4, 3);
+        for id in 0..4u32 {
+            m.allocate(id, 0, 1); // fast holds 2, one reserve
+        }
+        assert_eq!(m.fast_used(), 2);
+        // one slot physically free but reserved ⇒ promotion fails
+        assert!(!m.promote(3, 1));
+        // without the reserve it succeeds
+        assert!(m.promote(3, 0));
+    }
+
+    #[test]
+    fn touch_updates_window_and_decay_halves() {
+        let mut m = TieredMemory::new(2, 2);
+        m.allocate(0, 0, 0);
+        assert_eq!(m.touch(0, 5, 3), Tier::Fast);
+        assert_eq!(m.page(0).window_count, 5);
+        assert_eq!(m.page(0).last_touch, 3);
+        m.decay_windows();
+        assert_eq!(m.page(0).window_count, 2);
+    }
+
+    #[test]
+    fn take_counters_resets() {
+        let mut m = TieredMemory::new(2, 1);
+        m.allocate(0, 0, 0);
+        m.allocate(1, 0, 0);
+        let c = m.take_counters();
+        assert_eq!(c.alloc_fast, 1);
+        assert_eq!(c.alloc_slow, 1);
+        assert_eq!(m.counters.alloc_fast, 0);
+    }
+}

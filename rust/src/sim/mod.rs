@@ -1,0 +1,27 @@
+//! Tiered-memory simulator substrate.
+//!
+//! The paper's testbed (Xeon Gold 6252 + DRAM fast tier + Optane DC PM slow
+//! tier, Linux + TPP) is not available, so the whole platform is simulated
+//! (DESIGN.md §2). The simulator is a *discrete-interval* model: a workload
+//! presents, for each profiling interval, the multiset of page accesses it
+//! performs plus its op counts; the page-management policy reacts
+//! (promotions / demotions / reclaim); and [`interval::IntervalModel`]
+//! converts the interval's traffic into wall time with a roofline-style
+//! `max(compute, latency, per-tier bandwidth)` model that makes the paper's
+//! phenomena first-class:
+//!
+//! * page migration competes with the application for memory bandwidth
+//!   (§3 bullet 1),
+//! * high arithmetic intensity hides memory performance (§3 bullet 2),
+//! * serialized accesses to few pages cap memory-level parallelism (§3.2
+//!   "Limitation" — the micro-benchmark's best-case-MLP bias).
+
+pub mod engine;
+pub mod interval;
+pub mod machine;
+pub mod mem;
+
+pub use engine::{Engine, RunResult, RunTrace};
+pub use interval::{IntervalInputs, IntervalModel, IntervalOutcome};
+pub use machine::MachineModel;
+pub use mem::{PageState, TieredMemory, Tier};

@@ -1,0 +1,192 @@
+//! Runtime workload telemetry (§5 "online component").
+//!
+//! On the paper's testbed this comes from hardware performance counters
+//! (AI, access counts) and `/proc/vmstat` (migration counts); here the
+//! counters are sourced from the simulator's per-interval trace records
+//! and exported under their vmstat names. The tuner consumes the
+//! per-tuning-window aggregate as a micro-benchmark configuration vector.
+
+use crate::microbench::MicrobenchConfig;
+use crate::sim::RunTrace;
+use crate::LINE_BYTES;
+
+/// Accumulates per-interval observations into tuning-window aggregates
+/// plus run-lifetime cumulative counters.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    hot_thr: u32,
+    threads: u32,
+    rss_pages: u64,
+    // --- window accumulators ---
+    w_intervals: u32,
+    w_acc_fast: u64,
+    w_acc_slow: u64,
+    w_sacc_fast: u64,
+    w_sacc_slow: u64,
+    w_promoted: u64,
+    w_demoted: u64,
+    w_ops: u64,
+    // --- cumulative (vmstat-style) ---
+    pub pgpromote_success: u64,
+    pub pgpromote_fail: u64,
+    pub pgdemote_kswapd: u64,
+    pub pgdemote_direct: u64,
+    pub numa_hint_faults: u64,
+    pub nr_free_pages_fast: u64,
+}
+
+impl Telemetry {
+    pub fn new(hot_thr: u32, threads: u32, rss_pages: u64) -> Self {
+        Telemetry {
+            hot_thr,
+            threads,
+            rss_pages,
+            w_intervals: 0,
+            w_acc_fast: 0,
+            w_acc_slow: 0,
+            w_sacc_fast: 0,
+            w_sacc_slow: 0,
+            w_promoted: 0,
+            w_demoted: 0,
+            w_ops: 0,
+            pgpromote_success: 0,
+            pgpromote_fail: 0,
+            pgdemote_kswapd: 0,
+            pgdemote_direct: 0,
+            numa_hint_faults: 0,
+            nr_free_pages_fast: 0,
+        }
+    }
+
+    /// Record one interval.
+    pub fn observe(&mut self, t: &RunTrace) {
+        self.w_intervals += 1;
+        self.w_acc_fast += t.acc_fast;
+        self.w_acc_slow += t.acc_slow;
+        self.w_sacc_fast += t.sacc_fast;
+        self.w_sacc_slow += t.sacc_slow;
+        self.w_promoted += t.promoted;
+        self.w_demoted += t.demoted_kswapd + t.demoted_direct;
+        self.w_ops += t.flops + t.iops;
+
+        self.pgpromote_success += t.promoted;
+        self.pgpromote_fail += t.promote_failed;
+        self.pgdemote_kswapd += t.demoted_kswapd;
+        self.pgdemote_direct += t.demoted_direct;
+        self.numa_hint_faults += t.promoted + t.promote_failed;
+        self.nr_free_pages_fast = t.fast_free;
+    }
+
+    /// Number of intervals accumulated in the current window.
+    pub fn window_len(&self) -> u32 {
+        self.w_intervals
+    }
+
+    /// Collapse the window into a configuration vector (per-interval
+    /// means) and reset the window. Returns `None` on an empty window.
+    pub fn take_window_config(&mut self) -> Option<MicrobenchConfig> {
+        if self.w_intervals == 0 {
+            return None;
+        }
+        let n = self.w_intervals as f64;
+        let bytes = (self.w_acc_fast + self.w_acc_slow) * LINE_BYTES;
+        let ai = if bytes == 0 { 0.0 } else { self.w_ops as f64 / bytes as f64 };
+        // pacc is in *sampled* (hint-fault) units — see RunTrace::sacc_fast.
+        let cfg = MicrobenchConfig {
+            pacc_f: self.w_sacc_fast as f64 / n,
+            pacc_s: self.w_sacc_slow as f64 / n,
+            pm_de: self.w_demoted as f64 / n,
+            pm_pr: self.w_promoted as f64 / n,
+            ai,
+            rss_pages: self.rss_pages as f64,
+            hot_thr: self.hot_thr as f64,
+            num_threads: self.threads as f64,
+        };
+        self.w_intervals = 0;
+        self.w_acc_fast = 0;
+        self.w_acc_slow = 0;
+        self.w_sacc_fast = 0;
+        self.w_sacc_slow = 0;
+        self.w_promoted = 0;
+        self.w_demoted = 0;
+        self.w_ops = 0;
+        Some(cfg)
+    }
+
+    /// vmstat-style counter dump (name, value) — what `/proc/vmstat`
+    /// exposes on the testbed; used by reports and the failure-injection
+    /// tests.
+    pub fn vmstat(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("pgpromote_success", self.pgpromote_success),
+            ("pgpromote_fail", self.pgpromote_fail),
+            ("pgdemote_kswapd", self.pgdemote_kswapd),
+            ("pgdemote_direct", self.pgdemote_direct),
+            ("numa_hint_faults", self.numa_hint_faults),
+            ("nr_free_pages_fast", self.nr_free_pages_fast),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::interval::IntervalOutcome;
+
+    fn trace(acc_fast: u64, acc_slow: u64, promoted: u64, demoted: u64) -> RunTrace {
+        RunTrace {
+            interval: 1,
+            clock_ns: 0.0,
+            wall_ns: 1.0,
+            acc_fast,
+            acc_slow,
+            sacc_fast: acc_fast, // tests use counts ≤ hot_thr per page
+            sacc_slow: acc_slow,
+            flops: 1000,
+            iops: 1000,
+            promoted,
+            promote_failed: 1,
+            demoted_kswapd: demoted,
+            demoted_direct: 0,
+            fast_used: 10,
+            fast_free: 5,
+            usable_fm: 10,
+            outcome: IntervalOutcome::default(),
+        }
+    }
+
+    #[test]
+    fn window_means_and_reset() {
+        let mut t = Telemetry::new(2, 16, 8000);
+        t.observe(&trace(1000, 100, 10, 8));
+        t.observe(&trace(3000, 300, 20, 12));
+        assert_eq!(t.window_len(), 2);
+        let cfg = t.take_window_config().unwrap();
+        assert!((cfg.pacc_f - 2000.0).abs() < 1e-9);
+        assert!((cfg.pacc_s - 200.0).abs() < 1e-9);
+        assert!((cfg.pm_pr - 15.0).abs() < 1e-9);
+        assert!((cfg.pm_de - 10.0).abs() < 1e-9);
+        assert_eq!(cfg.hot_thr, 2.0);
+        assert_eq!(cfg.num_threads, 16.0);
+        assert_eq!(cfg.rss_pages, 8000.0);
+        // AI = 4000 ops / (4400 accesses × 64 B)
+        assert!((cfg.ai - 4000.0 / (4400.0 * 64.0)).abs() < 1e-9);
+        // window reset
+        assert_eq!(t.window_len(), 0);
+        assert!(t.take_window_config().is_none());
+    }
+
+    #[test]
+    fn cumulative_counters_persist_across_windows() {
+        let mut t = Telemetry::new(2, 16, 8000);
+        t.observe(&trace(100, 10, 5, 3));
+        let _ = t.take_window_config();
+        t.observe(&trace(100, 10, 7, 4));
+        assert_eq!(t.pgpromote_success, 12);
+        assert_eq!(t.pgdemote_kswapd, 7);
+        assert_eq!(t.pgpromote_fail, 2);
+        assert_eq!(t.numa_hint_faults, 14);
+        let vm = t.vmstat();
+        assert!(vm.iter().any(|&(k, v)| k == "pgpromote_success" && v == 12));
+    }
+}

@@ -1,0 +1,78 @@
+//! NUMA first-touch baseline (no page migration).
+//!
+//! Fig. 1's "w/o TPP" configuration: pages are allocated to fast memory
+//! first and spill to slow memory once fast is full; they never move
+//! afterwards. Hot pages that happen to land in slow memory stay there —
+//! the reason the paper measures an 8.8% loss at 89.5% fast memory where
+//! TPP loses only 4.4%.
+
+use super::watermarks::Watermarks;
+use super::PagePolicy;
+use crate::sim::mem::TieredMemory;
+use crate::workloads::PageAccess;
+
+#[derive(Clone, Debug)]
+pub struct FirstTouch {
+    wm: Watermarks,
+}
+
+impl FirstTouch {
+    pub fn new(capacity: u64) -> Self {
+        FirstTouch { wm: Watermarks::default_for_capacity(capacity) }
+    }
+}
+
+impl PagePolicy for FirstTouch {
+    fn name(&self) -> &'static str {
+        "first-touch"
+    }
+
+    fn hot_thr(&self) -> u32 {
+        u32::MAX // never promotes
+    }
+
+    fn watermarks(&self) -> Watermarks {
+        self.wm
+    }
+
+    fn set_watermarks(&mut self, wm: Watermarks) {
+        self.wm = wm;
+    }
+
+    fn alloc_reserve(&self) -> u64 {
+        0 // use every fast page before spilling
+    }
+
+    fn run_interval(
+        &mut self,
+        _mem: &mut TieredMemory,
+        _touched: &[PageAccess],
+        _now: u32,
+        _kswapd_budget: u64,
+    ) {
+        // No migration of any kind.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mem::Tier;
+
+    #[test]
+    fn never_migrates_even_under_pressure() {
+        let cap = 50u64;
+        let mut mem = TieredMemory::new(100, cap);
+        let mut ft = FirstTouch::new(cap);
+        for id in 0..100u32 {
+            mem.allocate(id, 0, ft.alloc_reserve());
+        }
+        assert_eq!(mem.fast_used(), 50);
+        // Heat up a slow page far past any threshold.
+        mem.touch(99, 100, 1);
+        ft.run_interval(&mut mem, &[PageAccess { page: 99, random: 100, streamed: 0 }], 1, 1000);
+        assert_eq!(mem.page(99).tier, Tier::Slow);
+        let c = mem.take_counters();
+        assert_eq!(c.promoted + c.demoted_kswapd + c.demoted_direct, 0);
+    }
+}

@@ -1,0 +1,250 @@
+//! MEMTIS-style page management (SOSP'23), the second policy family the
+//! paper discusses: instead of TPP's fixed promotion threshold, MEMTIS
+//! keeps a **histogram of page access counts** and dynamically picks the
+//! hot threshold so that exactly the pages that fit in fast memory are
+//! classified hot.
+//!
+//! Tuna's handling of such policies (§3.2): "for such a dynamic
+//! `hot_thr`, its value is given as an input when the runtime queries the
+//! performance database" — which works unchanged here because `hot_thr`
+//! is a dimension of the configuration vector and the database samples
+//! several values of it. [`Memtis::hot_thr`] reports the *current*
+//! dynamic threshold, and that is what telemetry feeds into the query.
+
+use super::watermarks::Watermarks;
+use super::PagePolicy;
+use crate::sim::mem::{Tier, TieredMemory};
+use crate::workloads::PageAccess;
+use crate::PageId;
+
+/// Histogram buckets: window counts are clamped into `0..=MAX_BUCKET`.
+const MAX_BUCKET: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct Memtis {
+    wm: Watermarks,
+    /// Current dynamically-chosen promotion threshold.
+    hot_thr: u32,
+    /// Bounds for the dynamic threshold.
+    min_thr: u32,
+    max_thr: u32,
+    /// Access-count histogram over *all* allocated pages (rebuilt each
+    /// interval from the per-page window counters).
+    histogram: [u64; MAX_BUCKET + 1],
+    scan_budget: u64,
+    victims: Vec<(u32, u32, PageId)>,
+}
+
+impl Memtis {
+    pub fn new(wm: Watermarks) -> Self {
+        Memtis {
+            wm,
+            hot_thr: 2,
+            min_thr: 1,
+            max_thr: MAX_BUCKET as u32,
+            histogram: [0; MAX_BUCKET + 1],
+            scan_budget: 384,
+            victims: Vec::new(),
+        }
+    }
+
+    /// Rebuild the histogram and pick the smallest threshold T such that
+    /// the pages with window count ≥ T fit within the usable fast size
+    /// (MEMTIS's "hot set sized to fast memory" rule).
+    fn retune_threshold(&mut self, mem: &TieredMemory) {
+        self.histogram = [0; MAX_BUCKET + 1];
+        for id in 0..mem.rss_pages() as u32 {
+            let p = mem.page(id);
+            if p.allocated {
+                let b = (p.window_count as usize).min(MAX_BUCKET);
+                self.histogram[b] += 1;
+            }
+        }
+        let budget = self.wm.usable(mem.fast_capacity());
+        let mut cum = 0u64;
+        let mut thr = self.min_thr;
+        // walk the histogram from the hottest bucket down until the
+        // cumulative hot set would overflow fast memory
+        for b in (self.min_thr as usize..=MAX_BUCKET).rev() {
+            cum += self.histogram[b];
+            if cum > budget {
+                thr = (b as u32 + 1).min(self.max_thr);
+                self.hot_thr = thr.max(self.min_thr);
+                return;
+            }
+            thr = b as u32;
+        }
+        self.hot_thr = thr.max(self.min_thr);
+    }
+
+    pub fn histogram(&self) -> &[u64; MAX_BUCKET + 1] {
+        &self.histogram
+    }
+
+    /// Demote up to `want` coldest fast pages (same victim order as TPP).
+    fn demote_coldest(&mut self, mem: &mut TieredMemory, want: u64) -> u64 {
+        if want == 0 {
+            return 0;
+        }
+        self.victims.clear();
+        for id in 0..mem.rss_pages() as u32 {
+            let p = mem.page(id);
+            if p.allocated && p.tier == Tier::Fast {
+                self.victims.push((p.window_count, p.last_touch, id));
+            }
+        }
+        let n = (want as usize).min(self.victims.len());
+        if n == 0 {
+            return 0;
+        }
+        if n < self.victims.len() {
+            self.victims.select_nth_unstable_by_key(n - 1, |&(w, t, _)| (w, t));
+        }
+        self.victims[..n].sort_unstable_by_key(|&(w, t, id)| (w, t, id));
+        let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, id)| id).collect();
+        for id in ids {
+            mem.demote(id, false);
+        }
+        n as u64
+    }
+}
+
+impl PagePolicy for Memtis {
+    fn name(&self) -> &'static str {
+        "memtis"
+    }
+
+    fn hot_thr(&self) -> u32 {
+        self.hot_thr
+    }
+
+    fn watermarks(&self) -> Watermarks {
+        self.wm
+    }
+
+    fn set_watermarks(&mut self, wm: Watermarks) {
+        self.wm = wm;
+    }
+
+    fn alloc_reserve(&self) -> u64 {
+        self.wm.low
+    }
+
+    fn run_interval(
+        &mut self,
+        mem: &mut TieredMemory,
+        touched: &[PageAccess],
+        _now: u32,
+        kswapd_budget: u64,
+    ) {
+        // 1. retune the dynamic threshold from the fresh histogram
+        self.retune_threshold(mem);
+
+        // 2. promotion pass with the dynamic threshold (scan-budgeted)
+        let mut attempts = 0u64;
+        for a in touched {
+            if attempts >= self.scan_budget {
+                break;
+            }
+            let p = mem.page(a.page);
+            if p.tier == Tier::Slow && p.window_count >= self.hot_thr {
+                attempts += 1;
+                if !mem.promote(a.page, self.wm.min) {
+                    mem.page_mut(a.page).window_count = 0;
+                }
+            }
+        }
+
+        // 3. background demotion toward the high watermark
+        let free = mem.fast_free();
+        if free < self.wm.low {
+            let want = (self.wm.high - free).min(kswapd_budget);
+            self.demote_coldest(mem, want);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(rss: usize, cap: u64) -> TieredMemory {
+        let mut mem = TieredMemory::new(rss, cap);
+        for id in 0..rss as u32 {
+            mem.allocate(id, 0, Watermarks::default_for_capacity(cap).low);
+        }
+        mem
+    }
+
+    #[test]
+    fn threshold_rises_under_memory_pressure() {
+        // plenty of hot pages, small fast memory ⇒ threshold must rise
+        let cap = 200u64;
+        let mut mem = filled(1000, cap);
+        for id in 0..600u32 {
+            mem.touch(id, 8, 1); // 600 pages at bucket 8 ≫ capacity
+        }
+        let mut m = Memtis::new(Watermarks::default_for_capacity(cap));
+        m.run_interval(&mut mem, &[], 1, 0);
+        assert!(m.hot_thr() > 8, "hot_thr={} should exceed the crowd", m.hot_thr());
+
+        // roomy fast memory ⇒ threshold relaxes
+        let cap2 = 5_000u64;
+        let mut mem2 = filled(1000, cap2);
+        for id in 0..600u32 {
+            mem2.touch(id, 8, 1);
+        }
+        let mut m2 = Memtis::new(Watermarks::default_for_capacity(cap2));
+        m2.run_interval(&mut mem2, &[], 1, 0);
+        assert!(m2.hot_thr() <= 2, "hot_thr={} should relax", m2.hot_thr());
+    }
+
+    #[test]
+    fn histogram_counts_all_allocated_pages() {
+        let cap = 500u64;
+        let mut mem = filled(100, cap);
+        for id in 0..10u32 {
+            mem.touch(id, 3, 1);
+        }
+        let mut m = Memtis::new(Watermarks::default_for_capacity(cap));
+        m.run_interval(&mut mem, &[], 1, 0);
+        let h = m.histogram();
+        assert_eq!(h.iter().sum::<u64>(), 100);
+        assert_eq!(h[3], 10);
+        assert_eq!(h[0], 90);
+    }
+
+    #[test]
+    fn promotes_with_dynamic_threshold_and_respects_watermarks() {
+        let cap = 120u64;
+        let wm = Watermarks { min: 5, low: 10, high: 15 };
+        let mut mem = TieredMemory::new(300, cap);
+        for id in 0..300u32 {
+            mem.allocate(id, 0, 0);
+        }
+        // hot slow page
+        let hot = 250u32;
+        mem.touch(hot, 12, 1);
+        let mut m = Memtis::new(wm);
+        let touched = [PageAccess { page: hot, random: 12, streamed: 0 }];
+        m.run_interval(&mut mem, &touched, 1, 50);
+        // free was 0 < min ⇒ promotion failed first, kswapd freed pages
+        assert!(mem.fast_free() >= wm.low.min(50));
+        // second interval: now there is room
+        mem.touch(hot, 12, 2);
+        m.run_interval(&mut mem, &touched, 2, 50);
+        assert_eq!(mem.page(hot).tier, Tier::Fast, "hot page promoted (thr={})", m.hot_thr());
+    }
+
+    #[test]
+    fn works_under_the_engine_with_real_workloads() {
+        use crate::sim::{Engine, IntervalModel, MachineModel};
+        let mut w = crate::workloads::by_name("Btree", 3, 40).unwrap();
+        let cap = Engine::fm_capacity(w.rss_pages(), 0.85);
+        let mut m = Memtis::new(Watermarks::default_for_capacity(cap));
+        let engine = Engine::new(IntervalModel::new(MachineModel::default()));
+        let res = engine.run(w.as_mut(), &mut m, cap, |_| None);
+        assert_eq!(res.policy, "memtis");
+        assert!(res.total_promoted() > 0, "memtis must migrate under pressure");
+    }
+}

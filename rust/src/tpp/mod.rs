@@ -1,0 +1,305 @@
+//! Page-management policies for the tiered-memory simulator.
+//!
+//! [`Tpp`] reimplements the control loop of *TPP: Transparent Page
+//! Placement for CXL-Enabled Tiered-Memory* (ASPLOS'23), the policy the
+//! paper deploys:
+//!
+//! * **Promotion** on access frequency: a slow-tier page whose profiling-
+//!   window access count reaches `hot_thr` is promoted on its next access
+//!   (TPP's NUMA-hint-fault path; blocking for the faulting thread). If
+//!   fewer than `min`-watermark pages are free, the promotion *fails* —
+//!   the "page migration failure" counter of the paper's motivation study.
+//! * **Background demotion** by a kswapd model: when free pages fall below
+//!   the `low` watermark, the coldest fast-tier pages are demoted until
+//!   the `high` watermark is restored, subject to a per-interval reclaim
+//!   throughput budget (when promotions outpace this budget, failures
+//!   accumulate — the Fig. 1 cliff at 26.6% fast memory).
+//! * **Direct reclaim** below the `min` watermark: blocking demotions,
+//!   charged to application time (what Tuna's watermark programming is
+//!   designed to avoid, §4).
+//!
+//! [`firsttouch::FirstTouch`] is the no-migration NUMA first-touch
+//! baseline of Fig. 1, and [`memtis::Memtis`] the dynamic-`hot_thr`
+//! policy family (MEMTIS) whose threshold Tuna feeds into the database
+//! query as a vector dimension (§3.2).
+
+pub mod firsttouch;
+pub mod memtis;
+pub mod watermarks;
+
+pub use firsttouch::FirstTouch;
+pub use memtis::Memtis;
+pub use watermarks::Watermarks;
+
+use crate::sim::mem::{TieredMemory, Tier};
+use crate::workloads::PageAccess;
+use crate::PageId;
+
+/// A page-management policy the engine invokes once per profiling interval.
+pub trait PagePolicy {
+    fn name(&self) -> &'static str;
+    /// Promotion threshold (accesses in the profiling window).
+    fn hot_thr(&self) -> u32;
+    fn watermarks(&self) -> Watermarks;
+    /// Reprogram the watermarks (Tuna's §4 control knob).
+    fn set_watermarks(&mut self, wm: Watermarks);
+    /// Free pages to reserve when placing *new* allocations in fast.
+    fn alloc_reserve(&self) -> u64;
+    /// React to this interval's accesses: promote/demote/reclaim.
+    /// `touched` is the interval's page-access histogram; `kswapd_budget`
+    /// is how many pages kswapd may demote this interval (derived from the
+    /// previous interval's wall time and the machine's reclaim rate).
+    fn run_interval(
+        &mut self,
+        mem: &mut TieredMemory,
+        touched: &[PageAccess],
+        now: u32,
+        kswapd_budget: u64,
+    );
+}
+
+/// The TPP policy.
+#[derive(Clone, Debug)]
+pub struct Tpp {
+    wm: Watermarks,
+    hot_thr: u32,
+    /// NUMA-hint-fault scan budget: promotion attempts per interval
+    /// (see [`crate::sim::MachineModel::promote_scan_pages_per_interval`]).
+    pub scan_budget: u64,
+    /// Scratch buffer reused across intervals for victim selection
+    /// (hot-loop allocation hygiene; see EXPERIMENTS.md §Perf).
+    victims: Vec<(u32, u32, PageId)>,
+}
+
+impl Tpp {
+    /// TPP with its default two-touch promotion threshold.
+    pub fn new(wm: Watermarks) -> Self {
+        Self::with_hot_thr(wm, 2)
+    }
+
+    pub fn with_hot_thr(wm: Watermarks, hot_thr: u32) -> Self {
+        assert!(hot_thr >= 1);
+        Tpp { wm, hot_thr, scan_budget: 384, victims: Vec::new() }
+    }
+
+    /// Demote up to `want` of the coldest fast-tier pages. Victims are
+    /// ordered by (window_count, last_touch): cold-and-old first, which is
+    /// TPP's "inactive LRU first" reclaim order collapsed to one scan.
+    fn demote_coldest(&mut self, mem: &mut TieredMemory, want: u64, direct: bool) -> u64 {
+        if want == 0 {
+            return 0;
+        }
+        self.victims.clear();
+        for id in 0..mem.rss_pages() as u32 {
+            let p = mem.page(id);
+            if p.allocated && p.tier == Tier::Fast {
+                self.victims.push((p.window_count, p.last_touch, id));
+            }
+        }
+        let n = (want as usize).min(self.victims.len());
+        if n == 0 {
+            return 0;
+        }
+        if n < self.victims.len() {
+            self.victims
+                .select_nth_unstable_by_key(n - 1, |&(w, t, _)| (w, t));
+        }
+        // Deterministic demotion order within the selected cold set.
+        self.victims[..n].sort_unstable_by_key(|&(w, t, id)| (w, t, id));
+        let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, id)| id).collect();
+        for id in ids {
+            mem.demote(id, direct);
+        }
+        n as u64
+    }
+}
+
+impl PagePolicy for Tpp {
+    fn name(&self) -> &'static str {
+        "tpp"
+    }
+
+    fn hot_thr(&self) -> u32 {
+        self.hot_thr
+    }
+
+    fn watermarks(&self) -> Watermarks {
+        self.wm
+    }
+
+    fn set_watermarks(&mut self, wm: Watermarks) {
+        self.wm = wm;
+    }
+
+    fn alloc_reserve(&self) -> u64 {
+        self.wm.low
+    }
+
+    fn run_interval(
+        &mut self,
+        mem: &mut TieredMemory,
+        touched: &[PageAccess],
+        now: u32,
+        kswapd_budget: u64,
+    ) {
+        let _ = now;
+        // --- promotion pass (NUMA hint faults on hot slow pages) ---
+        // Attempts are bounded by the AutoNUMA scan budget: pages beyond
+        // it simply don't take a hint fault this interval.
+        let mut attempts = 0u64;
+        for a in touched {
+            let id = a.page;
+            if attempts >= self.scan_budget {
+                break;
+            }
+            let p = mem.page(id);
+            if p.tier == Tier::Slow && p.window_count >= self.hot_thr {
+                attempts += 1;
+                // Denied below the min watermark → migration failure.
+                // On failure the hint fault is consumed without a retry
+                // until the page re-heats (fault-sampling backoff) — TPP
+                // never direct-reclaims on the promotion path; that
+                // decoupling is its headline design point.
+                if !mem.promote(id, self.wm.min) {
+                    mem.page_mut(id).window_count = 0;
+                }
+            }
+        }
+
+        // --- kswapd background demotion ---
+        let free = mem.fast_free();
+        if free < self.wm.low {
+            let want = (self.wm.high - free).min(kswapd_budget);
+            self.demote_coldest(mem, want, false);
+        }
+        // NOTE: no spontaneous direct reclaim here. Direct (blocking)
+        // reclaim happens only on allocation pressure below `min`, which
+        // the engine's allocation reserve prevents in steady state; the
+        // `direct-resize` ablation policy exercises that path instead.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mem::TieredMemory;
+
+    fn setup(rss: usize, cap: u64) -> (TieredMemory, Tpp) {
+        let wm = Watermarks::default_for_capacity(cap);
+        let mut mem = TieredMemory::new(rss, cap);
+        let tpp = Tpp::new(wm);
+        for id in 0..rss as u32 {
+            mem.allocate(id, 0, tpp.alloc_reserve());
+        }
+        (mem, tpp)
+    }
+
+    #[test]
+    fn hot_slow_pages_get_promoted() {
+        let (mut mem, mut tpp) = setup(1000, 800);
+        // pages ≥ usable fast live in slow; heat one up
+        let victim = 999u32;
+        assert_eq!(mem.page(victim).tier, Tier::Slow);
+        mem.touch(victim, 3, 1);
+        tpp.run_interval(&mut mem, &[PageAccess { page: victim, random: 3, streamed: 0 }], 1, 100);
+        assert_eq!(mem.page(victim).tier, Tier::Fast);
+        assert_eq!(mem.counters.promoted, 1);
+        mem.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cold_slow_pages_stay_put() {
+        let (mut mem, mut tpp) = setup(1000, 800);
+        let victim = 999u32;
+        mem.touch(victim, 1, 1); // below hot_thr=2
+        tpp.run_interval(&mut mem, &[PageAccess { page: victim, random: 1, streamed: 0 }], 1, 100);
+        assert_eq!(mem.page(victim).tier, Tier::Slow);
+        assert_eq!(mem.counters.promoted, 0);
+    }
+
+    #[test]
+    fn kswapd_restores_high_watermark_and_prefers_cold_victims() {
+        let cap = 100u64;
+        let wm = Watermarks { min: 5, low: 10, high: 15 };
+        let mut mem = TieredMemory::new(200, cap);
+        let mut tpp = Tpp::with_hot_thr(wm, 2);
+        for id in 0..200u32 {
+            mem.allocate(id, 0, 0); // fill fast completely
+        }
+        assert_eq!(mem.fast_free(), 0);
+        // heat up pages 0..50 so they are NOT victims
+        let touched: Vec<PageAccess> =
+            (0..50u32).map(|id| PageAccess { page: id, random: 8, streamed: 0 }).collect();
+        for a in &touched {
+            mem.touch(a.page, a.random, 1);
+        }
+        tpp.run_interval(&mut mem, &touched, 1, 1000);
+        assert_eq!(mem.fast_free(), wm.high);
+        assert_eq!(mem.counters.demoted_kswapd, wm.high);
+        for id in 0..50u32 {
+            assert_eq!(mem.page(id).tier, Tier::Fast, "hot page {id} demoted");
+        }
+        mem.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kswapd_budget_limits_reclaim_and_never_direct_reclaims() {
+        let cap = 100u64;
+        let wm = Watermarks { min: 8, low: 20, high: 30 };
+        let mut mem = TieredMemory::new(150, cap);
+        let mut tpp = Tpp::new(wm);
+        for id in 0..150u32 {
+            mem.allocate(id, 0, 0);
+        }
+        // budget 4 < needed 30 ⇒ kswapd demotes exactly 4; TPP never
+        // blocks the app with direct reclaim on its own.
+        tpp.run_interval(&mut mem, &[], 1, 4);
+        assert_eq!(mem.counters.demoted_kswapd, 4);
+        assert_eq!(mem.counters.demoted_direct, 0);
+        assert_eq!(mem.fast_free(), 4);
+        // next interval kswapd continues
+        tpp.run_interval(&mut mem, &[], 2, 4);
+        assert_eq!(mem.counters.demoted_kswapd, 8);
+    }
+
+    #[test]
+    fn promotion_fails_below_min_watermark_and_backs_off() {
+        let cap = 100u64;
+        let wm = Watermarks { min: 10, low: 20, high: 25 };
+        let mut mem = TieredMemory::new(200, cap);
+        let mut tpp = Tpp::new(wm);
+        for id in 0..200u32 {
+            mem.allocate(id, 0, 0); // free = 0 < min
+        }
+        let hot = 150u32;
+        mem.touch(hot, 5, 1);
+        // kswapd_budget 0: nothing reclaimed, promotion must fail
+        tpp.run_interval(&mut mem, &[PageAccess { page: hot, random: 5, streamed: 0 }], 1, 0);
+        assert_eq!(mem.counters.promoted, 0);
+        assert_eq!(mem.counters.promote_failed, 1);
+        // fault backoff: window reset so the page must re-heat
+        assert_eq!(mem.page(hot).window_count, 0);
+        // second interval without re-heating: no second failure
+        tpp.run_interval(&mut mem, &[PageAccess { page: hot, random: 0, streamed: 0 }], 2, 0);
+        assert_eq!(mem.counters.promote_failed, 1);
+    }
+
+    #[test]
+    fn hot_thr_is_respected() {
+        let cap = 80u64;
+        let wm = Watermarks::default_for_capacity(cap);
+        let mut mem = TieredMemory::new(100, cap);
+        let mut tpp = Tpp::with_hot_thr(wm, 4);
+        for id in 0..100u32 {
+            mem.allocate(id, 0, tpp.alloc_reserve());
+        }
+        let page = 99u32;
+        assert_eq!(mem.page(page).tier, Tier::Slow);
+        mem.touch(page, 3, 1);
+        tpp.run_interval(&mut mem, &[PageAccess { page, random: 3, streamed: 0 }], 1, 10);
+        assert_eq!(mem.page(page).tier, Tier::Slow, "below hot_thr=4");
+        mem.touch(page, 1, 2);
+        tpp.run_interval(&mut mem, &[PageAccess { page, random: 1, streamed: 0 }], 2, 10);
+        assert_eq!(mem.page(page).tier, Tier::Fast, "reached hot_thr=4");
+    }
+}

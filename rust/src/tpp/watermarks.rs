@@ -1,0 +1,119 @@
+//! Page-reclaim watermarks (§4 of the paper).
+//!
+//! Linux expresses watermarks as *free-page* thresholds per zone; Tuna
+//! controls the usable fast-memory size by programming them
+//! (`/proc/sys/vm/min_free_kbytes`, `high_free_kbytes` on the testbed;
+//! fields of this struct here):
+//!
+//! * `free < min`  → **direct reclaim**: the faulting application thread
+//!   itself demotes pages — blocking, the case Tuna avoids;
+//! * `free < low`  → **kswapd** wakes and demotes in the background until
+//!   `free ≥ high`;
+//! * promotions are denied (counted as migration failures) when they would
+//!   push `free` below `min`.
+//!
+//! To cap usable fast memory at `new_fm` pages out of `capacity`, Tuna
+//! needs `free ≥ capacity − new_fm`, so it programs
+//! `low = high = capacity − new_fm` and `min = 0.8 × low` (the paper keeps
+//! Linux's `min ≈ 0.8 × low` coupling, and sets `high` to exactly the
+//! target so kswapd "does not reclaim too many pages").
+
+/// Free-page thresholds for the fast tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Watermarks {
+    /// Below this many free pages: direct (blocking) reclaim.
+    pub min: u64,
+    /// Below this many free pages: kswapd starts demoting.
+    pub low: u64,
+    /// kswapd demotes until this many pages are free.
+    pub high: u64,
+}
+
+impl Watermarks {
+    /// Linux-flavoured defaults for a fast tier of `capacity` pages:
+    /// min 0.5%, low 1%, high 1.5% (small reserve so TPP promotions have
+    /// headroom, as TPP's decoupled allocation/reclaim design intends).
+    pub fn default_for_capacity(capacity: u64) -> Self {
+        let min = (capacity / 200).max(2);
+        let low = (capacity / 100).max(min + 1);
+        let high = (capacity * 3 / 200).max(low + 1);
+        Watermarks { min, low, high }
+    }
+
+    /// Program the watermarks so at most `new_fm` pages of a `capacity`-
+    /// page fast tier are usable (§4). Keeps `min = 0.8 × low`.
+    pub fn for_target_fm(capacity: u64, new_fm: u64) -> Self {
+        let new_fm = new_fm.min(capacity);
+        let target_free = capacity - new_fm;
+        let defaults = Self::default_for_capacity(capacity);
+        let low = target_free.max(defaults.low);
+        let high = low; // stop reclaim exactly at the target
+        let min = ((low as f64 * 0.8) as u64).max(1).min(low.saturating_sub(1)).max(1);
+        Watermarks { min, low, high }
+    }
+
+    /// Usable fast-memory pages under these watermarks.
+    pub fn usable(&self, capacity: u64) -> u64 {
+        capacity.saturating_sub(self.low)
+    }
+
+    /// Watermark ordering invariant: `min < low ≤ high < capacity`.
+    pub fn check(&self, capacity: u64) -> Result<(), String> {
+        if !(self.min < self.low) {
+            return Err(format!("min {} !< low {}", self.min, self.low));
+        }
+        if !(self.low <= self.high) {
+            return Err(format!("low {} !<= high {}", self.low, self.high));
+        }
+        if self.high >= capacity {
+            return Err(format!("high {} >= capacity {capacity}", self.high));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_ordered() {
+        for cap in [100u64, 1000, 50_000, 1_000_000] {
+            let wm = Watermarks::default_for_capacity(cap);
+            wm.check(cap).unwrap();
+        }
+    }
+
+    #[test]
+    fn target_fm_reserves_free_space() {
+        let cap = 10_000;
+        let wm = Watermarks::for_target_fm(cap, 9_000);
+        assert_eq!(wm.low, 1_000);
+        assert_eq!(wm.high, 1_000);
+        assert_eq!(wm.min, 800);
+        assert_eq!(wm.usable(cap), 9_000);
+        wm.check(cap).unwrap();
+    }
+
+    #[test]
+    fn target_fm_full_capacity_falls_back_to_defaults() {
+        let cap = 10_000;
+        let wm = Watermarks::for_target_fm(cap, cap);
+        // Can't usefully ask for 100%: the default reserve applies.
+        assert_eq!(wm.low, Watermarks::default_for_capacity(cap).low);
+        wm.check(cap).unwrap();
+    }
+
+    #[test]
+    fn target_clamps_above_capacity() {
+        let wm = Watermarks::for_target_fm(1_000, 5_000);
+        wm.check(1_000).unwrap();
+    }
+
+    #[test]
+    fn min_tracks_80_percent_of_low() {
+        let wm = Watermarks::for_target_fm(100_000, 60_000);
+        assert_eq!(wm.low, 40_000);
+        assert_eq!(wm.min, 32_000);
+    }
+}

@@ -1,0 +1,74 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides wall-clock timing with warmup, repetition, and simple
+//! statistics, plus helpers the `[[bench]] harness = false` targets use to
+//! print paper-style tables.
+
+use std::time::Instant;
+
+use super::stats::percentile;
+
+/// Result of timing a closure repeatedly.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Per-iteration wall times in nanoseconds, sorted ascending.
+    pub samples_ns: Vec<f64>,
+}
+
+impl Timing {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.5)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.95)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns[0]
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+/// Returns per-iteration statistics. `f` should return something observable
+/// (use [`std::hint::black_box`] inside) to prevent dead-code elimination.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing { samples_ns: samples }
+}
+
+/// Time a single run of `f` in nanoseconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_nanos() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_collects_samples() {
+        let t = time_it(2, 10, || {
+            std::hint::black_box((0..100u64).sum::<u64>());
+        });
+        assert_eq!(t.samples_ns.len(), 10);
+        assert!(t.min_ns() >= 0.0);
+        assert!(t.p95_ns() >= t.p50_ns());
+        assert!(t.mean_ns() > 0.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Small self-contained utilities.
+//!
+//! The build image has no access to the crates.io registry beyond the
+//! pre-cached `xla`/`anyhow` dependency closure, so the usual suspects
+//! (`rand`, `proptest`, `serde`, `clap`, `criterion`) are hand-rolled here
+//! at the scale this project needs. See DESIGN.md §2 (crate substitutions).
+
+pub mod bench;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count as a human-readable string (binary units).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a nanosecond count as a human-readable duration.
+pub fn human_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.0 GiB");
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert_eq!(human_ns(900), "900 ns");
+        assert_eq!(human_ns(1500), "1.50 us");
+        assert_eq!(human_ns(2_500_000), "2.50 ms");
+        assert_eq!(human_ns(1_250_000_000), "1.250 s");
+    }
+}

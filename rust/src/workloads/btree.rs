@@ -1,0 +1,219 @@
+//! In-memory B-tree index (mitosis-workload-btree style): point lookups
+//! with a zipf-distributed key popularity.
+//!
+//! Layout: `root | internal nodes | leaf nodes | value heap | pad`.
+//! The tree is page-sized-node (4 KiB) with fanout 256: a three-level
+//! descent touches root → internal → leaf → value. Key popularity follows
+//! a zipf law, so cold leaves/values form a large reclaimable tail — this
+//! is why the paper's biggest fast-memory saving (16%, Fig. 7) comes from
+//! Btree.
+
+use super::graph::{Layout, PageHisto, Region};
+use super::{AccessProfile, Workload, PAGES_PER_PAPER_GB};
+use crate::util::rng::{Rng, Zipf};
+
+/// Keys per leaf page (16-byte records: 8 B key + 8 B value pointer).
+const LEAF_FANOUT: u64 = 256;
+/// Children per internal page.
+const INNER_FANOUT: u64 = 256;
+
+pub struct Btree {
+    r_root: Region,
+    r_inner: Region,
+    r_leaves: Region,
+    r_values: Region,
+    /// Total keys indexed (reported by Table 1-style summaries).
+    pub n_keys: u64,
+    n_leaves: u64,
+    n_inner: u64,
+    rss: usize,
+    histo: PageHisto,
+    zipf: Zipf,
+    lookups_per_interval: u32,
+    update_fraction: f64,
+    intervals_left: u32,
+    first_interval: bool,
+    rng: Rng,
+    threads: u32,
+    pub lookups_done: u64,
+    pub updates_done: u64,
+}
+
+impl Btree {
+    /// Paper-scale instance: RSS = 10.8 paper-GB (Table 1).
+    pub fn paper_scale(seed: u64, intervals: u32) -> Self {
+        let rss_pages = (10.8 * PAGES_PER_PAPER_GB) as usize;
+        Self::with_rss(rss_pages, seed, intervals)
+    }
+
+    pub fn with_rss(rss_pages: usize, seed: u64, intervals: u32) -> Self {
+        // Split RSS: ~55% leaves, ~40% value heap, rest index.
+        let n_leaves = (rss_pages as u64 * 55 / 100).max(64);
+        let n_keys = n_leaves * LEAF_FANOUT;
+        let n_inner = n_leaves.div_ceil(INNER_FANOUT).max(1);
+        let value_pages = (rss_pages as u64 * 40 / 100).max(64);
+        let mut l = Layout::new();
+        let r_root = l.region(1, crate::PAGE_BYTES);
+        let r_inner = l.region(n_inner, crate::PAGE_BYTES);
+        let r_leaves = l.region(n_leaves, crate::PAGE_BYTES);
+        let r_values = l.region(value_pages, crate::PAGE_BYTES);
+        l.pad_to(rss_pages);
+        let rss = l.total_pages().max(rss_pages);
+        Btree {
+            r_root,
+            r_inner,
+            r_leaves,
+            r_values,
+            n_keys,
+            n_leaves,
+            n_inner,
+            rss,
+            histo: PageHisto::new(rss),
+            // popularity at *leaf* granularity: recently inserted /
+            // trending items cluster in leaves, which is what gives the
+            // index its page-level skew (and the paper its 16% saving)
+            zipf: Zipf::new(n_leaves as usize, 0.8),
+            lookups_per_interval: 40_000,
+            update_fraction: 0.05,
+            intervals_left: intervals,
+            first_interval: true,
+            rng: Rng::new(seed ^ 0xb7ee),
+            threads: 16,
+            lookups_done: 0,
+            updates_done: 0,
+        }
+    }
+}
+
+impl Workload for Btree {
+    fn name(&self) -> &'static str {
+        "Btree"
+    }
+
+    fn rss_pages(&self) -> usize {
+        self.rss
+    }
+
+    fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    fn next_interval(&mut self) -> Option<AccessProfile> {
+        if self.intervals_left == 0 {
+            return None;
+        }
+        self.intervals_left -= 1;
+
+        if self.first_interval {
+            self.first_interval = false;
+            for p in 0..self.rss as u32 {
+                self.histo.touch(p, 1);
+            }
+            return Some(AccessProfile {
+                accesses: self.histo.drain(),
+                flops: 0,
+                iops: self.rss as u64 * 16,
+            });
+        }
+
+        let mut iops: u64 = 0;
+        for _ in 0..self.lookups_per_interval {
+            self.lookups_done += 1;
+            // zipf rank → leaf. Popularity ranks are scattered over leaf
+            // ids by a fixed permutation (hot leaves are not physically
+            // adjacent), and the key within the leaf is uniform.
+            let rank = self.zipf.sample(&mut self.rng) as u64;
+            let leaf = rank.wrapping_mul(0x9E37_79B9_7F4A_7C15) % self.n_leaves;
+            let key = leaf * LEAF_FANOUT + self.rng.below(LEAF_FANOUT);
+            let inner = leaf / INNER_FANOUT;
+
+            self.histo.touch(self.r_root.page_of(0), 1);
+            self.histo.touch(self.r_inner.page_of(inner.min(self.n_inner - 1)), 1);
+            self.histo.touch(self.r_leaves.page_of(leaf.min(self.n_leaves - 1)), 1);
+            // binary search inside two nodes + pointer chase
+            iops += 2 * 8 + 4;
+
+            // value heap access: a value page cluster per leaf (values
+            // are allocated alongside their keys), so heap heat follows
+            // leaf popularity.
+            let vpage = (leaf.wrapping_mul(0xD1B5_4A32_D192_ED03)
+                .wrapping_add(key & 7))
+                % self.r_values.n_elems;
+            self.histo.touch(self.r_values.page_of(vpage), 1);
+            iops += 4;
+
+            if self.rng.chance(self.update_fraction) {
+                self.updates_done += 1;
+                // in-place value update: one more touch of the same pages
+                self.histo.touch(self.r_leaves.page_of(leaf.min(self.n_leaves - 1)), 1);
+                self.histo.touch(self.r_values.page_of(vpage), 1);
+                iops += 6;
+            }
+        }
+
+        Some(AccessProfile { accesses: self.histo.drain(), flops: 0, iops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_matches_paper_scale() {
+        let w = Btree::paper_scale(1, 5);
+        let want = (10.8 * PAGES_PER_PAPER_GB) as usize;
+        assert!(w.rss_pages() >= want && w.rss_pages() < want + 200);
+    }
+
+    #[test]
+    fn access_skew_leaves_a_cold_tail() {
+        let mut w = Btree::with_rss(4000, 3, 15);
+        let mut total = vec![0u64; w.rss_pages()];
+        let _ = w.next_interval();
+        while let Some(p) = w.next_interval() {
+            for a in p.accesses {
+                total[a.page as usize] += a.total() as u64;
+            }
+        }
+        // the coldest 20% of pages should carry almost none of the heat —
+        // that's the reclaimable tail Tuna exploits (16% saving, Fig. 7)
+        let mut sorted = total.clone();
+        sorted.sort_unstable();
+        let cold_fifth: u64 = sorted[..w.rss_pages() / 5].iter().sum();
+        let all: u64 = sorted.iter().sum();
+        assert!(
+            (cold_fifth as f64) < 0.05 * all as f64,
+            "cold 20% holds {cold_fifth}/{all}"
+        );
+        // ... while the root page is the hottest thing in the run
+        let root_heat = total[w.r_root.first_page as usize];
+        let median = {
+            let mut s: Vec<u64> = total.iter().copied().filter(|&c| c > 0).collect();
+            s.sort_unstable();
+            s[s.len() / 2]
+        };
+        // (the per-interval cache cap flattens the root's true heat)
+        assert!(root_heat > 3 * median.max(1), "root={root_heat} median={median}");
+    }
+
+    #[test]
+    fn updates_happen_at_the_configured_fraction() {
+        let mut w = Btree::with_rss(3000, 9, 10);
+        while w.next_interval().is_some() {}
+        let frac = w.updates_done as f64 / w.lookups_done as f64;
+        assert!((frac - 0.05).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let sig = |seed| {
+            let mut w = Btree::with_rss(2000, seed, 5);
+            std::iter::from_fn(move || w.next_interval())
+                .map(|p| p.total_accesses())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(sig(4), sig(4));
+        assert_ne!(sig(4), sig(5));
+    }
+}

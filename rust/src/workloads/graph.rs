@@ -1,0 +1,387 @@
+//! Synthetic graph substrate + page-accounting helpers shared by the
+//! workloads.
+//!
+//! Graphs are power-law (zipf-distributed in-degree, the RMAT/GAP regime)
+//! in CSR layout with degree-descending vertex ids — the common GAP
+//! preprocessing — so hub vertices cluster at low ids and page-level access
+//! skew is organic. Graph construction is deterministic per seed and
+//! cached process-wide (benches re-run the same workload dozens of times).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::rng::{Rng, Zipf};
+use crate::{PageId, PAGE_BYTES};
+
+/// A directed graph in CSR form with optional edge weights.
+#[derive(Debug)]
+pub struct Csr {
+    pub n: u32,
+    /// offsets[v]..offsets[v+1] indexes `dst` (and `weight`).
+    pub offsets: Vec<u64>,
+    pub dst: Vec<u32>,
+    /// Edge weights (present iff built with `weighted = true`).
+    pub weight: Vec<u32>,
+}
+
+impl Csr {
+    pub fn m(&self) -> usize {
+        self.dst.len()
+    }
+
+    pub fn degree(&self, v: u32) -> u64 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let a = self.offsets[v as usize] as usize;
+        let b = self.offsets[v as usize + 1] as usize;
+        &self.dst[a..b]
+    }
+
+    pub fn weights_of(&self, v: u32) -> &[u32] {
+        let a = self.offsets[v as usize] as usize;
+        let b = self.offsets[v as usize + 1] as usize;
+        &self.weight[a..b]
+    }
+}
+
+/// Parameters for the synthetic power-law generator.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GraphSpec {
+    pub n: u32,
+    pub m: u64,
+    pub weighted: bool,
+    pub seed: u64,
+    /// zipf skew ×1000 (stored as integer so the spec is hashable).
+    pub skew_milli: u32,
+}
+
+impl GraphSpec {
+    pub fn new(n: u32, m: u64, weighted: bool, seed: u64) -> Self {
+        GraphSpec { n, m, weighted, seed, skew_milli: 750 }
+    }
+}
+
+/// Build (or fetch from the process-wide cache) the graph for `spec`.
+pub fn build_graph(spec: &GraphSpec) -> Arc<Csr> {
+    static CACHE: OnceLock<Mutex<HashMap<GraphSpec, Arc<Csr>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(g) = cache.lock().unwrap().get(spec) {
+        return g.clone();
+    }
+    let g = Arc::new(generate(spec));
+    cache.lock().unwrap().insert(spec.clone(), g.clone());
+    g
+}
+
+fn generate(spec: &GraphSpec) -> Csr {
+    let n = spec.n;
+    let m = spec.m as usize;
+    let mut rng = Rng::new(spec.seed ^ 0x6772_6170_685f_6765);
+    let zipf = Zipf::new(n as usize, spec.skew_milli as f64 / 1000.0);
+
+    // Degree-descending labeling: zipf rank IS the vertex id, so hubs sit
+    // at low ids (GAP's -o degree ordering).
+    // Sources: mildly skewed too (edges originate from active regions).
+    let src_zipf = Zipf::new(n as usize, 0.3);
+    let mut srcs: Vec<u32> = Vec::with_capacity(m);
+    let mut dsts: Vec<u32> = Vec::with_capacity(m);
+    for _ in 0..m {
+        let s = src_zipf.sample(&mut rng) as u32;
+        let mut d = zipf.sample(&mut rng) as u32;
+        if d == s {
+            d = (d + 1) % n;
+        }
+        srcs.push(s);
+        dsts.push(d);
+    }
+
+    // Counting-sort into CSR.
+    let mut offsets = vec![0u64; n as usize + 1];
+    for &s in &srcs {
+        offsets[s as usize + 1] += 1;
+    }
+    for i in 0..n as usize {
+        offsets[i + 1] += offsets[i];
+    }
+    let mut cursor = offsets.clone();
+    let mut dst = vec![0u32; m];
+    let mut weight = if spec.weighted { vec![0u32; m] } else { Vec::new() };
+    for i in 0..m {
+        let s = srcs[i] as usize;
+        let at = cursor[s] as usize;
+        dst[at] = dsts[i];
+        if spec.weighted {
+            weight[at] = 1 + (rng.next_u64() % 255) as u32;
+        }
+        cursor[s] += 1;
+    }
+
+    Csr { n, offsets, dst, weight }
+}
+
+// ---------------------------------------------------------------------------
+// Page accounting helpers
+// ---------------------------------------------------------------------------
+
+/// A contiguous region of a workload's virtual address space holding an
+/// array of fixed-size elements. Maps element indices → page ids.
+#[derive(Clone, Copy, Debug)]
+pub struct Region {
+    pub first_page: PageId,
+    pub elem_bytes: u64,
+    pub n_elems: u64,
+}
+
+impl Region {
+    /// Pages this region spans.
+    pub fn pages(&self) -> u64 {
+        (self.n_elems * self.elem_bytes).div_ceil(PAGE_BYTES).max(1)
+    }
+
+    #[inline]
+    pub fn page_of(&self, idx: u64) -> PageId {
+        debug_assert!(idx < self.n_elems, "idx {idx} >= {}", self.n_elems);
+        self.first_page + ((idx * self.elem_bytes) / PAGE_BYTES) as PageId
+    }
+
+    /// Page range `[first, last]` of elements `[a, b)`.
+    pub fn page_span(&self, a: u64, b: u64) -> (PageId, PageId) {
+        debug_assert!(a < b && b <= self.n_elems);
+        (self.page_of(a), self.page_of(b - 1))
+    }
+}
+
+/// Lay out regions back-to-back (page aligned) and report the total.
+pub struct Layout {
+    next_page: PageId,
+}
+
+impl Layout {
+    pub fn new() -> Self {
+        Layout { next_page: 0 }
+    }
+
+    pub fn region(&mut self, n_elems: u64, elem_bytes: u64) -> Region {
+        let r = Region { first_page: self.next_page, elem_bytes, n_elems };
+        self.next_page += r.pages() as PageId;
+        r
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.next_page as usize
+    }
+
+    /// Pad the address space to exactly `pages` (e.g. to hit a Table 1
+    /// RSS figure); returns the padding region (buffers, allocator slack).
+    pub fn pad_to(&mut self, pages: usize) -> Option<Region> {
+        let have = self.total_pages();
+        if have >= pages {
+            return None;
+        }
+        let extra = (pages - have) as u64;
+        Some(self.region(extra, PAGE_BYTES))
+    }
+}
+
+impl Default for Layout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-interval page-access histogram builder.
+///
+/// Counts are capped per page per interval (default 64 = lines/page):
+/// accesses beyond the cap hit the CPU cache hierarchy, which neither the
+/// paper's NUMA-hint-fault-based profiling nor the memory system observes.
+///
+/// Two access kinds are tracked (see [`super::PageAccess`]): `touch`
+/// records latency-exposed random accesses; `touch_span` records
+/// prefetch-covered sequential streaming.
+pub struct PageHisto {
+    rand: Vec<u32>,
+    seq: Vec<u32>,
+    touched: Vec<PageId>,
+    cap: u32,
+}
+
+/// Default per-page per-interval access cap (cache-filter model; 64 is
+/// the number of cache lines in a 4 KiB page).
+pub const DEFAULT_PAGE_CAP: u32 = 64;
+
+impl PageHisto {
+    pub fn new(rss_pages: usize) -> Self {
+        Self::with_cap(rss_pages, DEFAULT_PAGE_CAP)
+    }
+
+    pub fn with_cap(rss_pages: usize, cap: u32) -> Self {
+        PageHisto {
+            rand: vec![0; rss_pages],
+            seq: vec![0; rss_pages],
+            touched: Vec::new(),
+            cap,
+        }
+    }
+
+    #[inline]
+    fn note(&mut self, page: PageId) {
+        if self.rand[page as usize] == 0 && self.seq[page as usize] == 0 {
+            self.touched.push(page);
+        }
+    }
+
+    /// Record `n` random (latency-exposed) accesses to a page.
+    #[inline]
+    pub fn touch(&mut self, page: PageId, n: u32) {
+        self.note(page);
+        let c = &mut self.rand[page as usize];
+        *c = (*c + n).min(self.cap);
+    }
+
+    /// Touch every page overlapped by elements `[a, b)` of `region` as a
+    /// sequential stream, crediting each page with the lines it holds
+    /// (subject to the per-page cap).
+    pub fn touch_span(&mut self, region: &Region, a: u64, b: u64) {
+        if a >= b {
+            return;
+        }
+        let (p0, p1) = region.page_span(a, b);
+        let per_page = if p0 == p1 {
+            ((b - a) as u32).max(1)
+        } else {
+            (PAGE_BYTES / region.elem_bytes).max(1) as u32
+        };
+        for p in p0..=p1 {
+            self.note(p);
+            let c = &mut self.seq[p as usize];
+            *c = (*c + per_page).min(self.cap);
+        }
+    }
+
+    /// Drain into a sorted histogram and reset.
+    pub fn drain(&mut self) -> Vec<super::PageAccess> {
+        self.touched.sort_unstable();
+        let mut out = Vec::with_capacity(self.touched.len());
+        for &p in &self.touched {
+            out.push(super::PageAccess {
+                page: p,
+                random: self.rand[p as usize],
+                streamed: self.seq[p as usize],
+            });
+            self.rand[p as usize] = 0;
+            self.seq[p as usize] = 0;
+        }
+        self.touched.clear();
+        out
+    }
+
+    pub fn touched_pages(&self) -> usize {
+        self.touched.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_and_cached() {
+        let spec = GraphSpec::new(1000, 8000, false, 7);
+        let a = build_graph(&spec);
+        let b = build_graph(&spec);
+        assert!(Arc::ptr_eq(&a, &b), "cache must return the same graph");
+        assert_eq!(a.n, 1000);
+        assert_eq!(a.m(), 8000);
+        assert_eq!(*a.offsets.last().unwrap(), 8000);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed_toward_low_ids() {
+        let spec = GraphSpec::new(2000, 40_000, false, 3);
+        let g = build_graph(&spec);
+        // in-degree of the top-32 ids should dwarf a middle slice
+        let mut indeg = vec![0u64; g.n as usize];
+        for &d in &g.dst {
+            indeg[d as usize] += 1;
+        }
+        let head: u64 = indeg[..32].iter().sum();
+        let mid: u64 = indeg[1000..1032].iter().sum();
+        assert!(head > 10 * mid.max(1), "head={head} mid={mid}");
+    }
+
+    #[test]
+    fn weighted_graphs_have_weights_in_range() {
+        let spec = GraphSpec::new(500, 4000, true, 5);
+        let g = build_graph(&spec);
+        assert_eq!(g.weight.len(), g.m());
+        assert!(g.weight.iter().all(|&w| (1..=255).contains(&w)));
+    }
+
+    #[test]
+    fn csr_edges_belong_to_their_vertex() {
+        let spec = GraphSpec::new(300, 3000, false, 9);
+        let g = build_graph(&spec);
+        let mut total = 0u64;
+        for v in 0..g.n {
+            total += g.degree(v);
+            for &u in g.neighbors(v) {
+                assert!(u < g.n);
+            }
+        }
+        assert_eq!(total, 3000);
+    }
+
+    #[test]
+    fn layout_packs_regions_contiguously() {
+        let mut l = Layout::new();
+        let a = l.region(1024, 8); // 8 KiB = 2 pages
+        let b = l.region(1, 1); // 1 page
+        assert_eq!(a.first_page, 0);
+        assert_eq!(a.pages(), 2);
+        assert_eq!(b.first_page, 2);
+        assert_eq!(l.total_pages(), 3);
+        let pad = l.pad_to(10).unwrap();
+        assert_eq!(pad.pages(), 7);
+        assert_eq!(l.total_pages(), 10);
+        assert!(l.pad_to(5).is_none());
+    }
+
+    #[test]
+    fn region_page_mapping() {
+        let r = Region { first_page: 10, elem_bytes: 8, n_elems: 1024 };
+        assert_eq!(r.page_of(0), 10);
+        assert_eq!(r.page_of(511), 10);
+        assert_eq!(r.page_of(512), 11);
+        assert_eq!(r.page_span(0, 1024), (10, 11));
+    }
+
+    #[test]
+    fn histo_caps_and_drains_sorted() {
+        let mut h = PageHisto::with_cap(10, 8);
+        h.touch(5, 3);
+        h.touch(2, 100); // capped at 8
+        h.touch(5, 2);
+        let v = h.drain();
+        let pa = |page, random| super::super::PageAccess { page, random, streamed: 0 };
+        assert_eq!(v, vec![pa(2, 8), pa(5, 5)]);
+        // reset works
+        assert!(h.drain().is_empty());
+        h.touch(1, 1);
+        assert_eq!(h.drain(), vec![pa(1, 1)]);
+    }
+
+    #[test]
+    fn touch_span_credits_bulk_pages() {
+        let mut h = PageHisto::new(100);
+        let r = Region { first_page: 0, elem_bytes: 4, n_elems: 4096 };
+        // elements 0..2048 = 8 KiB ⇒ pages 0 and 1, 1024 elems each
+        h.touch_span(&r, 0, 2048);
+        let v = h.drain();
+        assert_eq!(v.len(), 2);
+        // per-page credit (1024) is capped at DEFAULT_PAGE_CAP
+        assert!(v.iter().all(|a| a.streamed == DEFAULT_PAGE_CAP && a.random == 0));
+    }
+}

@@ -1,0 +1,164 @@
+//! The paper's five evaluation workloads (Table 1), the workload trait the
+//! simulator drives, and the synthetic graph substrate they share.
+//!
+//! | Workload | paper RSS | here (scaled 1 GiB → 4 MiB)  |
+//! |----------|-----------|------------------------------|
+//! | PageRank | 15.8 GB   | 16 179 pages (63.2 MiB)      |
+//! | XSBench  | 16.4 GB   | 16 793 pages (65.6 MiB)      |
+//! | BFS      | 12.4 GB   | 12 697 pages (49.6 MiB)      |
+//! | SSSP     | 23.5 GB   | 24 064 pages (94.0 MiB)      |
+//! | Btree    | 10.8 GB   | 11 059 pages (43.2 MiB)      |
+//!
+//! The algorithms run for real (frontier expansion, PR iterations, B-tree
+//! descents, MC lookups); what the simulator consumes is each interval's
+//! page-access histogram + op counts, so access skew and phase behaviour
+//! are organic rather than synthesized.
+
+pub mod bfs;
+pub mod btree;
+pub mod graph;
+pub mod pagerank;
+pub mod sssp;
+pub mod xsbench;
+
+use crate::PageId;
+
+/// Pages per paper-GB after the 1 GiB → 4 MiB scale-down (DESIGN.md §6).
+pub const PAGES_PER_PAPER_GB: f64 = 1024.0;
+
+/// One page's accesses within an interval, split by access kind:
+/// `random` accesses are latency-exposed (pointer chases, scattered
+/// gathers); `streamed` accesses are sequential scans that hardware
+/// prefetchers cover — they consume bandwidth but hide latency. The
+/// split is what lets slow-tier *streaming* (e.g. CSR edge scans from
+/// Optane) stay cheap while slow-tier *random* access hurts, matching
+/// the testbed's behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageAccess {
+    pub page: PageId,
+    pub random: u32,
+    pub streamed: u32,
+}
+
+impl PageAccess {
+    pub fn total(&self) -> u32 {
+        self.random + self.streamed
+    }
+}
+
+/// One profiling interval's work, as presented to the simulator.
+#[derive(Clone, Debug, Default)]
+pub struct AccessProfile {
+    /// Page-access histogram. A page appears at most once per interval.
+    pub accesses: Vec<PageAccess>,
+    /// Floating-point ops executed alongside those accesses.
+    pub flops: u64,
+    /// Integer/address ops executed alongside those accesses.
+    pub iops: u64,
+}
+
+impl AccessProfile {
+    pub fn total_accesses(&self) -> u64 {
+        self.accesses.iter().map(|a| a.total() as u64).sum()
+    }
+
+    /// Arithmetic intensity in ops per byte touched (the paper's `AI`).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = self.total_accesses() * crate::LINE_BYTES;
+        if bytes == 0 {
+            0.0
+        } else {
+            (self.flops + self.iops) as f64 / bytes as f64
+        }
+    }
+}
+
+/// A workload the engine can drive. Implementations are deterministic per
+/// seed; `next_interval` returns `None` when the workload finishes.
+pub trait Workload {
+    fn name(&self) -> &'static str;
+    /// Peak resident set size in pages (the "100% fast memory" size).
+    fn rss_pages(&self) -> usize;
+    /// Worker threads the workload runs with.
+    fn threads(&self) -> u32;
+    /// Produce the next profiling interval's accesses, or `None` at end.
+    fn next_interval(&mut self) -> Option<AccessProfile>;
+}
+
+/// Descriptor used by Table 1 / reports.
+#[derive(Clone, Debug)]
+pub struct WorkloadInfo {
+    pub name: &'static str,
+    pub paper_rss_gb: f64,
+    pub description: &'static str,
+}
+
+/// Table 1 of the paper.
+pub const TABLE1: [WorkloadInfo; 5] = [
+    WorkloadInfo {
+        name: "PageRank",
+        paper_rss_gb: 15.8,
+        description: "Compute PageRank score (GAP)",
+    },
+    WorkloadInfo {
+        name: "XSBench",
+        paper_rss_gb: 16.4,
+        description: "Monte Carlo neutron transport algorithm computation",
+    },
+    WorkloadInfo { name: "BFS", paper_rss_gb: 12.4, description: "Breadth-First Search (GAP)" },
+    WorkloadInfo {
+        name: "SSSP",
+        paper_rss_gb: 23.5,
+        description: "Single-Source Shortest Path (GAP)",
+    },
+    WorkloadInfo {
+        name: "Btree",
+        paper_rss_gb: 10.8,
+        description: "Retrieve data by in-memory index",
+    },
+];
+
+/// Construct any of the five paper workloads by name with its paper-scaled
+/// RSS and a deterministic seed. `intervals` bounds the run length.
+pub fn by_name(name: &str, seed: u64, intervals: u32) -> Option<Box<dyn Workload>> {
+    match name.to_ascii_lowercase().as_str() {
+        "bfs" => Some(Box::new(bfs::Bfs::paper_scale(seed, intervals))),
+        "sssp" => Some(Box::new(sssp::Sssp::paper_scale(seed, intervals))),
+        "pagerank" | "pr" => Some(Box::new(pagerank::PageRank::paper_scale(seed, intervals))),
+        "xsbench" => Some(Box::new(xsbench::XsBench::paper_scale(seed, intervals))),
+        "btree" => Some(Box::new(btree::Btree::paper_scale(seed, intervals))),
+        _ => None,
+    }
+}
+
+/// All five paper workload names, in Table 1 order.
+pub const ALL_NAMES: [&str; 5] = ["PageRank", "XSBench", "BFS", "SSSP", "Btree"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_ai() {
+        let p = AccessProfile {
+            accesses: vec![
+                PageAccess { page: 0, random: 10, streamed: 0 },
+                PageAccess { page: 1, random: 4, streamed: 6 },
+            ],
+            flops: 640,
+            iops: 640,
+        };
+        assert_eq!(p.total_accesses(), 20);
+        // 1280 ops / (20 * 64 bytes) = 1.0
+        assert!((p.arithmetic_intensity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_name_constructs_all() {
+        for name in ALL_NAMES {
+            let w = by_name(name, 1, 4).unwrap();
+            assert!(w.rss_pages() > 1000, "{name} rss");
+        }
+        assert!(by_name("nope", 1, 1).is_none());
+    }
+}

@@ -1,0 +1,239 @@
+//! SSSP (GAP style): frontier-based Bellman–Ford relaxation from random
+//! sources over the weighted synthetic power-law graph.
+//!
+//! Layout: `offsets | edges | weights | dist | frontier(×2) | pad`.
+//! SSSP re-relaxes vertices whose distance improves, so it performs more
+//! passes over hub pages than BFS and has the largest RSS of the five
+//! workloads (23.5 paper-GB) — the combination the paper uses for its
+//! sensitivity studies (Table 3, §6.3).
+
+use std::sync::Arc;
+
+use super::graph::{build_graph, Csr, GraphSpec, Layout, PageHisto, Region};
+use super::{AccessProfile, Workload, PAGES_PER_PAPER_GB};
+use crate::util::rng::Rng;
+
+const INF: u32 = u32::MAX;
+
+pub struct Sssp {
+    g: Arc<Csr>,
+    r_offsets: Region,
+    r_edges: Region,
+    r_weights: Region,
+    r_dist: Region,
+    r_frontier: Region,
+    rss: usize,
+    histo: PageHisto,
+    dist: Vec<u32>,
+    in_next: Vec<bool>,
+    frontier: Vec<u32>,
+    next: Vec<u32>,
+    cursor: usize,
+    edge_budget: u64,
+    intervals_left: u32,
+    first_interval: bool,
+    rng: Rng,
+    threads: u32,
+}
+
+impl Sssp {
+    /// Paper-scale instance: RSS = 23.5 paper-GB (Table 1).
+    pub fn paper_scale(seed: u64, intervals: u32) -> Self {
+        let rss_pages = (23.5 * PAGES_PER_PAPER_GB) as usize;
+        Self::with_rss(rss_pages, seed, intervals)
+    }
+
+    pub fn with_rss(rss_pages: usize, seed: u64, intervals: u32) -> Self {
+        // bytes/vertex (94% of RSS), avg degree 12: offsets 8 + edges 48
+        // + weights 48 + dist 4 + frontiers 8 + in_next 1 ≈ 117
+        let n = ((rss_pages as u64 * crate::PAGE_BYTES * 94 / 100) / 117).max(4096) as u32;
+        let m = n as u64 * 12;
+        Self::new(GraphSpec::new(n, m, true, seed), rss_pages, seed, intervals)
+    }
+
+    pub fn new(spec: GraphSpec, rss_pages: usize, seed: u64, intervals: u32) -> Self {
+        let g = build_graph(&spec);
+        let n = g.n as u64;
+        let mut l = Layout::new();
+        // init-only I/O staging buffer FIRST (GAP load order; the
+        // first-touch baseline then spills the *hot* late allocations —
+        // see bfs.rs module doc)
+        let _r_input = l.region((rss_pages as u64 * 6 / 100).max(16), crate::PAGE_BYTES);
+        let r_offsets = l.region(n + 1, 8);
+        let r_edges = l.region(g.m() as u64, 4);
+        let r_weights = l.region(g.m() as u64, 4);
+        let r_dist = l.region(n, 4);
+        let r_frontier = l.region(2 * n, 4);
+        l.pad_to(rss_pages);
+        let rss = l.total_pages().max(rss_pages);
+        let mut rng = Rng::new(seed ^ 0x555);
+        let source = rng.index(g.n as usize) as u32;
+        let mut w = Sssp {
+            g,
+            r_offsets,
+            r_edges,
+            r_weights,
+            r_dist,
+            r_frontier,
+            rss,
+            histo: PageHisto::new(rss),
+            dist: vec![INF; n as usize],
+            in_next: vec![false; n as usize],
+            frontier: vec![source],
+            next: Vec::new(),
+            cursor: 0,
+            edge_budget: 200_000,
+            intervals_left: intervals,
+            first_interval: true,
+            rng,
+            threads: 16,
+        };
+        w.dist[source as usize] = 0;
+        w
+    }
+
+    fn restart(&mut self) {
+        self.dist.fill(INF);
+        self.histo.touch_span(&self.r_dist, 0, self.g.n as u64);
+        let source = self.rng.index(self.g.n as usize) as u32;
+        self.dist[source as usize] = 0;
+        self.frontier.clear();
+        self.frontier.push(source);
+        self.next.clear();
+        self.in_next.fill(false);
+        self.cursor = 0;
+    }
+}
+
+impl Workload for Sssp {
+    fn name(&self) -> &'static str {
+        "SSSP"
+    }
+
+    fn rss_pages(&self) -> usize {
+        self.rss
+    }
+
+    fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    fn next_interval(&mut self) -> Option<AccessProfile> {
+        if self.intervals_left == 0 {
+            return None;
+        }
+        self.intervals_left -= 1;
+
+        if self.first_interval {
+            self.first_interval = false;
+            for p in 0..self.rss as u32 {
+                self.histo.touch(p, 1);
+            }
+            return Some(AccessProfile {
+                accesses: self.histo.drain(),
+                flops: 0,
+                iops: self.rss as u64 * 16,
+            });
+        }
+
+        let mut edges_done: u64 = 0;
+        let mut iops: u64 = 0;
+        while edges_done < self.edge_budget {
+            if self.cursor >= self.frontier.len() {
+                std::mem::swap(&mut self.frontier, &mut self.next);
+                self.next.clear();
+                self.cursor = 0;
+                for &v in &self.frontier {
+                    self.in_next[v as usize] = false;
+                }
+                if self.frontier.is_empty() {
+                    self.restart();
+                }
+                continue;
+            }
+            let v = self.frontier[self.cursor];
+            self.cursor += 1;
+            self.histo.touch(self.r_frontier.page_of(self.cursor as u64 - 1), 1);
+            self.histo.touch(self.r_offsets.page_of(v as u64), 1);
+            self.histo.touch(self.r_dist.page_of(v as u64), 1);
+            let (a, b) = (self.g.offsets[v as usize], self.g.offsets[v as usize + 1]);
+            if a < b {
+                self.histo.touch_span(&self.r_edges, a, b);
+                self.histo.touch_span(&self.r_weights, a, b);
+            }
+            let dv = self.dist[v as usize];
+            let nbrs = self.g.neighbors(v);
+            let ws = self.g.weights_of(v);
+            for i in 0..nbrs.len() {
+                let u = nbrs[i];
+                let cand = dv.saturating_add(ws[i]);
+                self.histo.touch(self.r_dist.page_of(u as u64), 1);
+                iops += 4;
+                if cand < self.dist[u as usize] {
+                    self.dist[u as usize] = cand;
+                    iops += 2;
+                    if !self.in_next[u as usize] {
+                        self.in_next[u as usize] = true;
+                        self.histo.touch(
+                            self.r_frontier
+                                .page_of(self.g.n as u64 + self.next.len() as u64),
+                            1,
+                        );
+                        self.next.push(u);
+                    }
+                }
+            }
+            edges_done += (b - a).max(1);
+        }
+
+        Some(AccessProfile { accesses: self.histo.drain(), flops: 0, iops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_matches_paper_scale() {
+        let w = Sssp::paper_scale(1, 5);
+        let want = (23.5 * PAGES_PER_PAPER_GB) as usize;
+        assert!(w.rss_pages() >= want && w.rss_pages() < want + 200);
+    }
+
+    #[test]
+    fn distances_decrease_monotonically_and_are_reachable() {
+        let mut w = Sssp::with_rss(3000, 11, 40);
+        while w.next_interval().is_some() {}
+        let reachable = w.dist.iter().filter(|&&d| d != INF).count();
+        assert!(reachable > 100, "reachable={reachable}");
+        // source has distance 0
+        assert!(w.dist.iter().any(|&d| d == 0));
+    }
+
+    #[test]
+    fn relaxation_revisits_make_more_work_than_bfs() {
+        // SSSP must produce at least as many accesses as BFS on the same
+        // budget (re-relaxations + weights region).
+        let mut s = Sssp::with_rss(3000, 5, 10);
+        let mut b = super::super::bfs::Bfs::with_rss(3000, 5, 10);
+        let sa: u64 = std::iter::from_fn(|| s.next_interval())
+            .map(|p| p.total_accesses())
+            .sum();
+        let ba: u64 = std::iter::from_fn(|| b.next_interval())
+            .map(|p| p.total_accesses())
+            .sum();
+        assert!(sa > ba / 2, "sssp={sa} bfs={ba}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let sig = |seed| {
+            let mut w = Sssp::with_rss(2000, seed, 6);
+            std::iter::from_fn(move || w.next_interval())
+                .map(|p| p.total_accesses())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(sig(3), sig(3));
+    }
+}

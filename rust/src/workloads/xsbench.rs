@@ -1,0 +1,216 @@
+//! XSBench-style Monte Carlo neutron-transport macroscopic cross-section
+//! lookups (the HPC workload of Table 1).
+//!
+//! Layout: `unionized energy grid | per-nuclide XS tables | pad`.
+//! Each lookup draws a random energy, binary-searches the unionized grid
+//! (the search path concentrates on "landmark" pages — a natural small hot
+//! set), then gathers the bracketing grid points of every nuclide in the
+//! sampled material and interpolates five reaction channels (FLOP-heavy).
+//! The interpolation work gives XSBench the highest arithmetic intensity
+//! of the five workloads, which is why the paper measures only a 1.8%
+//! overall loss for it — the compute roofline hides most of the extra
+//! slow-memory latency (§3's second interaction).
+
+use super::graph::{Layout, PageHisto, Region};
+use super::{AccessProfile, Workload, PAGES_PER_PAPER_GB};
+use crate::util::rng::Rng;
+
+/// XSBench's large benchmark uses 355 nuclides in the fuel material; we
+/// keep the default ("small") set of 68 with GAP-scale tables.
+const N_NUCLIDES: u64 = 68;
+
+/// Materials: (number of nuclides consulted, sampling weight) — fuel
+/// consults 34 nuclides and dominates lookups, the rest are light
+/// (cladding, moderator, ...), mirroring XSBench's material table.
+const MATERIALS: [(u64, f64); 5] = [(34, 0.50), (12, 0.20), (5, 0.15), (4, 0.10), (2, 0.05)];
+
+/// FLOPs per nuclide lookup: 5 reaction channels × (interpolation factor
+/// + 2 FMAs) + tally accumulation.
+const FLOPS_PER_NUCLIDE: u64 = 150;
+
+pub struct XsBench {
+    r_grid: Region,
+    r_tables: Region,
+    n_grid: u64,
+    pts_per_nuclide: u64,
+    rss: usize,
+    histo: PageHisto,
+    lookups_per_interval: u32,
+    intervals_left: u32,
+    first_interval: bool,
+    rng: Rng,
+    threads: u32,
+    lookups_done: u64,
+}
+
+impl XsBench {
+    /// Paper-scale instance: RSS = 16.4 paper-GB (Table 1).
+    pub fn paper_scale(seed: u64, intervals: u32) -> Self {
+        let rss_pages = (16.4 * PAGES_PER_PAPER_GB) as usize;
+        Self::with_rss(rss_pages, seed, intervals)
+    }
+
+    pub fn with_rss(rss_pages: usize, seed: u64, intervals: u32) -> Self {
+        let total_bytes = rss_pages as u64 * crate::PAGE_BYTES;
+        // grid ≈ 25% of RSS (energy f64 + index u64 = 16 B/point),
+        // tables = rest (6 channels × f64 = 48 B/point per nuclide).
+        let n_grid = (total_bytes / 4 / 16).max(1024);
+        let table_bytes = total_bytes - n_grid * 16;
+        let pts_per_nuclide = (table_bytes / (N_NUCLIDES * 48)).max(256);
+        let mut l = Layout::new();
+        let r_grid = l.region(n_grid, 16);
+        let r_tables = l.region(N_NUCLIDES * pts_per_nuclide, 48);
+        l.pad_to(rss_pages);
+        let rss = l.total_pages().max(rss_pages);
+        XsBench {
+            r_grid,
+            r_tables,
+            n_grid,
+            pts_per_nuclide,
+            rss,
+            histo: PageHisto::new(rss),
+            lookups_per_interval: 3000,
+            intervals_left: intervals,
+            first_interval: true,
+            rng: Rng::new(seed ^ 0x5be),
+            threads: 16,
+            lookups_done: 0,
+        }
+    }
+
+    /// Pages touched by a binary search for `target` over the grid: the
+    /// actual probe sequence of the bisection (landmark pages near the
+    /// midpoints are revisited by every lookup → organic hot set).
+    fn binary_search_pages(&mut self, target: u64) {
+        let mut lo = 0u64;
+        let mut hi = self.n_grid;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            self.histo.touch(self.r_grid.page_of(mid), 1);
+            if mid < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+}
+
+impl Workload for XsBench {
+    fn name(&self) -> &'static str {
+        "XSBench"
+    }
+
+    fn rss_pages(&self) -> usize {
+        self.rss
+    }
+
+    fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    fn next_interval(&mut self) -> Option<AccessProfile> {
+        if self.intervals_left == 0 {
+            return None;
+        }
+        self.intervals_left -= 1;
+
+        if self.first_interval {
+            self.first_interval = false;
+            for p in 0..self.rss as u32 {
+                self.histo.touch(p, 1);
+            }
+            return Some(AccessProfile {
+                accesses: self.histo.drain(),
+                flops: self.rss as u64,
+                iops: self.rss as u64 * 16,
+            });
+        }
+
+        let mut flops: u64 = 0;
+        let mut iops: u64 = 0;
+        for _ in 0..self.lookups_per_interval {
+            self.lookups_done += 1;
+            // sample energy → grid position
+            let grid_idx = self.rng.below(self.n_grid);
+            self.binary_search_pages(grid_idx);
+            iops += 64; // bisection compares + address math
+
+            // sample material
+            let mut pick = self.rng.f64();
+            let mut n_nuc = MATERIALS[0].0;
+            for &(n, w) in &MATERIALS {
+                if pick < w {
+                    n_nuc = n;
+                    break;
+                }
+                pick -= w;
+            }
+
+            // gather bracketing points for each consulted nuclide
+            let rel = grid_idx as f64 / self.n_grid as f64;
+            for nuc in 0..n_nuc {
+                // nuclide table offset: same relative energy position
+                let base = nuc * self.pts_per_nuclide;
+                let p = base + ((rel * (self.pts_per_nuclide - 2) as f64) as u64);
+                self.histo.touch(self.r_tables.page_of(p), 1);
+                self.histo.touch(self.r_tables.page_of(p + 1), 1);
+                flops += FLOPS_PER_NUCLIDE;
+                iops += 8;
+            }
+        }
+
+        Some(AccessProfile { accesses: self.histo.drain(), flops, iops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_matches_paper_scale() {
+        let w = XsBench::paper_scale(1, 5);
+        let want = (16.4 * PAGES_PER_PAPER_GB) as usize;
+        assert!(w.rss_pages() >= want && w.rss_pages() < want + 200);
+    }
+
+    #[test]
+    fn has_high_arithmetic_intensity() {
+        let mut w = XsBench::with_rss(4000, 2, 4);
+        let _ = w.next_interval();
+        let p = w.next_interval().unwrap();
+        let ai = p.arithmetic_intensity();
+        assert!(ai > 1.0, "AI={ai} should be compute-leaning");
+    }
+
+    #[test]
+    fn search_landmarks_are_hot_but_tables_are_uniform() {
+        let mut w = XsBench::with_rss(4000, 2, 12);
+        let mut total = vec![0u64; w.rss_pages()];
+        let _ = w.next_interval();
+        while let Some(p) = w.next_interval() {
+            for a in p.accesses {
+                total[a.page as usize] += a.total() as u64;
+            }
+        }
+        // the hottest grid (landmark) page must be at least as hot as the
+        // hottest table page — the bisection path is the hot set
+        let grid_last = (w.r_grid.first_page as u64 + w.r_grid.pages() - 1) as usize;
+        let grid_max = *total[..=grid_last].iter().max().unwrap();
+        let table_max = *total[grid_last + 1..].iter().max().unwrap();
+        assert!(grid_max >= table_max, "grid_max={grid_max} table_max={table_max}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let sig = |seed| {
+            let mut w = XsBench::with_rss(3000, seed, 5);
+            std::iter::from_fn(move || w.next_interval())
+                .map(|p| (p.total_accesses(), p.flops))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(sig(8), sig(8));
+        assert_ne!(sig(8), sig(9));
+    }
+}
