@@ -2,6 +2,10 @@
 //! claim: Tuna + TPP saves 8.5% of fast memory on average (up to 16% for
 //! Btree) at a 5% performance-loss target, vs the 5% Pond reports.
 //!
+//! Runs through the batched sweep executor: all five Tuna-managed
+//! workload runs execute across threads, each compared against its own
+//! memoized fast-memory-only baseline (5 baselines, computed once each).
+//!
 //! ```sh
 //! cargo run --release --example capacity_planning
 //! ```
@@ -10,38 +14,52 @@ use std::path::Path;
 use std::sync::Arc;
 
 use tuna::config::experiment::TunaConfig;
-use tuna::coordinator::{self, RunSpec};
+use tuna::coordinator::{run_sweep, SweepPolicy, SweepSpec};
 use tuna::perfdb::builder::{ensure_db, BuildParams};
 use tuna::report::{pct, Table};
+use tuna::util::human_ns;
 use tuna::workloads::{ALL_NAMES, TABLE1};
 
 fn main() -> tuna::Result<()> {
     let db = Arc::new(ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?);
     let tuna_cfg = TunaConfig::default();
 
+    let spec = SweepSpec::new(ALL_NAMES)
+        .with_policies([SweepPolicy::Tuna])
+        .with_intervals(300)
+        .with_tuna(db, tuna_cfg);
+    let res = run_sweep(&spec)?;
+
     let mut t = Table::new(
         "Capacity planning: Tuna + TPP at τ = 5% (vs Pond's 5% saving)",
         &["Workload", "paper RSS", "mean FM saving", "max FM saving", "overall loss"],
     );
     let mut savings = Vec::new();
-    for name in ALL_NAMES {
-        let spec = RunSpec::new(name).with_intervals(300);
-        let baseline = coordinator::run_fm_only(&spec)?;
-        let run = coordinator::run_tuna_native(&spec, db.clone(), &tuna_cfg)?;
-        let loss = coordinator::overall_loss(&run.result, &baseline);
-        let rss = TABLE1.iter().find(|w| w.name == name).unwrap().paper_rss_gb;
+    for cell in &res.cells {
+        let stats = cell.tuna.as_ref().expect("tuna cell stats");
+        let rss = TABLE1
+            .iter()
+            .find(|w| w.name.eq_ignore_ascii_case(&cell.spec.workload))
+            .unwrap()
+            .paper_rss_gb;
         t.row(vec![
-            name.to_string(),
+            cell.spec.workload.clone(),
             format!("{rss:.1} G"),
-            pct(run.mean_saving()),
-            pct(run.max_saving()),
-            pct(loss),
+            pct(cell.saving),
+            pct(1.0 - stats.min_fraction),
+            pct(cell.loss),
         ]);
-        savings.push(run.mean_saving());
-        eprintln!("{name}: done");
+        savings.push(cell.saving);
     }
     t.print();
     let avg = savings.iter().sum::<f64>() / savings.len() as f64;
     println!("\naverage FM saving: {}  (paper: 8.5%)", pct(avg));
+    println!(
+        "sweep: {} workloads in {} ({} baselines computed, {} cache hits)",
+        res.len(),
+        human_ns(res.wall_ns as u64),
+        res.baselines_computed,
+        res.baseline_hits
+    );
     Ok(())
 }

@@ -6,14 +6,22 @@
 //! +40% migrations vs 89.5%. We reproduce the *shape*: TPP strictly above
 //! first-touch at moderate shrink, both collapsing at deep shrink, and
 //! both failure and migration counts rising from 89.5% → 26.6%.
+//!
+//! Runs through the batched sweep executor: the full 8-fraction ×
+//! 2-policy grid executes across threads against one memoized
+//! fast-memory-only baseline (16 cells, 1 baseline run).
 
-use tuna::coordinator::{self, RunSpec};
+use tuna::coordinator::{run_sweep, SweepPolicy, SweepSpec};
 use tuna::report::{pct, results_dir, Table};
+use tuna::util::human_ns;
 
 fn main() -> tuna::Result<()> {
     let fractions = [1.0, 0.95, 0.895, 0.8, 0.7, 0.5, 0.3, 0.266];
-    let spec = RunSpec::new("BFS").with_intervals(240);
-    let baseline = coordinator::run_fm_only(&spec)?;
+    let spec = SweepSpec::new(["BFS"])
+        .with_fractions(fractions)
+        .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch])
+        .with_intervals(240);
+    let res = run_sweep(&spec)?;
 
     let mut t = Table::new(
         "Fig. 1 — BFS vs fast-memory size (normalized performance; paper: TPP 0.956 @ 89.5%, first-touch 0.919 @ 89.5%, TPP 0.77 @ 26.6%)",
@@ -21,23 +29,34 @@ fn main() -> tuna::Result<()> {
     );
     let mut anchors = Vec::new();
     for &f in &fractions {
-        let tpp = coordinator::run_tpp(&spec.clone().with_fraction(f))?;
-        let ft = coordinator::run_first_touch(&spec.clone().with_fraction(f))?;
-        let tpp_loss = coordinator::overall_loss(&tpp, &baseline);
-        let ft_loss = coordinator::overall_loss(&ft, &baseline);
+        let tpp = res.cell("BFS", SweepPolicy::Tpp, f).expect("tpp cell");
+        let ft = res.cell("BFS", SweepPolicy::FirstTouch, f).expect("first-touch cell");
         t.row(vec![
             pct(f),
-            format!("{:.3}", 1.0 / (1.0 + tpp_loss)),
-            pct(tpp_loss),
-            format!("{:.3}", 1.0 / (1.0 + ft_loss)),
-            pct(ft_loss),
-            tpp.total_migrations().to_string(),
-            tpp.total_promote_failed().to_string(),
+            format!("{:.3}", 1.0 / (1.0 + tpp.loss)),
+            pct(tpp.loss),
+            format!("{:.3}", 1.0 / (1.0 + ft.loss)),
+            pct(ft.loss),
+            tpp.result.total_migrations().to_string(),
+            tpp.result.total_promote_failed().to_string(),
         ]);
-        anchors.push((f, tpp_loss, ft_loss, tpp.total_migrations(), tpp.total_promote_failed()));
+        anchors.push((
+            f,
+            tpp.loss,
+            ft.loss,
+            tpp.result.total_migrations(),
+            tpp.result.total_promote_failed(),
+        ));
     }
     t.print();
     t.to_csv(&results_dir().join("fig1_motivation.csv"))?;
+    println!(
+        "\nsweep executor: {} cells in {} ({} baseline run(s), {} cache hits)",
+        res.len(),
+        human_ns(res.wall_ns as u64),
+        res.baselines_computed,
+        res.baseline_hits
+    );
 
     // Shape checks the paper's narrative rests on.
     let at = |f: f64| anchors.iter().find(|a| (a.0 - f).abs() < 1e-9).unwrap();

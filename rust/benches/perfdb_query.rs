@@ -14,17 +14,38 @@ use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::perfdb::normalize;
 use tuna::report::{results_dir, Table};
 use tuna::runtime::{Manifest, PerfDbExec, XlaNn};
-use tuna::util::bench::time_it;
+use tuna::util::bench::{time_it, time_once};
 use tuna::util::human_ns;
 use tuna::util::rng::Rng;
 
 fn main() -> tuna::Result<()> {
-    // --- (a) build throughput ---
-    let small = BuildParams { n_configs: 64, ..BuildParams::default() };
-    let t_build = time_it(0, 1, || {
-        std::hint::black_box(build_database(&small));
-    });
-    let per_record_ms = t_build.mean_ns() / 1e6 / small.n_configs as f64;
+    // --- (a) build throughput: serial vs cell-parallel ---
+    // The builder parallelizes over n_configs × fractions cells with
+    // byte-identical output for any thread count; time one build of each
+    // and compare both wall time and bytes (the acceptance bar is ≥ 2×
+    // on a 4-core machine).
+    let mut small = BuildParams { n_configs: 64, ..BuildParams::default() };
+    small.threads = 1;
+    let mut serial_db = None;
+    let t_serial_ns = time_once(|| serial_db = Some(build_database(&small)));
+    small.threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut parallel_db = None;
+    let t_parallel_ns = time_once(|| parallel_db = Some(build_database(&small)));
+    assert_eq!(
+        tuna::perfdb::store::to_bytes(&serial_db.unwrap()),
+        tuna::perfdb::store::to_bytes(&parallel_db.unwrap()),
+        "parallel build must be byte-identical to serial"
+    );
+    let speedup = t_serial_ns / t_parallel_ns;
+    println!(
+        "build ({} configs x {} sizes): serial {} -> {} threads {} ({speedup:.2}x, byte-identical)",
+        small.n_configs,
+        small.fractions.len(),
+        human_ns(t_serial_ns as u64),
+        small.threads,
+        human_ns(t_parallel_ns as u64),
+    );
+    let per_record_ms = t_parallel_ns / 1e6 / small.n_configs as f64;
     let projected_100k_min = per_record_ms * 100_000.0 / 60_000.0;
 
     let db = ensure_db(Path::new("artifacts/perfdb.bin"), &BuildParams::default())?;

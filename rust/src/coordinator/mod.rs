@@ -7,6 +7,10 @@
 //! Python — the only external dependency is the AOT HLO artifact loaded
 //! through [`crate::runtime`] when the XLA query path is enabled.
 
+pub mod sweep;
+
+pub use sweep::{run_sweep, SweepCell, SweepPolicy, SweepResult, SweepSpec};
+
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -197,6 +201,7 @@ pub fn run_tuna_native(spec: &RunSpec, db: Arc<PerfDb>, tuna: &TunaConfig) -> Re
 /// Per-period relative loss series: windows of `period` intervals,
 /// loss = (T_window − T_base_window) / T_base_window. Skips the
 /// allocation epoch (interval 1) which is identical in both runs.
+/// Windows with a degenerate (zero-time) baseline report 0.0 loss.
 pub fn period_loss_series(run: &RunResult, baseline: &RunResult, period: u32) -> Vec<f64> {
     let n = run.trace.len().min(baseline.trace.len());
     let mut out = Vec::new();
@@ -207,7 +212,7 @@ pub fn period_loss_series(run: &RunResult, baseline: &RunResult, period: u32) ->
             .iter()
             .map(|x| x.wall_ns)
             .sum();
-        out.push((t - b) / b);
+        out.push(if b > 0.0 { (t - b) / b } else { 0.0 });
         i += period as usize;
     }
     out
@@ -222,9 +227,15 @@ pub fn fm_fraction_series(run: &RunResult, rss_pages: u64) -> Vec<f64> {
 }
 
 /// Overall loss of `run` vs `baseline`, excluding the allocation epoch.
+/// A degenerate (zero-time or empty) baseline yields 0.0 rather than
+/// `NaN`/`inf`, matching [`RunResult::perf_loss_vs`]; a non-finite *run*
+/// time still propagates so broken measurements surface.
 pub fn overall_loss(run: &RunResult, baseline: &RunResult) -> f64 {
     let t: f64 = run.trace.iter().skip(1).map(|x| x.wall_ns).sum();
     let b: f64 = baseline.trace.iter().skip(1).map(|x| x.wall_ns).sum();
+    if !(b > 0.0) || !b.is_finite() {
+        return 0.0;
+    }
     (t - b) / b
 }
 
@@ -299,6 +310,21 @@ mod tests {
         assert_eq!(series.len(), (60 - 1) / 10);
         let fm = fm_fraction_series(&run, 1_000_000);
         assert_eq!(fm.len(), run.trace.len());
+    }
+
+    #[test]
+    fn overall_loss_guards_empty_baseline() {
+        let run = run_tpp(&small_spec("Btree").with_fraction(0.9)).unwrap();
+        let empty = RunResult {
+            workload: "none",
+            policy: "tpp",
+            fast_capacity: 0,
+            total_ns: 0.0,
+            trace: vec![],
+        };
+        assert_eq!(overall_loss(&run, &empty), 0.0, "empty baseline must not yield inf");
+        assert_eq!(overall_loss(&empty, &empty), 0.0, "0/0 must not yield NaN");
+        assert!(period_loss_series(&run, &empty, 10).is_empty());
     }
 
     #[test]

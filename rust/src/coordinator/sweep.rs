@@ -1,0 +1,538 @@
+//! Batched multi-run executor: expand a grid specification into run
+//! cells, execute them across threads, and derive the paper's reported
+//! quantities per cell.
+//!
+//! Every headline result in the paper (Figs. 1, 3–8, Tables 1–3) is a
+//! *sweep* — workloads × fast-memory fractions × seeds × policies — and
+//! each comparison needs the same fast-memory-only baseline. This module
+//! makes that shape first-class:
+//!
+//! * [`SweepSpec`] describes the grid (plus run length, machine, thread
+//!   budget) and expands to a deterministic list of [`SweepCellSpec`]s;
+//! * [`run_sweep`] executes the cells on a scoped-thread worker pool
+//!   (no rayon offline) and memoizes the fast-memory-only baselines in a
+//!   [`BaselineCache`] keyed by (workload, seed, intervals, hot_thr,
+//!   machine), so `F` fractions × `P` policies of one workload cost one
+//!   baseline run instead of `F × P`;
+//! * [`SweepResult`] returns per-cell [`RunResult`]s with derived loss
+//!   (vs the memoized baseline) and fast-memory saving, in grid order
+//!   regardless of scheduling — results are byte-for-byte identical for
+//!   any thread count.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{
+    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tuna_native, RunSpec,
+};
+use crate::config::experiment::TunaConfig;
+use crate::perfdb::PerfDb;
+use crate::sim::{MachineModel, RunResult};
+use crate::util::parallel::{default_threads, parallel_map};
+
+/// Page-management policy a sweep cell runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SweepPolicy {
+    /// TPP at the cell's fixed fast-memory fraction.
+    Tpp,
+    /// NUMA first-touch (no migration) at the cell's fraction.
+    FirstTouch,
+    /// MEMTIS-style dynamic-threshold policy at the cell's fraction.
+    Memtis,
+    /// TPP + the Tuna tuner (starts at 100% fast memory and shrinks, so
+    /// [`SweepSpec::expand`] collapses the fraction axis to a single cell
+    /// at `fm_fraction = 1.0`). Requires [`SweepSpec::tuna`].
+    Tuna,
+}
+
+impl SweepPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepPolicy::Tpp => "tpp",
+            SweepPolicy::FirstTouch => "first-touch",
+            SweepPolicy::Memtis => "memtis",
+            SweepPolicy::Tuna => "tuna",
+        }
+    }
+
+    /// Parse a CLI-style policy name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "tpp" => Ok(SweepPolicy::Tpp),
+            "first-touch" | "firsttouch" | "ft" => Ok(SweepPolicy::FirstTouch),
+            "memtis" => Ok(SweepPolicy::Memtis),
+            "tuna" => Ok(SweepPolicy::Tuna),
+            other => bail!("unknown policy `{other}` (try: tpp, first-touch, memtis, tuna)"),
+        }
+    }
+}
+
+/// Grid specification: the cross product of every axis below, one cell
+/// per (workload, seed, hot_thr, fraction, policy) combination.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub workloads: Vec<String>,
+    /// Fast-memory fractions of each workload's peak RSS.
+    pub fractions: Vec<f64>,
+    pub seeds: Vec<u64>,
+    pub hot_thrs: Vec<u32>,
+    pub policies: Vec<SweepPolicy>,
+    /// Run length in profiling intervals (shared by every cell).
+    pub intervals: u32,
+    pub machine: MachineModel,
+    /// Worker threads; 0 means "one per available core".
+    pub threads: usize,
+    /// Database + tuner config, required when `policies` contains
+    /// [`SweepPolicy::Tuna`].
+    pub tuna: Option<(Arc<PerfDb>, TunaConfig)>,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            workloads: Vec::new(),
+            fractions: vec![1.0],
+            seeds: vec![42],
+            hot_thrs: vec![2],
+            policies: vec![SweepPolicy::Tpp],
+            intervals: 300,
+            machine: MachineModel::default(),
+            threads: 0,
+            tuna: None,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// A sweep over the given workloads with single-element defaults on
+    /// every other axis (seed 42, hot_thr 2, fraction 1.0, TPP).
+    pub fn new<S: AsRef<str>, I: IntoIterator<Item = S>>(workloads: I) -> Self {
+        SweepSpec {
+            workloads: workloads.into_iter().map(|s| s.as_ref().to_string()).collect(),
+            ..SweepSpec::default()
+        }
+    }
+
+    pub fn with_fractions<I: IntoIterator<Item = f64>>(mut self, fractions: I) -> Self {
+        self.fractions = fractions.into_iter().collect();
+        self
+    }
+
+    pub fn with_seeds<I: IntoIterator<Item = u64>>(mut self, seeds: I) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    pub fn with_hot_thrs<I: IntoIterator<Item = u32>>(mut self, hot_thrs: I) -> Self {
+        self.hot_thrs = hot_thrs.into_iter().collect();
+        self
+    }
+
+    pub fn with_policies<I: IntoIterator<Item = SweepPolicy>>(mut self, policies: I) -> Self {
+        self.policies = policies.into_iter().collect();
+        self
+    }
+
+    pub fn with_intervals(mut self, intervals: u32) -> Self {
+        self.intervals = intervals;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_machine(mut self, machine: MachineModel) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    pub fn with_tuna(mut self, db: Arc<PerfDb>, cfg: TunaConfig) -> Self {
+        self.tuna = Some((db, cfg));
+        self
+    }
+
+    /// Expand the grid into cells in deterministic order:
+    /// workload → seed → hot_thr → fraction → policy.
+    ///
+    /// [`SweepPolicy::Tuna`] ignores the fixed fraction (the tuner always
+    /// starts at 100% and shrinks), so the fraction axis is collapsed for
+    /// Tuna cells: one cell per (workload, seed, hot_thr), recorded at
+    /// `fm_fraction = 1.0`, instead of `fractions.len()` identical runs.
+    pub fn expand(&self) -> Vec<SweepCellSpec> {
+        let mut cells = Vec::with_capacity(
+            self.workloads.len()
+                * self.seeds.len()
+                * self.hot_thrs.len()
+                * self.fractions.len()
+                * self.policies.len(),
+        );
+        for workload in &self.workloads {
+            for &seed in &self.seeds {
+                for &hot_thr in &self.hot_thrs {
+                    for (fi, &fm_fraction) in self.fractions.iter().enumerate() {
+                        for &policy in &self.policies {
+                            let fm_fraction = if policy == SweepPolicy::Tuna {
+                                if fi > 0 {
+                                    continue;
+                                }
+                                1.0
+                            } else {
+                                fm_fraction
+                            };
+                            cells.push(SweepCellSpec {
+                                workload: workload.clone(),
+                                seed,
+                                hot_thr,
+                                fm_fraction,
+                                policy,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One cell of the expanded grid.
+#[derive(Clone, Debug)]
+pub struct SweepCellSpec {
+    pub workload: String,
+    pub seed: u64,
+    pub hot_thr: u32,
+    pub fm_fraction: f64,
+    pub policy: SweepPolicy,
+}
+
+impl SweepCellSpec {
+    /// The coordinator [`RunSpec`] this cell executes.
+    pub fn run_spec(&self, sweep: &SweepSpec) -> RunSpec {
+        RunSpec {
+            workload: self.workload.clone(),
+            seed: self.seed,
+            intervals: sweep.intervals,
+            fm_fraction: self.fm_fraction,
+            hot_thr: self.hot_thr,
+            machine: sweep.machine.clone(),
+        }
+    }
+}
+
+/// Cache key for a fast-memory-only baseline. The baseline run depends on
+/// the workload instance (name + seed + intervals), the promotion
+/// threshold and the machine model — but *not* on the cell's fraction or
+/// policy, which is exactly why the cache pays off across a grid.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BaselineKey {
+    pub workload: String,
+    pub seed: u64,
+    pub intervals: u32,
+    pub hot_thr: u32,
+    /// `Debug` fingerprint of the machine model (its f64 fields are not
+    /// `Eq`/`Hash`; the fingerprint is exact for identical models).
+    pub machine: String,
+}
+
+impl BaselineKey {
+    pub fn of(spec: &RunSpec) -> Self {
+        BaselineKey {
+            workload: spec.workload.to_ascii_lowercase(),
+            seed: spec.seed,
+            intervals: spec.intervals,
+            hot_thr: spec.hot_thr,
+            machine: format!("{:?}", spec.machine),
+        }
+    }
+}
+
+/// Thread-safe memo of fast-memory-only baseline runs. Shareable across
+/// sweeps (e.g. a bench that runs several grids over the same workloads).
+#[derive(Default)]
+pub struct BaselineCache {
+    entries: Mutex<HashMap<BaselineKey, Arc<RunResult>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl BaselineCache {
+    pub fn new() -> Self {
+        BaselineCache::default()
+    }
+
+    /// The baseline for `spec` (any fraction), computing it on first use.
+    pub fn get_or_compute(&self, spec: &RunSpec) -> Result<Arc<RunResult>> {
+        let key = BaselineKey::of(spec);
+        if let Some(hit) = self.entries.lock().unwrap().get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Computed outside the lock; on a concurrent race both sides
+        // produce bit-identical results (runs are deterministic), so
+        // keeping the first insertion is safe.
+        let computed = Arc::new(run_fm_only(spec)?);
+        let mut map = self.entries.lock().unwrap();
+        Ok(map.entry(key).or_insert(computed).clone())
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Extra per-cell statistics for [`SweepPolicy::Tuna`] cells.
+#[derive(Clone, Debug)]
+pub struct TunaCellStats {
+    pub decisions: usize,
+    pub mean_fraction: f64,
+    pub min_fraction: f64,
+    pub decide_ns: u128,
+}
+
+/// One executed cell: the full run plus the derived paper quantities.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub spec: SweepCellSpec,
+    pub result: RunResult,
+    /// Loss vs the memoized fast-memory-only baseline (allocation epoch
+    /// excluded), i.e. [`overall_loss`].
+    pub loss: f64,
+    /// Fast-memory saving: `1 − fm_fraction` for fixed-size cells; the
+    /// mean saving across decisions for Tuna cells.
+    pub saving: f64,
+    /// Present only for [`SweepPolicy::Tuna`] cells.
+    pub tuna: Option<TunaCellStats>,
+}
+
+/// Result of one sweep, cells in grid order (see [`SweepSpec::expand`]).
+#[derive(Debug)]
+pub struct SweepResult {
+    pub cells: Vec<SweepCell>,
+    /// Distinct baselines actually run for this sweep.
+    pub baselines_computed: usize,
+    /// Baseline cache hits during this sweep (one per cell).
+    pub baseline_hits: usize,
+    /// Wall-clock time of the whole sweep.
+    pub wall_ns: u128,
+}
+
+impl SweepResult {
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Find a cell by workload (case-insensitive), policy and fraction.
+    pub fn cell(&self, workload: &str, policy: SweepPolicy, fraction: f64) -> Option<&SweepCell> {
+        self.cells.iter().find(|c| {
+            c.spec.workload.eq_ignore_ascii_case(workload)
+                && c.spec.policy == policy
+                && (c.spec.fm_fraction - fraction).abs() < 1e-9
+        })
+    }
+}
+
+/// Execute a sweep with a private baseline cache.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
+    run_sweep_with_cache(spec, &BaselineCache::new())
+}
+
+/// Execute a sweep against a caller-owned [`BaselineCache`] (reusable
+/// across several grids over the same workloads).
+pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<SweepResult> {
+    let cells = spec.expand();
+    if cells.is_empty() {
+        bail!("empty sweep grid: every axis (workloads, fractions, seeds, hot_thrs, policies) must be non-empty");
+    }
+    if cells.iter().any(|c| c.policy == SweepPolicy::Tuna) && spec.tuna.is_none() {
+        bail!("SweepPolicy::Tuna requires SweepSpec::tuna (performance database + TunaConfig)");
+    }
+    let threads = if spec.threads == 0 { default_threads() } else { spec.threads };
+    let hits0 = cache.hits();
+    let misses0 = cache.misses();
+    let t0 = Instant::now();
+
+    // Phase 1: warm the baseline cache, one run per distinct key, in
+    // parallel. Keys are unique here so no worker ever duplicates work.
+    let mut seen = HashSet::new();
+    let mut base_specs: Vec<RunSpec> = Vec::new();
+    for c in &cells {
+        let rs = c.run_spec(spec);
+        if seen.insert(BaselineKey::of(&rs)) {
+            base_specs.push(rs);
+        }
+    }
+    parallel_map(base_specs.len(), threads, |i| {
+        cache.get_or_compute(&base_specs[i]).map(|_| ())
+    })
+    .into_iter()
+    .collect::<Result<Vec<()>>>()?;
+
+    // Phase 2: every grid cell in parallel; baselines all hit the cache.
+    let out: Vec<SweepCell> = parallel_map(cells.len(), threads, |i| {
+        let c = &cells[i];
+        let rs = c.run_spec(spec);
+        let baseline = cache.get_or_compute(&rs)?;
+        let (result, tuna) = match c.policy {
+            SweepPolicy::Tpp => (run_tpp(&rs)?, None),
+            SweepPolicy::FirstTouch => (run_first_touch(&rs)?, None),
+            SweepPolicy::Memtis => (run_memtis(&rs)?, None),
+            SweepPolicy::Tuna => {
+                let (db, cfg) = spec.tuna.as_ref().expect("checked above");
+                let run = run_tuna_native(&rs, db.clone(), cfg)?;
+                let stats = TunaCellStats {
+                    decisions: run.decisions.len(),
+                    mean_fraction: run.mean_fraction,
+                    min_fraction: run.min_fraction,
+                    decide_ns: run.decide_ns,
+                };
+                (run.result, Some(stats))
+            }
+        };
+        let loss = overall_loss(&result, &baseline);
+        let saving = match &tuna {
+            Some(s) => 1.0 - s.mean_fraction,
+            None => 1.0 - c.fm_fraction,
+        };
+        Ok(SweepCell { spec: c.clone(), result, loss, saving, tuna })
+    })
+    .into_iter()
+    .collect::<Result<Vec<SweepCell>>>()?;
+
+    Ok(SweepResult {
+        cells: out,
+        baselines_computed: cache.misses() - misses0,
+        baseline_hits: cache.hits() - hits0,
+        wall_ns: t0.elapsed().as_nanos(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(workloads: &[&str]) -> SweepSpec {
+        SweepSpec::new(workloads.iter().copied()).with_intervals(20)
+    }
+
+    #[test]
+    fn expand_is_deterministic_grid_order() {
+        let spec = tiny(&["BFS", "Btree"])
+            .with_fractions([0.9, 0.8])
+            .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch]);
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        assert_eq!(cells[0].workload, "BFS");
+        assert_eq!(cells[0].fm_fraction, 0.9);
+        assert_eq!(cells[0].policy, SweepPolicy::Tpp);
+        assert_eq!(cells[1].policy, SweepPolicy::FirstTouch);
+        assert_eq!(cells[2].fm_fraction, 0.8);
+        assert_eq!(cells[4].workload, "Btree");
+        // expand twice → identical
+        let again = spec.expand();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+    }
+
+    #[test]
+    fn tuna_cells_collapse_the_fraction_axis() {
+        let spec = tiny(&["Btree"])
+            .with_fractions([0.9, 0.8, 0.7])
+            .with_policies([SweepPolicy::Tpp, SweepPolicy::Tuna]);
+        let cells = spec.expand();
+        // 3 Tpp cells + exactly one Tuna cell (run_tuna ignores the fixed
+        // fraction, so duplicating it across the axis would waste runs).
+        assert_eq!(cells.len(), 4);
+        let tuna: Vec<_> =
+            cells.iter().filter(|c| c.policy == SweepPolicy::Tuna).collect();
+        assert_eq!(tuna.len(), 1);
+        assert_eq!(tuna[0].fm_fraction, 1.0);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            SweepPolicy::Tpp,
+            SweepPolicy::FirstTouch,
+            SweepPolicy::Memtis,
+            SweepPolicy::Tuna,
+        ] {
+            assert_eq!(SweepPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SweepPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn baselines_are_memoized_across_fractions_and_policies() {
+        let spec = tiny(&["Btree"])
+            .with_fractions([0.9, 0.8, 0.7])
+            .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch])
+            .with_threads(2);
+        let res = run_sweep(&spec).unwrap();
+        assert_eq!(res.len(), 6);
+        assert_eq!(res.baselines_computed, 1, "one workload → one baseline");
+        assert_eq!(res.baseline_hits, 6, "every cell reuses it");
+    }
+
+    #[test]
+    fn cell_losses_match_direct_runs() {
+        let spec = tiny(&["BFS"]).with_fractions([0.8]);
+        let res = run_sweep(&spec).unwrap();
+        let cell = res.cell("BFS", SweepPolicy::Tpp, 0.8).unwrap();
+
+        let rs = RunSpec::new("BFS").with_intervals(20).with_fraction(0.8);
+        let direct = run_tpp(&rs).unwrap();
+        let base = run_fm_only(&rs).unwrap();
+        assert_eq!(cell.result.total_ns, direct.total_ns);
+        assert_eq!(cell.loss, overall_loss(&direct, &base));
+        assert!((cell.saving - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_seeds_and_hot_thrs_get_distinct_baselines() {
+        let spec = tiny(&["Btree"])
+            .with_fractions([0.85])
+            .with_seeds([1, 2])
+            .with_hot_thrs([2, 4]);
+        let res = run_sweep(&spec).unwrap();
+        assert_eq!(res.len(), 4);
+        assert_eq!(res.baselines_computed, 4, "seed × hot_thr keys differ");
+    }
+
+    #[test]
+    fn empty_grid_and_missing_tuna_config_are_errors() {
+        let empty = SweepSpec::new(Vec::<String>::new());
+        assert!(run_sweep(&empty).is_err());
+        let no_db = tiny(&["BFS"]).with_policies([SweepPolicy::Tuna]);
+        assert!(run_sweep(&no_db).is_err());
+    }
+
+    #[test]
+    fn unknown_workload_surfaces_the_run_error() {
+        let spec = tiny(&["not-a-workload"]);
+        assert!(run_sweep(&spec).is_err());
+    }
+}

@@ -15,9 +15,14 @@
 //!
 //! The public entry points most users want:
 //!
-//! * [`coordinator::Session`] — run a workload under TPP (± Tuna) and get a
-//!   full trace: per-interval times, migrations, fast-memory size.
-//! * [`perfdb::builder::build_database`] — offline micro-benchmark sweep.
+//! * [`coordinator::run_tpp`] / [`coordinator::run_tuna`] — run a workload
+//!   under TPP (± Tuna) and get a full trace: per-interval times,
+//!   migrations, fast-memory size.
+//! * [`coordinator::sweep::run_sweep`] — the batched multi-run executor:
+//!   a workload × fraction × seed × policy grid across threads, with
+//!   memoized fast-memory-only baselines.
+//! * [`perfdb::builder::build_database`] — offline micro-benchmark sweep
+//!   (parallel over configuration × fraction cells, byte-deterministic).
 //! * [`tuner::Tuner`] — the online controller (watermark programming).
 //! * [`runtime::PerfDbExec`] — the AOT query executable (PJRT CPU).
 //!

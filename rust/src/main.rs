@@ -10,8 +10,11 @@
 //! tuna tune --workload BFS [--target 0.05] [--period 2.5] [--xla]
 //!           [--db artifacts/perfdb.bin] [--artifacts artifacts]
 //!           [--intervals N] [--config FILE]
-//! tuna sweep --workload BFS [--fractions 1.0,0.9,0.8,...] [--memtis]
-//!           [--intervals N]                 Fig. 1-style FM sweep
+//! tuna sweep [--workloads BFS,SSSP] [--fractions 1.0,0.9,0.8,...]
+//!           [--policy tpp,first-touch,memtis,tuna] [--seeds 1,2,3]
+//!           [--hot-thrs 2,4] [--threads N] [--intervals N]
+//!           [--memtis | --first-touch] [--db artifacts/perfdb.bin]
+//!                               parallel grid sweep (Fig. 1 and beyond)
 //! ```
 
 use std::path::PathBuf;
@@ -21,7 +24,7 @@ use anyhow::{bail, Result};
 
 use tuna::cli::Args;
 use tuna::config::ExperimentConfig;
-use tuna::coordinator::{self, RunSpec};
+use tuna::coordinator::{self, RunSpec, SweepPolicy, SweepSpec};
 use tuna::perfdb::builder::{ensure_db, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::report::{pct, Table};
@@ -203,46 +206,97 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated list of values.
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .map(|x| x.trim())
+        .filter(|x| !x.is_empty())
+        .map(|x| x.parse::<T>().map_err(|e| anyhow::anyhow!("bad list item `{x}`: {e}")))
+        .collect()
+}
+
 fn cmd_sweep(args: &mut Args) -> Result<()> {
     let exp = load_exp(args)?;
-    let spec = spec_from(args, &exp)?;
-    let fracs: Vec<f64> = args
-        .get_or("fractions", "1.0,0.95,0.895,0.8,0.7,0.5,0.3,0.266")
+    let default_workload = args.get_or("workload", &exp.workload);
+    let workloads: Vec<String> = args
+        .get_or("workloads", &default_workload)
         .split(',')
-        .map(|s| s.trim().parse::<f64>())
-        .collect::<std::result::Result<_, _>>()
-        .map_err(|e| anyhow::anyhow!("bad --fractions: {e}"))?;
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    // Singular flags stay accepted as aliases (pre-executor invocations
+    // like `tuna sweep --workload BFS --seed 7 --fraction 0.9` keep working).
+    let single_fraction =
+        args.get_or("fraction", "1.0,0.95,0.895,0.8,0.7,0.5,0.3,0.266");
+    let fractions: Vec<f64> = parse_list(&args.get_or("fractions", &single_fraction))?;
+    let single_seed = args.get_or("seed", &exp.seed.to_string());
+    let seeds: Vec<u64> = parse_list(&args.get_or("seeds", &single_seed))?;
+    let single_hot_thr = args.get_or("hot-thr", &exp.hot_thr.to_string());
+    let hot_thrs: Vec<u32> = parse_list(&args.get_or("hot-thrs", &single_hot_thr))?;
+    let intervals: u32 = args.get_parse("intervals", exp.intervals)?;
+    let threads: usize = args.get_parse("threads", 0usize)?;
+    // `--memtis` / `--first-touch` are kept as shorthands for `--policy`.
     let memtis = args.switch("memtis");
     let first_touch = args.switch("first-touch");
+    let default_policy =
+        if memtis { "memtis" } else if first_touch { "first-touch" } else { "tpp" };
+    let policies: Vec<SweepPolicy> = args
+        .get_or("policy", default_policy)
+        .split(',')
+        .map(|s| SweepPolicy::parse(s.trim()))
+        .collect::<Result<_>>()?;
+    let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
     args.finish()?;
 
-    let baseline = coordinator::run_fm_only(&spec)?;
+    let mut spec = SweepSpec::new(&workloads)
+        .with_fractions(fractions)
+        .with_seeds(seeds)
+        .with_hot_thrs(hot_thrs)
+        .with_policies(policies.clone())
+        .with_intervals(intervals)
+        .with_threads(threads)
+        .with_machine(exp.machine.clone());
+    if policies.contains(&SweepPolicy::Tuna) {
+        let db = Arc::new(ensure_db(&db_path, &BuildParams::default())?);
+        spec = spec.with_tuna(db, exp.tuna.clone());
+    }
+
+    let res = coordinator::run_sweep(&spec)?;
+
     let mut t = Table::new(
-        &format!("{} fast-memory sweep ({})", spec.workload, if memtis {
-            "memtis"
-        } else if first_touch {
-            "first-touch"
-        } else {
-            "tpp"
-        }),
-        &["FM size", "perf loss", "migrations", "failures"],
+        &format!(
+            "parallel sweep: {} workloads × {} fractions × {} seeds × {} hot-thrs × {} policies = {} cells",
+            spec.workloads.len(),
+            spec.fractions.len(),
+            spec.seeds.len(),
+            spec.hot_thrs.len(),
+            spec.policies.len(),
+            res.len()
+        ),
+        &["workload", "policy", "seed", "FM size", "perf loss", "saving", "migrations", "failures"],
     );
-    for &f in &fracs {
-        let s = spec.clone().with_fraction(f);
-        let run = if memtis {
-            coordinator::run_memtis(&s)?
-        } else if first_touch {
-            coordinator::run_first_touch(&s)?
-        } else {
-            coordinator::run_tpp(&s)?
-        };
+    for c in &res.cells {
         t.row(vec![
-            pct(f),
-            pct(coordinator::overall_loss(&run, &baseline)),
-            run.total_migrations().to_string(),
-            run.total_promote_failed().to_string(),
+            c.spec.workload.clone(),
+            c.spec.policy.name().to_string(),
+            c.spec.seed.to_string(),
+            pct(c.spec.fm_fraction),
+            pct(c.loss),
+            pct(c.saving),
+            c.result.total_migrations().to_string(),
+            c.result.total_promote_failed().to_string(),
         ]);
     }
     t.print();
+    println!(
+        "\n{} cells in {}; {} baselines computed, {} baseline-cache hits",
+        res.len(),
+        tuna::util::human_ns(res.wall_ns as u64),
+        res.baselines_computed,
+        res.baseline_hits
+    );
     Ok(())
 }

@@ -6,15 +6,21 @@
 //! in under 20 minutes; at our 1024× address-space scale-down the default
 //! grid (2 K configs × 39 fractions) builds in well under a minute on a
 //! laptop-class CPU, parallelized over std threads (no rayon offline).
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+//!
+//! Parallelism is at *cell* granularity — one (configuration, fraction)
+//! measurement per work unit — so short records never straggle behind a
+//! few long ones, and each configuration is sampled from its own
+//! deterministic RNG stream ([`config_rng`]). Both choices make the built
+//! database byte-identical regardless of thread count or scheduling
+//! (asserted by `parallel_build_matches_serial_bytes` in the integration
+//! suite).
 
 use super::{normalize, PerfDb, Record};
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::sim::{Engine, IntervalModel, MachineModel};
 use crate::tpp::{Tpp, Watermarks};
-use crate::util::rng::Rng;
+use crate::util::parallel::parallel_map;
+use crate::util::rng::{splitmix64, Rng};
 use crate::workloads::Workload;
 
 /// Parameters for an offline build.
@@ -117,37 +123,47 @@ pub fn build_record(cfg: &MicrobenchConfig, params: &BuildParams) -> Record {
     Record { raw, vec: normalize(&raw), times_ns }
 }
 
-/// Build the full database. Deterministic per seed, parallel across
-/// configurations.
+/// Deterministic per-configuration RNG stream: a function of the build
+/// seed and the configuration index only, so sampling is independent of
+/// both sampling order and thread scheduling.
+pub fn config_rng(seed: u64, index: usize) -> Rng {
+    let mut s = seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Rng::new(splitmix64(&mut s))
+}
+
+/// Build the full database. Deterministic per seed; parallel over the
+/// `n_configs × fractions` measurement cells, with byte-identical output
+/// for any `threads` value (including 1).
 pub fn build_database(params: &BuildParams) -> PerfDb {
     assert!(!params.fractions.is_empty() && (params.fractions[0] - 1.0).abs() < 1e-6);
-    // Pre-sample configs deterministically (sampling order must not
-    // depend on thread scheduling).
-    let mut rng = Rng::new(params.seed);
+    let n = params.n_configs;
+    let m = params.fractions.len();
     let configs: Vec<MicrobenchConfig> =
-        (0..params.n_configs).map(|_| sample_config(&mut rng)).collect();
+        (0..n).map(|i| sample_config(&mut config_rng(params.seed, i))).collect();
 
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(usize, Record)>> =
-        Mutex::new(Vec::with_capacity(params.n_configs));
-    std::thread::scope(|scope| {
-        for _ in 0..params.threads.max(1) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= configs.len() {
-                    break;
-                }
-                let rec = build_record(&configs[i], params);
-                results.lock().unwrap().push((i, rec));
-            });
-        }
+    // Measure every (config, fraction) cell on the shared worker pool;
+    // results come back in cell order, so scheduling cannot reorder the
+    // output (see `crate::util::parallel`).
+    let times: Vec<f32> = parallel_map(n * m, params.threads, |cell| {
+        let (ci, fi) = (cell / m, cell % m);
+        measure(
+            &configs[ci],
+            params.fractions[fi] as f64,
+            &params.machine,
+            params.intervals,
+            params.warmup,
+        ) as f32
     });
-    let mut indexed = results.into_inner().unwrap();
-    indexed.sort_by_key(|&(i, _)| i);
-    PerfDb {
-        fractions: params.fractions.clone(),
-        records: indexed.into_iter().map(|(_, r)| r).collect(),
-    }
+
+    let records = configs
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| {
+            let raw = cfg.as_array();
+            Record { raw, vec: normalize(&raw), times_ns: times[i * m..(i + 1) * m].to_vec() }
+        })
+        .collect();
+    PerfDb { fractions: params.fractions.clone(), records }
 }
 
 /// Load the database at `path`, or build it with `params` and cache it
@@ -240,6 +256,30 @@ mod tests {
             assert_eq!(ra.raw, rb.raw);
             assert_eq!(ra.times_ns, rb.times_ns);
         }
+    }
+
+    #[test]
+    fn parallel_build_is_byte_identical_to_serial() {
+        let mut p = quick_params(6);
+        p.threads = 1;
+        let serial = build_database(&p);
+        p.threads = 8;
+        let parallel = build_database(&p);
+        assert_eq!(
+            crate::perfdb::store::to_bytes(&serial),
+            crate::perfdb::store::to_bytes(&parallel),
+            "thread count must not change the built database"
+        );
+    }
+
+    #[test]
+    fn config_rng_streams_are_independent_and_stable() {
+        let a: Vec<u64> = (0..4).map(|i| config_rng(9, i).next_u64()).collect();
+        let b: Vec<u64> = (0..4).map(|i| config_rng(9, i).next_u64()).collect();
+        assert_eq!(a, b, "streams are a pure function of (seed, index)");
+        let set: std::collections::HashSet<u64> = a.iter().copied().collect();
+        assert_eq!(set.len(), a.len(), "streams must differ across indices");
+        assert_ne!(config_rng(9, 0).next_u64(), config_rng(10, 0).next_u64());
     }
 
     #[test]

@@ -49,6 +49,24 @@ pub fn normalize(raw: &[f64; DIMS]) -> [f32; DIMS] {
     v
 }
 
+/// Linear interpolation of `y(x)` over a curve sampled at strictly
+/// *descending* `x` (the grid order of [`PerfDb::fractions`] and every
+/// loss curve), clamped outside the range. Allocation-free; used on the
+/// tuner's per-decision hot path.
+pub fn interp_desc(curve: &[(f64, f64)], x: f64) -> f64 {
+    let last = curve.len() - 1;
+    if x >= curve[0].0 {
+        return curve[0].1;
+    }
+    if x <= curve[last].0 {
+        return curve[last].1;
+    }
+    let i = curve.partition_point(|&(f, _)| f > x);
+    let ((x_hi, y_hi), (x_lo, y_lo)) = (curve[i - 1], curve[i]);
+    let t = (x - x_lo) / (x_hi - x_lo);
+    y_lo * (1.0 - t) + y_hi * t
+}
+
 /// One execution record: a configuration and its execution times at each
 /// of the database's fast-memory fractions.
 #[derive(Clone, Debug)]
@@ -87,13 +105,28 @@ impl PerfDb {
     }
 
     /// Predicted execution time of `record` at an arbitrary fraction
-    /// (linear interpolation over the sampled grid).
+    /// (linear interpolation over the sampled grid, clamped outside it).
+    ///
+    /// This sits on the tuner's per-decision hot path, so it interpolates
+    /// over the descending grid in place rather than materializing
+    /// ascending copies of the fraction and time vectors on every call.
     pub fn time_at(&self, record: usize, fraction: f64) -> f64 {
         let r = &self.records[record];
-        // fractions descending; lerp_at wants ascending
-        let xs: Vec<f64> = self.fractions.iter().rev().map(|&f| f as f64).collect();
-        let ys: Vec<f64> = r.times_ns.iter().rev().map(|&t| t as f64).collect();
-        crate::util::stats::lerp_at(&xs, &ys, fraction)
+        let fr = &self.fractions;
+        let last = fr.len() - 1;
+        if fraction >= fr[0] as f64 {
+            return r.times_ns[0] as f64;
+        }
+        if fraction <= fr[last] as f64 {
+            return r.times_ns[last] as f64;
+        }
+        // First index whose fraction is <= the query (grid is strictly
+        // descending, so the predicate below is monotone true→false).
+        let i = fr.partition_point(|&f| (f as f64) > fraction);
+        let (x_hi, x_lo) = (fr[i - 1] as f64, fr[i] as f64);
+        let (y_hi, y_lo) = (r.times_ns[i - 1] as f64, r.times_ns[i] as f64);
+        let t = (fraction - x_lo) / (x_hi - x_lo);
+        y_lo * (1.0 - t) + y_hi * t
     }
 
     /// Predicted relative performance loss `pd' = (y' − x') / x'` at each
@@ -162,12 +195,13 @@ impl PerfDb {
         None
     }
 
-    /// Weighted-average predicted loss at an arbitrary fraction.
+    /// Weighted-average predicted loss at an arbitrary fraction
+    /// (interpolated in place over the descending curve, clamped).
+    /// Callers that also need the curve itself (e.g. the tuner, which
+    /// scans it for the loss target) should compute
+    /// [`Self::weighted_loss_curve`] once and use [`interp_desc`].
     pub fn weighted_loss_at(&self, neighbors: &[(usize, f32)], fraction: f64) -> f64 {
-        let curve = self.weighted_loss_curve(neighbors);
-        let xs: Vec<f64> = curve.iter().rev().map(|&(f, _)| f).collect();
-        let ys: Vec<f64> = curve.iter().rev().map(|&(_, l)| l).collect();
-        crate::util::stats::lerp_at(&xs, &ys, fraction)
+        interp_desc(&self.weighted_loss_curve(neighbors), fraction)
     }
 
     /// Basic structural invariants (used by the property-test suite).

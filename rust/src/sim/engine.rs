@@ -70,8 +70,15 @@ impl RunResult {
     }
 
     /// Relative slowdown vs a baseline run of the same work:
-    /// `(T - T_base) / T_base` (the paper's `pd`).
+    /// `(T - T_base) / T_base` (the paper's `pd`). A degenerate baseline
+    /// (zero, negative or NaN total time — e.g. an empty run) yields 0.0
+    /// rather than `NaN`/`inf`, so downstream aggregation stays finite.
+    /// A non-finite *run* time still propagates — a broken measurement
+    /// must not read as "no loss".
     pub fn perf_loss_vs(&self, baseline: &RunResult) -> f64 {
+        if !(baseline.total_ns > 0.0) || !baseline.total_ns.is_finite() {
+            return 0.0;
+        }
         (self.total_ns - baseline.total_ns) / baseline.total_ns
     }
 }
@@ -89,11 +96,19 @@ impl Engine {
     /// Fast-tier capacity (pages) whose *usable* size under default
     /// watermarks is `fraction` of `rss_pages`. Fig. 1-style sweeps use
     /// this so "100%" really fits the whole RSS in fast memory.
+    ///
+    /// The fixed-point iteration converges geometrically (the watermark
+    /// reserve is ~1% of capacity); the trailing correction loop absorbs
+    /// integer-division boundary effects so `usable ≥ target` holds for
+    /// every rss/fraction pair (property-tested in the integration suite).
     pub fn fm_capacity(rss_pages: usize, fraction: f64) -> u64 {
         let target = (rss_pages as f64 * fraction).ceil() as u64;
         let mut cap = target.max(16);
         for _ in 0..4 {
             cap = target + Watermarks::default_for_capacity(cap).low;
+        }
+        while cap - Watermarks::default_for_capacity(cap).low < target {
+            cap += 1;
         }
         cap
     }
@@ -255,6 +270,24 @@ mod tests {
 
     fn engine() -> Engine {
         Engine::new(IntervalModel::new(MachineModel::default()))
+    }
+
+    #[test]
+    fn perf_loss_vs_guards_degenerate_baseline() {
+        let empty = RunResult {
+            workload: "toy",
+            policy: "tpp",
+            fast_capacity: 0,
+            total_ns: 0.0,
+            trace: vec![],
+        };
+        let mut run = empty.clone();
+        run.total_ns = 10.0;
+        assert_eq!(run.perf_loss_vs(&empty), 0.0, "zero-time baseline must not yield inf");
+        assert_eq!(empty.perf_loss_vs(&empty), 0.0, "0/0 must not yield NaN");
+        let mut base = empty.clone();
+        base.total_ns = 5.0;
+        assert_eq!(run.perf_loss_vs(&base), 1.0);
     }
 
     #[test]

@@ -97,9 +97,20 @@ impl Tuner {
     }
 
     /// Take one tuning decision from the current telemetry window.
+    ///
+    /// The decision-path timer wraps the whole body so early returns
+    /// (empty telemetry window, empty neighbour set, no fraction within
+    /// the target) still count toward `decide_ns` — the §Perf budget is
+    /// "time spent deciding", not "time spent deciding successfully".
     pub fn decide(&mut self, interval: u32) -> Option<Watermarks> {
-        let cfg = self.telemetry.take_window_config()?;
         let t0 = std::time::Instant::now();
+        let out = self.decide_inner(interval);
+        self.decide_ns += t0.elapsed().as_nanos();
+        out
+    }
+
+    fn decide_inner(&mut self, interval: u32) -> Option<Watermarks> {
+        let cfg = self.telemetry.take_window_config()?;
         let q = normalize(&cfg.as_array());
         // k-NN: averaging several records' loss-vs-size curves (distance
         // weighted) smooths the knee; individual micro-benchmark records
@@ -113,17 +124,21 @@ impl Tuner {
         // memory size if the records offer none (§3.3). Shrinking is
         // rate-limited per period (the records were matched against
         // telemetry at the *current* size, so walk down and re-measure);
-        // growing back is immediate.
-        let target = self
-            .db
-            .min_fraction_within_weighted(&neighbors, self.cfg.loss_target)?
+        // growing back is immediate. The weighted curve is computed once
+        // and reused for both the target scan and the loss prediction —
+        // this is the per-decision hot path.
+        let curve = self.db.weighted_loss_curve(&neighbors);
+        let target = curve
+            .iter()
+            .rev() // descending grid → iterate ascending fraction
+            .find(|&&(_, loss)| loss <= self.cfg.loss_target)
+            .map(|&(f, _)| f)?
             .max(self.cfg.min_fm_fraction);
         let fraction = target.max(self.current_fraction - self.cfg.max_step_down);
         self.current_fraction = fraction;
-        let predicted_loss = self.db.weighted_loss_at(&neighbors, fraction);
+        let predicted_loss = crate::perfdb::interp_desc(&curve, fraction);
         let new_fm =
             ((self.rss_pages as f64 * fraction).ceil() as u64).min(self.capacity);
-        self.decide_ns += t0.elapsed().as_nanos();
         self.decisions.push(Decision {
             interval,
             record,
@@ -310,6 +325,19 @@ mod tests {
         let d = tuner.decisions.last().unwrap();
         assert_eq!(wm.usable(8_200), d.new_fm);
         wm.check(8_200).unwrap();
+    }
+
+    #[test]
+    fn decide_bills_time_on_early_returns() {
+        let db = db();
+        let mut tuner = mk_tuner(db, 0.5);
+        // Empty telemetry window: every decide early-returns None, but the
+        // decision-path budget must still account for the time spent.
+        for i in 0..200u32 {
+            assert!(tuner.decide(i).is_none());
+        }
+        assert!(tuner.decisions.is_empty());
+        assert!(tuner.decide_ns > 0, "early returns must update decide_ns");
     }
 
     #[test]

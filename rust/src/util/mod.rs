@@ -1,11 +1,13 @@
 //! Small self-contained utilities.
 //!
-//! The build image has no access to the crates.io registry beyond the
-//! pre-cached `xla`/`anyhow` dependency closure, so the usual suspects
-//! (`rand`, `proptest`, `serde`, `clap`, `criterion`) are hand-rolled here
-//! at the scale this project needs. See DESIGN.md §2 (crate substitutions).
+//! The build image has no access to the crates.io registry (the `xla` and
+//! `anyhow` dependencies are vendored under `rust/vendor/`), so the usual
+//! suspects (`rand`, `proptest`, `serde`, `clap`, `criterion`) are
+//! hand-rolled here at the scale this project needs. See DESIGN.md §2
+//! (crate substitutions).
 
 pub mod bench;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,73 @@
+//! Scoped-thread worker pool (rayon is unavailable offline).
+//!
+//! One shared implementation of the index-pulling pool used by the sweep
+//! executor and the perf-DB builder: workers pull the next index from an
+//! atomic counter, results are collected as `(index, value)` pairs and
+//! restored to index order before returning — so scheduling can never
+//! reorder or drop outputs, and callers get deterministic results for any
+//! thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluate `f(0)..f(n-1)` on up to `threads` scoped worker threads and
+/// return the results in index order. `threads` is clamped to `[1, n]`;
+/// pass the result of [`default_threads`] (or 0 handled by the caller)
+/// for "one per core".
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads.clamp(1, n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                slots.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = slots.into_inner().unwrap();
+    v.sort_by_key(|slot| slot.0);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
+/// One worker per available core (fallback 4).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order_for_any_thread_count() {
+        for threads in [1, 2, 8, 64] {
+            let out = parallel_map(100, threads, |i| i * 3);
+            assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input_and_oversized_pool() {
+        assert!(parallel_map(0, 8, |i| i).is_empty());
+        assert_eq!(parallel_map(3, 100, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn non_copy_results_are_collected() {
+        let out = parallel_map(10, 4, |i| format!("v{i}"));
+        assert_eq!(out[7], "v7");
+        assert_eq!(out.len(), 10);
+    }
+}

@@ -6,6 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::sweep::{run_sweep, SweepPolicy, SweepSpec};
 use tuna::coordinator::{self, RunSpec};
 use tuna::perfdb::builder::{build_database, sample_config, BuildParams};
 use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
@@ -78,8 +79,120 @@ fn baseline_ordering_tpp_beats_first_touch_beats_nothing() {
 }
 
 // ---------------------------------------------------------------------------
+// sweep executor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sweep_parallel_is_bit_identical_to_serial() {
+    let grid = |threads: usize| {
+        let spec = SweepSpec::new(["BFS", "Btree"])
+            .with_fractions([0.9, 0.7])
+            .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch])
+            .with_intervals(30)
+            .with_threads(threads);
+        run_sweep(&spec).unwrap()
+    };
+    let serial = grid(1);
+    let parallel = grid(4);
+    assert_eq!(serial.len(), 8);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.spec.workload, b.spec.workload, "cell order must be grid order");
+        assert_eq!(a.spec.policy, b.spec.policy);
+        assert_eq!(
+            a.result.total_ns.to_bits(),
+            b.result.total_ns.to_bits(),
+            "{} {:?} @ {}: thread count changed the simulation",
+            a.spec.workload,
+            a.spec.policy,
+            a.spec.fm_fraction
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.result.total_migrations(), b.result.total_migrations());
+    }
+}
+
+#[test]
+fn sweep_memoizes_baselines_and_runs_tuna_cells() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let spec = SweepSpec::new(["Btree"])
+        .with_fractions([0.9, 0.8])
+        .with_policies([SweepPolicy::Tpp, SweepPolicy::Tuna])
+        .with_intervals(60)
+        .with_tuna(db, cfg);
+    let res = run_sweep(&spec).unwrap();
+    // 2 fractions × Tpp + 1 Tuna cell (the fraction axis collapses for
+    // Tuna, which always starts at 100% and shrinks).
+    assert_eq!(res.len(), 3);
+    assert_eq!(res.baselines_computed, 1, "all cells share one baseline");
+    assert_eq!(res.baseline_hits, 3);
+    let tuna_cell = res.cell("Btree", SweepPolicy::Tuna, 1.0).unwrap();
+    let stats = tuna_cell.tuna.as_ref().expect("tuna cells carry stats");
+    assert!(stats.decisions > 0);
+    assert!(stats.mean_fraction > 0.2 && stats.mean_fraction <= 1.0);
+    assert!((tuna_cell.saving - (1.0 - stats.mean_fraction)).abs() < 1e-12);
+    assert!(res.cells.iter().all(|c| c.loss.is_finite()));
+}
+
+#[test]
+fn parallel_build_matches_serial_bytes() {
+    let mk = |threads: usize| {
+        build_database(&BuildParams {
+            n_configs: 8,
+            fractions: vec![1.0, 0.8, 0.6],
+            intervals: 3,
+            warmup: 1,
+            seed: 77,
+            machine: MachineModel::default(),
+            threads,
+        })
+    };
+    let serial = store::to_bytes(&mk(1));
+    let parallel = store::to_bytes(&mk(8));
+    assert_eq!(serial, parallel, "builder output must not depend on thread count");
+}
+
+// ---------------------------------------------------------------------------
 // property tests (hand-rolled harness; proptest is unavailable offline)
 // ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fm_capacity_fixed_point_converges() {
+    // Engine::fm_capacity solves `usable(cap) == target` by fixed-point
+    // iteration; the property is that the usable size under default
+    // watermarks always reaches the target without overshooting it by
+    // more than a few pages, for any rss/fraction pair.
+    check(
+        23,
+        256,
+        |rng: &mut Rng| (16 + rng.below(50_000) as usize, rng.range_f64(0.05, 1.0)),
+        |&(rss, fraction)| {
+            let mut c = vec![];
+            if rss > 16 {
+                c.push((16, fraction));
+                c.push((16 + (rss - 16) / 2, fraction));
+            }
+            c
+        },
+        |&(rss, fraction)| {
+            let cap = Engine::fm_capacity(rss, fraction);
+            let usable = Watermarks::default_for_capacity(cap).usable(cap);
+            let target = (rss as f64 * fraction).ceil() as u64;
+            if usable < target {
+                return Err(format!(
+                    "rss={rss} frac={fraction}: usable {usable} < target {target} (cap {cap})"
+                ));
+            }
+            if usable > target + 8 {
+                return Err(format!(
+                    "rss={rss} frac={fraction}: usable {usable} overshoots target {target} (cap {cap})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
 
 #[test]
 fn prop_tier_accounting_invariant_under_random_runs() {
