@@ -13,8 +13,10 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use tuna::artifact::cells::SweepTable;
+use tuna::artifact::ArtifactStore;
 use tuna::config::experiment::TunaConfig;
-use tuna::coordinator::{run_sweep, SweepPolicy, SweepSpec};
+use tuna::coordinator::{run_sweep_with_cache, BaselineCache, SweepPolicy, SweepSpec};
 use tuna::perfdb::builder::{ensure_db, BuildParams};
 use tuna::report::{pct, Table};
 use tuna::util::human_ns;
@@ -28,7 +30,11 @@ fn main() -> tuna::Result<()> {
         .with_policies([SweepPolicy::Tuna])
         .with_intervals(300)
         .with_tuna(db, tuna_cfg);
-    let res = run_sweep(&spec)?;
+    // The five fast-memory-only baselines persist in the artifact store:
+    // rerunning this example re-simulates zero of them.
+    let store = ArtifactStore::open(Path::new("artifacts/store"))?;
+    let cache = BaselineCache::persistent(&store.baselines_dir())?;
+    let res = run_sweep_with_cache(&spec, &cache)?;
 
     let mut t = Table::new(
         "Capacity planning: Tuna + TPP at τ = 5% (vs Pond's 5% saving)",
@@ -55,11 +61,15 @@ fn main() -> tuna::Result<()> {
     let avg = savings.iter().sum::<f64>() / savings.len() as f64;
     println!("\naverage FM saving: {}  (paper: 8.5%)", pct(avg));
     println!(
-        "sweep: {} workloads in {} ({} baselines computed, {} cache hits)",
+        "sweep: {} workloads in {} (baselines: {} computed, {} cache hits, {} loaded from disk)",
         res.len(),
         human_ns(res.wall_ns as u64),
         res.baselines_computed,
-        res.baseline_hits
+        res.baseline_hits,
+        res.baseline_disk_hits
     );
+    let cells_path = store.sweep_path("capacity_planning");
+    SweepTable::from_sweep(&res).save(&cells_path)?;
+    println!("cells persisted to {}", cells_path.display());
     Ok(())
 }

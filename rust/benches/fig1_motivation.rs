@@ -9,9 +9,16 @@
 //!
 //! Runs through the batched sweep executor: the full 8-fraction ×
 //! 2-policy grid executes across threads against one memoized
-//! fast-memory-only baseline (16 cells, 1 baseline run).
+//! fast-memory-only baseline (16 cells, 1 baseline run). The baseline is
+//! served from the artifact store when a previous invocation persisted
+//! it (rerun this bench: "0 computed, 1 loaded from disk"), and the cell
+//! table lands in the store for `tuna store diff` across commits.
 
-use tuna::coordinator::{run_sweep, SweepPolicy, SweepSpec};
+use std::path::Path;
+
+use tuna::artifact::cells::SweepTable;
+use tuna::artifact::ArtifactStore;
+use tuna::coordinator::{run_sweep_with_cache, BaselineCache, SweepPolicy, SweepSpec};
 use tuna::report::{pct, results_dir, Table};
 use tuna::util::human_ns;
 
@@ -21,7 +28,9 @@ fn main() -> tuna::Result<()> {
         .with_fractions(fractions)
         .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch])
         .with_intervals(240);
-    let res = run_sweep(&spec)?;
+    let store = ArtifactStore::open(Path::new("artifacts/store"))?;
+    let cache = BaselineCache::persistent(&store.baselines_dir())?;
+    let res = run_sweep_with_cache(&spec, &cache)?;
 
     let mut t = Table::new(
         "Fig. 1 — BFS vs fast-memory size (normalized performance; paper: TPP 0.956 @ 89.5%, first-touch 0.919 @ 89.5%, TPP 0.77 @ 26.6%)",
@@ -50,13 +59,17 @@ fn main() -> tuna::Result<()> {
     }
     t.print();
     t.to_csv(&results_dir().join("fig1_motivation.csv"))?;
+    let cells_path = store.sweep_path("fig1_motivation");
+    SweepTable::from_sweep(&res).save(&cells_path)?;
     println!(
-        "\nsweep executor: {} cells in {} ({} baseline run(s), {} cache hits)",
+        "\nsweep executor: {} cells in {} (baselines: {} computed, {} cache hits, {} loaded from disk)",
         res.len(),
         human_ns(res.wall_ns as u64),
         res.baselines_computed,
-        res.baseline_hits
+        res.baseline_hits,
+        res.baseline_disk_hits
     );
+    println!("cells persisted to {} (diff across commits with `tuna store diff`)", cells_path.display());
 
     // Shape checks the paper's narrative rests on.
     let at = |f: f64| anchors.iter().find(|a| (a.0 - f).abs() < 1e-9).unwrap();

@@ -8,7 +8,9 @@
 //! batched-query executable. (b)–(d) also cross-check numerics.
 
 use std::path::Path;
+use std::sync::Arc;
 
+use tuna::artifact::shard::{ShardedNn, ShardedPerfDb};
 use tuna::perfdb::builder::{build_database, ensure_db, sample_config, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::perfdb::normalize;
@@ -74,6 +76,35 @@ fn main() -> tuna::Result<()> {
         human_ns(tn.p95_ns() as u64),
         human_ns(tn.mean_ns() as u64),
     ]);
+
+    // --- (b2) sharded query (artifact-store layout, 8 segments). At
+    // this record count the query auto-selects the serial shard scan;
+    // the parallel fan-out path is covered by the >8192-record test in
+    // `artifact::shard`. ---
+    let sharded = Arc::new(ShardedPerfDb::from_flat(&db, 8));
+    let mut snn = ShardedNn::new(sharded, 0);
+    let mut qi = 0usize;
+    let ts = time_it(32, 256, || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        std::hint::black_box(snn.nearest(q).unwrap());
+    });
+    t.row(vec![
+        "sharded (8 segments, serial scan at this size)".into(),
+        human_ns(ts.p50_ns() as u64),
+        human_ns(ts.p95_ns() as u64),
+        human_ns(ts.mean_ns() as u64),
+    ]);
+    // numerics cross-check: sharded merge must equal the flat argmin
+    {
+        let mut native = NativeNn::new(&db);
+        for q in &queries {
+            let (si, sd) = snn.nearest(q)?;
+            let (ni, nd) = native.nearest(q)?;
+            assert_eq!((si, sd.to_bits()), (ni, nd.to_bits()), "sharded != native");
+        }
+        println!("numerics: sharded == native on {} queries ✓", queries.len());
+    }
 
     // --- (c) XLA single query, cached + literal modes ---
     if Path::new("artifacts/manifest.txt").exists() {

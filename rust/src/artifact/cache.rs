@@ -1,0 +1,480 @@
+//! Cross-process baseline cache: fast-memory-only baseline runs keyed by
+//! [`BaselineKey`] hash, persisted in the artifact store so a repeated
+//! bench or sweep invocation loads memoized baselines from disk instead
+//! of re-simulating them.
+//!
+//! Each artifact (`baselines/<key-hash>.bl`, magic `TUNABAS1`) embeds the
+//! *full* key alongside the serialized [`RunResult`], so a hash collision
+//! is detected on load (the stored key is compared field-by-field) and
+//! degrades to a recompute, never a wrong baseline. The payload carries
+//! every trace field bit-exactly (f64/f32 via their IEEE bits), so a
+//! baseline loaded from disk is indistinguishable from one simulated in
+//! this process.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, Reader};
+use super::{fnv1a64, fnv1a64_update, write_atomic};
+use crate::coordinator::sweep::BaselineKey;
+use crate::perfdb::store::crc32;
+use crate::sim::interval::Bound;
+use crate::sim::{IntervalOutcome, RunResult, RunTrace};
+
+const MAGIC: &[u8; 8] = b"TUNABAS1";
+
+/// Fingerprint of the simulation code that produced a baseline. Stored in
+/// every artifact and checked on load: an artifact written by different
+/// simulator code is recomputed, not silently reused — the machine-model
+/// string in [`BaselineKey`] captures *parameters*, so code changes need
+/// their own signal. The fingerprint is **content-derived** (a hash of
+/// the simulator/policy/workload sources compiled into this binary), not
+/// a manually-bumped version: any edit to those sources invalidates
+/// stored baselines mechanically. False invalidation (comment-only
+/// edits) merely costs one recompute.
+pub fn sim_fingerprint() -> &'static str {
+    use std::sync::OnceLock;
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| {
+        // Everything a fast-memory-only baseline run executes: the run
+        // harness, the engine + time model, the TPP policy family, the
+        // workloads, and the RNG their access streams come from.
+        const SOURCES: &[&str] = &[
+            include_str!("../coordinator/mod.rs"),
+            include_str!("../sim/engine.rs"),
+            include_str!("../sim/interval.rs"),
+            include_str!("../sim/machine.rs"),
+            include_str!("../sim/mem.rs"),
+            include_str!("../tpp/mod.rs"),
+            include_str!("../tpp/firsttouch.rs"),
+            include_str!("../tpp/memtis.rs"),
+            include_str!("../tpp/watermarks.rs"),
+            include_str!("../util/rng.rs"),
+            include_str!("../workloads/mod.rs"),
+            include_str!("../workloads/bfs.rs"),
+            include_str!("../workloads/btree.rs"),
+            include_str!("../workloads/graph.rs"),
+            include_str!("../workloads/pagerank.rs"),
+            include_str!("../workloads/sssp.rs"),
+            include_str!("../workloads/xsbench.rs"),
+        ];
+        let mut h = fnv1a64(b"");
+        for src in SOURCES {
+            h = fnv1a64_update(h, src.as_bytes());
+        }
+        format!("tuna-{}-{h:016x}", env!("CARGO_PKG_VERSION"))
+    })
+}
+
+/// Intern a string into a `&'static str`. [`RunResult`] stores its
+/// workload/policy names as `&'static str` (they are compile-time
+/// constants on the simulation path); deserialization reuses one leaked
+/// copy per distinct name, so memory stays bounded by the name universe.
+fn intern(s: &str) -> &'static str {
+    use std::sync::{Mutex, OnceLock};
+    static POOL: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(Vec::new()));
+    let mut guard = pool.lock().unwrap();
+    if let Some(&hit) = guard.iter().find(|&&x| x == s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+    guard.push(leaked);
+    leaked
+}
+
+fn bound_code(b: Bound) -> u8 {
+    match b {
+        Bound::Compute => 0,
+        Bound::Latency => 1,
+        Bound::FastBw => 2,
+        Bound::SlowBw => 3,
+    }
+}
+
+fn bound_from_code(c: u8) -> Result<Bound> {
+    Ok(match c {
+        0 => Bound::Compute,
+        1 => Bound::Latency,
+        2 => Bound::FastBw,
+        3 => Bound::SlowBw,
+        other => bail!("bad roofline-bound code {other} in baseline artifact"),
+    })
+}
+
+fn put_trace(out: &mut Vec<u8>, t: &RunTrace) {
+    wire::put_u32(out, t.interval);
+    wire::put_f64(out, t.clock_ns);
+    wire::put_f64(out, t.wall_ns);
+    wire::put_u64(out, t.acc_fast);
+    wire::put_u64(out, t.acc_slow);
+    wire::put_u64(out, t.sacc_fast);
+    wire::put_u64(out, t.sacc_slow);
+    wire::put_u64(out, t.flops);
+    wire::put_u64(out, t.iops);
+    wire::put_u64(out, t.promoted);
+    wire::put_u64(out, t.promote_failed);
+    wire::put_u64(out, t.demoted_kswapd);
+    wire::put_u64(out, t.demoted_direct);
+    wire::put_u64(out, t.fast_used);
+    wire::put_u64(out, t.fast_free);
+    wire::put_u64(out, t.usable_fm);
+    wire::put_f64(out, t.outcome.wall_ns);
+    wire::put_f64(out, t.outcome.t_comp_ns);
+    wire::put_f64(out, t.outcome.t_lat_ns);
+    wire::put_f64(out, t.outcome.t_bw_fast_ns);
+    wire::put_f64(out, t.outcome.t_bw_slow_ns);
+    wire::put_f64(out, t.outcome.t_block_ns);
+    wire::put_u8(out, bound_code(t.outcome.bound));
+}
+
+fn take_trace(r: &mut Reader<'_>) -> Result<RunTrace> {
+    Ok(RunTrace {
+        interval: r.u32()?,
+        clock_ns: r.f64()?,
+        wall_ns: r.f64()?,
+        acc_fast: r.u64()?,
+        acc_slow: r.u64()?,
+        sacc_fast: r.u64()?,
+        sacc_slow: r.u64()?,
+        flops: r.u64()?,
+        iops: r.u64()?,
+        promoted: r.u64()?,
+        promote_failed: r.u64()?,
+        demoted_kswapd: r.u64()?,
+        demoted_direct: r.u64()?,
+        fast_used: r.u64()?,
+        fast_free: r.u64()?,
+        usable_fm: r.u64()?,
+        outcome: IntervalOutcome {
+            wall_ns: r.f64()?,
+            t_comp_ns: r.f64()?,
+            t_lat_ns: r.f64()?,
+            t_bw_fast_ns: r.f64()?,
+            t_bw_slow_ns: r.f64()?,
+            t_block_ns: r.f64()?,
+            bound: bound_from_code(r.u8()?)?,
+        },
+    })
+}
+
+/// Serialize a (key, baseline run) pair into one artifact file image.
+pub fn baseline_to_bytes(key: &BaselineKey, result: &RunResult) -> Vec<u8> {
+    let mut body = Vec::with_capacity(128 + result.trace.len() * 160);
+    wire::put_str(&mut body, sim_fingerprint());
+    wire::put_str(&mut body, &key.workload);
+    wire::put_u64(&mut body, key.seed);
+    wire::put_u32(&mut body, key.intervals);
+    wire::put_u32(&mut body, key.hot_thr);
+    wire::put_str(&mut body, &key.machine);
+    wire::put_str(&mut body, result.workload);
+    wire::put_str(&mut body, result.policy);
+    wire::put_u64(&mut body, result.fast_capacity);
+    wire::put_f64(&mut body, result.total_ns);
+    wire::put_u32(&mut body, result.trace.len() as u32);
+    for t in &result.trace {
+        put_trace(&mut body, t);
+    }
+    let mut out = Vec::with_capacity(8 + body.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out
+}
+
+/// Parse a baseline artifact (validates magic, CRC and structure).
+pub fn baseline_from_bytes(data: &[u8]) -> Result<(BaselineKey, RunResult)> {
+    if data.len() < 8 + 4 || &data[..8] != MAGIC {
+        bail!("bad baseline-artifact magic");
+    }
+    let body = &data[8..data.len() - 4];
+    let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    let computed = crc32(body);
+    if stored != computed {
+        bail!("baseline artifact CRC mismatch: stored {stored:#x}, computed {computed:#x}");
+    }
+    let mut r = Reader::new(body);
+    let fingerprint = r.str()?;
+    if fingerprint != sim_fingerprint() {
+        bail!(
+            "baseline artifact written by `{fingerprint}`, this build is `{}` \
+             (simulator code changed; stored times are stale)",
+            sim_fingerprint()
+        );
+    }
+    let key = BaselineKey {
+        workload: r.str()?,
+        seed: r.u64()?,
+        intervals: r.u32()?,
+        hot_thr: r.u32()?,
+        machine: r.str()?,
+    };
+    let workload_name = r.str()?;
+    let policy_name = r.str()?;
+    // interned names leak one copy each by design; bound them so a
+    // crafted artifact can't grow the pool with megabyte "names"
+    if workload_name.len() > 256 || policy_name.len() > 256 {
+        bail!("implausible name length in baseline artifact");
+    }
+    let workload = intern(&workload_name);
+    let policy = intern(&policy_name);
+    let fast_capacity = r.u64()?;
+    let total_ns = r.f64()?;
+    let n_trace = r.u32()? as usize;
+    if n_trace > 10_000_000 {
+        bail!("implausible trace length {n_trace} in baseline artifact");
+    }
+    let mut trace = Vec::with_capacity(n_trace);
+    for _ in 0..n_trace {
+        trace.push(take_trace(&mut r)?);
+    }
+    r.done()?;
+    Ok((key, RunResult { workload, policy, fast_capacity, total_ns, trace }))
+}
+
+/// One-line summary of a baseline artifact for listings, reading only the
+/// header (first 4 KiB) — never the trace payload or its CRC, so
+/// `tuna store ls` stays proportional to artifact *count*, not bytes.
+pub fn peek_summary(path: &Path) -> Result<String> {
+    use std::io::Read;
+    let mut buf = Vec::with_capacity(4096);
+    std::fs::File::open(path)
+        .with_context(|| format!("opening baseline artifact {}", path.display()))?
+        .take(4096)
+        .read_to_end(&mut buf)?;
+    if buf.len() < 8 || &buf[..8] != MAGIC {
+        bail!("bad baseline-artifact magic");
+    }
+    let mut r = Reader::new(&buf[8..]);
+    let fingerprint = r.str()?;
+    let workload = r.str()?;
+    let seed = r.u64()?;
+    let _intervals = r.u32()?;
+    let _hot_thr = r.u32()?;
+    let _machine = r.str()?;
+    let _run_workload = r.str()?;
+    let _run_policy = r.str()?;
+    let _fast_capacity = r.u64()?;
+    let _total_ns = r.f64()?;
+    let n_trace = r.u32()?;
+    let stale = if fingerprint == sim_fingerprint() { "" } else { ", stale version" };
+    Ok(format!("{workload} seed {seed} ({n_trace} intervals{stale})"))
+}
+
+fn key_hash(key: &BaselineKey) -> u64 {
+    let mut bytes = Vec::with_capacity(64);
+    wire::put_str(&mut bytes, &key.workload);
+    wire::put_u64(&mut bytes, key.seed);
+    wire::put_u32(&mut bytes, key.intervals);
+    wire::put_u32(&mut bytes, key.hot_thr);
+    wire::put_str(&mut bytes, &key.machine);
+    fnv1a64(&bytes)
+}
+
+/// The disk tier behind [`crate::coordinator::sweep::BaselineCache`]:
+/// one CRC'd artifact per baseline key under `dir`.
+#[derive(Clone, Debug)]
+pub struct DiskBaselineCache {
+    dir: PathBuf,
+}
+
+impl DiskBaselineCache {
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating baseline cache dir {}", dir.display()))?;
+        Ok(DiskBaselineCache { dir: dir.to_path_buf() })
+    }
+
+    pub fn path_for(&self, key: &BaselineKey) -> PathBuf {
+        self.dir.join(format!("{:016x}.bl", key_hash(key)))
+    }
+
+    /// Load the baseline for `key`, or `None` when absent, unreadable or
+    /// keyed differently (hash collision) — all of which degrade to a
+    /// recompute, with a warning for the corrupt cases.
+    pub fn load(&self, key: &BaselineKey) -> Option<RunResult> {
+        let path = self.path_for(key);
+        let data = match std::fs::read(&path) {
+            Ok(d) => d,
+            // absent = ordinary cache miss; anything else (EACCES etc.)
+            // deserves a diagnostic or the persistence feature fails mute
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                eprintln!(
+                    "warning: baseline artifact {} unreadable ({e}); recomputing",
+                    path.display()
+                );
+                return None;
+            }
+        };
+        match baseline_from_bytes(&data) {
+            Ok((stored_key, result)) if stored_key == *key => Some(result),
+            Ok(_) => {
+                eprintln!(
+                    "warning: baseline artifact {} holds a different key (hash collision?); recomputing",
+                    path.display()
+                );
+                None
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: baseline artifact {} unreadable ({e:#}); recomputing",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Persist the baseline for `key` (atomic write; concurrent writers
+    /// of the same key race benignly — runs are deterministic, so both
+    /// write identical bytes).
+    pub fn store(&self, key: &BaselineKey, result: &RunResult) -> Result<()> {
+        write_atomic(&self.path_for(key), &baseline_to_bytes(key, result))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (BaselineKey, RunResult) {
+        let key = BaselineKey {
+            workload: "bfs".to_string(),
+            seed: 42,
+            intervals: 2,
+            hot_thr: 2,
+            machine: "MachineModel { .. }".to_string(),
+        };
+        let trace = |i: u32| RunTrace {
+            interval: i,
+            clock_ns: 1e9 * i as f64,
+            wall_ns: 5e8 + i as f64,
+            acc_fast: 1000 + i as u64,
+            acc_slow: 10,
+            sacc_fast: 900,
+            sacc_slow: 9,
+            flops: 1_000_000,
+            iops: 2_000_000,
+            promoted: 5,
+            promote_failed: 1,
+            demoted_kswapd: 3,
+            demoted_direct: 2,
+            fast_used: 800,
+            fast_free: 200,
+            usable_fm: 950,
+            outcome: IntervalOutcome {
+                wall_ns: 5e8,
+                t_comp_ns: 1e8,
+                t_lat_ns: 2e8,
+                t_bw_fast_ns: 5e8,
+                t_bw_slow_ns: 1e7,
+                t_block_ns: 0.0,
+                bound: Bound::FastBw,
+            },
+        };
+        let result = RunResult {
+            workload: "BFS",
+            policy: "tpp",
+            fast_capacity: 1000,
+            total_ns: 1e9,
+            trace: vec![trace(1), trace(2)],
+        };
+        (key, result)
+    }
+
+    fn assert_traces_equal(a: &RunResult, b: &RunResult) {
+        assert_eq!(a.workload, b.workload);
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.fast_capacity, b.fast_capacity);
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.interval, y.interval);
+            assert_eq!(x.wall_ns.to_bits(), y.wall_ns.to_bits());
+            assert_eq!(x.acc_fast, y.acc_fast);
+            assert_eq!(x.promoted, y.promoted);
+            assert_eq!(x.usable_fm, y.usable_fm);
+            assert_eq!(x.outcome.bound, y.outcome.bound);
+            assert_eq!(x.outcome.wall_ns.to_bits(), y.outcome.wall_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrip_is_bit_exact() {
+        let (key, result) = sample();
+        let bytes = baseline_to_bytes(&key, &result);
+        let (k2, r2) = baseline_from_bytes(&bytes).unwrap();
+        assert_eq!(k2, key);
+        assert_traces_equal(&result, &r2);
+    }
+
+    #[test]
+    fn corruption_and_truncation_rejected() {
+        let (key, result) = sample();
+        let bytes = baseline_to_bytes(&key, &result);
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        assert!(baseline_from_bytes(&bad).is_err());
+        assert!(baseline_from_bytes(&bytes[..bytes.len() - 5]).is_err());
+        assert!(baseline_from_bytes(b"TUNABAS1xx").is_err());
+    }
+
+    #[test]
+    fn disk_cache_stores_and_guards_key_identity() {
+        let dir = std::env::temp_dir().join(format!("tuna_blcache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = DiskBaselineCache::open(&dir).unwrap();
+        let (key, result) = sample();
+        assert!(cache.load(&key).is_none());
+        cache.store(&key, &result).unwrap();
+        let loaded = cache.load(&key).unwrap();
+        assert_traces_equal(&result, &loaded);
+        // a different key misses even if we plant a colliding file
+        let mut other = key.clone();
+        other.seed = 43;
+        assert!(cache.load(&other).is_none());
+        std::fs::write(cache.path_for(&other), baseline_to_bytes(&key, &result)).unwrap();
+        assert!(cache.load(&other).is_none(), "wrong embedded key must not be served");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_fingerprint_is_rejected() {
+        let (key, result) = sample();
+        let good = baseline_to_bytes(&key, &result);
+        // splice a different fingerprint over the stored one and re-CRC
+        let orig_body = &good[8..good.len() - 4];
+        let fp_len = 4 + u32::from_le_bytes(orig_body[..4].try_into().unwrap()) as usize;
+        let mut body = Vec::new();
+        wire::put_str(&mut body, "tuna-0.0.0-other-engine");
+        body.extend_from_slice(&orig_body[fp_len..]);
+        let mut out = MAGIC.to_vec();
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        let err = baseline_from_bytes(&out).unwrap_err();
+        assert!(format!("{err:#}").contains("tuna-0.0.0-other-engine"), "{err:#}");
+    }
+
+    #[test]
+    fn peek_summary_reads_header_only() {
+        let dir = std::env::temp_dir().join(format!("tuna_blpeek_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = DiskBaselineCache::open(&dir).unwrap();
+        let (key, result) = sample();
+        cache.store(&key, &result).unwrap();
+        let s = peek_summary(&cache.path_for(&key)).unwrap();
+        assert!(s.contains("bfs") && s.contains("seed 42") && s.contains("2 intervals"), "{s}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn intern_returns_one_copy_per_name() {
+        let a = intern("tpp");
+        let b = intern("tpp");
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(intern("first-touch"), "first-touch");
+    }
+}

@@ -1,0 +1,557 @@
+//! Durable sweep cells: an append-only binary table of executed sweep
+//! cells — (workload, policy, seed, hot_thr, fraction) → loss, saving,
+//! migration counts (+ Tuna stats when present).
+//!
+//! Tables are the diffable unit of the artifact store: `tuna store diff`
+//! compares two of them cell-by-cell and reports loss/saving regressions,
+//! giving the cross-commit performance trajectory the roadmap asks for.
+//!
+//! File format (`TUNACEL1`): the 8-byte magic, then one length-prefixed,
+//! individually CRC'd block per row:
+//!
+//! ```text
+//! [len u32][row payload][crc32(payload) u32] ...
+//! ```
+//!
+//! Per-row CRCs localize corruption to single cells, and every write —
+//! including [`SweepTable::append`], which is logically append-only —
+//! goes through an atomic temp-rename, so a reader never observes a torn
+//! tail block.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, Reader};
+use super::write_atomic;
+use crate::coordinator::sweep::{SweepPolicy, SweepResult};
+use crate::perfdb::store::crc32;
+
+const MAGIC: &[u8; 8] = b"TUNACEL1";
+
+/// Tuna-policy extras carried by a row (mirrors
+/// [`crate::coordinator::sweep::TunaCellStats`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunaRowStats {
+    pub decisions: u64,
+    pub mean_fraction: f64,
+    pub min_fraction: f64,
+    pub decide_ns: u128,
+}
+
+/// One persisted sweep cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRow {
+    pub workload: String,
+    pub policy: SweepPolicy,
+    pub seed: u64,
+    pub hot_thr: u32,
+    pub fm_fraction: f64,
+    pub loss: f64,
+    pub saving: f64,
+    pub total_ns: f64,
+    pub promoted: u64,
+    pub promote_failed: u64,
+    pub demoted: u64,
+    pub tuna: Option<TunaRowStats>,
+}
+
+impl CellRow {
+    pub fn migrations(&self) -> u64 {
+        self.promoted + self.demoted
+    }
+
+    /// Identity of the grid cell this row measures (everything except the
+    /// measured outputs), used to match rows across tables.
+    pub fn key(&self) -> (String, u8, u64, u32, u64) {
+        (
+            self.workload.to_ascii_lowercase(),
+            self.policy.code(),
+            self.seed,
+            self.hot_thr,
+            self.fm_fraction.to_bits(),
+        )
+    }
+
+    fn to_payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(96 + self.workload.len());
+        wire::put_str(&mut out, &self.workload);
+        wire::put_u8(&mut out, self.policy.code());
+        wire::put_u64(&mut out, self.seed);
+        wire::put_u32(&mut out, self.hot_thr);
+        wire::put_f64(&mut out, self.fm_fraction);
+        wire::put_f64(&mut out, self.loss);
+        wire::put_f64(&mut out, self.saving);
+        wire::put_f64(&mut out, self.total_ns);
+        wire::put_u64(&mut out, self.promoted);
+        wire::put_u64(&mut out, self.promote_failed);
+        wire::put_u64(&mut out, self.demoted);
+        match &self.tuna {
+            None => wire::put_u8(&mut out, 0),
+            Some(t) => {
+                wire::put_u8(&mut out, 1);
+                wire::put_u64(&mut out, t.decisions);
+                wire::put_f64(&mut out, t.mean_fraction);
+                wire::put_f64(&mut out, t.min_fraction);
+                wire::put_u128(&mut out, t.decide_ns);
+            }
+        }
+        out
+    }
+
+    fn from_payload(payload: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(payload);
+        let workload = r.str()?;
+        let policy = SweepPolicy::from_code(r.u8()?)?;
+        let seed = r.u64()?;
+        let hot_thr = r.u32()?;
+        let fm_fraction = r.f64()?;
+        let loss = r.f64()?;
+        let saving = r.f64()?;
+        let total_ns = r.f64()?;
+        let promoted = r.u64()?;
+        let promote_failed = r.u64()?;
+        let demoted = r.u64()?;
+        let tuna = match r.u8()? {
+            0 => None,
+            1 => Some(TunaRowStats {
+                decisions: r.u64()?,
+                mean_fraction: r.f64()?,
+                min_fraction: r.f64()?,
+                decide_ns: r.u128()?,
+            }),
+            other => bail!("bad tuna-stats tag {other} in cell row"),
+        };
+        r.done()?;
+        Ok(CellRow {
+            workload,
+            policy,
+            seed,
+            hot_thr,
+            fm_fraction,
+            loss,
+            saving,
+            total_ns,
+            promoted,
+            promote_failed,
+            demoted,
+            tuna,
+        })
+    }
+}
+
+/// A sweep cell table, rows in the order they were appended (grid order
+/// when produced by [`SweepTable::from_sweep`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepTable {
+    pub rows: Vec<CellRow>,
+}
+
+impl SweepTable {
+    /// Capture every cell of an executed sweep, in grid order.
+    pub fn from_sweep(res: &SweepResult) -> Self {
+        let rows = res
+            .cells
+            .iter()
+            .map(|c| CellRow {
+                workload: c.spec.workload.clone(),
+                policy: c.spec.policy,
+                seed: c.spec.seed,
+                hot_thr: c.spec.hot_thr,
+                fm_fraction: c.spec.fm_fraction,
+                loss: c.loss,
+                saving: c.saving,
+                total_ns: c.result.total_ns,
+                promoted: c.result.total_promoted(),
+                promote_failed: c.result.total_promote_failed(),
+                demoted: c.result.total_demoted(),
+                tuna: c.tuna.as_ref().map(|t| TunaRowStats {
+                    decisions: t.decisions as u64,
+                    mean_fraction: t.mean_fraction,
+                    min_fraction: t.min_fraction,
+                    decide_ns: t.decide_ns,
+                }),
+            })
+            .collect();
+        SweepTable { rows }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize the whole table (magic + row blocks). What
+    /// [`Self::save`] writes and what a [`Self::load`] of that file
+    /// reproduces byte-for-byte.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        for row in &self.rows {
+            push_block(&mut out, &row.to_payload());
+        }
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        if data.len() < 8 || &data[..8] != MAGIC {
+            bail!("bad sweep-table magic");
+        }
+        let mut rows = Vec::new();
+        let mut r = Reader::new(&data[8..]);
+        while r.remaining() > 0 {
+            let len = r.u32()? as usize;
+            if len > 1 << 24 {
+                bail!("implausible row length {len} in sweep table");
+            }
+            let payload = r.take(len)?;
+            let stored = r.u32()?;
+            let computed = crc32(payload);
+            if stored != computed {
+                bail!(
+                    "sweep-table row {} CRC mismatch: stored {stored:#x}, computed {computed:#x}",
+                    rows.len()
+                );
+            }
+            rows.push(CellRow::from_payload(payload)?);
+        }
+        Ok(SweepTable { rows })
+    }
+
+    /// Write the table atomically.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_bytes())
+            .with_context(|| format!("saving sweep table {}", path.display()))
+    }
+
+    /// Append rows to a table file (created if absent). Logically
+    /// append-only — existing blocks are never modified — but physically
+    /// an atomic rewrite (read + extend + temp-rename), so a crash or
+    /// ENOSPC mid-append can never tear the tail and brick the
+    /// previously valid rows.
+    ///
+    /// Single writer per table: two *concurrent* appenders race the
+    /// read-extend-rename and the last rename wins, dropping the other
+    /// writer's rows. Concurrent processes should append to distinct
+    /// tables (they remain diffable/mergeable) — unlike the baseline
+    /// cache, appended measurements are not identical-bytes and cannot
+    /// race benignly.
+    pub fn append(path: &Path, rows: &[CellRow]) -> Result<()> {
+        let mut data = match std::fs::read(path) {
+            Ok(existing) => {
+                // full validation up front: appending valid rows after a
+                // corrupt block would bury them in a file load() rejects,
+                // while this call still reports success
+                Self::from_bytes(&existing).with_context(|| {
+                    format!("refusing to append to corrupt table {}", path.display())
+                })?;
+                existing
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => MAGIC.to_vec(),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("opening sweep table {} for append", path.display()))
+            }
+        };
+        for row in rows {
+            push_block(&mut data, &row.to_payload());
+        }
+        write_atomic(path, &data)
+            .with_context(|| format!("appending to sweep table {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("opening sweep table {}", path.display()))?;
+        Self::from_bytes(&data)
+            .with_context(|| format!("parsing sweep table {}", path.display()))
+    }
+
+    /// Count a table's rows by walking the block framing with seeks —
+    /// no CRC, no payload parsing, no per-row allocation. Listings use
+    /// this so they scale with row *count*, not table bytes.
+    pub fn peek_rows(path: &Path) -> Result<usize> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening sweep table {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if magic != *MAGIC {
+            bail!("bad sweep-table magic in {}", path.display());
+        }
+        let end = f.seek(SeekFrom::End(0))?;
+        f.seek(SeekFrom::Start(8))?;
+        let mut pos = 8u64;
+        let mut rows = 0usize;
+        let mut lenbuf = [0u8; 4];
+        while pos < end {
+            if pos + 4 > end {
+                bail!("torn block header in {}", path.display());
+            }
+            f.read_exact(&mut lenbuf)?;
+            let len = u32::from_le_bytes(lenbuf) as u64;
+            if len > 1 << 24 {
+                bail!("implausible row length {len} in {}", path.display());
+            }
+            pos += 4 + len + 4;
+            if pos > end {
+                bail!("torn tail block in {}", path.display());
+            }
+            f.seek(SeekFrom::Start(pos))?;
+            rows += 1;
+        }
+        Ok(rows)
+    }
+}
+
+fn push_block(out: &mut Vec<u8>, payload: &[u8]) {
+    wire::put_u32(out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    wire::put_u32(out, crc32(payload));
+}
+
+/// One matched cell whose measurements moved between two tables.
+#[derive(Clone, Debug)]
+pub struct RowDelta {
+    pub a: CellRow,
+    pub b: CellRow,
+    pub d_loss: f64,
+    pub d_saving: f64,
+    pub d_migrations: i64,
+}
+
+/// Cell-by-cell comparison of two sweep tables.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// Cells present in both tables.
+    pub matched: usize,
+    /// Matched cells whose loss grew (or saving shrank) beyond `tol`.
+    pub regressions: Vec<RowDelta>,
+    /// Matched cells whose loss shrank (or saving grew) beyond `tol`.
+    pub improvements: Vec<RowDelta>,
+    /// Cells only in the first / second table.
+    pub only_in_a: Vec<CellRow>,
+    pub only_in_b: Vec<CellRow>,
+}
+
+/// Compare `b` against baseline `a`: a regression is a matched cell whose
+/// loss increased by more than `tol` (or whose saving dropped by more
+/// than `tol` at unchanged loss).
+///
+/// Appended tables can hold the same grid cell several times; diffing is
+/// **last-wins per key on both sides** (the latest appended measurement
+/// is the cell's current value), and `matched` counts distinct keys.
+pub fn diff(a: &SweepTable, b: &SweepTable, tol: f64) -> DiffReport {
+    use std::collections::{HashMap, HashSet};
+    let mut report = DiffReport::default();
+    // HashMap insertion overwrites → the last occurrence of a key wins.
+    let last_a: HashMap<_, &CellRow> = a.rows.iter().map(|r| (r.key(), r)).collect();
+    let last_b: HashMap<_, &CellRow> = b.rows.iter().map(|r| (r.key(), r)).collect();
+    let mut processed = HashSet::new();
+    for row in &a.rows {
+        let key = row.key();
+        if !processed.insert(key.clone()) {
+            continue; // duplicate key: already handled via last_a
+        }
+        let ra = last_a[&key];
+        match last_b.get(&key) {
+            None => report.only_in_a.push(ra.clone()),
+            Some(rb) => {
+                report.matched += 1;
+                let delta = RowDelta {
+                    a: ra.clone(),
+                    b: (*rb).clone(),
+                    d_loss: rb.loss - ra.loss,
+                    d_saving: rb.saving - ra.saving,
+                    d_migrations: rb.migrations() as i64 - ra.migrations() as i64,
+                };
+                // Worsening on EITHER axis is a regression, even if the
+                // other axis improved — a Tuna cell trading most of its
+                // memory saving for a small loss win must not pass a
+                // --strict gate as an "improvement".
+                if delta.d_loss > tol || delta.d_saving < -tol {
+                    report.regressions.push(delta);
+                } else if delta.d_loss < -tol || delta.d_saving > tol {
+                    report.improvements.push(delta);
+                }
+            }
+        }
+    }
+    for row in &b.rows {
+        let key = row.key();
+        if !processed.insert(key.clone()) {
+            continue; // either matched above or a duplicate in b
+        }
+        report.only_in_b.push(last_b[&key].clone());
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(workload: &str, fraction: f64, loss: f64) -> CellRow {
+        CellRow {
+            workload: workload.to_string(),
+            policy: SweepPolicy::Tpp,
+            seed: 42,
+            hot_thr: 2,
+            fm_fraction: fraction,
+            loss,
+            saving: 1.0 - fraction,
+            total_ns: 1e9 * (1.0 + loss),
+            promoted: 100,
+            promote_failed: 3,
+            demoted: 90,
+            tuna: None,
+        }
+    }
+
+    fn table() -> SweepTable {
+        let mut t = SweepTable { rows: vec![row("BFS", 0.9, 0.04), row("BFS", 0.7, 0.12)] };
+        t.rows.push(CellRow {
+            policy: SweepPolicy::Tuna,
+            fm_fraction: 1.0,
+            tuna: Some(TunaRowStats {
+                decisions: 12,
+                mean_fraction: 0.85,
+                min_fraction: 0.7,
+                decide_ns: 123_456_789_000,
+            }),
+            ..row("Btree", 1.0, 0.02)
+        });
+        t
+    }
+
+    #[test]
+    fn bytes_roundtrip_bit_identical() {
+        let t = table();
+        let bytes = t.to_bytes();
+        let back = SweepTable::from_bytes(&bytes).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn file_roundtrip_and_append() {
+        let dir = std::env::temp_dir().join(format!("tuna_cells_{}", std::process::id()));
+        let path = dir.join("t.cells");
+        std::fs::remove_dir_all(&dir).ok();
+        let t = table();
+        t.save(&path).unwrap();
+        assert_eq!(SweepTable::load(&path).unwrap(), t);
+        // append two more rows without rewriting
+        let extra = vec![row("SSSP", 0.8, 0.06), row("SSSP", 0.5, 0.2)];
+        SweepTable::append(&path, &extra).unwrap();
+        let all = SweepTable::load(&path).unwrap();
+        assert_eq!(all.len(), t.len() + 2);
+        assert_eq!(&all.rows[t.len()..], &extra[..]);
+        // append to a fresh path creates a valid table
+        let p2 = dir.join("fresh.cells");
+        SweepTable::append(&p2, &extra).unwrap();
+        assert_eq!(SweepTable::load(&p2).unwrap().rows, extra);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_and_corruption_are_rejected() {
+        let bytes = table().to_bytes();
+        // truncate mid-block
+        assert!(SweepTable::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // flip a payload byte
+        let mut bad = bytes.clone();
+        bad[14] ^= 0xFF;
+        assert!(SweepTable::from_bytes(&bad).is_err());
+        // bad magic
+        let mut bad2 = bytes;
+        bad2[0] = b'X';
+        assert!(SweepTable::from_bytes(&bad2).is_err());
+    }
+
+    #[test]
+    fn diff_flags_regressions_and_membership() {
+        let a = table();
+        let same = diff(&a, &a, 1e-12);
+        assert_eq!(same.matched, 3);
+        assert!(same.regressions.is_empty() && same.improvements.is_empty());
+        assert!(same.only_in_a.is_empty() && same.only_in_b.is_empty());
+
+        let mut b = a.clone();
+        b.rows[0].loss += 0.05; // regression
+        b.rows[1].loss -= 0.03; // improvement
+        b.rows.pop(); // Btree cell missing from b
+        b.rows.push(row("XSBench", 0.9, 0.01)); // new in b
+        let d = diff(&a, &b, 1e-9);
+        assert_eq!(d.matched, 2);
+        assert_eq!(d.regressions.len(), 1);
+        assert!((d.regressions[0].d_loss - 0.05).abs() < 1e-12);
+        assert_eq!(d.improvements.len(), 1);
+        assert_eq!(d.only_in_a.len(), 1);
+        assert_eq!(d.only_in_a[0].workload, "Btree");
+        assert_eq!(d.only_in_b.len(), 1);
+        assert_eq!(d.only_in_b[0].workload, "XSBench");
+    }
+
+    #[test]
+    fn peek_rows_counts_without_parsing() {
+        let dir = std::env::temp_dir().join(format!("tuna_cells_peek_{}", std::process::id()));
+        let path = dir.join("t.cells");
+        std::fs::remove_dir_all(&dir).ok();
+        table().save(&path).unwrap();
+        assert_eq!(SweepTable::peek_rows(&path).unwrap(), 3);
+        // torn tail is still reported
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(SweepTable::peek_rows(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn diff_is_last_wins_for_duplicate_keys() {
+        // the same cell appended twice: only the latest measurement counts
+        let mut a = SweepTable { rows: vec![row("BFS", 0.9, 0.50), row("BFS", 0.9, 0.04)] };
+        let b = SweepTable { rows: vec![row("BFS", 0.9, 0.04)] };
+        let d = diff(&a, &b, 1e-9);
+        assert_eq!(d.matched, 1, "duplicates collapse to one distinct cell");
+        assert!(d.regressions.is_empty() && d.improvements.is_empty());
+        // a regression only present in an early b occurrence is ignored;
+        // one in the *last* occurrence is caught
+        a.rows = vec![row("BFS", 0.9, 0.04)];
+        let b2 = SweepTable { rows: vec![row("BFS", 0.9, 0.04), row("BFS", 0.9, 0.09)] };
+        let d2 = diff(&a, &b2, 1e-9);
+        assert_eq!(d2.regressions.len(), 1);
+        assert!((d2.regressions[0].d_loss - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saving_drop_at_equal_loss_is_a_regression() {
+        let a = SweepTable { rows: vec![row("BFS", 0.9, 0.04)] };
+        let mut b = a.clone();
+        b.rows[0].saving -= 0.02;
+        let d = diff(&a, &b, 1e-9);
+        assert_eq!(d.regressions.len(), 1);
+    }
+
+    #[test]
+    fn saving_collapse_beats_a_loss_improvement() {
+        // Tuna-style cell: loss improves slightly but the saving — the
+        // paper's headline metric — collapses; must gate as regression.
+        let mut ra = row("Btree", 1.0, 0.05);
+        ra.policy = SweepPolicy::Tuna;
+        ra.saving = 0.30;
+        let mut rb = ra.clone();
+        rb.loss = 0.03;
+        rb.saving = 0.05;
+        let d = diff(
+            &SweepTable { rows: vec![ra] },
+            &SweepTable { rows: vec![rb] },
+            1e-9,
+        );
+        assert_eq!(d.regressions.len(), 1, "saving collapse must not read as improvement");
+        assert!(d.improvements.is_empty());
+    }
+}

@@ -1,0 +1,346 @@
+//! Persistent artifact store: durable, diffable modeling artifacts.
+//!
+//! Tuna's premise is that offline modeling artifacts plus cheap telemetry
+//! replace online trial-and-error — which only pays off if those
+//! artifacts survive the process that built them. This subsystem is the
+//! on-disk home for everything the coordinator produces:
+//!
+//! * [`shard`] — the performance database split into N segment files
+//!   (hash of configuration vector → shard) under a CRC-carrying
+//!   manifest; queries fan out across shards and merge, and the builder
+//!   streams completed records straight into segment writers.
+//! * [`cells`] — append-only binary tables of executed sweep cells
+//!   (workload, policy, fraction, seed, hot_thr → loss/saving/migration
+//!   counts), diffable across commits via `tuna store diff`.
+//! * [`cache`] — the cross-process baseline cache backing
+//!   [`crate::coordinator::sweep::BaselineCache`], so repeated bench or
+//!   sweep invocations load memoized fast-memory-only baselines from
+//!   disk instead of re-simulating them.
+//!
+//! All writes are atomic (unique per-process temp file + rename, the same
+//! crash-consistency discipline as [`crate::perfdb::store`]) and every
+//! payload is CRC-checked on read.
+//!
+//! Layout under the store root:
+//!
+//! ```text
+//! <root>/
+//!   perfdb/<name>/MANIFEST + seg-NNN.bin    sharded performance databases
+//!   sweeps/<name>.cells                     sweep cell tables
+//!   baselines/<key-hash>.bl                 memoized baseline runs
+//! ```
+
+pub mod cache;
+pub mod cells;
+pub mod shard;
+pub mod wire;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// FNV-1a 64-bit hash — content addressing for artifact names (CRC-32
+/// stays the on-disk integrity check; this is only a filename-sized
+/// fingerprint).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Streaming FNV-1a: fold more bytes into an existing hash state (seed
+/// the first call with [`fnv1a64`] of the first chunk, or the FNV offset
+/// basis via `fnv1a64(b"")`).
+pub fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// A temp path unique to this process *and* call, in the same directory
+/// as `path` (so the final rename stays within one filesystem). A plain
+/// `path.with_extension("tmp")` collides when two processes write sibling
+/// artifacts — e.g. targets `db.bin` and `db.tmp` both map to `db.tmp`.
+pub fn unique_tmp_path(path: &Path) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".to_string());
+    path.with_file_name(format!(".{name}.{}.{seq}.tmp", std::process::id()))
+}
+
+/// Write `bytes` to `path` atomically and durably: unique temp file in
+/// the same directory, fsync, then rename (plus a best-effort directory
+/// sync so the rename itself survives power loss). Concurrent writers of
+/// the same path race on the rename and the last one wins with a
+/// complete file — a reader can never observe a partial write.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating directory {}", dir.display()))?;
+    }
+    let tmp = unique_tmp_path(path);
+    let write = || -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // without the fsync, a crash after the rename can leave the
+        // final name pointing at unwritten blocks — the one failure the
+        // rename discipline exists to rule out
+        f.sync_all()
+    };
+    if let Err(e) = write() {
+        // temp names are unique per call, so a leaked partial temp would
+        // accumulate forever — clean it up on any failure
+        std::fs::remove_file(&tmp).ok();
+        return Err(e).with_context(|| format!("writing {}", tmp.display()));
+    }
+    std::fs::rename(&tmp, path).with_context(|| {
+        std::fs::remove_file(&tmp).ok();
+        format!("renaming {} -> {}", tmp.display(), path.display())
+    })?;
+    if let Some(dir) = path.parent() {
+        // best-effort: not every platform lets you open a directory
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
+    }
+    Ok(())
+}
+
+/// One artifact visible in the store (for `tuna store ls`).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// `perfdb`, `sweep` or `baseline`.
+    pub kind: &'static str,
+    pub name: String,
+    /// Total size on disk (all segment files for a sharded perf DB).
+    pub bytes: u64,
+    pub path: PathBuf,
+    /// One-line summary (record/row counts etc.), best effort.
+    pub detail: String,
+}
+
+/// Handle on a store root directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: &Path) -> Result<Self> {
+        for sub in ["perfdb", "sweeps", "baselines"] {
+            std::fs::create_dir_all(root.join(sub))
+                .with_context(|| format!("creating store directory {}", root.display()))?;
+        }
+        Ok(ArtifactStore { root: root.to_path_buf() })
+    }
+
+    /// Open a store that must already exist — for read-only commands
+    /// (`store ls`, `store diff`), where silently creating an empty tree
+    /// would mask a mistyped `--store` path as "0 artifacts".
+    pub fn open_existing(root: &Path) -> Result<Self> {
+        if !root.is_dir() {
+            bail!(
+                "no artifact store at {} (create one with `tuna sweep --store` or `tuna build-db --store`)",
+                root.display()
+            );
+        }
+        Self::open(root)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn perfdb_dir(&self) -> PathBuf {
+        self.root.join("perfdb")
+    }
+
+    pub fn sweeps_dir(&self) -> PathBuf {
+        self.root.join("sweeps")
+    }
+
+    pub fn baselines_dir(&self) -> PathBuf {
+        self.root.join("baselines")
+    }
+
+    /// Path of the sweep cell table named `name`.
+    pub fn sweep_path(&self, name: &str) -> PathBuf {
+        self.sweeps_dir().join(format!("{name}.cells"))
+    }
+
+    /// Resolve a sweep table argument: a name inside this store first
+    /// (so a stray local file can't shadow a stored table), then a
+    /// literal filesystem path.
+    pub fn resolve_sweep(&self, name_or_path: &str) -> PathBuf {
+        let named = self.sweep_path(name_or_path);
+        if named.exists() {
+            return named;
+        }
+        PathBuf::from(name_or_path)
+    }
+
+    /// Enumerate every artifact in the store, stable order (kind, name).
+    pub fn ls(&self) -> Result<Vec<ArtifactInfo>> {
+        let mut out = Vec::new();
+        for entry in sorted_dir(&self.perfdb_dir())? {
+            if !entry.is_dir() {
+                continue;
+            }
+            let name = file_name(&entry);
+            let detail = match shard::read_manifest(&entry) {
+                Ok(m) => format!(
+                    "{} records x {} sizes in {} segments",
+                    m.n_records,
+                    m.fractions.len(),
+                    m.segments.len()
+                ),
+                Err(e) => format!("unreadable manifest: {e:#}"),
+            };
+            out.push(ArtifactInfo {
+                kind: "perfdb",
+                name,
+                bytes: dir_bytes(&entry)?,
+                path: entry,
+                detail,
+            });
+        }
+        for entry in sorted_dir(&self.sweeps_dir())? {
+            if entry.extension().map(|e| e != "cells").unwrap_or(true) {
+                continue;
+            }
+            // framing walk only — listing must not parse or CRC payloads
+            let detail = match cells::SweepTable::peek_rows(&entry) {
+                Ok(n) => format!("{n} cells"),
+                Err(e) => format!("unreadable: {e:#}"),
+            };
+            out.push(ArtifactInfo {
+                kind: "sweep",
+                name: file_name(&entry),
+                bytes: file_bytes(&entry)?,
+                path: entry,
+                detail,
+            });
+        }
+        for entry in sorted_dir(&self.baselines_dir())? {
+            if entry.extension().map(|e| e != "bl").unwrap_or(true) {
+                continue;
+            }
+            // header-only peek: listing must not scale with trace bytes
+            let detail = match cache::peek_summary(&entry) {
+                Ok(s) => s,
+                Err(e) => format!("unreadable: {e:#}"),
+            };
+            out.push(ArtifactInfo {
+                kind: "baseline",
+                name: file_name(&entry),
+                bytes: file_bytes(&entry)?,
+                path: entry,
+                detail,
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn file_name(path: &Path) -> String {
+    path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default()
+}
+
+fn sorted_dir(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut v = Vec::new();
+    if !dir.exists() {
+        return Ok(v);
+    }
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+    {
+        v.push(entry?.path());
+    }
+    v.sort();
+    Ok(v)
+}
+
+fn file_bytes(path: &Path) -> Result<u64> {
+    Ok(std::fs::metadata(path)?.len())
+}
+
+fn dir_bytes(dir: &Path) -> Result<u64> {
+    let mut total = 0;
+    for p in sorted_dir(dir)? {
+        if p.is_file() {
+            total += file_bytes(&p)?;
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tuna_artifact_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn fnv_is_stable_and_spreads() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+        // reference vector: fnv1a64("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn unique_tmp_paths_differ_per_call_and_stay_in_dir() {
+        let p = Path::new("/some/dir/db.bin");
+        let a = unique_tmp_path(p);
+        let b = unique_tmp_path(p);
+        assert_ne!(a, b);
+        assert_eq!(a.parent(), p.parent());
+        // sibling targets `db.bin` / `db.tmp` must not share a temp name
+        let c = unique_tmp_path(Path::new("/some/dir/db.tmp"));
+        assert_ne!(a.file_name(), c.file_name());
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_never_leaves_temps() {
+        let root = tmp_root("atomic");
+        let path = root.join("x.bin");
+        write_atomic(&path, b"one").unwrap();
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        let leftovers: Vec<_> = std::fs::read_dir(&root)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temps: {leftovers:?}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn open_creates_layout_and_ls_is_empty() {
+        let root = tmp_root("layout");
+        let store = ArtifactStore::open(&root).unwrap();
+        assert!(store.perfdb_dir().is_dir());
+        assert!(store.sweeps_dir().is_dir());
+        assert!(store.baselines_dir().is_dir());
+        assert!(store.ls().unwrap().is_empty());
+        // resolve: nonexistent name falls back to the literal path
+        let p = store.resolve_sweep("nope");
+        assert_eq!(p, PathBuf::from("nope"));
+        // read-only open of an existing store works...
+        assert!(ArtifactStore::open_existing(&root).is_ok());
+        std::fs::remove_dir_all(&root).ok();
+        // ...but a missing root errors instead of creating an empty tree
+        let err = ArtifactStore::open_existing(&root).unwrap_err();
+        assert!(format!("{err:#}").contains("no artifact store"), "{err:#}");
+        assert!(!root.exists(), "open_existing must not create directories");
+    }
+}

@@ -1,0 +1,887 @@
+//! Sharded performance database: the flat [`PerfDb`] record vector split
+//! into N on-disk segment files (hash of configuration vector → shard)
+//! under a manifest carrying per-segment CRCs.
+//!
+//! Queries fan out across shards on the shared worker pool
+//! ([`crate::util::parallel`]) and merge — [`ShardedPerfDb::nearest`]
+//! reproduces [`crate::perfdb::native::NativeNn`]'s tie-breaking exactly
+//! (lowest global index among minimal distances), and
+//! [`ShardedPerfDb::time_at`] delegates to the same interpolation code
+//! path as the flat DB, so sharded answers are bit-identical to flat ones
+//! (asserted in the test suite). The `Sharded ⇄ flat` conversion
+//! round-trips byte-identically through [`crate::perfdb::store`].
+//!
+//! On-disk layout of one sharded database directory:
+//!
+//! ```text
+//! MANIFEST      magic "TUNASHM1", shard/size/record counts, fractions,
+//!               per-segment (record count, payload CRC), manifest CRC
+//! seg-NNN.bin   magic "TUNASEG1", then per record:
+//!               global u32 · raw f64×8 · vec f32×8 · times f32×n_sizes
+//! ```
+//!
+//! Segment payloads are CRC'd in the manifest, which is written last and
+//! atomically. Rebuilds into an existing directory stream to unique
+//! temps, so a previous generation stays loadable until the new one's
+//! commit point ([`ShardedWriter::finish`]): the old manifest is removed
+//! first (every later crash window reads as "no database here", never an
+//! old manifest checksumming new segments), stale segments from a wider
+//! previous generation are swept, and the new manifest lands atomically.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, Reader};
+use super::{unique_tmp_path, write_atomic};
+use crate::perfdb::native::{dist2, NnQuery};
+use crate::perfdb::store::{crc32, Crc32};
+use crate::perfdb::{PerfDb, Record, DIMS};
+use crate::util::parallel::{default_threads, parallel_map};
+
+const MANIFEST_MAGIC: &[u8; 8] = b"TUNASHM1";
+const SEGMENT_MAGIC: &[u8; 8] = b"TUNASEG1";
+const MANIFEST_NAME: &str = "MANIFEST";
+
+/// Default shard count for CLI builds.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Below this many total records a query scans shards serially: spawning
+/// scoped worker threads per lookup costs more than the scan itself.
+const SERIAL_QUERY_THRESHOLD: usize = 8192;
+
+/// Shard a configuration vector: FNV-1a over the raw f64 bits. A pure
+/// function of (raw, n_shards), so routing is identical across builds,
+/// saves and loads.
+pub fn shard_of(raw: &[f64; DIMS], n_shards: usize) -> usize {
+    let mut bytes = [0u8; DIMS * 8];
+    for (i, x) in raw.iter().enumerate() {
+        bytes[i * 8..(i + 1) * 8].copy_from_slice(&x.to_le_bytes());
+    }
+    (super::fnv1a64(&bytes) % n_shards.max(1) as u64) as usize
+}
+
+fn segment_name(si: usize) -> String {
+    format!("seg-{si:03}.bin")
+}
+
+fn record_size(n_sizes: usize) -> usize {
+    4 + DIMS * 8 + DIMS * 4 + n_sizes * 4
+}
+
+/// One shard: its records (as a [`PerfDb`] over the shared fraction grid,
+/// so every query delegates to the flat code path) plus each record's
+/// global index in the flat ordering.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub global: Vec<u32>,
+    pub db: PerfDb,
+}
+
+/// Per-segment metadata from the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentMeta {
+    pub n_recs: u64,
+    pub payload_crc: u32,
+}
+
+/// Parsed manifest of a sharded database directory.
+#[derive(Clone, Debug)]
+pub struct ManifestInfo {
+    pub fractions: Vec<f32>,
+    pub n_records: u64,
+    pub segments: Vec<SegmentMeta>,
+}
+
+/// Read and validate the `MANIFEST` file of a sharded DB directory.
+pub fn read_manifest(dir: &Path) -> Result<ManifestInfo> {
+    let path = dir.join(MANIFEST_NAME);
+    let data = std::fs::read(&path)
+        .with_context(|| format!("opening sharded-perfdb manifest {}", path.display()))?;
+    if data.len() < 8 + 4 || &data[..8] != MANIFEST_MAGIC {
+        bail!("bad manifest magic in {}", path.display());
+    }
+    let body = &data[8..data.len() - 4];
+    let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    let computed = crc32(body);
+    if stored != computed {
+        bail!("manifest CRC mismatch in {}: stored {stored:#x}, computed {computed:#x}",
+            path.display());
+    }
+    let mut r = Reader::new(body);
+    let n_shards = r.u32()? as usize;
+    let n_sizes = r.u32()? as usize;
+    let n_records = r.u64()?;
+    if n_shards == 0 || n_shards > 4096 || n_sizes == 0 || n_sizes > 1_000 {
+        bail!("implausible manifest header: {n_shards} shards, {n_sizes} sizes");
+    }
+    let mut fractions = Vec::with_capacity(n_sizes);
+    for _ in 0..n_sizes {
+        fractions.push(r.f32()?);
+    }
+    let mut segments = Vec::with_capacity(n_shards);
+    let mut total = 0u64;
+    for _ in 0..n_shards {
+        let seg = SegmentMeta { n_recs: r.u64()?, payload_crc: r.u32()? };
+        // Bound per-segment counts like every other codec (records cap
+        // mirrors the flat store's): a crafted/corrupt n_recs must fail
+        // parsing, never reach a Vec::with_capacity or a wrapping
+        // multiply against the payload length.
+        if seg.n_recs > 10_000_000 {
+            bail!("implausible segment record count {}", seg.n_recs);
+        }
+        total += seg.n_recs; // ≤ 4096 × 1e7 — cannot overflow u64
+        segments.push(seg);
+    }
+    r.done()?;
+    if total != n_records {
+        bail!("manifest record counts sum to {total}, header says {n_records}");
+    }
+    Ok(ManifestInfo { fractions, n_records, segments })
+}
+
+/// The sharded database: shards plus a global-index → (shard, local)
+/// lookup so flat-indexed queries ([`Self::time_at`]) stay O(1).
+#[derive(Clone, Debug)]
+pub struct ShardedPerfDb {
+    pub fractions: Vec<f32>,
+    pub shards: Vec<Shard>,
+    loc: Vec<(u32, u32)>,
+}
+
+impl ShardedPerfDb {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.loc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.loc.is_empty()
+    }
+
+    /// Split a flat database into `n_shards` shards (routing by
+    /// [`shard_of`]). Converting back with [`Self::to_flat`] reproduces
+    /// the input bit-for-bit.
+    pub fn from_flat(db: &PerfDb, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        assert!(db.records.len() < u32::MAX as usize, "record count overflows u32 indices");
+        let mut shards: Vec<Shard> = (0..n_shards)
+            .map(|_| Shard {
+                global: Vec::new(),
+                db: PerfDb { fractions: db.fractions.clone(), records: Vec::new() },
+            })
+            .collect();
+        let mut loc = Vec::with_capacity(db.records.len());
+        for (g, r) in db.records.iter().enumerate() {
+            let si = shard_of(&r.raw, n_shards);
+            loc.push((si as u32, shards[si].db.records.len() as u32));
+            shards[si].global.push(g as u32);
+            shards[si].db.records.push(r.clone());
+        }
+        ShardedPerfDb { fractions: db.fractions.clone(), shards, loc }
+    }
+
+    /// Reassemble the flat database in original global order.
+    pub fn to_flat(&self) -> PerfDb {
+        let records = self
+            .loc
+            .iter()
+            .map(|&(si, li)| self.shards[si as usize].db.records[li as usize].clone())
+            .collect();
+        PerfDb { fractions: self.fractions.clone(), records }
+    }
+
+    /// The record at a flat (global) index.
+    pub fn record(&self, global: usize) -> &Record {
+        let (si, li) = self.loc[global];
+        &self.shards[si as usize].db.records[li as usize]
+    }
+
+    /// Predicted execution time at an arbitrary fraction — same code path
+    /// as [`PerfDb::time_at`], so sharded and flat answers are
+    /// bit-identical.
+    pub fn time_at(&self, global: usize, fraction: f64) -> f64 {
+        let (si, li) = self.loc[global];
+        self.shards[si as usize].db.time_at(li as usize, fraction)
+    }
+
+    /// Nearest record to `q`: fan out one brute-force scan per shard on
+    /// the worker pool, then merge. Tie-breaking matches
+    /// [`crate::perfdb::native::NativeNn::nearest`]: the lowest global
+    /// index among minimal distances. `threads == 0` means one per core.
+    pub fn nearest(&self, q: &[f32; DIMS], threads: usize) -> Option<(usize, f32)> {
+        if self.is_empty() {
+            return None;
+        }
+        let scan = |si: usize| -> Option<(usize, f32)> {
+            let sh = &self.shards[si];
+            let mut best: Option<(usize, f32)> = None;
+            for (li, r) in sh.db.records.iter().enumerate() {
+                let d = dist2(q, &r.vec);
+                let g = sh.global[li] as usize;
+                let better = match best {
+                    None => true,
+                    Some((bg, bd)) => d < bd || (d == bd && g < bg),
+                };
+                if better {
+                    best = Some((g, d));
+                }
+            }
+            best
+        };
+        let per = self.fan_out(threads, scan);
+        per.into_iter().flatten().reduce(|a, b| {
+            if b.1 < a.1 || (b.1 == a.1 && b.0 < a.0) {
+                b
+            } else {
+                a
+            }
+        })
+    }
+
+    /// Evaluate `scan` on every shard: serially when the database is too
+    /// small for fan-out to beat thread-spawn cost (or one worker was
+    /// requested), otherwise on the worker pool. Both paths return
+    /// results in shard order, so the merge is scheduling-independent.
+    fn fan_out<T: Send, F: Fn(usize) -> T + Sync>(&self, threads: usize, scan: F) -> Vec<T> {
+        let serial = threads == 1
+            || self.shards.len() == 1
+            || self.len() <= SERIAL_QUERY_THRESHOLD;
+        if serial {
+            (0..self.shards.len()).map(scan).collect()
+        } else {
+            let threads = if threads == 0 { default_threads() } else { threads };
+            parallel_map(self.shards.len(), threads, scan)
+        }
+    }
+
+    /// `k` nearest records, ascending by (distance, global index) — the
+    /// same ordering as [`crate::perfdb::native::NativeNn::top_k`]. Each
+    /// shard returns its local top-k; the merge keeps the global top-k.
+    pub fn top_k(&self, q: &[f32; DIMS], k: usize, threads: usize) -> Vec<(usize, f32)> {
+        if self.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let per = self.fan_out(threads, |si| {
+            let sh = &self.shards[si];
+            let mut all: Vec<(usize, f32)> = sh
+                .db
+                .records
+                .iter()
+                .enumerate()
+                .map(|(li, r)| (sh.global[li] as usize, dist2(q, &r.vec)))
+                .collect();
+            all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            all.truncate(k);
+            all
+        });
+        let mut merged: Vec<(usize, f32)> = per.into_iter().flatten().collect();
+        merged.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        merged.truncate(k);
+        merged
+    }
+
+    /// Write the database to `dir` (segments streamed, manifest written
+    /// atomically last).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let mut w = ShardedWriter::create(dir, &self.fractions, self.n_shards())?;
+        for g in 0..self.len() {
+            w.push(self.record(g))?;
+        }
+        w.finish()?;
+        Ok(())
+    }
+
+    /// Load a sharded database from `dir`, validating the manifest CRC,
+    /// every segment's payload CRC, and that the global indices form a
+    /// permutation of `0..n_records`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = read_manifest(dir)?;
+        let n_sizes = manifest.fractions.len();
+        let rec_size = record_size(n_sizes);
+        let mut shards = Vec::with_capacity(manifest.segments.len());
+        for (si, seg) in manifest.segments.iter().enumerate() {
+            let path = dir.join(segment_name(si));
+            let data = std::fs::read(&path)
+                .with_context(|| format!("opening segment {}", path.display()))?;
+            if data.len() < 8 || &data[..8] != SEGMENT_MAGIC {
+                bail!("bad segment magic in {}", path.display());
+            }
+            let payload = &data[8..];
+            let computed = crc32(payload);
+            if computed != seg.payload_crc {
+                bail!(
+                    "segment {} CRC mismatch: manifest {:#x}, computed {computed:#x}",
+                    path.display(),
+                    seg.payload_crc
+                );
+            }
+            if payload.len() as u64 != seg.n_recs * rec_size as u64 {
+                bail!(
+                    "segment {} holds {} bytes, manifest expects {} records of {} bytes",
+                    path.display(),
+                    payload.len(),
+                    seg.n_recs,
+                    rec_size
+                );
+            }
+            let mut global = Vec::with_capacity(seg.n_recs as usize);
+            let mut records = Vec::with_capacity(seg.n_recs as usize);
+            let mut r = Reader::new(payload);
+            for _ in 0..seg.n_recs {
+                global.push(r.u32()?);
+                let mut raw = [0f64; DIMS];
+                for x in &mut raw {
+                    *x = r.f64()?;
+                }
+                let mut vec = [0f32; DIMS];
+                for x in &mut vec {
+                    *x = r.f32()?;
+                }
+                let mut times_ns = Vec::with_capacity(n_sizes);
+                for _ in 0..n_sizes {
+                    times_ns.push(r.f32()?);
+                }
+                records.push(Record { raw, vec, times_ns });
+            }
+            r.done()?;
+            shards.push(Shard {
+                global,
+                db: PerfDb { fractions: manifest.fractions.clone(), records },
+            });
+        }
+        let loc = build_loc(&shards, manifest.n_records as usize)?;
+        Ok(ShardedPerfDb { fractions: manifest.fractions, shards, loc })
+    }
+}
+
+fn build_loc(shards: &[Shard], n_records: usize) -> Result<Vec<(u32, u32)>> {
+    const HOLE: (u32, u32) = (u32::MAX, u32::MAX);
+    let mut loc = vec![HOLE; n_records];
+    for (si, sh) in shards.iter().enumerate() {
+        if sh.global.len() != sh.db.records.len() {
+            bail!("shard {si}: {} indices for {} records", sh.global.len(), sh.db.records.len());
+        }
+        for (li, &g) in sh.global.iter().enumerate() {
+            let g = g as usize;
+            if g >= n_records {
+                bail!("shard {si}: global index {g} out of range (n_records {n_records})");
+            }
+            if loc[g] != HOLE {
+                bail!("duplicate global index {g} across segments");
+            }
+            loc[g] = (si as u32, li as u32);
+        }
+    }
+    if let Some(g) = loc.iter().position(|&x| x == HOLE) {
+        bail!("global index {g} missing from every segment");
+    }
+    Ok(loc)
+}
+
+/// Streaming writer: routes each completed record straight into its
+/// segment file, so multi-million-record builds never hold the whole
+/// database in memory. Segments stream to unique temps and are renamed at
+/// [`Self::finish`]; the manifest (with final counts and CRCs) is written
+/// atomically last.
+pub struct ShardedWriter {
+    dir: PathBuf,
+    fractions: Vec<f32>,
+    segments: Vec<SegmentWriter>,
+    n_records: u64,
+}
+
+impl ShardedWriter {
+    pub fn create(dir: &Path, fractions: &[f32], n_shards: usize) -> Result<Self> {
+        let n_shards = n_shards.max(1);
+        // The writer holds one open temp file per shard, so the build cap
+        // sits well under common fd soft limits (1024); the *read* path
+        // opens segments sequentially and accepts up to the 4096 the
+        // manifest format allows.
+        if n_shards > 512 {
+            bail!("{n_shards} shards exceeds the build limit of 512 (one open file per shard)");
+        }
+        if fractions.is_empty() {
+            bail!("sharded perfdb needs a non-empty fraction grid");
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating sharded-perfdb dir {}", dir.display()))?;
+        let mut segments = Vec::with_capacity(n_shards);
+        for si in 0..n_shards {
+            segments.push(SegmentWriter::create(dir.join(segment_name(si)))?);
+        }
+        Ok(ShardedWriter {
+            dir: dir.to_path_buf(),
+            fractions: fractions.to_vec(),
+            segments,
+            n_records: 0,
+        })
+    }
+
+    /// Append one record (the next global index). Routing is by
+    /// [`shard_of`], so push order defines the flat ordering.
+    pub fn push(&mut self, r: &Record) -> Result<()> {
+        if r.times_ns.len() != self.fractions.len() {
+            bail!(
+                "record has {} times for {} fractions",
+                r.times_ns.len(),
+                self.fractions.len()
+            );
+        }
+        if self.n_records >= u32::MAX as u64 {
+            bail!("sharded perfdb overflows u32 global indices");
+        }
+        let si = shard_of(&r.raw, self.segments.len());
+        self.segments[si].push(self.n_records as u32, r)?;
+        self.n_records += 1;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_records as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_records == 0
+    }
+
+    /// Finalize the commit point. A previous generation in the same
+    /// directory survives untouched right up to here (segments stream to
+    /// unique temps), so a build that *fails* leaves the old database
+    /// loadable; `finish` then (1) sets the old manifest aside as
+    /// `MANIFEST.old` — every later crash window reads as "no database",
+    /// never an old manifest checksumming new segments, and a failure is
+    /// recoverable by renaming it back — (2) renames the new segments
+    /// into place, (3) sweeps stale segments from a wider previous
+    /// generation, and (4) writes the new manifest atomically, removing
+    /// `MANIFEST.old` on success. Returns the directory written.
+    pub fn finish(self) -> Result<PathBuf> {
+        let ShardedWriter { dir, fractions, segments, n_records } = self;
+        let n_shards = segments.len();
+        // Set the old manifest ASIDE (not unlink): a failure before any
+        // new segment lands can be rolled back by renaming it back; once
+        // segments start overwriting, the previous generation is gone
+        // either way and the directory correctly reads as "no database".
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let manifest_old = dir.join("MANIFEST.old");
+        match std::fs::rename(&manifest_path, &manifest_old) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("setting aside old manifest in {}", dir.display()))
+            }
+        }
+        let commit = || -> Result<()> {
+            let mut metas = Vec::with_capacity(n_shards);
+            for seg in segments {
+                metas.push(seg.finish()?);
+            }
+            // Remove segments a previous build left behind (e.g. 8
+            // shards rebuilt as 4): they are unreferenced by the new
+            // manifest but would count into listings and confuse
+            // inspection.
+            for entry in std::fs::read_dir(&dir)? {
+                let path = entry?.path();
+                let name = path.file_name().map(|s| s.to_string_lossy().into_owned());
+                if let Some(name) = name {
+                    // Orphaned temps from builds that were SIGKILLed or
+                    // lost power (Drop never ran): this build's own temps
+                    // were renamed away before this sweep, and the dir is
+                    // single-writer, so any remaining .tmp is garbage.
+                    if name.ends_with(".tmp") {
+                        std::fs::remove_file(&path).ok();
+                        continue;
+                    }
+                    if let Some(idx) = name
+                        .strip_prefix("seg-")
+                        .and_then(|s| s.strip_suffix(".bin"))
+                        .and_then(|s| s.parse::<usize>().ok())
+                    {
+                        if idx >= n_shards {
+                            std::fs::remove_file(&path)
+                                .with_context(|| format!("sweeping stale {}", path.display()))?;
+                        }
+                    }
+                }
+            }
+            let mut body = Vec::new();
+            wire::put_u32(&mut body, n_shards as u32);
+            wire::put_u32(&mut body, fractions.len() as u32);
+            wire::put_u64(&mut body, n_records);
+            for &f in &fractions {
+                wire::put_f32(&mut body, f);
+            }
+            for m in &metas {
+                wire::put_u64(&mut body, m.n_recs);
+                wire::put_u32(&mut body, m.payload_crc);
+            }
+            let mut out = Vec::with_capacity(8 + body.len() + 4);
+            out.extend_from_slice(MANIFEST_MAGIC);
+            out.extend_from_slice(&body);
+            out.extend_from_slice(&crc32(&body).to_le_bytes());
+            write_atomic(&manifest_path, &out)
+        };
+        match commit() {
+            Ok(()) => {
+                std::fs::remove_file(&manifest_old).ok();
+                Ok(dir)
+            }
+            Err(e) => Err(e.context(format!(
+                "sharded rebuild failed; old manifest kept at {} (renaming it back \
+                 restores the previous database ONLY if no new segment was renamed \
+                 into place yet — after that, segments are mixed-generation and the \
+                 directory must be rebuilt)",
+                manifest_old.display()
+            ))),
+        }
+    }
+}
+
+struct SegmentWriter {
+    /// `Some` until [`Self::finish`] closes it (needed so [`Drop`] can
+    /// close before unlinking an abandoned temp).
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    tmp: PathBuf,
+    dest: PathBuf,
+    crc: Crc32,
+    n_recs: u64,
+    finished: bool,
+    /// Reusable serialization scratch — the streaming build path exists
+    /// for multi-million-record databases, so no per-record allocation.
+    buf: Vec<u8>,
+}
+
+impl SegmentWriter {
+    fn create(dest: PathBuf) -> Result<Self> {
+        let tmp = unique_tmp_path(&dest);
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("creating segment temp {}", tmp.display()))?,
+        );
+        file.write_all(SEGMENT_MAGIC)?;
+        Ok(SegmentWriter {
+            file: Some(file),
+            tmp,
+            dest,
+            crc: Crc32::new(),
+            n_recs: 0,
+            finished: false,
+            buf: Vec::new(),
+        })
+    }
+
+    fn push(&mut self, global: u32, r: &Record) -> Result<()> {
+        self.buf.clear();
+        wire::put_u32(&mut self.buf, global);
+        for &x in &r.raw {
+            wire::put_f64(&mut self.buf, x);
+        }
+        for &x in &r.vec {
+            wire::put_f32(&mut self.buf, x);
+        }
+        for &t in &r.times_ns {
+            wire::put_f32(&mut self.buf, t);
+        }
+        self.crc.update(&self.buf);
+        self.file.as_mut().expect("segment writer already finished").write_all(&self.buf)?;
+        self.n_recs += 1;
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<SegmentMeta> {
+        let mut file = self.file.take().expect("segment writer already finished");
+        file.flush().with_context(|| format!("flushing segment {}", self.tmp.display()))?;
+        // durability before the rename: see `write_atomic` (the manifest
+        // write at the end of the build syncs the directory itself)
+        file.get_ref()
+            .sync_all()
+            .with_context(|| format!("syncing segment {}", self.tmp.display()))?;
+        drop(file);
+        std::fs::rename(&self.tmp, &self.dest).with_context(|| {
+            format!("renaming {} -> {}", self.tmp.display(), self.dest.display())
+        })?;
+        self.finished = true;
+        Ok(SegmentMeta { n_recs: self.n_recs, payload_crc: self.crc.finish() })
+    }
+}
+
+impl Drop for SegmentWriter {
+    /// An abandoned or failed build must not leak its uniquely-named
+    /// temp (nothing ever overwrites or sweeps `.tmp` files).
+    fn drop(&mut self) {
+        if !self.finished {
+            self.file.take();
+            std::fs::remove_file(&self.tmp).ok();
+        }
+    }
+}
+
+/// [`NnQuery`] adapter over a sharded database — pluggable wherever the
+/// native or XLA backends go (tuner, benches).
+pub struct ShardedNn {
+    db: std::sync::Arc<ShardedPerfDb>,
+    threads: usize,
+}
+
+impl ShardedNn {
+    /// `threads == 0` means one worker per core.
+    pub fn new(db: std::sync::Arc<ShardedPerfDb>, threads: usize) -> Self {
+        ShardedNn { db, threads }
+    }
+}
+
+impl NnQuery for ShardedNn {
+    fn nearest(&mut self, q: &[f32; DIMS]) -> crate::Result<(usize, f32)> {
+        self.db.nearest(q, self.threads).ok_or_else(|| anyhow::anyhow!("empty database"))
+    }
+
+    fn top_k(&mut self, q: &[f32; DIMS], k: usize) -> crate::Result<Vec<(usize, f32)>> {
+        anyhow::ensure!(!self.db.is_empty(), "empty database");
+        Ok(self.db.top_k(q, k, self.threads))
+    }
+
+    fn backend(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::native::NativeNn;
+    use crate::perfdb::{normalize, store};
+    use crate::util::rng::Rng;
+
+    fn sample_db(n: usize, seed: u64) -> PerfDb {
+        let mut rng = Rng::new(seed);
+        let fractions = vec![1.0, 0.9, 0.8, 0.6, 0.4];
+        let records = (0..n)
+            .map(|_| {
+                let raw = [
+                    rng.range_f64(100.0, 50_000.0),
+                    rng.range_f64(0.0, 10_000.0),
+                    rng.range_f64(0.0, 400.0),
+                    rng.range_f64(0.0, 400.0),
+                    rng.range_f64(0.05, 20.0),
+                    rng.range_f64(3_000.0, 40_000.0),
+                    2.0,
+                    16.0,
+                ];
+                Record {
+                    raw,
+                    vec: normalize(&raw),
+                    times_ns: (0..fractions.len())
+                        .map(|i| 100.0 + i as f32 * (1.0 + rng.f32()))
+                        .collect(),
+                }
+            })
+            .collect();
+        PerfDb { fractions, records }
+    }
+
+    #[test]
+    fn flat_sharded_flat_is_bit_identical() {
+        let db = sample_db(41, 3);
+        for n_shards in [1, 2, 5, 64] {
+            let sharded = ShardedPerfDb::from_flat(&db, n_shards);
+            assert_eq!(sharded.len(), db.records.len());
+            assert_eq!(
+                store::to_bytes(&sharded.to_flat()),
+                store::to_bytes(&db),
+                "{n_shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_queries_match_flat_exactly() {
+        let db = sample_db(37, 7);
+        let sharded = ShardedPerfDb::from_flat(&db, 4);
+        let mut native = NativeNn::new(&db);
+        let mut rng = Rng::new(9);
+        for _ in 0..32 {
+            let raw = [
+                rng.range_f64(100.0, 50_000.0),
+                rng.range_f64(0.0, 10_000.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.05, 20.0),
+                rng.range_f64(3_000.0, 40_000.0),
+                2.0,
+                16.0,
+            ];
+            let q = normalize(&raw);
+            let (fi, fd) = native.nearest(&q).unwrap();
+            let (si, sd) = sharded.nearest(&q, 2).unwrap();
+            assert_eq!((si, sd.to_bits()), (fi, fd.to_bits()));
+            let ft = NativeNn::new(&db).top_k(&q, 5);
+            let st = sharded.top_k(&q, 5, 2);
+            assert_eq!(st.len(), ft.len());
+            for (a, b) in ft.iter().zip(&st) {
+                assert_eq!((a.0, a.1.to_bits()), (b.0, b.1.to_bits()));
+            }
+            let frac = rng.range_f64(0.3, 1.0);
+            assert_eq!(db.time_at(fi, frac).to_bits(), sharded.time_at(fi, frac).to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_fan_out_path_matches_flat_above_threshold() {
+        // enough records that fan_out takes the parallel_map branch —
+        // the merge/tie-break there must agree with the flat argmin too
+        let db = sample_db(SERIAL_QUERY_THRESHOLD + 64, 29);
+        let sharded = ShardedPerfDb::from_flat(&db, 6);
+        assert!(sharded.len() > SERIAL_QUERY_THRESHOLD);
+        let mut native = NativeNn::new(&db);
+        let mut rng = Rng::new(31);
+        for _ in 0..8 {
+            let raw = [
+                rng.range_f64(100.0, 50_000.0),
+                rng.range_f64(0.0, 10_000.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.0, 400.0),
+                rng.range_f64(0.05, 20.0),
+                rng.range_f64(3_000.0, 40_000.0),
+                2.0,
+                16.0,
+            ];
+            let q = normalize(&raw);
+            let (fi, fd) = native.nearest(&q).unwrap();
+            let (si, sd) = sharded.nearest(&q, 4).unwrap();
+            assert_eq!((si, sd.to_bits()), (fi, fd.to_bits()));
+            let ft = NativeNn::new(&db).top_k(&q, 4);
+            let st = sharded.top_k(&q, 4, 4);
+            for (a, b) in ft.iter().zip(&st) {
+                assert_eq!((a.0, a.1.to_bits()), (b.0, b.1.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_bytes() {
+        let db = sample_db(23, 11);
+        let sharded = ShardedPerfDb::from_flat(&db, 3);
+        let dir = std::env::temp_dir()
+            .join(format!("tuna_shard_rt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        sharded.save(&dir).unwrap();
+        let back = ShardedPerfDb::load(&dir).unwrap();
+        assert_eq!(back.n_shards(), 3);
+        assert_eq!(store::to_bytes(&back.to_flat()), store::to_bytes(&db));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_segment_or_manifest_is_rejected() {
+        let db = sample_db(12, 13);
+        let dir = std::env::temp_dir()
+            .join(format!("tuna_shard_corrupt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, 2).save(&dir).unwrap();
+
+        // flip a byte in a non-empty segment → CRC mismatch
+        let seg = (0..2)
+            .map(|si| dir.join(segment_name(si)))
+            .find(|p| std::fs::metadata(p).unwrap().len() > 8)
+            .unwrap();
+        let mut bytes = std::fs::read(&seg).unwrap();
+        let mid = 8 + (bytes.len() - 8) / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&seg, &bytes).unwrap();
+        assert!(ShardedPerfDb::load(&dir).is_err());
+
+        // corrupt manifest magic
+        let manifest = dir.join(MANIFEST_NAME);
+        let mut m = std::fs::read(&manifest).unwrap();
+        m[0] = b'X';
+        std::fs::write(&manifest, &m).unwrap();
+        assert!(read_manifest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_writer_matches_from_flat_save() {
+        let db = sample_db(19, 17);
+        let a = std::env::temp_dir().join(format!("tuna_shard_wa_{}", std::process::id()));
+        let b = std::env::temp_dir().join(format!("tuna_shard_wb_{}", std::process::id()));
+        std::fs::remove_dir_all(&a).ok();
+        std::fs::remove_dir_all(&b).ok();
+        ShardedPerfDb::from_flat(&db, 4).save(&a).unwrap();
+        let mut w = ShardedWriter::create(&b, &db.fractions, 4).unwrap();
+        for r in &db.records {
+            w.push(r).unwrap();
+        }
+        assert_eq!(w.len(), db.records.len());
+        w.finish().unwrap();
+        for si in 0..4 {
+            assert_eq!(
+                std::fs::read(a.join(segment_name(si))).unwrap(),
+                std::fs::read(b.join(segment_name(si))).unwrap(),
+                "segment {si}"
+            );
+        }
+        assert_eq!(
+            std::fs::read(a.join(MANIFEST_NAME)).unwrap(),
+            std::fs::read(b.join(MANIFEST_NAME)).unwrap()
+        );
+        std::fs::remove_dir_all(&a).ok();
+        std::fs::remove_dir_all(&b).ok();
+    }
+
+    #[test]
+    fn rebuild_with_fewer_shards_sweeps_stale_segments() {
+        let db = sample_db(20, 23);
+        let dir = std::env::temp_dir()
+            .join(format!("tuna_shard_rebuild_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, 8).save(&dir).unwrap();
+        assert!(dir.join(segment_name(7)).exists());
+        // rebuild narrower into the same directory
+        ShardedPerfDb::from_flat(&db, 3).save(&dir).unwrap();
+        let back = ShardedPerfDb::load(&dir).unwrap();
+        assert_eq!(back.n_shards(), 3);
+        assert_eq!(store::to_bytes(&back.to_flat()), store::to_bytes(&db));
+        for si in 3..8 {
+            assert!(!dir.join(segment_name(si)).exists(), "stale segment {si} not swept");
+        }
+        // an abandoned rebuild (writer dropped before finish) must leave
+        // the previous generation fully loadable and sweep its own temps
+        let mut w = ShardedWriter::create(&dir, &db.fractions, 5).unwrap();
+        w.push(&db.records[0]).unwrap();
+        drop(w);
+        let still = ShardedPerfDb::load(&dir).unwrap();
+        assert_eq!(still.n_shards(), 3);
+        assert_eq!(store::to_bytes(&still.to_flat()), store::to_bytes(&db));
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "abandoned build leaked temps: {stray:?}");
+        // a crashed rebuild (manifest removed, segments half-written)
+        // reads as "no database", not a CRC-corrupt one
+        std::fs::remove_file(dir.join(MANIFEST_NAME)).unwrap();
+        let err = format!("{:#}", ShardedPerfDb::load(&dir).unwrap_err());
+        assert!(err.contains("manifest"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_nn_backend_works() {
+        let db = sample_db(15, 19);
+        let sharded = std::sync::Arc::new(ShardedPerfDb::from_flat(&db, 3));
+        let mut nn = ShardedNn::new(sharded, 2);
+        let q = db.records[7].vec;
+        let (idx, d) = nn.nearest(&q).unwrap();
+        assert_eq!(idx, 7);
+        assert!(d < 1e-9);
+        assert_eq!(nn.backend(), "sharded");
+        let top = nn.top_k(&q, 3).unwrap();
+        assert_eq!(top[0].0, 7);
+    }
+}

@@ -1,0 +1,158 @@
+//! Little-endian wire helpers shared by the artifact codecs.
+//!
+//! Every on-disk artifact (sharded perf-DB segments, sweep cell tables,
+//! baseline caches) is a flat little-endian byte stream; these helpers
+//! keep the writers symmetric with a bounds-checked [`Reader`] so a
+//! truncated or corrupted file fails parsing instead of panicking.
+
+use anyhow::{bail, Result};
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// UTF-8 string with a u32 length prefix.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked cursor over a byte slice.
+pub struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Reader { data, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!(
+                "artifact truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.data.len() - self.pos
+            );
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// UTF-8 string with a u32 length prefix (bounded at 1 MiB — no real
+    /// name or fingerprint is that long, so a corrupt length fails fast).
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            bail!("implausible string length {n} in artifact");
+        }
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("non-UTF-8 string in artifact: {e}"))?
+            .to_string())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// Error unless the whole input was consumed.
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.data.len() {
+            bail!("artifact has {} trailing bytes", self.data.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 1);
+        put_u128(&mut out, 1 << 100);
+        put_f32(&mut out, -1.5);
+        put_f64(&mut out, std::f64::consts::PI);
+        put_str(&mut out, "hello wire");
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.u128().unwrap(), 1 << 100);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "hello wire");
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_errors() {
+        let mut out = Vec::new();
+        put_u64(&mut out, 1);
+        let mut r = Reader::new(&out[..4]);
+        assert!(r.u64().is_err());
+        let mut r2 = Reader::new(&out);
+        assert_eq!(r2.u32().unwrap(), 1);
+        assert!(r2.done().is_err());
+        assert_eq!(r2.remaining(), 4);
+    }
+
+    #[test]
+    fn bogus_string_length_is_rejected() {
+        let mut out = Vec::new();
+        put_u32(&mut out, u32::MAX);
+        assert!(Reader::new(&out).str().is_err());
+    }
+}

@@ -9,7 +9,10 @@
 
 pub mod sweep;
 
-pub use sweep::{run_sweep, SweepCell, SweepPolicy, SweepResult, SweepSpec};
+pub use sweep::{
+    run_sweep, run_sweep_with_cache, BaselineCache, SweepCell, SweepPolicy, SweepResult,
+    SweepSpec,
+};
 
 use std::sync::Arc;
 

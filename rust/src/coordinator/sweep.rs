@@ -20,6 +20,7 @@
 //!   any thread count.
 
 use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -68,6 +69,28 @@ impl SweepPolicy {
             "tuna" => Ok(SweepPolicy::Tuna),
             other => bail!("unknown policy `{other}` (try: tpp, first-touch, memtis, tuna)"),
         }
+    }
+
+    /// Stable on-disk code (the artifact store's cell tables use it;
+    /// never renumber, only extend).
+    pub fn code(&self) -> u8 {
+        match self {
+            SweepPolicy::Tpp => 0,
+            SweepPolicy::FirstTouch => 1,
+            SweepPolicy::Memtis => 2,
+            SweepPolicy::Tuna => 3,
+        }
+    }
+
+    /// Inverse of [`Self::code`].
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => SweepPolicy::Tpp,
+            1 => SweepPolicy::FirstTouch,
+            2 => SweepPolicy::Memtis,
+            3 => SweepPolicy::Tuna,
+            other => bail!("unknown policy code {other} in artifact"),
+        })
     }
 }
 
@@ -253,12 +276,17 @@ impl BaselineKey {
 }
 
 /// Thread-safe memo of fast-memory-only baseline runs. Shareable across
-/// sweeps (e.g. a bench that runs several grids over the same workloads).
+/// sweeps (e.g. a bench that runs several grids over the same workloads),
+/// and optionally backed by the artifact store ([`Self::persistent`]) so
+/// the memo survives the process: a repeated bench or sweep invocation
+/// loads baselines from disk instead of re-simulating them.
 #[derive(Default)]
 pub struct BaselineCache {
     entries: Mutex<HashMap<BaselineKey, Arc<RunResult>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    disk_hits: AtomicUsize,
+    disk: Option<crate::artifact::cache::DiskBaselineCache>,
 }
 
 impl BaselineCache {
@@ -266,18 +294,44 @@ impl BaselineCache {
         BaselineCache::default()
     }
 
-    /// The baseline for `spec` (any fraction), computing it on first use.
+    /// A cache whose entries are written through to (and on miss loaded
+    /// from) one `.bl` artifact per key under `dir` — the cross-process
+    /// tier of the memo.
+    pub fn persistent(dir: &Path) -> Result<Self> {
+        Ok(BaselineCache {
+            disk: Some(crate::artifact::cache::DiskBaselineCache::open(dir)?),
+            ..BaselineCache::default()
+        })
+    }
+
+    /// The baseline for `spec` (any fraction): in-memory memo first, then
+    /// the disk tier (if persistent), then computed — and written through
+    /// to disk so the *next* process skips the simulation.
     pub fn get_or_compute(&self, spec: &RunSpec) -> Result<Arc<RunResult>> {
         let key = BaselineKey::of(spec);
         if let Some(hit) = self.entries.lock().unwrap().get(&key).cloned() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(hit);
         }
+        if let Some(disk) = &self.disk {
+            if let Some(loaded) = disk.load(&key) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                let loaded = Arc::new(loaded);
+                let mut map = self.entries.lock().unwrap();
+                return Ok(map.entry(key).or_insert(loaded).clone());
+            }
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         // Computed outside the lock; on a concurrent race both sides
         // produce bit-identical results (runs are deterministic), so
-        // keeping the first insertion is safe.
+        // keeping the first insertion is safe — and racing writers of the
+        // same artifact produce identical bytes behind an atomic rename.
         let computed = Arc::new(run_fm_only(spec)?);
+        if let Some(disk) = &self.disk {
+            if let Err(e) = disk.store(&key, &computed) {
+                eprintln!("warning: failed to persist baseline artifact: {e:#}");
+            }
+        }
         let mut map = self.entries.lock().unwrap();
         Ok(map.entry(key).or_insert(computed).clone())
     }
@@ -288,6 +342,12 @@ impl BaselineCache {
 
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Baselines served from the disk tier (always 0 for in-memory-only
+    /// caches).
+    pub fn disk_hits(&self) -> usize {
+        self.disk_hits.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -331,6 +391,9 @@ pub struct SweepResult {
     pub baselines_computed: usize,
     /// Baseline cache hits during this sweep (one per cell).
     pub baseline_hits: usize,
+    /// Baselines loaded from the artifact store's disk tier (0 unless the
+    /// sweep ran against a [`BaselineCache::persistent`] cache).
+    pub baseline_disk_hits: usize,
     /// Wall-clock time of the whole sweep.
     pub wall_ns: u128,
 }
@@ -372,6 +435,7 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
     let threads = if spec.threads == 0 { default_threads() } else { spec.threads };
     let hits0 = cache.hits();
     let misses0 = cache.misses();
+    let disk_hits0 = cache.disk_hits();
     let t0 = Instant::now();
 
     // Phase 1: warm the baseline cache, one run per distinct key, in
@@ -425,6 +489,7 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
         cells: out,
         baselines_computed: cache.misses() - misses0,
         baseline_hits: cache.hits() - hits0,
+        baseline_disk_hits: cache.disk_hits() - disk_hits0,
         wall_ns: t0.elapsed().as_nanos(),
     })
 }
@@ -534,5 +599,84 @@ mod tests {
     fn unknown_workload_surfaces_the_run_error() {
         let spec = tiny(&["not-a-workload"]);
         assert!(run_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn policy_codes_roundtrip_and_reject_unknown() {
+        for p in [
+            SweepPolicy::Tpp,
+            SweepPolicy::FirstTouch,
+            SweepPolicy::Memtis,
+            SweepPolicy::Tuna,
+        ] {
+            assert_eq!(SweepPolicy::from_code(p.code()).unwrap(), p);
+        }
+        assert!(SweepPolicy::from_code(200).is_err());
+    }
+
+    #[test]
+    fn persistent_cache_survives_a_fresh_process_image() {
+        let dir = std::env::temp_dir()
+            .join(format!("tuna_sweep_persist_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = RunSpec::new("Btree").with_intervals(20);
+
+        let first = BaselineCache::persistent(&dir).unwrap();
+        let a = first.get_or_compute(&spec).unwrap();
+        assert_eq!((first.misses(), first.disk_hits()), (1, 0));
+
+        // a fresh cache over the same directory stands in for a fresh
+        // process: it must load from disk without re-simulating
+        let second = BaselineCache::persistent(&dir).unwrap();
+        let b = second.get_or_compute(&spec).unwrap();
+        assert_eq!((second.misses(), second.disk_hits()), (0, 1));
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.wall_ns.to_bits(), y.wall_ns.to_bits());
+            assert_eq!(x.promoted, y.promoted);
+        }
+        // and the in-memory tier serves the third lookup
+        let _ = second.get_or_compute(&spec).unwrap();
+        assert_eq!(second.hits(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_of_one_key_yield_one_valid_artifact() {
+        let dir = std::env::temp_dir()
+            .join(format!("tuna_sweep_race_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = RunSpec::new("Btree").with_intervals(20);
+
+        // two independent persistent caches (two "processes") race to
+        // compute and persist the same key
+        let results: Vec<Arc<RunResult>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let dir = &dir;
+                    let spec = &spec;
+                    s.spawn(move || {
+                        BaselineCache::persistent(dir).unwrap().get_or_compute(spec).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results[0].total_ns.to_bits(), results[1].total_ns.to_bits());
+
+        // exactly one artifact file remains, and it parses cleanly with
+        // results identical to both writers'
+        let files: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().map(|e| e == "bl").unwrap_or(false))
+            .collect();
+        assert_eq!(files.len(), 1, "one key -> one artifact, got {files:?}");
+        let reader = BaselineCache::persistent(&dir).unwrap();
+        let loaded = reader.get_or_compute(&spec).unwrap();
+        assert_eq!(reader.disk_hits(), 1);
+        assert_eq!(loaded.total_ns.to_bits(), results[0].total_ns.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

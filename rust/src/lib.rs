@@ -25,10 +25,14 @@
 //!   (parallel over configuration × fraction cells, byte-deterministic).
 //! * [`tuner::Tuner`] — the online controller (watermark programming).
 //! * [`runtime::PerfDbExec`] — the AOT query executable (PJRT CPU).
+//! * [`artifact::ArtifactStore`] — the persistent artifact store: sharded
+//!   perf-DB segments, durable sweep cell tables, and the cross-process
+//!   baseline cache (`tuna store ls|diff`).
 //!
 //! See `DESIGN.md` for the hardware-substitution rationale and the
 //! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod artifact;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

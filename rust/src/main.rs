@@ -14,7 +14,16 @@
 //!           [--policy tpp,first-touch,memtis,tuna] [--seeds 1,2,3]
 //!           [--hot-thrs 2,4] [--threads N] [--intervals N]
 //!           [--memtis | --first-touch] [--db artifacts/perfdb.bin]
-//!                               parallel grid sweep (Fig. 1 and beyond)
+//!           [--store DIR] [--name NAME] [--append]
+//!                               parallel grid sweep (Fig. 1 and beyond);
+//!                               with --store, baselines are served from /
+//!                               persisted to the artifact store and the
+//!                               cells are saved as a diffable table
+//! tuna build-db --store DIR [--shards N] [--name perfdb]
+//!                               sharded build streaming into store segments
+//! tuna store ls   [--store DIR] list artifacts (perfdbs, sweeps, baselines)
+//! tuna store diff A B [--store DIR] [--tol T] [--strict]
+//!                               cell-by-cell sweep comparison (regressions)
 //! ```
 
 use std::path::PathBuf;
@@ -22,10 +31,14 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use tuna::artifact::cells::{diff, SweepTable};
+use tuna::artifact::shard::DEFAULT_SHARDS;
+use tuna::artifact::{fnv1a64, ArtifactStore};
 use tuna::cli::Args;
 use tuna::config::ExperimentConfig;
+use tuna::coordinator::sweep::{run_sweep_with_cache, BaselineCache};
 use tuna::coordinator::{self, RunSpec, SweepPolicy, SweepSpec};
-use tuna::perfdb::builder::{ensure_db, BuildParams};
+use tuna::perfdb::builder::{build_database_sharded, ensure_db, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
@@ -42,19 +55,23 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let mut args = Args::parse(std::env::args().skip(1), &["xla", "first-touch", "memtis"])?;
+    let mut args = Args::parse(
+        std::env::args().skip(1),
+        &["xla", "first-touch", "memtis", "strict", "append"],
+    )?;
     match args.subcommand.clone().as_deref() {
         Some("info") => cmd_info(&mut args),
         Some("build-db") => cmd_build_db(&mut args),
         Some("run") => cmd_run(&mut args),
         Some("tune") => cmd_tune(&mut args),
         Some("sweep") => cmd_sweep(&mut args),
+        Some("store") => cmd_store(&mut args),
         Some(other) => {
-            bail!("unknown subcommand `{other}` (try: info, build-db, run, tune, sweep)")
+            bail!("unknown subcommand `{other}` (try: info, build-db, run, tune, sweep, store)")
         }
         None => {
             println!(
-                "usage: tuna <info|build-db|run|tune|sweep> [flags]  (see README)"
+                "usage: tuna <info|build-db|run|tune|sweep|store> [flags]  (see README)"
             );
             Ok(())
         }
@@ -101,11 +118,42 @@ fn cmd_info(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_build_db(args: &mut Args) -> Result<()> {
-    let out = PathBuf::from(args.get_or("out", "artifacts/perfdb.bin"));
+    let out_given = args.get("out").map(|s| s.to_string());
+    let out = PathBuf::from(out_given.clone().unwrap_or_else(|| "artifacts/perfdb.bin".into()));
     let mut params = BuildParams::default();
     params.n_configs = args.get_parse("configs", params.n_configs)?;
     params.seed = args.get_parse("seed", params.seed)?;
+    let store_dir = args.get("store").map(PathBuf::from);
+    let shards_given = args.get("shards").is_some();
+    let shards: usize = args.get_parse("shards", DEFAULT_SHARDS)?;
+    let named = args.get("name").map(|s| s.to_string());
     args.finish()?;
+
+    if let Some(dir) = store_dir {
+        if out_given.is_some() {
+            bail!("--out conflicts with --store (sharded builds land in the store; use --name)");
+        }
+        // Sharded build: completed records stream straight into the
+        // store's segment files instead of accumulating in memory.
+        let store = ArtifactStore::open(&dir)?;
+        let name = named.unwrap_or_else(|| "perfdb".to_string());
+        let target = store.perfdb_dir().join(&name);
+        let t0 = std::time::Instant::now();
+        let manifest = build_database_sharded(&params, shards, &target)?;
+        println!(
+            "sharded perfdb ready at {}: {} records x {} fm sizes in {} segments ({:.1}s)",
+            target.display(),
+            manifest.n_records,
+            manifest.fractions.len(),
+            manifest.segments.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        return Ok(());
+    }
+    if shards_given || named.is_some() {
+        bail!("--shards/--name require --store DIR (sharded builds live in the artifact store)");
+    }
+
     let db = ensure_db(&out, &params)?;
     println!(
         "perfdb ready at {}: {} records x {} fm sizes",
@@ -249,7 +297,16 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .map(|s| SweepPolicy::parse(s.trim()))
         .collect::<Result<_>>()?;
     let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
+    let store_dir = args.get("store").map(PathBuf::from);
+    let sweep_name = args.get("name").map(|s| s.to_string());
+    let append = args.switch("append");
     args.finish()?;
+    if store_dir.is_none() && sweep_name.is_some() {
+        bail!("--name requires --store DIR (it names the persisted cell table)");
+    }
+    if append && (store_dir.is_none() || sweep_name.is_none()) {
+        bail!("--append requires --store DIR and --name NAME (the table to accumulate into)");
+    }
 
     let mut spec = SweepSpec::new(&workloads)
         .with_fractions(fractions)
@@ -264,7 +321,18 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         spec = spec.with_tuna(db, exp.tuna.clone());
     }
 
-    let res = coordinator::run_sweep(&spec)?;
+    // With --store, fast-memory-only baselines are served from (and
+    // written through to) the artifact store, so a repeated invocation
+    // re-simulates zero baselines.
+    let (store, cache) = match &store_dir {
+        Some(dir) => {
+            let store = ArtifactStore::open(dir)?;
+            let cache = BaselineCache::persistent(&store.baselines_dir())?;
+            (Some(store), cache)
+        }
+        None => (None, BaselineCache::new()),
+    };
+    let res = run_sweep_with_cache(&spec, &cache)?;
 
     let mut t = Table::new(
         &format!(
@@ -292,11 +360,127 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     }
     t.print();
     println!(
-        "\n{} cells in {}; {} baselines computed, {} baseline-cache hits",
+        "\n{} cells in {}; baselines: {} computed, {} cache hits, {} loaded from disk",
         res.len(),
         tuna::util::human_ns(res.wall_ns as u64),
         res.baselines_computed,
-        res.baseline_hits
+        res.baseline_hits,
+        res.baseline_disk_hits
     );
+
+    if let Some(store) = &store {
+        let table = SweepTable::from_sweep(&res);
+        // Default artifact name: a fingerprint of the grid axes, so
+        // rerunning the same sweep overwrites its own table rather than
+        // piling up near-duplicates.
+        let name = sweep_name.unwrap_or_else(|| {
+            let mut fp = Vec::new();
+            for w in &spec.workloads {
+                fp.extend_from_slice(w.as_bytes());
+                fp.push(0);
+            }
+            for &f in &spec.fractions {
+                fp.extend_from_slice(&f.to_le_bytes());
+            }
+            for &s in &spec.seeds {
+                fp.extend_from_slice(&s.to_le_bytes());
+            }
+            for &h in &spec.hot_thrs {
+                fp.extend_from_slice(&h.to_le_bytes());
+            }
+            for p in &spec.policies {
+                fp.push(p.code());
+            }
+            fp.extend_from_slice(&spec.intervals.to_le_bytes());
+            fp.extend_from_slice(format!("{:?}", spec.machine).as_bytes());
+            format!("sweep-{:012x}", fnv1a64(&fp) & 0xFFFF_FFFF_FFFF)
+        });
+        let path = store.sweep_path(&name);
+        if append {
+            SweepTable::append(&path, &table.rows)?;
+            println!(
+                "sweep cells appended to {} (+{} rows, {} total)",
+                path.display(),
+                table.len(),
+                SweepTable::peek_rows(&path)?
+            );
+        } else {
+            table.save(&path)?;
+            println!("sweep cells persisted to {} ({} rows)", path.display(), table.len());
+        }
+    }
     Ok(())
+}
+
+fn cmd_store(args: &mut Args) -> Result<()> {
+    let action = args.positional.first().cloned();
+    let store_dir = PathBuf::from(args.get_or("store", "artifacts/store"));
+    match action.as_deref() {
+        Some("ls") => {
+            args.finish()?;
+            let store = ArtifactStore::open_existing(&store_dir)?;
+            let items = store.ls()?;
+            let mut t = Table::new(
+                &format!("artifact store at {}", store_dir.display()),
+                &["kind", "name", "size", "detail"],
+            );
+            let n = items.len();
+            for a in items {
+                t.row(vec![a.kind.to_string(), a.name, human_bytes(a.bytes), a.detail]);
+            }
+            t.print();
+            println!("\n{n} artifact(s)");
+            Ok(())
+        }
+        Some("diff") => {
+            let tol: f64 = args.get_parse("tol", 1e-9)?;
+            let strict = args.switch("strict");
+            args.finish()?;
+            let (a_name, b_name) = match (args.positional.get(1), args.positional.get(2)) {
+                (Some(a), Some(b)) => (a.clone(), b.clone()),
+                _ => bail!("usage: tuna store diff <a> <b> [--store DIR] [--tol T] [--strict]"),
+            };
+            let store = ArtifactStore::open_existing(&store_dir)?;
+            let path_a = store.resolve_sweep(&a_name);
+            let path_b = store.resolve_sweep(&b_name);
+            let table_a = SweepTable::load(&path_a)?;
+            let table_b = SweepTable::load(&path_b)?;
+            let d = diff(&table_a, &table_b, tol);
+
+            let mut t = Table::new(
+                &format!("store diff: {a_name} -> {b_name} ({} matched cells)", d.matched),
+                &["cell", "loss a", "loss b", "Δloss", "Δsaving", "Δmigrations"],
+            );
+            for delta in d.regressions.iter().chain(d.improvements.iter()) {
+                t.row(vec![
+                    format!(
+                        "{} {} seed {} thr {} @{}",
+                        delta.a.workload,
+                        delta.a.policy.name(),
+                        delta.a.seed,
+                        delta.a.hot_thr,
+                        pct(delta.a.fm_fraction)
+                    ),
+                    pct(delta.a.loss),
+                    pct(delta.b.loss),
+                    format!("{:+.4}", delta.d_loss),
+                    format!("{:+.4}", delta.d_saving),
+                    format!("{:+}", delta.d_migrations),
+                ]);
+            }
+            t.print();
+            println!(
+                "\n{} regression(s), {} improvement(s), {} cell(s) only in {a_name}, {} only in {b_name}",
+                d.regressions.len(),
+                d.improvements.len(),
+                d.only_in_a.len(),
+                d.only_in_b.len()
+            );
+            if strict && !d.regressions.is_empty() {
+                bail!("{} cell(s) regressed beyond tolerance {tol}", d.regressions.len());
+            }
+            Ok(())
+        }
+        _ => bail!("usage: tuna store <ls|diff a b> [--store DIR]"),
+    }
 }

@@ -166,6 +166,62 @@ pub fn build_database(params: &BuildParams) -> PerfDb {
     PerfDb { fractions: params.fractions.clone(), records }
 }
 
+/// Build a *sharded* database directly into artifact-store segment files
+/// at `dir`: configurations are measured in bounded batches and each
+/// completed record streams straight into its segment writer
+/// ([`crate::artifact::shard::ShardedWriter`]), so peak memory is one
+/// batch of records instead of the whole database — which is also why
+/// this returns the validated manifest, not a loaded
+/// [`crate::artifact::shard::ShardedPerfDb`] (loading would materialize
+/// everything the streaming just avoided; query-time callers load
+/// explicitly). Sampling uses the same per-configuration RNG streams as
+/// [`build_database`], so the sharded build's flat image is
+/// byte-identical to a flat build with the same parameters (asserted in
+/// the test suite), for any thread count.
+pub fn build_database_sharded(
+    params: &BuildParams,
+    n_shards: usize,
+    dir: &std::path::Path,
+) -> crate::Result<crate::artifact::shard::ManifestInfo> {
+    use crate::artifact::shard::ShardedWriter;
+
+    assert!(!params.fractions.is_empty() && (params.fractions[0] - 1.0).abs() < 1e-6);
+    let n = params.n_configs;
+    let m = params.fractions.len();
+    let mut writer = ShardedWriter::create(dir, &params.fractions, n_shards)?;
+    // Batch size: enough cells to keep every worker busy, small enough
+    // that resident records stay bounded.
+    let batch = (params.threads.max(1) * 8).max(32);
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + batch).min(n);
+        let configs: Vec<MicrobenchConfig> = (start..end)
+            .map(|i| sample_config(&mut config_rng(params.seed, i)))
+            .collect();
+        let times: Vec<f32> = parallel_map((end - start) * m, params.threads, |cell| {
+            let (ci, fi) = (cell / m, cell % m);
+            measure(
+                &configs[ci],
+                params.fractions[fi] as f64,
+                &params.machine,
+                params.intervals,
+                params.warmup,
+            ) as f32
+        });
+        for (ci, cfg) in configs.iter().enumerate() {
+            let raw = cfg.as_array();
+            writer.push(&Record {
+                raw,
+                vec: normalize(&raw),
+                times_ns: times[ci * m..(ci + 1) * m].to_vec(),
+            })?;
+        }
+        start = end;
+    }
+    writer.finish()?;
+    crate::artifact::shard::read_manifest(dir)
+}
+
 /// Load the database at `path`, or build it with `params` and cache it
 /// there. Benches and examples use this so they are self-contained while
 /// sharing one artifact.
@@ -270,6 +326,25 @@ mod tests {
             crate::perfdb::store::to_bytes(&parallel),
             "thread count must not change the built database"
         );
+    }
+
+    #[test]
+    fn sharded_streaming_build_matches_flat_build_bytes() {
+        let p = quick_params(40);
+        let flat = build_database(&p);
+        let dir = std::env::temp_dir()
+            .join(format!("tuna_sharded_build_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let manifest = build_database_sharded(&p, 4, &dir).unwrap();
+        assert_eq!(manifest.segments.len(), 4);
+        assert_eq!(manifest.n_records as usize, flat.len());
+        let sharded = crate::artifact::shard::ShardedPerfDb::load(&dir).unwrap();
+        assert_eq!(
+            crate::perfdb::store::to_bytes(&sharded.to_flat()),
+            crate::perfdb::store::to_bytes(&flat),
+            "streaming sharded build must reproduce the flat build bit-for-bit"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! crc      u32   (crc32 of everything after the magic)
 //! ```
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -23,21 +23,62 @@ use super::{PerfDb, Record, DIMS};
 
 const MAGIC: &[u8; 8] = b"TUNADB1\0";
 
+/// CRC-32 (IEEE) lookup table, computed once at compile time — it sits on
+/// the hot path of every artifact write/read, so it must not be rebuilt
+/// per call.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Streaming CRC-32 (IEEE) hasher, for writers that emit artifacts
+/// incrementally (e.g. the sharded segment writers) without buffering the
+/// whole payload just to checksum it.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.state = CRC_TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
 /// Simple CRC-32 (IEEE) — integrity check for the artifact file.
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut table = [0u32; 256];
-    for (i, t) in table.iter_mut().enumerate() {
-        let mut c = i as u32;
-        for _ in 0..8 {
-            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-        }
-        *t = c;
-    }
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
-    }
-    crc ^ 0xFFFF_FFFF
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
 }
 
 /// Serialize to bytes.
@@ -126,19 +167,13 @@ pub fn from_bytes(data: &[u8]) -> Result<PerfDb> {
     Ok(PerfDb { fractions, records })
 }
 
-/// Write the database to a file (atomically via a temp file).
+/// Write the database to a file (atomically via a per-process unique temp
+/// file in the same directory — see [`crate::artifact::write_atomic`];
+/// `path.with_extension("tmp")` would collide when two processes write
+/// sibling artifacts).
 pub fn save(db: &PerfDb, path: &Path) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {}", tmp.display()))?;
-        f.write_all(&to_bytes(db))?;
-    }
-    std::fs::rename(&tmp, path)?;
-    Ok(())
+    crate::artifact::write_atomic(path, &to_bytes(db))
+        .with_context(|| format!("saving perfdb {}", path.display()))
 }
 
 /// Load a database from a file.
@@ -209,5 +244,33 @@ mod tests {
     fn crc32_known_vector() {
         // "123456789" → 0xCBF43926 (IEEE test vector)
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn streaming_crc_matches_one_shot() {
+        let data = to_bytes(&sample_db());
+        let mut c = Crc32::new();
+        for chunk in data.chunks(7) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), crc32(&data));
+        assert_eq!(Crc32::new().finish(), crc32(b""));
+    }
+
+    #[test]
+    fn concurrent_saves_to_sibling_paths_do_not_collide() {
+        // `db.bin` and `db.tmp` targets once shared the temp name
+        // `db.tmp`; per-process unique temps must keep both writes intact.
+        let db = sample_db();
+        let dir = std::env::temp_dir().join(format!("tuna_store_tmp_{}", std::process::id()));
+        let a = dir.join("db.bin");
+        let b = dir.join("db.tmp");
+        std::thread::scope(|s| {
+            s.spawn(|| save(&db, &a).unwrap());
+            s.spawn(|| save(&db, &b).unwrap());
+        });
+        assert_eq!(load(&a).unwrap().records.len(), 3);
+        assert_eq!(load(&b).unwrap().records.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -5,8 +5,13 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use tuna::artifact::cells::{diff, SweepTable};
+use tuna::artifact::shard::ShardedPerfDb;
+use tuna::artifact::ArtifactStore;
 use tuna::config::experiment::TunaConfig;
-use tuna::coordinator::sweep::{run_sweep, SweepPolicy, SweepSpec};
+use tuna::coordinator::sweep::{
+    run_sweep, run_sweep_with_cache, BaselineCache, SweepPolicy, SweepSpec,
+};
 use tuna::coordinator::{self, RunSpec};
 use tuna::perfdb::builder::{build_database, sample_config, BuildParams};
 use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
@@ -133,6 +138,132 @@ fn sweep_memoizes_baselines_and_runs_tuna_cells() {
     assert!(stats.mean_fraction > 0.2 && stats.mean_fraction <= 1.0);
     assert!((tuna_cell.saving - (1.0 - stats.mean_fraction)).abs() < 1e-12);
     assert!(res.cells.iter().all(|c| c.loss.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// artifact store
+// ---------------------------------------------------------------------------
+
+#[test]
+fn persisted_sweep_reloads_byte_identical_to_in_memory_result() {
+    let spec = SweepSpec::new(["BFS", "Btree"])
+        .with_fractions([0.9, 0.7])
+        .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch])
+        .with_intervals(30);
+    let res = run_sweep(&spec).unwrap();
+    let in_memory = SweepTable::from_sweep(&res);
+
+    let root = std::env::temp_dir().join(format!("tuna_it_cells_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let store = ArtifactStore::open(&root).unwrap();
+    let path = store.sweep_path("it");
+    in_memory.save(&path).unwrap();
+
+    // "fresh process": nothing shared with the writer but the file
+    let reloaded = SweepTable::load(&path).unwrap();
+    assert_eq!(
+        reloaded.to_bytes(),
+        in_memory.to_bytes(),
+        "reloaded sweep table must be byte-identical to the in-memory result"
+    );
+    // and a self-diff is clean
+    let d = diff(&in_memory, &reloaded, 1e-12);
+    assert_eq!(d.matched, res.len());
+    assert!(d.regressions.is_empty() && d.improvements.is_empty());
+    assert!(d.only_in_a.is_empty() && d.only_in_b.is_empty());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn sharded_perfdb_answers_exactly_like_flat_on_built_records() {
+    let db = tiny_db();
+    let sharded = ShardedPerfDb::from_flat(&db, 4);
+    let mut native = NativeNn::new(&db);
+    let mut rng = Rng::new(21);
+    for _ in 0..24 {
+        let q = normalize(&sample_config(&mut rng).as_array());
+        let (fi, fd) = native.nearest(&q).unwrap();
+        let (si, sd) = sharded.nearest(&q, 3).unwrap();
+        assert_eq!((si, sd.to_bits()), (fi, fd.to_bits()));
+        let frac = rng.range_f64(0.5, 1.0);
+        assert_eq!(
+            db.time_at(fi, frac).to_bits(),
+            sharded.time_at(fi, frac).to_bits(),
+            "time_at must be bit-identical on shard {fi} at {frac}"
+        );
+    }
+    assert_eq!(store::to_bytes(&sharded.to_flat()), store::to_bytes(&db));
+}
+
+#[test]
+fn repeated_sweep_against_one_store_resimulates_zero_baselines() {
+    let root = std::env::temp_dir().join(format!("tuna_it_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let store = ArtifactStore::open(&root).unwrap();
+    let spec = SweepSpec::new(["Btree"])
+        .with_fractions([0.9, 0.8])
+        .with_seeds([1, 2])
+        .with_intervals(20);
+
+    let first = BaselineCache::persistent(&store.baselines_dir()).unwrap();
+    let res1 = run_sweep_with_cache(&spec, &first).unwrap();
+    assert_eq!(res1.baselines_computed, 2, "two seeds, two baselines");
+    assert_eq!(res1.baseline_disk_hits, 0);
+
+    // fresh cache over the same store = fresh process: everything loads
+    let second = BaselineCache::persistent(&store.baselines_dir()).unwrap();
+    let res2 = run_sweep_with_cache(&spec, &second).unwrap();
+    assert_eq!(res2.baselines_computed, 0, "no baseline re-simulation on rerun");
+    assert_eq!(res2.baseline_disk_hits, 2, "both baselines served from disk");
+    assert_eq!(res2.len(), res1.len());
+    for (a, b) in res1.cells.iter().zip(&res2.cells) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "disk baselines must not change losses");
+        assert_eq!(a.result.total_ns.to_bits(), b.result.total_ns.to_bits());
+    }
+    // the tables they persist are byte-identical too
+    assert_eq!(
+        SweepTable::from_sweep(&res1).to_bytes(),
+        SweepTable::from_sweep(&res2).to_bytes()
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn golden_tunadb1_fixture_still_parses() {
+    // On-disk format compatibility: this fixture was written by the
+    // TUNADB1 codec at the time the format was frozen. If it stops
+    // parsing — or any value drifts — the format changed and saved
+    // artifacts in the field would corrupt. Extend with a new magic
+    // instead of mutating this one.
+    let path = Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/golden_tunadb1.bin"
+    ));
+    let data = std::fs::read(path).expect("golden fixture present");
+    let db = store::from_bytes(&data).expect("TUNADB1 format drifted: golden fixture unreadable");
+    assert_eq!(db.fractions, vec![1.0, 0.8, 0.6]);
+    assert_eq!(db.records.len(), 2);
+    let r0 = &db.records[0];
+    assert_eq!(r0.raw, [1000.0, 200.0, 50.0, 40.0, 2.0, 8000.0, 2.0, 16.0]);
+    assert_eq!(r0.times_ns, vec![100.0, 120.0, 150.0]);
+    let r1 = &db.records[1];
+    assert_eq!(r1.raw, [20000.0, 5000.0, 300.0, 250.0, 0.5, 16000.0, 4.0, 24.0]);
+    assert_eq!(r1.times_ns, vec![200.0, 230.0, 290.0]);
+    // stored normalized vectors agree with today's normalize()
+    for r in &db.records {
+        let want = normalize(&r.raw);
+        for d in 0..8 {
+            assert!(
+                (want[d] - r.vec[d]).abs() < 1e-4,
+                "normalized dim {d}: fixture {} vs {}",
+                r.vec[d],
+                want[d]
+            );
+        }
+    }
+    // byte-for-byte stability: re-serializing the parsed database must
+    // reproduce the checked-in file exactly
+    assert_eq!(store::to_bytes(&db), data, "TUNADB1 serializer drifted from golden bytes");
 }
 
 #[test]
