@@ -34,7 +34,9 @@ fn main() -> tuna::Result<()> {
     // native oracle (with a warning — the point of this example is the
     // full three-layer stack).
     let artifacts = Path::new("artifacts");
-    let (query, backend): (Box<dyn NnQuery>, &str) =
+    // `+ Send` because the query backend now sits behind the tuner
+    // service, which may host it on a background aggregation thread.
+    let (query, backend): (Box<dyn NnQuery + Send>, &str) =
         match XlaNn::from_manifest(artifacts, &db) {
             Ok(x) => (Box::new(x), "xla (AOT pallas kernel via PJRT)"),
             Err(e) => {

@@ -50,8 +50,8 @@ fn main() -> tuna::Result<()> {
         &["pages/interval", "loss", "promotions", "failures"],
     );
     for budget in [8u64, 32, 128, 512] {
-        let mut machine = MachineModel::default();
-        machine.kswapd_pages_per_interval = budget;
+        let machine =
+            MachineModel { kswapd_pages_per_interval: budget, ..MachineModel::default() };
         let mut spec = RunSpec::new("BFS").with_intervals(200).with_fraction(0.7);
         spec.machine = machine.clone();
         let base_spec = spec.clone().with_fraction(1.0);

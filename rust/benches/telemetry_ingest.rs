@@ -1,0 +1,114 @@
+//! Tuner-service ingestion throughput: samples/sec through the bounded
+//! channel into the background aggregation thread, at 1, 8 and 64
+//! concurrent sessions.
+//!
+//! Each session publishes a fixed number of synthetic samples (period
+//! 2.5 s → a decision every 25th sample, so the decision path — NN query
+//! + curve scan + mailbox round-trip — is exercised at its realistic
+//! duty cycle, not avoided). The aggregation thread is the intended
+//! serialization point; this bench measures how much telemetry it
+//! absorbs as publishers scale.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::perfdb::builder::{build_database, BuildParams};
+use tuna::perfdb::native::NativeNn;
+use tuna::report::{results_dir, Table};
+use tuna::service::{SessionReport, SessionSpec, TunerService};
+use tuna::sim::MachineModel;
+use tuna::telemetry::TelemetrySample;
+use tuna::util::human_ns;
+
+const SAMPLES_PER_SESSION: u32 = 10_000;
+
+fn session_spec(name: String) -> SessionSpec {
+    SessionSpec {
+        name,
+        capacity: 9_000,
+        rss_pages: 8_000,
+        hot_thr: 2,
+        threads: 16,
+        cfg: TunaConfig::default(), // 2.5 s period = 25 intervals
+    }
+}
+
+fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
+    TelemetrySample {
+        interval,
+        acc_fast: 9_000 + salt % 512,
+        acc_slow: 700,
+        sacc_fast: 9_000 + salt % 512,
+        sacc_slow: 700,
+        flops: 500_000,
+        iops: 500_000,
+        promoted: 25,
+        promote_failed: 1,
+        demoted_kswapd: 22,
+        demoted_direct: 3,
+        fast_free: 180,
+    }
+}
+
+fn main() -> tuna::Result<()> {
+    let db = Arc::new(build_database(&BuildParams {
+        n_configs: 64,
+        fractions: vec![1.0, 0.9, 0.8, 0.7, 0.6, 0.5],
+        intervals: 3,
+        warmup: 1,
+        seed: 17,
+        machine: MachineModel::default(),
+        threads: 4,
+    }));
+
+    let mut t = Table::new(
+        "telemetry ingestion: samples/sec through the service channel",
+        &["sessions", "samples", "decisions", "wall", "samples/sec", "per-sample"],
+    );
+
+    for &n_sessions in &[1usize, 8, 64] {
+        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        let t0 = Instant::now();
+        let reports: Vec<SessionReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_sessions)
+                .map(|i| {
+                    let service = &service;
+                    s.spawn(move || {
+                        let mut h = service
+                            .register(session_spec(format!("bench-{i}")))
+                            .expect("register session");
+                        for k in 1..=SAMPLES_PER_SESSION {
+                            std::hint::black_box(h.publish(synth_sample(k, i as u64)));
+                        }
+                        h.finish().expect("session report")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("publisher thread")).collect()
+        });
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        service.shutdown();
+
+        let total_samples: u64 = reports.iter().map(|r| r.samples).sum();
+        let decisions: usize = reports.iter().map(|r| r.decisions.len()).sum();
+        assert_eq!(
+            total_samples,
+            SAMPLES_PER_SESSION as u64 * n_sessions as u64,
+            "every published sample must reach the aggregation thread"
+        );
+        let rate = total_samples as f64 / (wall_ns / 1e9);
+        t.row(vec![
+            n_sessions.to_string(),
+            total_samples.to_string(),
+            decisions.to_string(),
+            human_ns(wall_ns as u64),
+            format!("{:.0}", rate),
+            human_ns((wall_ns / total_samples as f64) as u64),
+        ]);
+    }
+
+    t.print();
+    t.to_csv(&results_dir().join("telemetry_ingest.csv"))?;
+    Ok(())
+}

@@ -21,6 +21,7 @@ use anyhow::{anyhow, Result};
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::{NativeNn, NnQuery};
 use crate::perfdb::PerfDb;
+use crate::service::{Event, SessionSpec, TunerService};
 use crate::sim::{Engine, IntervalModel, MachineModel, RunResult};
 use crate::tpp::{FirstTouch, Tpp, Watermarks};
 use crate::tuner::{Decision, Tuner};
@@ -117,16 +118,19 @@ pub fn profile_tpp(
     let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
     let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
     tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
-    let mut telemetry =
-        crate::telemetry::Telemetry::new(spec.hot_thr, w.threads(), w.rss_pages() as u64);
+    let mut window = crate::telemetry::WindowAggregator::new(
+        spec.hot_thr,
+        w.threads(),
+        w.rss_pages() as u64,
+    );
     let result = spec.engine().run(w.as_mut(), &mut tpp, cap, |t| {
         // skip the allocation epoch: its burst is not steady-state
         if t.interval > 1 {
-            telemetry.observe(t);
+            window.observe(&t.sample());
         }
         None
     });
-    let cfg = telemetry
+    let cfg = window
         .take_window_config()
         .ok_or_else(|| anyhow!("empty telemetry window"))?;
     Ok((result, cfg))
@@ -162,7 +166,108 @@ impl TunaRun {
 /// Run under TPP + Tuna with the given performance database and query
 /// backend. The run starts at 100% fast memory (the paper's deployment
 /// scenario: shrink from peak).
+///
+/// Since the tuner-as-a-service redesign this is a thin wrapper: it
+/// stands up a private synchronous [`TunerService`] and runs one session
+/// against it. Use [`run_tuna_service`] to share one (possibly
+/// channel-mode) service across many runs, or [`run_tuna_inloop`] for
+/// the classic in-loop tuner the service is proven bit-identical to.
 pub fn run_tuna(
+    spec: &RunSpec,
+    db: Arc<PerfDb>,
+    query: Box<dyn NnQuery + Send>,
+    tuna: &TunaConfig,
+) -> Result<TunaRun> {
+    let service = TunerService::inline(db, query);
+    run_tuna_service(spec, &service, tuna)
+}
+
+/// Convenience: Tuna with the native (brute-force) query backend.
+pub fn run_tuna_native(spec: &RunSpec, db: Arc<PerfDb>, tuna: &TunaConfig) -> Result<TunaRun> {
+    let query = Box::new(NativeNn::new(&db));
+    run_tuna(spec, db, query, tuna)
+}
+
+/// Run one Tuna-managed session against a caller-owned [`TunerService`]
+/// (shared by any number of concurrent runs — this is the path sweep
+/// Tuna cells take). The engine publishes a [`crate::telemetry::TelemetrySample`]
+/// per interval; watermark decisions come back through the session
+/// mailbox at period boundaries.
+pub fn run_tuna_service(
+    spec: &RunSpec,
+    service: &TunerService,
+    tuna: &TunaConfig,
+) -> Result<TunaRun> {
+    run_tuna_session(spec, service, tuna, None)
+}
+
+/// As [`run_tuna_service`], additionally passing every stream event
+/// (open / one sample per interval / close) to `tap` — the recording
+/// hook behind `tuna tune --record`, whose output `tuna serve` replays
+/// to the same decisions.
+pub fn run_tuna_service_tapped(
+    spec: &RunSpec,
+    service: &TunerService,
+    tuna: &TunaConfig,
+    mut tap: impl FnMut(&Event),
+) -> Result<TunaRun> {
+    run_tuna_session(spec, service, tuna, Some(&mut tap))
+}
+
+/// Shared body: the event construction (with its per-interval name
+/// clone) happens only when a tap is attached, so the common untapped
+/// path — every sweep Tuna cell — publishes samples allocation-free.
+fn run_tuna_session(
+    spec: &RunSpec,
+    service: &TunerService,
+    tuna: &TunaConfig,
+    mut tap: Option<&mut dyn FnMut(&Event)>,
+) -> Result<TunaRun> {
+    let mut w = spec.make_workload()?;
+    let rss = w.rss_pages() as u64;
+    let cap = Engine::fm_capacity(w.rss_pages(), 1.0);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
+    let session_spec = SessionSpec {
+        name: format!("{}@{}", spec.workload.to_ascii_lowercase(), spec.seed),
+        capacity: cap,
+        rss_pages: rss,
+        hot_thr: spec.hot_thr,
+        threads: w.threads(),
+        cfg: tuna.clone(),
+    };
+    if let Some(tap) = tap.as_mut() {
+        tap(&Event::open_for(&session_spec));
+    }
+    let name = session_spec.name.clone();
+    let mut session = service.register(session_spec)?;
+    let result = spec.engine().run(w.as_mut(), &mut tpp, cap, |t| {
+        let sample = t.sample();
+        if let Some(tap) = tap.as_mut() {
+            tap(&Event::Sample { name: name.clone(), sample });
+        }
+        session.publish(sample)
+    });
+    if let Some(tap) = tap.as_mut() {
+        tap(&Event::Close { name });
+    }
+    let report = session.finish()?;
+    Ok(TunaRun {
+        result,
+        decisions: report.decisions,
+        mean_fraction: report.mean_fraction,
+        min_fraction: report.min_fraction,
+        vmstat: report.vmstat,
+        decide_ns: report.decide_ns,
+        backend: service.backend(),
+    })
+}
+
+/// The pre-service in-loop path: a [`Tuner`] owning its query backend,
+/// attached directly as the engine observer. Kept as the reference
+/// implementation the service modes are proven bit-identical against
+/// (see the integration suite's determinism tests).
+pub fn run_tuna_inloop(
     spec: &RunSpec,
     db: Arc<PerfDb>,
     query: Box<dyn NnQuery>,
@@ -188,17 +293,11 @@ pub fn run_tuna(
         result,
         mean_fraction: tuner.mean_fraction(),
         min_fraction: tuner.min_fraction(),
-        vmstat: tuner.telemetry().vmstat(),
-        decide_ns: tuner.decide_ns,
-        decisions: std::mem::take(&mut tuner.decisions),
+        vmstat: tuner.vmstat(),
+        decide_ns: tuner.decide_ns(),
+        decisions: std::mem::take(&mut tuner.state.decisions),
         backend,
     })
-}
-
-/// Convenience: Tuna with the native (brute-force) query backend.
-pub fn run_tuna_native(spec: &RunSpec, db: Arc<PerfDb>, tuna: &TunaConfig) -> Result<TunaRun> {
-    let query = Box::new(NativeNn::new(&db));
-    run_tuna(spec, db, query, tuna)
 }
 
 /// Per-period relative loss series: windows of `period` intervals,

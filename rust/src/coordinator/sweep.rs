@@ -28,10 +28,12 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::{
-    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tuna_native, RunSpec,
+    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tuna_service, RunSpec,
 };
 use crate::config::experiment::TunaConfig;
+use crate::perfdb::native::NativeNn;
 use crate::perfdb::PerfDb;
+use crate::service::TunerService;
 use crate::sim::{MachineModel, RunResult};
 use crate::util::parallel::{default_threads, parallel_map};
 
@@ -51,6 +53,15 @@ pub enum SweepPolicy {
 }
 
 impl SweepPolicy {
+    /// Every policy, in canonical (on-disk code) order — the single
+    /// source of truth for [`Self::parse`]'s error message.
+    pub const ALL: [SweepPolicy; 4] = [
+        SweepPolicy::Tpp,
+        SweepPolicy::FirstTouch,
+        SweepPolicy::Memtis,
+        SweepPolicy::Tuna,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             SweepPolicy::Tpp => "tpp",
@@ -60,14 +71,19 @@ impl SweepPolicy {
         }
     }
 
-    /// Parse a CLI-style policy name.
+    /// Parse a CLI-style policy name, case-insensitively. The error
+    /// message enumerates every valid name (derived from [`Self::ALL`],
+    /// so it can never drift from the actual policy set).
     pub fn parse(s: &str) -> Result<Self> {
-        match s.to_ascii_lowercase().as_str() {
+        match s.trim().to_ascii_lowercase().as_str() {
             "tpp" => Ok(SweepPolicy::Tpp),
-            "first-touch" | "firsttouch" | "ft" => Ok(SweepPolicy::FirstTouch),
+            "first-touch" | "firsttouch" | "first_touch" | "ft" => Ok(SweepPolicy::FirstTouch),
             "memtis" => Ok(SweepPolicy::Memtis),
             "tuna" => Ok(SweepPolicy::Tuna),
-            other => bail!("unknown policy `{other}` (try: tpp, first-touch, memtis, tuna)"),
+            other => {
+                let valid: Vec<&str> = Self::ALL.iter().map(|p| p.name()).collect();
+                bail!("unknown policy `{other}`; valid policies: {}", valid.join(", "))
+            }
         }
     }
 
@@ -183,11 +199,29 @@ impl SweepSpec {
     /// Expand the grid into cells in deterministic order:
     /// workload → seed → hot_thr → fraction → policy.
     ///
+    /// Errors on any empty grid dimension, naming it — a silently empty
+    /// cross product would let a sweep "succeed" with an empty table.
+    ///
     /// [`SweepPolicy::Tuna`] ignores the fixed fraction (the tuner always
     /// starts at 100% and shrinks), so the fraction axis is collapsed for
     /// Tuna cells: one cell per (workload, seed, hot_thr), recorded at
     /// `fm_fraction = 1.0`, instead of `fractions.len()` identical runs.
-    pub fn expand(&self) -> Vec<SweepCellSpec> {
+    pub fn expand(&self) -> Result<Vec<SweepCellSpec>> {
+        let empties = [
+            ("workloads", self.workloads.is_empty()),
+            ("fractions", self.fractions.is_empty()),
+            ("seeds", self.seeds.is_empty()),
+            ("hot_thrs", self.hot_thrs.is_empty()),
+            ("policies", self.policies.is_empty()),
+        ];
+        for (axis, empty) in empties {
+            if empty {
+                bail!(
+                    "sweep grid dimension `{axis}` is empty: the cross product would \
+                     yield zero cells (give `{axis}` at least one value)"
+                );
+            }
+        }
         let mut cells = Vec::with_capacity(
             self.workloads.len()
                 * self.seeds.len()
@@ -220,7 +254,7 @@ impl SweepSpec {
                 }
             }
         }
-        cells
+        Ok(cells)
     }
 }
 
@@ -424,14 +458,26 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
 
 /// Execute a sweep against a caller-owned [`BaselineCache`] (reusable
 /// across several grids over the same workloads).
+///
+/// Tuna cells do not each build a tuner: every Tuna cell of the sweep is
+/// a session on **one shared channel-mode [`TunerService`]** (stood up
+/// here, torn down when the sweep returns), so baseline simulations and
+/// Tuna runs concurrently feed a single aggregation thread. Decisions
+/// stay bit-identical to the in-loop path for any thread count — the
+/// per-session state is the in-loop tuner's, and the shared
+/// nearest-neighbour backend is stateless.
 pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<SweepResult> {
-    let cells = spec.expand();
-    if cells.is_empty() {
-        bail!("empty sweep grid: every axis (workloads, fractions, seeds, hot_thrs, policies) must be non-empty");
-    }
-    if cells.iter().any(|c| c.policy == SweepPolicy::Tuna) && spec.tuna.is_none() {
+    let cells = spec.expand()?;
+    let has_tuna = cells.iter().any(|c| c.policy == SweepPolicy::Tuna);
+    if has_tuna && spec.tuna.is_none() {
         bail!("SweepPolicy::Tuna requires SweepSpec::tuna (performance database + TunaConfig)");
     }
+    let service = match &spec.tuna {
+        Some((db, _)) if has_tuna => {
+            Some(TunerService::spawn(db.clone(), Box::new(NativeNn::new(db))))
+        }
+        _ => None,
+    };
     let threads = if spec.threads == 0 { default_threads() } else { spec.threads };
     let hits0 = cache.hits();
     let misses0 = cache.misses();
@@ -464,8 +510,9 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
             SweepPolicy::FirstTouch => (run_first_touch(&rs)?, None),
             SweepPolicy::Memtis => (run_memtis(&rs)?, None),
             SweepPolicy::Tuna => {
-                let (db, cfg) = spec.tuna.as_ref().expect("checked above");
-                let run = run_tuna_native(&rs, db.clone(), cfg)?;
+                let (_, cfg) = spec.tuna.as_ref().expect("checked above");
+                let svc = service.as_ref().expect("created above");
+                let run = run_tuna_service(&rs, svc, cfg)?;
                 let stats = TunaCellStats {
                     decisions: run.decisions.len(),
                     mean_fraction: run.mean_fraction,
@@ -507,7 +554,7 @@ mod tests {
         let spec = tiny(&["BFS", "Btree"])
             .with_fractions([0.9, 0.8])
             .with_policies([SweepPolicy::Tpp, SweepPolicy::FirstTouch]);
-        let cells = spec.expand();
+        let cells = spec.expand().unwrap();
         assert_eq!(cells.len(), 2 * 2 * 2);
         assert_eq!(cells[0].workload, "BFS");
         assert_eq!(cells[0].fm_fraction, 0.9);
@@ -516,7 +563,7 @@ mod tests {
         assert_eq!(cells[2].fm_fraction, 0.8);
         assert_eq!(cells[4].workload, "Btree");
         // expand twice → identical
-        let again = spec.expand();
+        let again = spec.expand().unwrap();
         for (a, b) in cells.iter().zip(&again) {
             assert_eq!(format!("{a:?}"), format!("{b:?}"));
         }
@@ -527,7 +574,7 @@ mod tests {
         let spec = tiny(&["Btree"])
             .with_fractions([0.9, 0.8, 0.7])
             .with_policies([SweepPolicy::Tpp, SweepPolicy::Tuna]);
-        let cells = spec.expand();
+        let cells = spec.expand().unwrap();
         // 3 Tpp cells + exactly one Tuna cell (run_tuna ignores the fixed
         // fraction, so duplicating it across the axis would waste runs).
         assert_eq!(cells.len(), 4);
@@ -539,15 +586,44 @@ mod tests {
 
     #[test]
     fn policy_names_roundtrip() {
-        for p in [
-            SweepPolicy::Tpp,
-            SweepPolicy::FirstTouch,
-            SweepPolicy::Memtis,
-            SweepPolicy::Tuna,
-        ] {
+        for p in SweepPolicy::ALL {
             assert_eq!(SweepPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(SweepPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn policy_parse_is_case_insensitive_and_lists_valid_names() {
+        for (alias, want) in [
+            ("TPP", SweepPolicy::Tpp),
+            ("Tuna", SweepPolicy::Tuna),
+            ("MEMTIS", SweepPolicy::Memtis),
+            ("First-Touch", SweepPolicy::FirstTouch),
+            ("FIRSTTOUCH", SweepPolicy::FirstTouch),
+            ("fT", SweepPolicy::FirstTouch),
+            (" tpp ", SweepPolicy::Tpp),
+        ] {
+            assert_eq!(SweepPolicy::parse(alias).unwrap(), want, "alias `{alias}`");
+        }
+        let msg = format!("{:#}", SweepPolicy::parse("bogus").unwrap_err());
+        for p in SweepPolicy::ALL {
+            assert!(msg.contains(p.name()), "error must list `{}`: {msg}", p.name());
+        }
+    }
+
+    #[test]
+    fn expand_names_the_empty_dimension() {
+        let cases: [(&str, SweepSpec); 5] = [
+            ("workloads", SweepSpec::new(Vec::<String>::new())),
+            ("fractions", tiny(&["BFS"]).with_fractions([])),
+            ("seeds", tiny(&["BFS"]).with_seeds([])),
+            ("hot_thrs", tiny(&["BFS"]).with_hot_thrs([])),
+            ("policies", tiny(&["BFS"]).with_policies([])),
+        ];
+        for (axis, spec) in cases {
+            let msg = format!("{:#}", spec.expand().unwrap_err());
+            assert!(msg.contains(axis), "error for empty `{axis}` must name it: {msg}");
+        }
     }
 
     #[test]

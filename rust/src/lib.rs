@@ -23,7 +23,11 @@
 //!   memoized fast-memory-only baselines.
 //! * [`perfdb::builder::build_database`] — offline micro-benchmark sweep
 //!   (parallel over configuration × fraction cells, byte-deterministic).
-//! * [`tuner::Tuner`] — the online controller (watermark programming).
+//! * [`service::TunerService`] — the tuner as a service: one shared
+//!   database backend, many concurrent telemetry sessions over a bounded
+//!   channel (`tuna serve` ingests sessions from outside the process).
+//! * [`tuner::Tuner`] — the in-loop online controller (watermark
+//!   programming), the reference the service path is proven against.
 //! * [`runtime::PerfDbExec`] — the AOT query executable (PJRT CPU).
 //! * [`artifact::ArtifactStore`] — the persistent artifact store: sharded
 //!   perf-DB segments, durable sweep cell tables, and the cross-process
@@ -40,6 +44,7 @@ pub mod microbench;
 pub mod perfdb;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod telemetry;
 pub mod tpp;

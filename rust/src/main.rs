@@ -9,7 +9,16 @@
 //!           [--intervals N] [--seed S] [--config FILE]
 //! tuna tune --workload BFS [--target 0.05] [--period 2.5] [--xla]
 //!           [--db artifacts/perfdb.bin] [--artifacts artifacts]
-//!           [--intervals N] [--config FILE]
+//!           [--intervals N] [--config FILE] [--record FILE]
+//!                               --record writes the run's telemetry
+//!                               stream (tuna-telemetry v1) for replay
+//!                               through `tuna serve`
+//! tuna serve [--db artifacts/perfdb.bin | --store DIR [--name perfdb]]
+//!           [--artifacts artifacts] [--target 0.05] [--period 2.5] [FILE...]
+//!                               tuner-as-a-service ingestion: tail
+//!                               telemetry sample streams from FILEs (or
+//!                               stdin) and print watermark decisions as
+//!                               sessions hit their tuning periods
 //! tuna sweep [--workloads BFS,SSSP] [--fractions 1.0,0.9,0.8,...]
 //!           [--policy tpp,first-touch,memtis,tuna] [--seeds 1,2,3]
 //!           [--hot-thrs 2,4] [--threads N] [--intervals N]
@@ -32,7 +41,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use tuna::artifact::cells::{diff, SweepTable};
-use tuna::artifact::shard::DEFAULT_SHARDS;
+use tuna::artifact::shard::{ShardedPerfDb, DEFAULT_SHARDS};
 use tuna::artifact::{fnv1a64, ArtifactStore};
 use tuna::cli::Args;
 use tuna::config::ExperimentConfig;
@@ -40,8 +49,10 @@ use tuna::coordinator::sweep::{run_sweep_with_cache, BaselineCache};
 use tuna::coordinator::{self, RunSpec, SweepPolicy, SweepSpec};
 use tuna::perfdb::builder::{build_database_sharded, ensure_db, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
+use tuna::perfdb::PerfDb;
 use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
+use tuna::service::{IngestOutput, Ingestor, TunerService};
 use tuna::sim::MachineModel;
 use tuna::util::human_bytes;
 use tuna::workloads::{self, PAGES_PER_PAPER_GB, TABLE1};
@@ -64,14 +75,17 @@ fn run() -> Result<()> {
         Some("build-db") => cmd_build_db(&mut args),
         Some("run") => cmd_run(&mut args),
         Some("tune") => cmd_tune(&mut args),
+        Some("serve") => cmd_serve(&mut args),
         Some("sweep") => cmd_sweep(&mut args),
         Some("store") => cmd_store(&mut args),
         Some(other) => {
-            bail!("unknown subcommand `{other}` (try: info, build-db, run, tune, sweep, store)")
+            bail!(
+                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store)"
+            )
         }
         None => {
             println!(
-                "usage: tuna <info|build-db|run|tune|sweep|store> [flags]  (see README)"
+                "usage: tuna <info|build-db|run|tune|serve|sweep|store> [flags]  (see README)"
             );
             Ok(())
         }
@@ -201,20 +215,39 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let use_xla = args.switch("xla") || exp.tuna.use_xla;
+    let record = args.get("record").map(PathBuf::from);
     let mut tuna_cfg = exp.tuna.clone();
     tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
     tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
+    let mut params = BuildParams::default();
+    params.n_configs = args.get_parse("configs", params.n_configs)?;
     args.finish()?;
 
-    let db = Arc::new(ensure_db(&db_path, &BuildParams::default())?);
-    let query: Box<dyn NnQuery> = if use_xla {
+    let db = Arc::new(ensure_db(&db_path, &params)?);
+    let query: Box<dyn NnQuery + Send> = if use_xla {
         Box::new(XlaNn::from_manifest(&artifacts, &db)?)
     } else {
         Box::new(NativeNn::new(&db))
     };
 
     let baseline = coordinator::run_fm_only(&spec)?;
-    let run = coordinator::run_tuna(&spec, db, query, &tuna_cfg)?;
+    let run = match &record {
+        Some(path) => {
+            // Tap the session's stream events into a tuna-telemetry v1
+            // file that `tuna serve` replays to the same decisions.
+            let service = TunerService::inline(db.clone(), query);
+            let mut stream = format!("{}\n", tuna::service::ingest::STREAM_HEADER);
+            let run =
+                coordinator::run_tuna_service_tapped(&spec, &service, &tuna_cfg, |ev| {
+                    stream.push_str(&ev.to_line());
+                    stream.push('\n');
+                })?;
+            tuna::artifact::write_atomic(path, stream.as_bytes())?;
+            println!("telemetry stream recorded to {}", path.display());
+            run
+        }
+        None => coordinator::run_tuna(&spec, db, query, &tuna_cfg)?,
+    };
     let loss = coordinator::overall_loss(&run.result, &baseline);
 
     let mut t = Table::new(
@@ -251,6 +284,97 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     if !known.iter().any(|n| n.eq_ignore_ascii_case(&spec.workload)) {
         eprintln!("note: `{}` is not a Table 1 workload", spec.workload);
     }
+    Ok(())
+}
+
+/// `tuna serve`: the tuner as a standalone service. Telemetry arrives
+/// from *outside* the process as tuna-telemetry v1 lines (files or
+/// stdin, any number of interleaved sessions); decisions print as the
+/// sessions hit their tuning-period boundaries, and each `close` line
+/// prints the session's final report.
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let exp = load_exp(args)?;
+    let store_dir = args.get("store").map(PathBuf::from);
+    let named = args.get("name").map(|s| s.to_string());
+    if store_dir.is_none() && named.is_some() {
+        bail!("--name requires --store DIR (it names the sharded perf DB inside the store)");
+    }
+    let db_given = args.get("db").map(|s| s.to_string());
+    if store_dir.is_some() && db_given.is_some() {
+        bail!(
+            "--db conflicts with --store (the store's sharded perf DB is the backend; \
+             pick it with --name)"
+        );
+    }
+    let db_name = named.unwrap_or_else(|| "perfdb".to_string());
+    let db_path = PathBuf::from(db_given.unwrap_or_else(|| exp.perfdb_path.clone()));
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut tuna_cfg = exp.tuna.clone();
+    tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
+    tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
+    let mut params = BuildParams::default();
+    params.n_configs = args.get_parse("configs", params.n_configs)?;
+    let files = args.positional.clone();
+    args.finish()?;
+
+    // The database backend: a sharded store perf DB when --store is
+    // given, else the flat artifact (built on first use).
+    let db: Arc<PerfDb> = match &store_dir {
+        Some(dir) => {
+            let store = ArtifactStore::open_existing(dir)?;
+            let sharded = ShardedPerfDb::load(&store.perfdb_dir().join(&db_name))?;
+            Arc::new(sharded.to_flat())
+        }
+        None => Arc::new(ensure_db(&db_path, &params)?),
+    };
+    let (query, backend) = tuna::runtime::service_backend(&artifacts, &db);
+    println!(
+        "tuner service up: {} records x {} fm sizes, backend {backend}, target {}, period {}s",
+        db.len(),
+        db.fractions.len(),
+        pct(tuna_cfg.loss_target),
+        tuna_cfg.period_s
+    );
+
+    let service = TunerService::spawn(db.clone(), query);
+    let mut ingestor = Ingestor::new(&service, tuna_cfg);
+    let print = |out: IngestOutput| match out {
+        IngestOutput::Decision { session, interval, usable_fm, .. } => {
+            println!("decision {session} interval={interval} usable_fm={usable_fm}");
+        }
+        IngestOutput::Closed(report) => {
+            println!(
+                "closed {}: {} samples, {} decisions, mean FM saving {}, max {}, query path {}",
+                report.name,
+                report.samples,
+                report.decisions.len(),
+                pct(1.0 - report.mean_fraction),
+                pct(1.0 - report.min_fraction),
+                tuna::util::human_ns(report.decide_ns as u64)
+            );
+        }
+    };
+    let mut totals = (0u64, 0u64, 0u64); // lines, samples, decisions
+    if files.is_empty() {
+        let stdin = std::io::stdin();
+        let stats = ingestor.ingest(stdin.lock(), print)?;
+        totals = (stats.lines, stats.samples, stats.decisions);
+    } else {
+        for file in &files {
+            let f = std::fs::File::open(file)
+                .map_err(|e| anyhow::anyhow!("opening stream {file}: {e}"))?;
+            let stats = ingestor.ingest(std::io::BufReader::new(f), print)?;
+            totals.0 += stats.lines;
+            totals.1 += stats.samples;
+            totals.2 += stats.decisions;
+        }
+    }
+    // streams without trailing `close` lines still get their reports
+    ingestor.finish_all(print)?;
+    println!(
+        "served {} lines: {} samples -> {} decisions",
+        totals.0, totals.1, totals.2
+    );
     Ok(())
 }
 

@@ -237,6 +237,33 @@ impl XlaNn {
     }
 }
 
+/// Both query backends must be able to move onto a
+/// [`crate::service::TunerService`] aggregation thread, where one
+/// instance serves every session — keep them `Send` or this stops
+/// compiling.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<XlaNn>();
+    assert_send::<PerfDbExec>();
+    assert_send::<crate::perfdb::native::NativeNn>();
+};
+
+/// The query backend a tuner service should share across sessions: the
+/// AOT XLA executable when the artifact manifest loads, else the native
+/// brute-force oracle. Returns the boxed backend plus its name for
+/// logs — how `tuna serve` stands up its [`crate::service::TunerService`]
+/// (`tuna tune` keeps its explicit `--xla` opt-in, which errors instead
+/// of falling back).
+pub fn service_backend(
+    artifacts: &Path,
+    db: &PerfDb,
+) -> (Box<dyn NnQuery + Send>, &'static str) {
+    match XlaNn::from_manifest(artifacts, db) {
+        Ok(x) => (Box::new(x), "xla"),
+        Err(_) => (Box::new(crate::perfdb::native::NativeNn::new(db)), "native"),
+    }
+}
+
 impl NnQuery for XlaNn {
     fn nearest(&mut self, q: &[f32; DIMS]) -> Result<(usize, f32)> {
         self.exec.query(q)

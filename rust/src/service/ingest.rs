@@ -1,0 +1,351 @@
+//! Text ingestion protocol for the tuner service: telemetry arriving
+//! from *outside* the process (`tuna serve`).
+//!
+//! The stream is line-oriented so any producer — a recorded run, a shell
+//! pipe, a fleet agent tailing `/proc/vmstat` — can speak it:
+//!
+//! ```text
+//! # tuna-telemetry v1
+//! open <session> <capacity> <rss_pages> <hot_thr> <threads>
+//! sample <session> <interval> <acc_fast> <acc_slow> <sacc_fast> <sacc_slow> \
+//!        <flops> <iops> <promoted> <promote_failed> <demoted_kswapd> \
+//!        <demoted_direct> <fast_free>
+//! close <session>
+//! ```
+//!
+//! (`sample` is one line; it is wrapped here for readability.) Blank
+//! lines and `#` comments are skipped. Session names are free-form
+//! tokens without whitespace; any number of sessions may be interleaved
+//! in one stream. Replaying a recorded stream through [`Ingestor`]
+//! produces decisions bit-identical to the run that recorded it — the
+//! determinism tests in the integration suite prove it.
+
+use std::collections::HashMap;
+use std::io::BufRead;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{SessionHandle, SessionReport, SessionSpec, TunerService};
+use crate::config::experiment::TunaConfig;
+use crate::telemetry::TelemetrySample;
+use crate::tpp::Watermarks;
+
+/// Header comment writers emit at the top of a stream (readers treat it
+/// as any other comment).
+pub const STREAM_HEADER: &str = "# tuna-telemetry v1";
+
+/// One parsed line of the ingestion stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    Open { name: String, capacity: u64, rss_pages: u64, hot_thr: u32, threads: u32 },
+    Sample { name: String, sample: TelemetrySample },
+    Close { name: String },
+}
+
+fn field<T: std::str::FromStr>(
+    it: &mut std::str::SplitWhitespace<'_>,
+    what: &'static str,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    let tok = it.next().ok_or_else(|| anyhow!("missing field `{what}`"))?;
+    tok.parse::<T>().map_err(|e| anyhow!("bad {what} `{tok}`: {e}"))
+}
+
+impl Event {
+    /// Parse one stream line. Returns `Ok(None)` for blanks and comments.
+    pub fn parse(line: &str) -> Result<Option<Event>> {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            return Ok(None);
+        }
+        let mut it = trimmed.split_whitespace();
+        let verb = it.next().expect("non-empty line has a first token");
+        let ev = match verb {
+            "open" => Event::Open {
+                name: field(&mut it, "session name")?,
+                capacity: field(&mut it, "capacity")?,
+                rss_pages: field(&mut it, "rss_pages")?,
+                hot_thr: field(&mut it, "hot_thr")?,
+                threads: field(&mut it, "threads")?,
+            },
+            "sample" => Event::Sample {
+                name: field(&mut it, "session name")?,
+                sample: TelemetrySample {
+                    interval: field(&mut it, "interval")?,
+                    acc_fast: field(&mut it, "acc_fast")?,
+                    acc_slow: field(&mut it, "acc_slow")?,
+                    sacc_fast: field(&mut it, "sacc_fast")?,
+                    sacc_slow: field(&mut it, "sacc_slow")?,
+                    flops: field(&mut it, "flops")?,
+                    iops: field(&mut it, "iops")?,
+                    promoted: field(&mut it, "promoted")?,
+                    promote_failed: field(&mut it, "promote_failed")?,
+                    demoted_kswapd: field(&mut it, "demoted_kswapd")?,
+                    demoted_direct: field(&mut it, "demoted_direct")?,
+                    fast_free: field(&mut it, "fast_free")?,
+                },
+            },
+            "close" => Event::Close { name: field(&mut it, "session name")? },
+            other => bail!("unknown telemetry verb `{other}`"),
+        };
+        if let Some(extra) = it.next() {
+            bail!("trailing token `{extra}` after {verb} line");
+        }
+        Ok(Some(ev))
+    }
+
+    /// Serialize to one stream line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Event::Open { name, capacity, rss_pages, hot_thr, threads } => {
+                format!("open {name} {capacity} {rss_pages} {hot_thr} {threads}")
+            }
+            Event::Sample { name, sample: s } => format!(
+                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {}",
+                s.interval,
+                s.acc_fast,
+                s.acc_slow,
+                s.sacc_fast,
+                s.sacc_slow,
+                s.flops,
+                s.iops,
+                s.promoted,
+                s.promote_failed,
+                s.demoted_kswapd,
+                s.demoted_direct,
+                s.fast_free
+            ),
+            Event::Close { name } => format!("close {name}"),
+        }
+    }
+
+    /// The `open` event announcing `spec` (the writer-side counterpart
+    /// of what [`Ingestor`] turns back into a [`SessionSpec`]).
+    pub fn open_for(spec: &SessionSpec) -> Event {
+        Event::Open {
+            name: spec.name.clone(),
+            capacity: spec.capacity,
+            rss_pages: spec.rss_pages,
+            hot_thr: spec.hot_thr,
+            threads: spec.threads,
+        }
+    }
+}
+
+/// What an ingested stream produces, in stream order.
+#[derive(Clone, Debug)]
+pub enum IngestOutput {
+    /// A period boundary closed and the service reprogrammed the
+    /// session's watermarks.
+    Decision { session: String, interval: u32, usable_fm: u64, watermarks: Watermarks },
+    /// A `close` line arrived; the session's final report.
+    Closed(SessionReport),
+}
+
+/// Counters for one ingestion pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestStats {
+    pub lines: u64,
+    pub samples: u64,
+    pub decisions: u64,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+}
+
+/// Drives a [`TunerService`] from a parsed event stream: `open` lines
+/// register sessions (all sharing the ingestor's [`TunaConfig`]),
+/// `sample` lines publish, `close` lines collect reports. The tuning
+/// cadence is the same as a live run's: every `period_intervals`-th
+/// sample of a session triggers a decision.
+pub struct Ingestor<'s> {
+    service: &'s TunerService,
+    cfg: TunaConfig,
+    sessions: HashMap<String, SessionHandle<'s>>,
+}
+
+impl<'s> Ingestor<'s> {
+    pub fn new(service: &'s TunerService, cfg: TunaConfig) -> Self {
+        Ingestor { service, cfg, sessions: HashMap::new() }
+    }
+
+    /// Sessions currently open.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Apply one event. Returns the output it produced, if any.
+    pub fn apply(&mut self, ev: Event) -> Result<Option<IngestOutput>> {
+        match ev {
+            Event::Open { name, capacity, rss_pages, hot_thr, threads } => {
+                if self.sessions.contains_key(&name) {
+                    bail!("session `{name}` is already open");
+                }
+                // copy the &'s reference out so the handle borrows the
+                // service for 's, not this &mut self call
+                let service: &'s TunerService = self.service;
+                let handle = service.register(SessionSpec {
+                    name: name.clone(),
+                    capacity,
+                    rss_pages,
+                    hot_thr,
+                    threads,
+                    cfg: self.cfg.clone(),
+                })?;
+                self.sessions.insert(name, handle);
+                Ok(None)
+            }
+            Event::Sample { name, sample } => {
+                let handle = self
+                    .sessions
+                    .get_mut(&name)
+                    .ok_or_else(|| anyhow!("sample for unknown session `{name}`"))?;
+                let interval = sample.interval;
+                Ok(handle.publish(sample).map(|wm| IngestOutput::Decision {
+                    usable_fm: wm.usable(handle.capacity()),
+                    session: name,
+                    interval,
+                    watermarks: wm,
+                }))
+            }
+            Event::Close { name } => {
+                let handle = self
+                    .sessions
+                    .remove(&name)
+                    .ok_or_else(|| anyhow!("close for unknown session `{name}`"))?;
+                Ok(Some(IngestOutput::Closed(handle.finish()?)))
+            }
+        }
+    }
+
+    /// Ingest a whole stream, passing every output to `sink`. Parse and
+    /// session errors abort with the offending line number in context.
+    pub fn ingest<R: BufRead>(
+        &mut self,
+        reader: R,
+        mut sink: impl FnMut(IngestOutput),
+    ) -> Result<IngestStats> {
+        let mut stats = IngestStats::default();
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.with_context(|| format!("reading stream line {}", lineno + 1))?;
+            stats.lines += 1;
+            let Some(ev) = Event::parse(&line)
+                .with_context(|| format!("stream line {}: `{line}`", lineno + 1))?
+            else {
+                continue;
+            };
+            match &ev {
+                Event::Sample { .. } => stats.samples += 1,
+                Event::Open { .. } => stats.sessions_opened += 1,
+                Event::Close { .. } => stats.sessions_closed += 1,
+            }
+            if let Some(out) = self.apply(ev)? {
+                if matches!(out, IngestOutput::Decision { .. }) {
+                    stats.decisions += 1;
+                }
+                sink(out);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Close every session still open (streams without trailing `close`
+    /// lines), reporting each through `sink` in name order — the session
+    /// map is a hash map, and replayed output must not depend on its
+    /// iteration order.
+    pub fn finish_all(&mut self, mut sink: impl FnMut(IngestOutput)) -> Result<()> {
+        let mut names: Vec<String> = self.sessions.keys().cloned().collect();
+        names.sort();
+        for name in names {
+            let handle = self.sessions.remove(&name).expect("listed above");
+            sink(IngestOutput::Closed(handle.finish()?));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_roundtrip_through_parse() {
+        let evs = [
+            Event::Open {
+                name: "bfs#1".into(),
+                capacity: 9_000,
+                rss_pages: 8_000,
+                hot_thr: 2,
+                threads: 16,
+            },
+            Event::Sample {
+                name: "bfs#1".into(),
+                sample: TelemetrySample {
+                    interval: 7,
+                    acc_fast: 1,
+                    acc_slow: 2,
+                    sacc_fast: 3,
+                    sacc_slow: 4,
+                    flops: 5,
+                    iops: 6,
+                    promoted: 7,
+                    promote_failed: 8,
+                    demoted_kswapd: 9,
+                    demoted_direct: 10,
+                    fast_free: 11,
+                },
+            },
+            Event::Close { name: "bfs#1".into() },
+        ];
+        for ev in evs {
+            let line = ev.to_line();
+            let back = Event::parse(&line).unwrap().expect("a real event");
+            assert_eq!(back, ev, "line `{line}`");
+        }
+    }
+
+    #[test]
+    fn comments_blanks_and_garbage() {
+        assert_eq!(Event::parse("").unwrap(), None);
+        assert_eq!(Event::parse("   ").unwrap(), None);
+        assert_eq!(Event::parse(STREAM_HEADER).unwrap(), None);
+        assert!(Event::parse("frobnicate x 1").is_err());
+        assert!(Event::parse("open onlyname").is_err(), "missing fields");
+        assert!(Event::parse("close a b").is_err(), "trailing token");
+        assert!(Event::parse("sample s 1 2 3").is_err(), "short sample");
+        assert!(Event::parse("open s 1 2 x 4").is_err(), "non-numeric field");
+    }
+
+    #[test]
+    fn unknown_session_and_double_open_error() {
+        use crate::perfdb::{normalize, Record};
+        let raw = [1000.0, 100.0, 10.0, 10.0, 1.0, 4000.0, 2.0, 16.0];
+        let db = std::sync::Arc::new(crate::perfdb::PerfDb {
+            fractions: vec![1.0, 0.5],
+            records: vec![Record { raw, vec: normalize(&raw), times_ns: vec![100.0, 120.0] }],
+        });
+        let service = TunerService::inline(
+            db.clone(),
+            Box::new(crate::perfdb::native::NativeNn::new(&db)),
+        );
+        let mut ing = Ingestor::new(&service, TunaConfig::default());
+        assert!(ing
+            .apply(Event::Close { name: "ghost".into() })
+            .is_err());
+        let open = Event::Open {
+            name: "a".into(),
+            capacity: 1_000,
+            rss_pages: 900,
+            hot_thr: 2,
+            threads: 4,
+        };
+        assert!(ing.apply(open.clone()).unwrap().is_none());
+        assert!(ing.apply(open).is_err(), "double open");
+        assert_eq!(ing.open_sessions(), 1);
+        let mut closed = 0;
+        ing.finish_all(|_| closed += 1).unwrap();
+        assert_eq!(closed, 1);
+        assert_eq!(ing.open_sessions(), 0);
+    }
+}

@@ -1,0 +1,613 @@
+//! Tuner-as-a-service: one long-lived [`TunerService`] owning the
+//! performance-database backend and the decision logic, fed by many
+//! concurrent sessions.
+//!
+//! The paper's deployment story (and the ROADMAP north star) is "one
+//! tuner service, many workloads": telemetry is cheap and flows in from
+//! every run, while the modeling artifacts and the query backend are
+//! shared. This module is that split made concrete:
+//!
+//! * [`TunerService`] owns the [`PerfDb`] and a single shared
+//!   [`NnQuery`] backend, and hosts one [`crate::tuner::TunerState`]
+//!   per session (telemetry aggregation is keyed by session — sessions
+//!   share nothing but the backend).
+//! * [`SessionHandle`] is a run's connection: it publishes
+//!   [`TelemetrySample`]s and, at tuning-period boundaries, polls its
+//!   decision mailbox for the [`Watermarks`] the service sent back.
+//! * Two wirings with identical semantics:
+//!   [`TunerService::inline`] executes everything synchronously in the
+//!   caller (no thread — the reference mode), while
+//!   [`TunerService::spawn`] moves aggregation and decisions onto a
+//!   background thread behind a **bounded** mpsc channel. Samples are
+//!   fire-and-forget; only period-boundary decision requests block the
+//!   publisher until the mailbox answers, which is exactly what keeps
+//!   the channel path bit-identical to the classic in-loop tuner for
+//!   any number of concurrent sessions (proven in the integration
+//!   suite's determinism tests).
+//!
+//! The text ingestion protocol (`tuna serve`) lives in [`ingest`].
+
+pub mod ingest;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::experiment::TunaConfig;
+use crate::perfdb::native::NnQuery;
+use crate::perfdb::PerfDb;
+use crate::telemetry::TelemetrySample;
+use crate::tpp::Watermarks;
+use crate::tuner::{Decision, TunerState};
+
+pub use ingest::{Event, IngestOutput, IngestStats, Ingestor};
+
+/// Default bound on the sample channel: deep enough that publishers never
+/// stall on aggregation hiccups, small enough that a wedged service
+/// exerts back-pressure instead of buffering unboundedly.
+pub const DEFAULT_CHANNEL_CAPACITY: usize = 1024;
+
+/// Everything the service needs to open a session: the session-constant
+/// query dimensions plus the tuner config governing its decisions.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    /// Free-form session name (reports, `tuna serve` streams). Must not
+    /// contain whitespace when used with the text protocol.
+    pub name: String,
+    /// Fast-tier capacity in pages (fixed; decisions move watermarks).
+    pub capacity: u64,
+    /// Workload RSS in pages (the 100% reference for fractions).
+    pub rss_pages: u64,
+    /// Page-management promotion threshold.
+    pub hot_thr: u32,
+    /// Worker threads of the workload.
+    pub threads: u32,
+    /// Tuner parameters for this session.
+    pub cfg: TunaConfig,
+}
+
+/// Final accounting for one closed session.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub name: String,
+    /// Samples the service aggregated for this session.
+    pub samples: u64,
+    pub decisions: Vec<Decision>,
+    pub mean_fraction: f64,
+    pub min_fraction: f64,
+    /// Cumulative vmstat counters at close.
+    pub vmstat: Vec<(&'static str, u64)>,
+    /// Total decision-path time (ns) across the session.
+    pub decide_ns: u128,
+}
+
+/// Messages on the service channel. Per-sender FIFO ordering of the mpsc
+/// channel is what makes the protocol deterministic: a session's
+/// `Decide` always arrives after every sample it should cover.
+enum Msg {
+    Open(u64, SessionSpec, SyncSender<Option<Watermarks>>),
+    Sample(u64, TelemetrySample),
+    Decide(u64, u32),
+    Close(u64, SyncSender<SessionReport>),
+}
+
+/// One hosted session: its tuner state plus the decision mailbox
+/// (channel mode only).
+struct Session {
+    name: String,
+    state: TunerState,
+    mailbox: Option<SyncSender<Option<Watermarks>>>,
+    samples: u64,
+}
+
+/// The service state proper: shared query backend + per-session states.
+/// Lives behind a mutex (inline mode) or on the aggregation thread
+/// (channel mode); the code paths are the same either way.
+struct Core {
+    db: Arc<PerfDb>,
+    query: Box<dyn NnQuery + Send>,
+    sessions: HashMap<u64, Session>,
+}
+
+impl Core {
+    fn open(
+        &mut self,
+        id: u64,
+        spec: SessionSpec,
+        mailbox: Option<SyncSender<Option<Watermarks>>>,
+    ) {
+        let state = TunerState::new(
+            self.db.clone(),
+            spec.cfg,
+            spec.capacity,
+            spec.rss_pages,
+            spec.hot_thr,
+            spec.threads,
+        );
+        self.sessions.insert(id, Session { name: spec.name, state, mailbox, samples: 0 });
+    }
+
+    fn sample(&mut self, id: u64, s: &TelemetrySample) {
+        if let Some(sess) = self.sessions.get_mut(&id) {
+            sess.state.ingest(s);
+            sess.samples += 1;
+        }
+    }
+
+    fn decide(&mut self, id: u64, interval: u32) -> Option<Watermarks> {
+        // split borrows: the session state and the shared backend are
+        // disjoint fields of the core
+        let Core { sessions, query, .. } = self;
+        let sess = sessions.get_mut(&id)?;
+        sess.state.decide(interval, query.as_mut())
+    }
+
+    fn close(&mut self, id: u64) -> Option<SessionReport> {
+        let sess = self.sessions.remove(&id)?;
+        let mean_fraction = sess.state.mean_fraction();
+        let min_fraction = sess.state.min_fraction();
+        let vmstat = sess.state.vmstat();
+        Some(SessionReport {
+            name: sess.name,
+            samples: sess.samples,
+            mean_fraction,
+            min_fraction,
+            vmstat,
+            decide_ns: sess.state.decide_ns,
+            decisions: sess.state.decisions,
+        })
+    }
+
+    fn handle(&mut self, msg: Msg) {
+        match msg {
+            Msg::Open(id, spec, mailbox) => self.open(id, spec, Some(mailbox)),
+            Msg::Sample(id, s) => self.sample(id, &s),
+            Msg::Decide(id, interval) => {
+                let wm = self.decide(id, interval);
+                if let Some(mb) = self.sessions.get(&id).and_then(|s| s.mailbox.as_ref()) {
+                    mb.send(wm).ok();
+                }
+            }
+            Msg::Close(id, reply) => {
+                if let Some(report) = self.close(id) {
+                    reply.send(report).ok();
+                }
+                // an unknown id drops `reply`, which surfaces as an error
+                // on the handle's recv — no silent hang
+            }
+        }
+    }
+}
+
+enum Mode {
+    Inline(Mutex<Core>),
+    Channel {
+        /// `None` after shutdown; cloned into every registered handle.
+        tx: Mutex<Option<SyncSender<Msg>>>,
+        join: Mutex<Option<JoinHandle<()>>>,
+    },
+}
+
+/// The tuner service. Construct with [`Self::inline`] (synchronous, the
+/// reference mode) or [`Self::spawn`] (background aggregation thread,
+/// bounded channel); register any number of concurrent sessions with
+/// [`Self::register`]. Decisions are bit-identical across both modes and
+/// any session interleaving because the per-session state and the
+/// decision code are exactly the in-loop tuner's.
+pub struct TunerService {
+    mode: Mode,
+    next_id: AtomicU64,
+    backend: &'static str,
+}
+
+impl TunerService {
+    /// Synchronous service: every publish aggregates under a lock in the
+    /// caller's thread. No background thread — the mode the channel path
+    /// is proven equivalent to, and the right choice for single-run CLI
+    /// commands.
+    pub fn inline(db: Arc<PerfDb>, query: Box<dyn NnQuery + Send>) -> Self {
+        let backend = query.backend();
+        TunerService {
+            mode: Mode::Inline(Mutex::new(Core { db, query, sessions: HashMap::new() })),
+            next_id: AtomicU64::new(1),
+            backend,
+        }
+    }
+
+    /// Channel service with the default channel capacity.
+    pub fn spawn(db: Arc<PerfDb>, query: Box<dyn NnQuery + Send>) -> Self {
+        Self::spawn_with_capacity(db, query, DEFAULT_CHANNEL_CAPACITY)
+    }
+
+    /// Channel service: aggregation and decisions run on a dedicated
+    /// background thread fed by a bounded mpsc channel of `capacity`
+    /// messages.
+    pub fn spawn_with_capacity(
+        db: Arc<PerfDb>,
+        query: Box<dyn NnQuery + Send>,
+        capacity: usize,
+    ) -> Self {
+        let backend = query.backend();
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(capacity.max(1));
+        let mut core = Core { db, query, sessions: HashMap::new() };
+        let join = std::thread::Builder::new()
+            .name("tuna-tuner-service".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    core.handle(msg);
+                }
+            })
+            .expect("spawning tuner-service aggregation thread");
+        TunerService {
+            mode: Mode::Channel { tx: Mutex::new(Some(tx)), join: Mutex::new(Some(join)) },
+            next_id: AtomicU64::new(1),
+            backend,
+        }
+    }
+
+    /// Query-backend name ("native" / "xla"), for reports.
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Whether this service runs the background-channel wiring.
+    pub fn is_channel(&self) -> bool {
+        matches!(self.mode, Mode::Channel { .. })
+    }
+
+    fn with_core<R>(&self, f: impl FnOnce(&mut Core) -> R) -> Option<R> {
+        match &self.mode {
+            Mode::Inline(core) => Some(f(&mut core.lock().unwrap())),
+            Mode::Channel { .. } => None,
+        }
+    }
+
+    /// Total sessions ever registered (ids are 1-based).
+    pub fn sessions_registered(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed).saturating_sub(1)
+    }
+
+    /// Open a session. The returned handle publishes samples and polls
+    /// decisions; call [`SessionHandle::finish`] to collect the report
+    /// (and, in channel mode, release the sender so the service can shut
+    /// down).
+    pub fn register(&self, spec: SessionSpec) -> Result<SessionHandle<'_>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let period_intervals = spec.cfg.period_intervals();
+        let capacity = spec.capacity;
+        let name = spec.name.clone();
+        let conn = match &self.mode {
+            Mode::Inline(core) => {
+                core.lock().unwrap().open(id, spec, None);
+                HandleConn::Inline
+            }
+            Mode::Channel { tx, .. } => {
+                let tx = tx
+                    .lock()
+                    .unwrap()
+                    .clone()
+                    .ok_or_else(|| anyhow!("tuner service is shut down"))?;
+                let (mb_tx, mb_rx) = std::sync::mpsc::sync_channel(1);
+                tx.send(Msg::Open(id, spec, mb_tx))
+                    .map_err(|_| anyhow!("tuner service thread is gone"))?;
+                HandleConn::Channel { tx, mailbox: mb_rx }
+            }
+        };
+        Ok(SessionHandle {
+            svc: self,
+            conn,
+            id,
+            name,
+            capacity,
+            period_intervals,
+            since_decision: 0,
+            published: 0,
+            dead: false,
+        })
+    }
+
+    /// Stop accepting new sessions and join the aggregation thread
+    /// (channel mode; a no-op inline). Every registered handle must be
+    /// finished first — their channel clones keep the thread alive.
+    pub fn shutdown(&self) {
+        if let Mode::Channel { tx, join } = &self.mode {
+            tx.lock().unwrap().take();
+            if let Some(j) = join.lock().unwrap().take() {
+                j.join().ok();
+            }
+        }
+    }
+}
+
+impl Drop for TunerService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+enum HandleConn {
+    Inline,
+    Channel { tx: SyncSender<Msg>, mailbox: Receiver<Option<Watermarks>> },
+}
+
+/// One run's connection to a [`TunerService`]: publish a sample per
+/// interval; at tuning-period boundaries the handle requests a decision
+/// and blocks on its mailbox until the service answers, so the returned
+/// watermarks program the policy at the same interval boundary the
+/// in-loop tuner would have programmed them.
+pub struct SessionHandle<'s> {
+    svc: &'s TunerService,
+    conn: HandleConn,
+    id: u64,
+    name: String,
+    capacity: u64,
+    period_intervals: u32,
+    since_decision: u32,
+    published: u64,
+    dead: bool,
+}
+
+impl SessionHandle<'_> {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Fast-tier capacity this session was opened with (pages).
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Samples published so far.
+    pub fn published(&self) -> u64 {
+        self.published
+    }
+
+    /// True once the service stopped answering (thread gone); publishes
+    /// become no-ops rather than panics — the run continues untuned.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Publish one interval's sample. Returns new watermarks when this
+    /// sample closed a tuning period and the service took a decision.
+    pub fn publish(&mut self, sample: TelemetrySample) -> Option<Watermarks> {
+        if self.dead {
+            return None;
+        }
+        let interval = sample.interval;
+        match &mut self.conn {
+            HandleConn::Inline => {
+                self.svc.with_core(|core| core.sample(self.id, &sample));
+            }
+            HandleConn::Channel { tx, .. } => {
+                if tx.send(Msg::Sample(self.id, sample)).is_err() {
+                    self.dead = true;
+                    return None;
+                }
+            }
+        }
+        self.published += 1;
+        self.since_decision += 1;
+        if self.since_decision < self.period_intervals {
+            return None;
+        }
+        self.since_decision = 0;
+        self.request_decision(interval)
+    }
+
+    /// Ask the service for a decision over the current telemetry window
+    /// (normally driven by [`Self::publish`]'s period counting).
+    pub fn request_decision(&mut self, interval: u32) -> Option<Watermarks> {
+        if self.dead {
+            return None;
+        }
+        match &mut self.conn {
+            HandleConn::Inline => {
+                self.svc.with_core(|core| core.decide(self.id, interval)).flatten()
+            }
+            HandleConn::Channel { tx, mailbox } => {
+                if tx.send(Msg::Decide(self.id, interval)).is_err() {
+                    self.dead = true;
+                    return None;
+                }
+                match mailbox.recv() {
+                    Ok(wm) => wm,
+                    Err(_) => {
+                        self.dead = true;
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Close the session and collect its report.
+    pub fn finish(self) -> Result<SessionReport> {
+        match self.conn {
+            HandleConn::Inline => self
+                .svc
+                .with_core(|core| core.close(self.id))
+                .flatten()
+                .ok_or_else(|| anyhow!("session {} is not open", self.id)),
+            HandleConn::Channel { tx, .. } => {
+                let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
+                tx.send(Msg::Close(self.id, reply_tx))
+                    .map_err(|_| anyhow!("tuner service thread is gone"))?;
+                reply_rx
+                    .recv()
+                    .map_err(|_| anyhow!("tuner service dropped session {}", self.id))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::native::NativeNn;
+    use crate::perfdb::{normalize, Record};
+
+    fn db() -> Arc<PerfDb> {
+        let fractions = vec![1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5];
+        let tolerant_raw = [10_000.0, 500.0, 20.0, 20.0, 4.0, 8_000.0, 2.0, 16.0];
+        let hungry_raw = [200_000.0, 40_000.0, 300.0, 300.0, 0.05, 30_000.0, 2.0, 16.0];
+        Arc::new(PerfDb {
+            fractions,
+            records: vec![
+                Record {
+                    raw: tolerant_raw,
+                    vec: normalize(&tolerant_raw),
+                    times_ns: vec![100.0, 100.5, 101.0, 102.0, 104.0, 130.0],
+                },
+                Record {
+                    raw: hungry_raw,
+                    vec: normalize(&hungry_raw),
+                    times_ns: vec![100.0, 115.0, 140.0, 180.0, 240.0, 320.0],
+                },
+            ],
+        })
+    }
+
+    fn spec(name: &str) -> SessionSpec {
+        SessionSpec {
+            name: name.to_string(),
+            capacity: 8_200,
+            rss_pages: 8_000,
+            hot_thr: 2,
+            threads: 16,
+            cfg: TunaConfig { period_s: 0.5, max_step_down: 0.04, ..TunaConfig::default() },
+        }
+    }
+
+    fn sample(interval: u32, salt: u64) -> TelemetrySample {
+        TelemetrySample {
+            interval,
+            acc_fast: 10_000 + salt,
+            acc_slow: 500,
+            sacc_fast: 10_000 + salt,
+            sacc_slow: 500,
+            flops: 10_500 * 64 * 2,
+            iops: 10_500 * 64 * 2,
+            promoted: 20,
+            promote_failed: 0,
+            demoted_kswapd: 20,
+            demoted_direct: 0,
+            fast_free: 100,
+        }
+    }
+
+    fn drive(service: &TunerService, name: &str, n: u32, salt: u64) -> SessionReport {
+        let mut h = service.register(spec(name)).unwrap();
+        let mut boundaries = Vec::new();
+        for i in 1..=n {
+            if let Some(wm) = h.publish(sample(i, salt)) {
+                boundaries.push((i, wm.usable(8_200)));
+            }
+        }
+        let report = h.finish().unwrap();
+        // every decision the report carries was delivered at its boundary
+        assert_eq!(boundaries.len(), report.decisions.len());
+        for (d, (i, fm)) in report.decisions.iter().zip(&boundaries) {
+            assert_eq!(d.interval, *i);
+            assert_eq!(d.new_fm, *fm);
+        }
+        report
+    }
+
+    #[test]
+    fn inline_and_channel_modes_agree_bitwise() {
+        let db = db();
+        let inline = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let channel = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        assert!(!inline.is_channel());
+        assert!(channel.is_channel());
+        let a = drive(&inline, "a", 20, 0);
+        let b = drive(&channel, "b", 20, 0);
+        assert_eq!(a.samples, 20);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.decisions.len(), 4, "one decision per 5-interval period");
+        assert_eq!(a.decisions.len(), b.decisions.len());
+        for (x, y) in a.decisions.iter().zip(&b.decisions) {
+            assert_eq!(x.interval, y.interval);
+            assert_eq!(x.record, y.record);
+            assert_eq!(x.fraction.to_bits(), y.fraction.to_bits());
+            assert_eq!(x.new_fm, y.new_fm);
+            assert_eq!(x.predicted_loss.to_bits(), y.predicted_loss.to_bits());
+        }
+        assert_eq!(a.mean_fraction.to_bits(), b.mean_fraction.to_bits());
+        assert_eq!(a.vmstat, b.vmstat);
+    }
+
+    #[test]
+    fn concurrent_sessions_are_independent_and_deterministic() {
+        let db = db();
+        // sequential reference: one session at a time on a fresh service
+        let reference: Vec<SessionReport> = (0..6u64)
+            .map(|i| {
+                let svc = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+                drive(&svc, &format!("ref{i}"), 25, i * 7)
+            })
+            .collect();
+        // concurrent: all six feed one shared channel service at once
+        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        let concurrent: Vec<SessionReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6u64)
+                .map(|i| {
+                    let service = &service;
+                    s.spawn(move || drive(service, &format!("c{i}"), 25, i * 7))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (a, b) in reference.iter().zip(&concurrent) {
+            assert_eq!(a.decisions.len(), b.decisions.len());
+            for (x, y) in a.decisions.iter().zip(&b.decisions) {
+                assert_eq!(x.fraction.to_bits(), y.fraction.to_bits());
+                assert_eq!(x.new_fm, y.new_fm);
+                assert_eq!(x.record, y.record);
+            }
+            assert_eq!(a.samples, b.samples);
+        }
+    }
+
+    #[test]
+    fn finish_reports_vmstat_and_query_budget() {
+        let db = db();
+        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        assert_eq!(service.backend(), "native");
+        let report = drive(&service, "budget", 10, 0);
+        assert_eq!(report.name, "budget");
+        assert!(report.decide_ns > 0, "decisions must bill query time");
+        assert!(report
+            .vmstat
+            .iter()
+            .any(|&(k, v)| k == "pgpromote_success" && v == 200));
+        assert!(report.mean_fraction < 1.0);
+        assert!(report.min_fraction <= report.mean_fraction);
+    }
+
+    #[test]
+    fn shutdown_then_register_errors_instead_of_hanging() {
+        let db = db();
+        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        service.shutdown();
+        assert!(service.register(spec("late")).is_err());
+        // double shutdown is a no-op
+        service.shutdown();
+    }
+
+    #[test]
+    fn empty_window_decision_request_returns_none() {
+        let db = db();
+        let service = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let mut h = service.register(spec("empty")).unwrap();
+        assert!(h.request_decision(1).is_none());
+        let report = h.finish().unwrap();
+        assert!(report.decisions.is_empty());
+        assert!(report.decide_ns > 0, "early returns still bill decide_ns");
+    }
+}

@@ -37,6 +37,15 @@ pub struct RunTrace {
     pub outcome: IntervalOutcome,
 }
 
+impl RunTrace {
+    /// Emit this interval's telemetry as a plain, engine-independent
+    /// sample — what the engine publishes to a tuner-service session
+    /// instead of mutating a tuner in-loop.
+    pub fn sample(&self) -> crate::telemetry::TelemetrySample {
+        crate::telemetry::TelemetrySample::from_trace(self)
+    }
+}
+
 /// Result of a complete run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -115,8 +124,11 @@ impl Engine {
 
     /// Run `workload` to completion under `policy`. The `observer` is
     /// invoked after every interval with the fresh trace record and may
-    /// return new watermarks to program (this is how the Tuna tuner is
-    /// attached without the engine knowing about it).
+    /// return new watermarks to program. This is how tuning attaches
+    /// without the engine knowing about it: a service-managed run
+    /// publishes `|t| session.publish(t.sample())`, and the watermarks a
+    /// decision sends back through the session mailbox are programmed at
+    /// the same interval boundary the in-loop tuner used to program them.
     pub fn run(
         &self,
         workload: &mut dyn Workload,

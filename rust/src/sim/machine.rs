@@ -141,14 +141,13 @@ mod tests {
 
     #[test]
     fn invalid_models_rejected() {
-        let mut m = MachineModel::default();
-        m.slow_lat_ns = 10.0; // faster than fast tier
+        // slow tier faster than fast tier
+        let m = MachineModel { slow_lat_ns: 10.0, ..MachineModel::default() };
         assert!(m.validate().is_err());
-        let mut m2 = MachineModel::default();
-        m2.cores = 0;
+        let m2 = MachineModel { cores: 0, ..MachineModel::default() };
         assert!(m2.validate().is_err());
-        let mut m3 = MachineModel::default();
-        m3.slow_read_bw = 1000.0; // more bw than fast tier
+        // more slow-read bandwidth than the fast tier
+        let m3 = MachineModel { slow_read_bw: 1000.0, ..MachineModel::default() };
         assert!(m3.validate().is_err());
     }
 }

@@ -2,31 +2,165 @@
 //!
 //! On the paper's testbed this comes from hardware performance counters
 //! (AI, access counts) and `/proc/vmstat` (migration counts); here the
-//! counters are sourced from the simulator's per-interval trace records
-//! and exported under their vmstat names. The tuner consumes the
-//! per-tuning-window aggregate as a micro-benchmark configuration vector.
+//! counters are sourced from per-interval [`TelemetrySample`]s and
+//! exported under their vmstat names.
+//!
+//! The module is split along the service boundary introduced by the
+//! tuner-as-a-service redesign:
+//!
+//! * [`TelemetrySample`] — one interval's counters as a plain,
+//!   engine-independent value. The simulator emits these (see
+//!   [`crate::sim::RunTrace::sample`]), but any producer can construct
+//!   them — `tuna serve` parses them out of a text stream.
+//! * [`WindowAggregator`] — pure per-window aggregation: accumulates
+//!   samples and collapses a tuning window into the micro-benchmark
+//!   configuration vector the tuner queries the database with.
+//! * [`VmstatCounters`] — run-lifetime cumulative counters under their
+//!   `/proc/vmstat` names, for reports and failure-injection tests.
+//!
+//! A tuner service hosts one aggregator + counter pair per session; they
+//! share nothing, so sessions are independent by construction.
 
 use crate::microbench::MicrobenchConfig;
 use crate::sim::RunTrace;
 use crate::LINE_BYTES;
 
-/// Accumulates per-interval observations into tuning-window aggregates
-/// plus run-lifetime cumulative counters.
+/// One interval's telemetry, decoupled from the simulator's trace record:
+/// exactly the counters the online component consumes, nothing owned by
+/// the engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TelemetrySample {
+    /// Interval index this sample was taken at (1-based, as in traces).
+    pub interval: u32,
+    /// Page accesses served by fast / slow memory.
+    pub acc_fast: u64,
+    pub acc_slow: u64,
+    /// Sampled (hint-fault) accesses per tier: per-page counts saturated
+    /// at the policy's `hot_thr` — the units the paper's Eq. (1)–(4) use.
+    pub sacc_fast: u64,
+    pub sacc_slow: u64,
+    pub flops: u64,
+    pub iops: u64,
+    pub promoted: u64,
+    pub promote_failed: u64,
+    pub demoted_kswapd: u64,
+    pub demoted_direct: u64,
+    /// Free fast-memory pages at the end of the interval (a gauge, not a
+    /// counter).
+    pub fast_free: u64,
+}
+
+impl TelemetrySample {
+    /// Extract the sample from a simulator trace record.
+    pub fn from_trace(t: &RunTrace) -> Self {
+        TelemetrySample {
+            interval: t.interval,
+            acc_fast: t.acc_fast,
+            acc_slow: t.acc_slow,
+            sacc_fast: t.sacc_fast,
+            sacc_slow: t.sacc_slow,
+            flops: t.flops,
+            iops: t.iops,
+            promoted: t.promoted,
+            promote_failed: t.promote_failed,
+            demoted_kswapd: t.demoted_kswapd,
+            demoted_direct: t.demoted_direct,
+            fast_free: t.fast_free,
+        }
+    }
+}
+
+impl From<&RunTrace> for TelemetrySample {
+    fn from(t: &RunTrace) -> Self {
+        TelemetrySample::from_trace(t)
+    }
+}
+
+/// Raw sums accumulated in the current tuning window (what
+/// [`WindowAggregator::take_window_config`] averages). Exposed so tests
+/// can check windowing exactly: integer totals across arbitrary window
+/// boundaries must sum to the cumulative counters, with no float error.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WindowTotals {
+    pub intervals: u32,
+    pub acc_fast: u64,
+    pub acc_slow: u64,
+    pub sacc_fast: u64,
+    pub sacc_slow: u64,
+    pub promoted: u64,
+    pub demoted: u64,
+    pub ops: u64,
+}
+
+/// Pure per-window aggregation: accumulates [`TelemetrySample`]s and
+/// collapses each tuning window into a configuration vector. Holds the
+/// session-constant query dimensions (`hot_thr`, threads, RSS) so the
+/// service can key one aggregator per session.
 #[derive(Clone, Debug)]
-pub struct Telemetry {
+pub struct WindowAggregator {
     hot_thr: u32,
     threads: u32,
     rss_pages: u64,
-    // --- window accumulators ---
-    w_intervals: u32,
-    w_acc_fast: u64,
-    w_acc_slow: u64,
-    w_sacc_fast: u64,
-    w_sacc_slow: u64,
-    w_promoted: u64,
-    w_demoted: u64,
-    w_ops: u64,
-    // --- cumulative (vmstat-style) ---
+    w: WindowTotals,
+}
+
+impl WindowAggregator {
+    pub fn new(hot_thr: u32, threads: u32, rss_pages: u64) -> Self {
+        WindowAggregator { hot_thr, threads, rss_pages, w: WindowTotals::default() }
+    }
+
+    /// Accumulate one interval's sample into the current window.
+    pub fn observe(&mut self, s: &TelemetrySample) {
+        self.w.intervals += 1;
+        self.w.acc_fast += s.acc_fast;
+        self.w.acc_slow += s.acc_slow;
+        self.w.sacc_fast += s.sacc_fast;
+        self.w.sacc_slow += s.sacc_slow;
+        self.w.promoted += s.promoted;
+        self.w.demoted += s.demoted_kswapd + s.demoted_direct;
+        self.w.ops += s.flops + s.iops;
+    }
+
+    /// Number of intervals accumulated in the current window.
+    pub fn window_len(&self) -> u32 {
+        self.w.intervals
+    }
+
+    /// Raw sums of the current window (not reset).
+    pub fn totals(&self) -> WindowTotals {
+        self.w
+    }
+
+    /// Collapse the window into a configuration vector (per-interval
+    /// means) and reset the window. Returns `None` on an empty window.
+    pub fn take_window_config(&mut self) -> Option<MicrobenchConfig> {
+        if self.w.intervals == 0 {
+            return None;
+        }
+        let n = self.w.intervals as f64;
+        let bytes = (self.w.acc_fast + self.w.acc_slow) * LINE_BYTES;
+        let ai = if bytes == 0 { 0.0 } else { self.w.ops as f64 / bytes as f64 };
+        // pacc is in *sampled* (hint-fault) units — see TelemetrySample.
+        let cfg = MicrobenchConfig {
+            pacc_f: self.w.sacc_fast as f64 / n,
+            pacc_s: self.w.sacc_slow as f64 / n,
+            pm_de: self.w.demoted as f64 / n,
+            pm_pr: self.w.promoted as f64 / n,
+            ai,
+            rss_pages: self.rss_pages as f64,
+            hot_thr: self.hot_thr as f64,
+            num_threads: self.threads as f64,
+        };
+        self.w = WindowTotals::default();
+        Some(cfg)
+    }
+}
+
+/// Run-lifetime cumulative counters under their `/proc/vmstat` names —
+/// what the testbed exposes; used by reports and the failure-injection
+/// tests. Never reset by window boundaries.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VmstatCounters {
     pub pgpromote_success: u64,
     pub pgpromote_fail: u64,
     pub pgdemote_kswapd: u64,
@@ -35,87 +169,22 @@ pub struct Telemetry {
     pub nr_free_pages_fast: u64,
 }
 
-impl Telemetry {
-    pub fn new(hot_thr: u32, threads: u32, rss_pages: u64) -> Self {
-        Telemetry {
-            hot_thr,
-            threads,
-            rss_pages,
-            w_intervals: 0,
-            w_acc_fast: 0,
-            w_acc_slow: 0,
-            w_sacc_fast: 0,
-            w_sacc_slow: 0,
-            w_promoted: 0,
-            w_demoted: 0,
-            w_ops: 0,
-            pgpromote_success: 0,
-            pgpromote_fail: 0,
-            pgdemote_kswapd: 0,
-            pgdemote_direct: 0,
-            numa_hint_faults: 0,
-            nr_free_pages_fast: 0,
-        }
+impl VmstatCounters {
+    pub fn new() -> Self {
+        VmstatCounters::default()
     }
 
-    /// Record one interval.
-    pub fn observe(&mut self, t: &RunTrace) {
-        self.w_intervals += 1;
-        self.w_acc_fast += t.acc_fast;
-        self.w_acc_slow += t.acc_slow;
-        self.w_sacc_fast += t.sacc_fast;
-        self.w_sacc_slow += t.sacc_slow;
-        self.w_promoted += t.promoted;
-        self.w_demoted += t.demoted_kswapd + t.demoted_direct;
-        self.w_ops += t.flops + t.iops;
-
-        self.pgpromote_success += t.promoted;
-        self.pgpromote_fail += t.promote_failed;
-        self.pgdemote_kswapd += t.demoted_kswapd;
-        self.pgdemote_direct += t.demoted_direct;
-        self.numa_hint_faults += t.promoted + t.promote_failed;
-        self.nr_free_pages_fast = t.fast_free;
+    /// Fold one interval's sample into the cumulative counters.
+    pub fn observe(&mut self, s: &TelemetrySample) {
+        self.pgpromote_success += s.promoted;
+        self.pgpromote_fail += s.promote_failed;
+        self.pgdemote_kswapd += s.demoted_kswapd;
+        self.pgdemote_direct += s.demoted_direct;
+        self.numa_hint_faults += s.promoted + s.promote_failed;
+        self.nr_free_pages_fast = s.fast_free;
     }
 
-    /// Number of intervals accumulated in the current window.
-    pub fn window_len(&self) -> u32 {
-        self.w_intervals
-    }
-
-    /// Collapse the window into a configuration vector (per-interval
-    /// means) and reset the window. Returns `None` on an empty window.
-    pub fn take_window_config(&mut self) -> Option<MicrobenchConfig> {
-        if self.w_intervals == 0 {
-            return None;
-        }
-        let n = self.w_intervals as f64;
-        let bytes = (self.w_acc_fast + self.w_acc_slow) * LINE_BYTES;
-        let ai = if bytes == 0 { 0.0 } else { self.w_ops as f64 / bytes as f64 };
-        // pacc is in *sampled* (hint-fault) units — see RunTrace::sacc_fast.
-        let cfg = MicrobenchConfig {
-            pacc_f: self.w_sacc_fast as f64 / n,
-            pacc_s: self.w_sacc_slow as f64 / n,
-            pm_de: self.w_demoted as f64 / n,
-            pm_pr: self.w_promoted as f64 / n,
-            ai,
-            rss_pages: self.rss_pages as f64,
-            hot_thr: self.hot_thr as f64,
-            num_threads: self.threads as f64,
-        };
-        self.w_intervals = 0;
-        self.w_acc_fast = 0;
-        self.w_acc_slow = 0;
-        self.w_sacc_fast = 0;
-        self.w_sacc_slow = 0;
-        self.w_promoted = 0;
-        self.w_demoted = 0;
-        self.w_ops = 0;
-        Some(cfg)
-    }
-
-    /// vmstat-style counter dump (name, value) — what `/proc/vmstat`
-    /// exposes on the testbed; used by reports and the failure-injection
-    /// tests.
+    /// vmstat-style counter dump (name, value).
     pub fn vmstat(&self) -> Vec<(&'static str, u64)> {
         vec![
             ("pgpromote_success", self.pgpromote_success),
@@ -132,6 +201,7 @@ impl Telemetry {
 mod tests {
     use super::*;
     use crate::sim::interval::IntervalOutcome;
+    use crate::util::rng::Rng;
 
     fn trace(acc_fast: u64, acc_slow: u64, promoted: u64, demoted: u64) -> RunTrace {
         RunTrace {
@@ -155,13 +225,30 @@ mod tests {
         }
     }
 
+    fn random_sample(rng: &mut Rng, interval: u32) -> TelemetrySample {
+        TelemetrySample {
+            interval,
+            acc_fast: rng.below(10_000),
+            acc_slow: rng.below(2_000),
+            sacc_fast: rng.below(5_000),
+            sacc_slow: rng.below(1_000),
+            flops: rng.below(100_000),
+            iops: rng.below(100_000),
+            promoted: rng.below(200),
+            promote_failed: rng.below(20),
+            demoted_kswapd: rng.below(150),
+            demoted_direct: rng.below(50),
+            fast_free: rng.below(1_000),
+        }
+    }
+
     #[test]
     fn window_means_and_reset() {
-        let mut t = Telemetry::new(2, 16, 8000);
-        t.observe(&trace(1000, 100, 10, 8));
-        t.observe(&trace(3000, 300, 20, 12));
-        assert_eq!(t.window_len(), 2);
-        let cfg = t.take_window_config().unwrap();
+        let mut w = WindowAggregator::new(2, 16, 8000);
+        w.observe(&trace(1000, 100, 10, 8).sample());
+        w.observe(&trace(3000, 300, 20, 12).sample());
+        assert_eq!(w.window_len(), 2);
+        let cfg = w.take_window_config().unwrap();
         assert!((cfg.pacc_f - 2000.0).abs() < 1e-9);
         assert!((cfg.pacc_s - 200.0).abs() < 1e-9);
         assert!((cfg.pm_pr - 15.0).abs() < 1e-9);
@@ -172,21 +259,144 @@ mod tests {
         // AI = 4000 ops / (4400 accesses × 64 B)
         assert!((cfg.ai - 4000.0 / (4400.0 * 64.0)).abs() < 1e-9);
         // window reset
-        assert_eq!(t.window_len(), 0);
-        assert!(t.take_window_config().is_none());
+        assert_eq!(w.window_len(), 0);
+        assert!(w.take_window_config().is_none());
     }
 
     #[test]
     fn cumulative_counters_persist_across_windows() {
-        let mut t = Telemetry::new(2, 16, 8000);
-        t.observe(&trace(100, 10, 5, 3));
-        let _ = t.take_window_config();
-        t.observe(&trace(100, 10, 7, 4));
-        assert_eq!(t.pgpromote_success, 12);
-        assert_eq!(t.pgdemote_kswapd, 7);
-        assert_eq!(t.pgpromote_fail, 2);
-        assert_eq!(t.numa_hint_faults, 14);
-        let vm = t.vmstat();
+        let mut w = WindowAggregator::new(2, 16, 8000);
+        let mut c = VmstatCounters::new();
+        for s in [trace(100, 10, 5, 3).sample(), trace(100, 10, 7, 4).sample()] {
+            w.observe(&s);
+            c.observe(&s);
+            let _ = w.take_window_config();
+        }
+        assert_eq!(c.pgpromote_success, 12);
+        assert_eq!(c.pgdemote_kswapd, 7);
+        assert_eq!(c.pgpromote_fail, 2);
+        assert_eq!(c.numa_hint_faults, 14);
+        let vm = c.vmstat();
         assert!(vm.iter().any(|&(k, v)| k == "pgpromote_success" && v == 12));
+    }
+
+    #[test]
+    fn sample_extraction_matches_trace_fields() {
+        let t = trace(123, 45, 6, 7);
+        let s = TelemetrySample::from(&t);
+        assert_eq!(s.interval, t.interval);
+        assert_eq!(s.acc_fast, 123);
+        assert_eq!(s.acc_slow, 45);
+        assert_eq!(s.promoted, 6);
+        assert_eq!(s.demoted_kswapd, 7);
+        assert_eq!(s.promote_failed, 1);
+        assert_eq!(s.fast_free, 5);
+        assert_eq!(s, t.sample());
+    }
+
+    /// Satellite: per-window aggregates must sum to the cumulative
+    /// vmstat counters across *arbitrary* window boundaries.
+    #[test]
+    fn prop_window_totals_sum_to_cumulative_counters() {
+        crate::util::proptest::check(
+            31,
+            64,
+            |rng: &mut Rng| {
+                let n = 1 + rng.index(60) as u32;
+                // random boundary mask: take the window after interval i
+                // when bit i is set (the final partial window is flushed
+                // unconditionally)
+                (n, rng.next_u64(), rng.next_u64())
+            },
+            |_| vec![],
+            |&(n, sample_seed, boundary_mask)| {
+                let mut rng = Rng::new(sample_seed);
+                let mut agg = WindowAggregator::new(2, 8, 4_000);
+                let mut counters = VmstatCounters::new();
+                let mut summed = WindowTotals::default();
+                let mut direct = WindowTotals::default();
+                let mut hint_faults = 0u64;
+                for i in 0..n {
+                    let s = random_sample(&mut rng, i + 1);
+                    agg.observe(&s);
+                    counters.observe(&s);
+                    direct.intervals += 1;
+                    direct.acc_fast += s.acc_fast;
+                    direct.acc_slow += s.acc_slow;
+                    direct.sacc_fast += s.sacc_fast;
+                    direct.sacc_slow += s.sacc_slow;
+                    direct.promoted += s.promoted;
+                    direct.demoted += s.demoted_kswapd + s.demoted_direct;
+                    direct.ops += s.flops + s.iops;
+                    hint_faults += s.promoted + s.promote_failed;
+                    let take = (boundary_mask >> (i % 64)) & 1 == 1 || i + 1 == n;
+                    if take {
+                        let t = agg.totals();
+                        summed.intervals += t.intervals;
+                        summed.acc_fast += t.acc_fast;
+                        summed.acc_slow += t.acc_slow;
+                        summed.sacc_fast += t.sacc_fast;
+                        summed.sacc_slow += t.sacc_slow;
+                        summed.promoted += t.promoted;
+                        summed.demoted += t.demoted;
+                        summed.ops += t.ops;
+                        let cfg = agg.take_window_config();
+                        if t.intervals > 0 && cfg.is_none() {
+                            return Err("non-empty window yielded no config".into());
+                        }
+                    }
+                }
+                if summed != direct {
+                    return Err(format!("window sums {summed:?} != per-sample sums {direct:?}"));
+                }
+                if summed.promoted != counters.pgpromote_success {
+                    return Err(format!(
+                        "window promoted {} != pgpromote_success {}",
+                        summed.promoted, counters.pgpromote_success
+                    ));
+                }
+                if summed.demoted != counters.pgdemote_kswapd + counters.pgdemote_direct {
+                    return Err(format!(
+                        "window demoted {} != pgdemote_kswapd+direct {}",
+                        summed.demoted,
+                        counters.pgdemote_kswapd + counters.pgdemote_direct
+                    ));
+                }
+                if hint_faults != counters.numa_hint_faults {
+                    return Err("numa_hint_faults drifted".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite: rollover when one window spans the whole run
+    /// (`window_len == intervals`): the single flush at the end sees
+    /// every interval and resets cleanly.
+    #[test]
+    fn single_window_spanning_whole_run_rolls_over() {
+        let intervals = 37u32;
+        let mut rng = Rng::new(9);
+        let mut agg = WindowAggregator::new(3, 4, 10_000);
+        let mut sum_sacc_fast = 0u64;
+        for i in 0..intervals {
+            let s = random_sample(&mut rng, i + 1);
+            sum_sacc_fast += s.sacc_fast;
+            agg.observe(&s);
+            assert_eq!(agg.window_len(), i + 1, "window grows with every sample");
+        }
+        assert_eq!(agg.window_len(), intervals);
+        let cfg = agg.take_window_config().unwrap();
+        assert!((cfg.pacc_f - sum_sacc_fast as f64 / intervals as f64).abs() < 1e-9);
+        // rollover: the aggregator is empty again and usable for the next
+        // window without carrying anything over
+        assert_eq!(agg.window_len(), 0);
+        assert_eq!(agg.totals(), WindowTotals::default());
+        assert!(agg.take_window_config().is_none());
+        let s = random_sample(&mut rng, intervals + 1);
+        agg.observe(&s);
+        assert_eq!(agg.window_len(), 1);
+        let cfg2 = agg.take_window_config().unwrap();
+        assert!((cfg2.pacc_f - s.sacc_fast as f64).abs() < 1e-9);
     }
 }

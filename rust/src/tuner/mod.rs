@@ -4,6 +4,15 @@
 //! fast-memory size whose *predicted* loss (relative to the record's
 //! fast-memory-only baseline) is within the user's target τ, and programs
 //! the page-reclaim watermarks accordingly.
+//!
+//! The decision logic lives in [`TunerState`], which is deliberately
+//! query-backend-free: `decide` borrows an [`NnQuery`] for the duration
+//! of one decision. That split is what lets [`crate::service`] host many
+//! sessions (one `TunerState` each) behind a single shared backend, with
+//! decisions bit-identical to the classic in-loop path — both paths run
+//! this exact code. [`Tuner`] is the in-loop composition (state + owned
+//! backend + period counting) kept as the reference implementation the
+//! service is proven against.
 
 use std::sync::Arc;
 
@@ -11,7 +20,7 @@ use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::NnQuery;
 use crate::perfdb::{normalize, PerfDb};
 use crate::sim::RunTrace;
-use crate::telemetry::Telemetry;
+use crate::telemetry::{TelemetrySample, VmstatCounters, WindowAggregator};
 use crate::tpp::Watermarks;
 
 /// Neighbours consulted per decision (curve averaging). The AOT top-k
@@ -34,19 +43,19 @@ pub struct Decision {
     pub predicted_loss: f64,
 }
 
-/// The online controller. Attach it to [`crate::sim::Engine::run`] as the
-/// observer: `|t| tuner.observe(t)`.
-pub struct Tuner {
+/// Per-session tuning state: telemetry aggregation plus the watermark
+/// walk. Backend-free — [`Self::decide`] borrows the query for one
+/// decision, so many states can share one backend (the service) or each
+/// own one ([`Tuner`]).
+pub struct TunerState {
     db: Arc<PerfDb>,
-    query: Box<dyn NnQuery>,
     cfg: TunaConfig,
-    telemetry: Telemetry,
+    window: WindowAggregator,
+    counters: VmstatCounters,
     /// Fast-tier capacity in pages (fixed; Tuna moves watermarks only).
     capacity: u64,
     /// Workload RSS in pages (the 100% reference for fractions).
     rss_pages: u64,
-    period_intervals: u32,
-    since_decision: u32,
     /// Currently-programmed fast-memory fraction (starts at 100%).
     current_fraction: f64,
     pub decisions: Vec<Decision>,
@@ -54,46 +63,50 @@ pub struct Tuner {
     pub decide_ns: u128,
 }
 
-impl Tuner {
+impl TunerState {
     pub fn new(
         db: Arc<PerfDb>,
-        query: Box<dyn NnQuery>,
         cfg: TunaConfig,
         capacity: u64,
         rss_pages: u64,
         hot_thr: u32,
         threads: u32,
     ) -> Self {
-        let period_intervals = cfg.period_intervals();
-        Tuner {
+        TunerState {
             db,
-            query,
             cfg,
-            telemetry: Telemetry::new(hot_thr, threads, rss_pages),
+            window: WindowAggregator::new(hot_thr, threads, rss_pages),
+            counters: VmstatCounters::new(),
             capacity,
             rss_pages,
-            period_intervals,
-            since_decision: 0,
             current_fraction: 1.0,
             decisions: Vec::new(),
             decide_ns: 0,
         }
     }
 
-    pub fn telemetry(&self) -> &Telemetry {
-        &self.telemetry
+    /// Profiling intervals per tuning period for this state's config.
+    pub fn period_intervals(&self) -> u32 {
+        self.cfg.period_intervals()
     }
 
-    /// Engine observer: accumulate telemetry; on period boundaries take a
-    /// decision and return the watermarks to program.
-    pub fn observe(&mut self, t: &RunTrace) -> Option<Watermarks> {
-        self.telemetry.observe(t);
-        self.since_decision += 1;
-        if self.since_decision < self.period_intervals {
-            return None;
-        }
-        self.since_decision = 0;
-        self.decide(t.interval)
+    /// Accumulate one interval's sample (window + cumulative counters).
+    pub fn ingest(&mut self, s: &TelemetrySample) {
+        self.window.observe(s);
+        self.counters.observe(s);
+    }
+
+    pub fn window(&self) -> &WindowAggregator {
+        &self.window
+    }
+
+    pub fn counters(&self) -> &VmstatCounters {
+        &self.counters
+    }
+
+    /// vmstat-style cumulative counter dump.
+    pub fn vmstat(&self) -> Vec<(&'static str, u64)> {
+        self.counters.vmstat()
     }
 
     /// Take one tuning decision from the current telemetry window.
@@ -102,20 +115,20 @@ impl Tuner {
     /// (empty telemetry window, empty neighbour set, no fraction within
     /// the target) still count toward `decide_ns` — the §Perf budget is
     /// "time spent deciding", not "time spent deciding successfully".
-    pub fn decide(&mut self, interval: u32) -> Option<Watermarks> {
+    pub fn decide(&mut self, interval: u32, query: &mut dyn NnQuery) -> Option<Watermarks> {
         let t0 = std::time::Instant::now();
-        let out = self.decide_inner(interval);
+        let out = self.decide_inner(interval, query);
         self.decide_ns += t0.elapsed().as_nanos();
         out
     }
 
-    fn decide_inner(&mut self, interval: u32) -> Option<Watermarks> {
-        let cfg = self.telemetry.take_window_config()?;
+    fn decide_inner(&mut self, interval: u32, query: &mut dyn NnQuery) -> Option<Watermarks> {
+        let cfg = self.window.take_window_config()?;
         let q = normalize(&cfg.as_array());
         // k-NN: averaging several records' loss-vs-size curves (distance
         // weighted) smooths the knee; individual micro-benchmark records
         // are near-step functions.
-        let neighbors = match self.query.top_k(&q, KNN) {
+        let neighbors = match query.top_k(&q, KNN) {
             Ok(n) if !n.is_empty() => n,
             _ => return None,
         };
@@ -165,6 +178,75 @@ impl Tuner {
             .iter()
             .map(|d| d.fraction)
             .fold(1.0, f64::min)
+    }
+}
+
+/// The classic in-loop controller: [`TunerState`] plus an owned query
+/// backend and period counting. Attach it to [`crate::sim::Engine::run`]
+/// as the observer: `|t| tuner.observe(t)`. Kept as the reference the
+/// service path is proven bit-identical against.
+pub struct Tuner {
+    query: Box<dyn NnQuery>,
+    period_intervals: u32,
+    since_decision: u32,
+    pub state: TunerState,
+}
+
+impl Tuner {
+    pub fn new(
+        db: Arc<PerfDb>,
+        query: Box<dyn NnQuery>,
+        cfg: TunaConfig,
+        capacity: u64,
+        rss_pages: u64,
+        hot_thr: u32,
+        threads: u32,
+    ) -> Self {
+        let period_intervals = cfg.period_intervals();
+        Tuner {
+            query,
+            period_intervals,
+            since_decision: 0,
+            state: TunerState::new(db, cfg, capacity, rss_pages, hot_thr, threads),
+        }
+    }
+
+    /// Engine observer: accumulate telemetry; on period boundaries take a
+    /// decision and return the watermarks to program.
+    pub fn observe(&mut self, t: &RunTrace) -> Option<Watermarks> {
+        self.state.ingest(&t.sample());
+        self.since_decision += 1;
+        if self.since_decision < self.period_intervals {
+            return None;
+        }
+        self.since_decision = 0;
+        self.decide(t.interval)
+    }
+
+    /// Take one tuning decision now (see [`TunerState::decide`]).
+    pub fn decide(&mut self, interval: u32) -> Option<Watermarks> {
+        self.state.decide(interval, self.query.as_mut())
+    }
+
+    pub fn decisions(&self) -> &[Decision] {
+        &self.state.decisions
+    }
+
+    pub fn decide_ns(&self) -> u128 {
+        self.state.decide_ns
+    }
+
+    pub fn mean_fraction(&self) -> f64 {
+        self.state.mean_fraction()
+    }
+
+    pub fn min_fraction(&self) -> f64 {
+        self.state.min_fraction()
+    }
+
+    /// vmstat-style cumulative counter dump.
+    pub fn vmstat(&self) -> Vec<(&'static str, u64)> {
+        self.state.vmstat()
     }
 }
 
@@ -236,10 +318,10 @@ mod tests {
             }
         }
         assert_eq!(wm_changes, 4, "one decision per 5-interval period");
-        assert_eq!(tuner.decisions.len(), 4);
+        assert_eq!(tuner.decisions().len(), 4);
         // the averaged curve allows shrinking, but the walk is
         // rate-limited to max_step_down per period: 1.0 → 0.96 → … → 0.84
-        for (i, d) in tuner.decisions.iter().enumerate() {
+        for (i, d) in tuner.decisions().iter().enumerate() {
             assert_eq!(d.record, 0, "nearest must be the tolerant record");
             let want = 1.0 - 0.04 * (i as f64 + 1.0);
             assert!((d.fraction - want).abs() < 1e-9, "step {i}: {}", d.fraction);
@@ -255,12 +337,14 @@ mod tests {
         for i in 1..=25u32 {
             tuner.observe(&trace_like(i, 10_000, 500, 10_500 * 64 * 4));
         }
-        let fr: Vec<f64> = tuner.decisions.iter().map(|d| d.fraction).collect();
+        let fr: Vec<f64> = tuner.decisions().iter().map(|d| d.fraction).collect();
         // the k-NN averaged curve blends the hungry record in, so the
         // equilibrium sits at or above the tolerant record's own 0.6 knee
-        let q = normalize(&tuner.telemetry.take_window_config().map(|c| c.as_array()).unwrap_or(
-            [10_000.0, 500.0, 20.0, 20.0, 4.0, 8_000.0, 2.0, 16.0],
-        ));
+        let q = normalize(
+            &tuner.state.window.take_window_config().map(|c| c.as_array()).unwrap_or([
+                10_000.0, 500.0, 20.0, 20.0, 4.0, 8_000.0, 2.0, 16.0,
+            ]),
+        );
         let mut nn = NativeNn::new(&db);
         let neighbors = crate::perfdb::native::NnQuery::top_k(&mut nn, &q, KNN).unwrap();
         let expect = db
@@ -287,7 +371,7 @@ mod tests {
             let ops = 240_000u64 * 64 / 20; // low AI
             tuner.observe(&trace_like(i, 200_000, 40_000, ops));
         }
-        let d = tuner.decisions.last().unwrap();
+        let d = tuner.decisions().last().unwrap();
         assert_eq!(d.record, 1, "must match the hungry record");
         // hungry record never gets under 5% except at 100%
         assert!(d.fraction >= 0.99, "fraction={}", d.fraction);
@@ -308,7 +392,7 @@ mod tests {
         for i in 1..=5u32 {
             tuner.observe(&trace_like(i, 10_000, 500, 10_000 * 64 * 4));
         }
-        assert!(tuner.decisions.last().unwrap().fraction >= 0.75);
+        assert!(tuner.decisions().last().unwrap().fraction >= 0.75);
     }
 
     #[test]
@@ -322,7 +406,7 @@ mod tests {
             }
         }
         let wm = wm.expect("decision expected");
-        let d = tuner.decisions.last().unwrap();
+        let d = tuner.decisions().last().unwrap();
         assert_eq!(wm.usable(8_200), d.new_fm);
         wm.check(8_200).unwrap();
     }
@@ -336,8 +420,8 @@ mod tests {
         for i in 0..200u32 {
             assert!(tuner.decide(i).is_none());
         }
-        assert!(tuner.decisions.is_empty());
-        assert!(tuner.decide_ns > 0, "early returns must update decide_ns");
+        assert!(tuner.decisions().is_empty());
+        assert!(tuner.decide_ns() > 0, "early returns must update decide_ns");
     }
 
     #[test]
@@ -349,6 +433,44 @@ mod tests {
         }
         assert!(tuner.mean_fraction() < 1.0);
         assert!(tuner.min_fraction() <= tuner.mean_fraction());
-        assert!(tuner.decide_ns > 0);
+        assert!(tuner.decide_ns() > 0);
+    }
+
+    #[test]
+    fn shared_backend_state_matches_owned_backend_tuner() {
+        // The same sample stream through (a) the in-loop Tuner and (b) a
+        // bare TunerState fed through a borrowed backend must produce
+        // bit-identical decisions — the invariant the service builds on.
+        let db = db();
+        let mut tuner = mk_tuner(db.clone(), 0.5);
+        let cfg = TunaConfig { period_s: 0.5, max_step_down: 0.04, ..TunaConfig::default() };
+        let mut state = TunerState::new(db.clone(), cfg, 8_200, 8_000, 2, 16);
+        let mut shared = NativeNn::new(&db);
+        let period = state.period_intervals();
+        let mut since = 0u32;
+        for i in 1..=20u32 {
+            let t = trace_like(i, 10_000, 500, 10_500 * 64 * 4);
+            let a = tuner.observe(&t);
+            state.ingest(&t.sample());
+            since += 1;
+            let b = if since == period {
+                since = 0;
+                state.decide(i, &mut shared)
+            } else {
+                None
+            };
+            assert_eq!(a.is_some(), b.is_some(), "interval {i}");
+            if let (Some(wa), Some(wb)) = (a, b) {
+                assert_eq!(wa.usable(8_200), wb.usable(8_200), "interval {i}");
+            }
+        }
+        assert_eq!(tuner.decisions().len(), state.decisions.len());
+        for (a, b) in tuner.decisions().iter().zip(&state.decisions) {
+            assert_eq!(a.interval, b.interval);
+            assert_eq!(a.record, b.record);
+            assert_eq!(a.fraction.to_bits(), b.fraction.to_bits());
+            assert_eq!(a.new_fm, b.new_fm);
+            assert_eq!(a.predicted_loss.to_bits(), b.predicted_loss.to_bits());
+        }
     }
 }

@@ -17,6 +17,7 @@ use tuna::perfdb::builder::{build_database, sample_config, BuildParams};
 use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
 use tuna::perfdb::{normalize, store, PerfDb};
 use tuna::runtime::XlaNn;
+use tuna::service::{IngestOutput, Ingestor, TunerService};
 use tuna::sim::{Engine, IntervalModel, MachineModel};
 use tuna::tpp::{Tpp, Watermarks};
 use tuna::util::proptest::{check, check_u64_range};
@@ -138,6 +139,178 @@ fn sweep_memoizes_baselines_and_runs_tuna_cells() {
     assert!(stats.mean_fraction > 0.2 && stats.mean_fraction <= 1.0);
     assert!((tuna_cell.saving - (1.0 - stats.mean_fraction)).abs() < 1e-12);
     assert!(res.cells.iter().all(|c| c.loss.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// tuner-as-a-service determinism
+// ---------------------------------------------------------------------------
+
+fn assert_decisions_bit_identical(
+    a: &[tuna::tuner::Decision],
+    b: &[tuna::tuner::Decision],
+    ctx: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{ctx}: decision count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.interval, y.interval, "{ctx}: interval");
+        assert_eq!(x.record, y.record, "{ctx}: record");
+        assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "{ctx}: dist");
+        assert_eq!(x.fraction.to_bits(), y.fraction.to_bits(), "{ctx}: fraction");
+        assert_eq!(x.new_fm, y.new_fm, "{ctx}: new_fm");
+        assert_eq!(
+            x.predicted_loss.to_bits(),
+            y.predicted_loss.to_bits(),
+            "{ctx}: predicted_loss"
+        );
+    }
+}
+
+/// Acceptance: the service's channel path must produce bit-identical
+/// decisions (and therefore bit-identical runs — watermark feedback
+/// shapes every subsequent interval) to the classic in-loop tuner, for
+/// every Table-1 workload, in both inline and background-thread modes.
+#[test]
+fn service_decisions_bit_identical_to_inloop_for_every_workload() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    for name in ALL_NAMES {
+        let spec = RunSpec::new(name).with_intervals(50);
+        let inloop = coordinator::run_tuna_inloop(
+            &spec,
+            db.clone(),
+            Box::new(NativeNn::new(&db)),
+            &cfg,
+        )
+        .unwrap();
+        assert!(!inloop.decisions.is_empty(), "{name}: reference run must decide");
+        // inline service (what run_tuna now is)
+        let inline_run = coordinator::run_tuna_native(&spec, db.clone(), &cfg).unwrap();
+        // channel service: samples cross a bounded channel to the
+        // aggregation thread; decisions come back through the mailbox
+        let channel_run = {
+            let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+            coordinator::run_tuna_service(&spec, &service, &cfg).unwrap()
+        };
+        for (mode, run) in [("inline", &inline_run), ("channel", &channel_run)] {
+            let ctx = format!("{name}/{mode}");
+            assert_decisions_bit_identical(&inloop.decisions, &run.decisions, &ctx);
+            assert_eq!(
+                inloop.result.total_ns.to_bits(),
+                run.result.total_ns.to_bits(),
+                "{ctx}: tuned run trace must be bit-identical"
+            );
+            assert_eq!(inloop.vmstat, run.vmstat, "{ctx}: vmstat");
+            assert_eq!(
+                inloop.mean_fraction.to_bits(),
+                run.mean_fraction.to_bits(),
+                "{ctx}: mean fraction"
+            );
+        }
+    }
+}
+
+/// Acceptance: all Tuna cells of a sweep share one channel service, and
+/// the results are bit-identical for any thread count — and to the
+/// in-loop reference path.
+#[test]
+fn sweep_tuna_cells_share_service_and_stay_deterministic() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let sweep_at = |threads: usize| {
+        let spec = SweepSpec::new(["BFS", "Btree"])
+            .with_policies([SweepPolicy::Tuna])
+            .with_seeds([1, 2])
+            .with_intervals(40)
+            .with_threads(threads)
+            .with_tuna(db.clone(), cfg.clone());
+        run_sweep(&spec).unwrap()
+    };
+    let serial = sweep_at(1);
+    let parallel = sweep_at(4);
+    assert_eq!(serial.len(), 4, "2 workloads x 2 seeds, fraction axis collapsed");
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        let ctx = format!("{} seed {}", a.spec.workload, a.spec.seed);
+        assert_eq!(
+            a.result.total_ns.to_bits(),
+            b.result.total_ns.to_bits(),
+            "{ctx}: thread count changed a Tuna cell"
+        );
+        let (sa, sb) = (a.tuna.as_ref().unwrap(), b.tuna.as_ref().unwrap());
+        assert_eq!(sa.decisions, sb.decisions, "{ctx}");
+        assert_eq!(sa.mean_fraction.to_bits(), sb.mean_fraction.to_bits(), "{ctx}");
+        assert_eq!(sa.min_fraction.to_bits(), sb.min_fraction.to_bits(), "{ctx}");
+
+        // and every cell matches the pre-service in-loop path exactly
+        let rs = RunSpec::new(&a.spec.workload)
+            .with_intervals(40)
+            .with_seed(a.spec.seed);
+        let reference =
+            coordinator::run_tuna_inloop(&rs, db.clone(), Box::new(NativeNn::new(&db)), &cfg)
+                .unwrap();
+        assert_eq!(
+            a.result.total_ns.to_bits(),
+            reference.result.total_ns.to_bits(),
+            "{ctx}: sweep cell diverged from the in-loop reference"
+        );
+        assert_eq!(sa.decisions, reference.decisions.len(), "{ctx}");
+        assert_eq!(
+            sa.mean_fraction.to_bits(),
+            reference.mean_fraction.to_bits(),
+            "{ctx}"
+        );
+    }
+}
+
+/// Acceptance: `tuna serve` replaying a recorded sample stream produces
+/// the same decisions as the run that recorded it.
+#[test]
+fn serve_replay_reproduces_recorded_decisions() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let spec = RunSpec::new("Btree").with_intervals(60);
+
+    // live run, tapping the stream exactly as `tuna tune --record` does
+    let mut stream = String::new();
+    let live = {
+        let service = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        coordinator::run_tuna_service_tapped(&spec, &service, &cfg, |ev| {
+            stream.push_str(&ev.to_line());
+            stream.push('\n');
+        })
+        .unwrap()
+    };
+    assert!(!live.decisions.is_empty());
+
+    // replay through a fresh channel service, as `tuna serve` does
+    let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+    let mut ingestor = Ingestor::new(&service, cfg.clone());
+    let mut decisions = Vec::new();
+    let mut report = None;
+    let stats = ingestor
+        .ingest(stream.as_bytes(), |out| match out {
+            IngestOutput::Decision { interval, usable_fm, .. } => {
+                decisions.push((interval, usable_fm));
+            }
+            IngestOutput::Closed(r) => report = Some(r),
+        })
+        .unwrap();
+    assert_eq!(stats.sessions_opened, 1);
+    assert_eq!(stats.sessions_closed, 1);
+    assert_eq!(stats.samples, 60);
+    assert_eq!(stats.decisions as usize, live.decisions.len());
+
+    let report = report.expect("close line must produce the session report");
+    assert_eq!(report.samples, 60);
+    assert_decisions_bit_identical(&live.decisions, &report.decisions, "serve replay");
+    assert_eq!(report.vmstat, live.vmstat, "replayed vmstat counters");
+    // each replayed decision reprogrammed the same usable fast memory at
+    // the same interval the live run did
+    assert_eq!(decisions.len(), live.decisions.len());
+    for (d, (interval, usable_fm)) in live.decisions.iter().zip(&decisions) {
+        assert_eq!(d.interval, *interval);
+        assert_eq!(d.new_fm, *usable_fm);
+    }
 }
 
 // ---------------------------------------------------------------------------
