@@ -1,0 +1,81 @@
+//! KV trace pipeline throughput: generator ops/sec, trace
+//! encode/decode MB/sec, and replay ops/sec + intervals/sec through the
+//! full engine (TPP at 90% fast memory) for each generator family.
+//!
+//! This is the capacity number for trace-driven experiments: how fast a
+//! recorded op stream turns back into engine intervals, end to end.
+
+use std::time::Instant;
+
+use tuna::coordinator::{self, RunSpec};
+use tuna::report::{results_dir, Table};
+use tuna::trace::{format, gen};
+use tuna::util::human_ns;
+
+const OP_INTERVALS: u32 = 60;
+
+fn main() -> tuna::Result<()> {
+    let mut t = Table::new(
+        "KV trace pipeline: generate / encode / decode / replay",
+        &[
+            "family",
+            "ops",
+            "gen Mops/s",
+            "enc MB/s",
+            "dec MB/s",
+            "replay ops/s",
+            "intervals/s",
+            "wall",
+        ],
+    );
+
+    let dir = std::env::temp_dir().join(format!("tuna_trace_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    for name in gen::FAMILY {
+        let spec = gen::spec_by_name(name).expect("family spec");
+
+        let t0 = Instant::now();
+        let trace = gen::generate(&spec, 42, OP_INTERVALS);
+        let gen_s = t0.elapsed().as_secs_f64();
+        let ops = trace.total_ops();
+
+        let t0 = Instant::now();
+        let bytes = format::encode(&trace)?;
+        let enc_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let decoded = format::decode(&bytes)?;
+        let dec_s = t0.elapsed().as_secs_f64();
+        assert_eq!(decoded, trace, "codec must round-trip");
+
+        let path = dir.join(format!("{name}.trc"));
+        format::save(&path, &trace)?;
+
+        // full-engine replay: trace file → workload → TPP run
+        let mut spec_run = RunSpec::new(&format!("trace:{}", path.display()));
+        spec_run.intervals = OP_INTERVALS + 1;
+        spec_run.fm_fraction = 0.9;
+        let t0 = Instant::now();
+        let run = coordinator::run_tpp(&spec_run)?;
+        let replay_s = t0.elapsed().as_secs_f64();
+        assert_eq!(run.trace.len(), OP_INTERVALS as usize + 1);
+
+        let mb = bytes.len() as f64 / (1 << 20) as f64;
+        t.row(vec![
+            name.to_string(),
+            ops.to_string(),
+            format!("{:.1}", ops as f64 / gen_s / 1e6),
+            format!("{:.0}", mb / enc_s),
+            format!("{:.0}", mb / dec_s),
+            format!("{:.0}", ops as f64 / replay_s),
+            format!("{:.1}", run.trace.len() as f64 / replay_s),
+            human_ns((replay_s * 1e9) as u64),
+        ]);
+    }
+
+    t.print();
+    t.to_csv(&results_dir().join("trace_replay.csv"))?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -55,9 +55,16 @@ pub fn sim_fingerprint() -> &'static str {
             include_str!("../workloads/bfs.rs"),
             include_str!("../workloads/btree.rs"),
             include_str!("../workloads/graph.rs"),
+            include_str!("../workloads/kv.rs"),
             include_str!("../workloads/pagerank.rs"),
             include_str!("../workloads/sssp.rs"),
             include_str!("../workloads/xsbench.rs"),
+            // the KV families' op streams and page mapping (the trace
+            // *format* is deliberately absent: a stored op stream means
+            // the same accesses regardless of codec changes)
+            include_str!("../trace/gen.rs"),
+            include_str!("../trace/replay.rs"),
+            include_str!("../trace/mod.rs"),
         ];
         let mut h = fnv1a64(b"");
         for src in SOURCES {

@@ -28,6 +28,7 @@
 //!   perfdb/<name>/MANIFEST + seg-NNN.bin    sharded performance databases
 //!   sweeps/<name>.cells                     sweep cell tables
 //!   baselines/<key-hash>.bl                 memoized baseline runs
+//!   traces/<name>.trc                       recorded KV op-stream traces
 //! ```
 
 pub mod cache;
@@ -133,7 +134,7 @@ pub struct ArtifactStore {
 impl ArtifactStore {
     /// Open (creating if needed) a store rooted at `root`.
     pub fn open(root: &Path) -> Result<Self> {
-        for sub in ["perfdb", "sweeps", "baselines"] {
+        for sub in ["perfdb", "sweeps", "baselines", "traces"] {
             std::fs::create_dir_all(root.join(sub))
                 .with_context(|| format!("creating store directory {}", root.display()))?;
         }
@@ -169,9 +170,28 @@ impl ArtifactStore {
         self.root.join("baselines")
     }
 
+    pub fn traces_dir(&self) -> PathBuf {
+        self.root.join("traces")
+    }
+
     /// Path of the sweep cell table named `name`.
     pub fn sweep_path(&self, name: &str) -> PathBuf {
         self.sweeps_dir().join(format!("{name}.cells"))
+    }
+
+    /// Path of the KV trace artifact named `name`.
+    pub fn trace_path(&self, name: &str) -> PathBuf {
+        self.traces_dir().join(format!("{name}.trc"))
+    }
+
+    /// Resolve a trace argument: a name inside this store first, then a
+    /// literal filesystem path (same discipline as [`Self::resolve_sweep`]).
+    pub fn resolve_trace(&self, name_or_path: &str) -> PathBuf {
+        let named = self.trace_path(name_or_path);
+        if named.exists() {
+            return named;
+        }
+        PathBuf::from(name_or_path)
     }
 
     /// Resolve a sweep table argument: a name inside this store first
@@ -238,6 +258,26 @@ impl ArtifactStore {
             };
             out.push(ArtifactInfo {
                 kind: "baseline",
+                name: file_name(&entry),
+                bytes: file_bytes(&entry)?,
+                path: entry,
+                detail,
+            });
+        }
+        for entry in sorted_dir(&self.traces_dir())? {
+            if entry.extension().map(|e| e != "trc").unwrap_or(true) {
+                continue;
+            }
+            // header-only peek: listing must not CRC megabytes of frames
+            let detail = match crate::trace::format::peek(&entry) {
+                Ok((h, n_intervals, total_ops)) => format!(
+                    "{} seed {}: {total_ops} ops in {n_intervals} intervals, {} keys",
+                    h.workload, h.seed, h.n_keys
+                ),
+                Err(e) => format!("unreadable: {e:#}"),
+            };
+            out.push(ArtifactInfo {
+                kind: "trace",
                 name: file_name(&entry),
                 bytes: file_bytes(&entry)?,
                 path: entry,
@@ -331,10 +371,12 @@ mod tests {
         assert!(store.perfdb_dir().is_dir());
         assert!(store.sweeps_dir().is_dir());
         assert!(store.baselines_dir().is_dir());
+        assert!(store.traces_dir().is_dir());
         assert!(store.ls().unwrap().is_empty());
         // resolve: nonexistent name falls back to the literal path
         let p = store.resolve_sweep("nope");
         assert_eq!(p, PathBuf::from("nope"));
+        assert_eq!(store.resolve_trace("nope"), PathBuf::from("nope"));
         // read-only open of an existing store works...
         assert!(ArtifactStore::open_existing(&root).is_ok());
         std::fs::remove_dir_all(&root).ok();

@@ -69,7 +69,6 @@ impl RunSpec {
 
     fn make_workload(&self) -> Result<Box<dyn Workload>> {
         workloads::by_name(&self.workload, self.seed, self.intervals)
-            .ok_or_else(|| anyhow!("unknown workload `{}`", self.workload))
     }
 
     fn engine(&self) -> Engine {

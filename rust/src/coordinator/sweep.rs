@@ -297,10 +297,46 @@ pub struct BaselineKey {
     pub machine: String,
 }
 
+/// Content fingerprint of a trace file, memoized per (path, len, mtime):
+/// [`BaselineKey::of`] runs roughly twice per sweep cell, and a sweep
+/// over a large recorded trace must not re-read megabytes on every
+/// cache lookup. A rewrite of the file invalidates the memo through its
+/// metadata stamp.
+fn trace_content_key(path: &str) -> Option<String> {
+    use std::sync::OnceLock;
+    use std::time::SystemTime;
+    type Memo = Mutex<HashMap<String, ((u64, SystemTime), String)>>;
+    static MEMO: OnceLock<Memo> = OnceLock::new();
+    let meta = std::fs::metadata(path).ok()?;
+    let stamp = (meta.len(), meta.modified().ok()?);
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some((s, key)) = memo.lock().unwrap().get(path) {
+        if *s == stamp {
+            return Some(key.clone());
+        }
+    }
+    let bytes = std::fs::read(path).ok()?;
+    let key = format!("trace:{:016x}", crate::artifact::fnv1a64(&bytes));
+    memo.lock()
+        .unwrap()
+        .insert(path.to_string(), (stamp, key.clone()));
+    Some(key)
+}
+
 impl BaselineKey {
     pub fn of(spec: &RunSpec) -> Self {
+        // `trace:FILE` workloads are keyed by the trace's *content*, not
+        // its path: re-recording a file in place (new seed, new spec)
+        // must miss the cache, and identical traces at different paths
+        // should hit it. An unreadable file keeps the path key — the run
+        // itself will surface the I/O error.
+        let workload = match spec.workload.strip_prefix("trace:") {
+            Some(path) => trace_content_key(path)
+                .unwrap_or_else(|| spec.workload.to_ascii_lowercase()),
+            None => spec.workload.to_ascii_lowercase(),
+        };
         BaselineKey {
-            workload: spec.workload.to_ascii_lowercase(),
+            workload,
             seed: spec.seed,
             intervals: spec.intervals,
             hot_thr: spec.hot_thr,

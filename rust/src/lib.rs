@@ -30,8 +30,11 @@
 //!   programming), the reference the service path is proven against.
 //! * [`runtime::PerfDbExec`] — the AOT query executable (PJRT CPU).
 //! * [`artifact::ArtifactStore`] — the persistent artifact store: sharded
-//!   perf-DB segments, durable sweep cell tables, and the cross-process
-//!   baseline cache (`tuna store ls|diff`).
+//!   perf-DB segments, durable sweep cell tables, KV trace artifacts and
+//!   the cross-process baseline cache (`tuna store ls|diff`).
+//! * [`trace`] — the trace-driven KV workload subsystem: YCSB-style op
+//!   generators, the durable `TUNATRC1` trace format and the replay
+//!   engine behind the `kv-*` workload family and `tuna trace` verbs.
 //!
 //! See `DESIGN.md` for the hardware-substitution rationale and the
 //! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -48,6 +51,7 @@ pub mod service;
 pub mod sim;
 pub mod telemetry;
 pub mod tpp;
+pub mod trace;
 pub mod tuner;
 pub mod util;
 pub mod workloads;

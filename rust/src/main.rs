@@ -30,10 +30,27 @@
 //!                               cells are saved as a diffable table
 //! tuna build-db --store DIR [--shards N] [--name perfdb]
 //!                               sharded build streaming into store segments
-//! tuna store ls   [--store DIR] list artifacts (perfdbs, sweeps, baselines)
+//! tuna store ls   [--store DIR] list artifacts (perfdbs, sweeps, baselines,
+//!                               traces)
 //! tuna store diff A B [--store DIR] [--tol T] [--strict]
 //!                               cell-by-cell sweep comparison (regressions)
+//! tuna trace record --workload kv-zipfian [--seed S] [--intervals N]
+//!                  [--keys N] [--ops N] [--out FILE | --store DIR [--name N]]
+//!                               generate + persist a TUNATRC1 op-stream
+//!                               artifact (with --from FILE: re-encode an
+//!                               existing trace, byte-identically)
+//! tuna trace replay FILE [--fraction F] [--policy tpp|first-touch|memtis]
+//!                  [--intervals N] [--hot-thr T] [--store DIR]
+//!                               drive the recorded op stream through a
+//!                               policy run (Tuna: `tuna tune --workload
+//!                               trace:FILE`)
+//! tuna trace stats FILE [--store DIR]
+//!                               header + op-mix summary (full CRC check)
 //! ```
+//!
+//! Workload names everywhere: the five Table 1 applications, the KV
+//! family (`kv-uniform`, `kv-zipfian`, `kv-latest`, `kv-hotspot`,
+//! `kv-scan`, `kv-drift`), or `trace:FILE` to replay a recorded trace.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -54,8 +71,9 @@ use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
 use tuna::service::{IngestOutput, Ingestor, TunerService};
 use tuna::sim::MachineModel;
+use tuna::trace::{format as trace_format, gen as trace_gen};
 use tuna::util::human_bytes;
-use tuna::workloads::{self, PAGES_PER_PAPER_GB, TABLE1};
+use tuna::workloads::{PAGES_PER_PAPER_GB, TABLE1};
 use tuna::PAGE_BYTES;
 
 fn main() {
@@ -78,14 +96,15 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&mut args),
         Some("sweep") => cmd_sweep(&mut args),
         Some("store") => cmd_store(&mut args),
+        Some("trace") => cmd_trace(&mut args),
         Some(other) => {
             bail!(
-                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store)"
+                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store, trace)"
             )
         }
         None => {
             println!(
-                "usage: tuna <info|build-db|run|tune|serve|sweep|store> [flags]  (see README)"
+                "usage: tuna <info|build-db|run|tune|serve|sweep|store|trace> [flags]  (see README)"
             );
             Ok(())
         }
@@ -278,12 +297,6 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
         t.row(vec![format!("vmstat {name}"), v.to_string()]);
     }
     t.print();
-
-    // workloads sanity: make sure the chosen workload exists in Table 1
-    let known = workloads::ALL_NAMES;
-    if !known.iter().any(|n| n.eq_ignore_ascii_case(&spec.workload)) {
-        eprintln!("note: `{}` is not a Table 1 workload", spec.workload);
-    }
     Ok(())
 }
 
@@ -607,4 +620,211 @@ fn cmd_store(args: &mut Args) -> Result<()> {
         }
         _ => bail!("usage: tuna store <ls|diff a b> [--store DIR]"),
     }
+}
+
+/// `tuna trace`: record, replay and inspect durable KV op-stream
+/// artifacts (`TUNATRC1`). Traces are first-class store artifacts — a
+/// recorded stream replays through any policy run or `tuna tune
+/// --workload trace:FILE` with decisions bit-identical to the live
+/// generator run that produced it.
+fn cmd_trace(args: &mut Args) -> Result<()> {
+    let action = args.positional.first().cloned();
+    match action.as_deref() {
+        Some("record") => cmd_trace_record(args),
+        Some("replay") => cmd_trace_replay(args),
+        Some("stats") => cmd_trace_stats(args),
+        _ => bail!("usage: tuna trace <record|replay FILE|stats FILE> [flags]"),
+    }
+}
+
+fn cmd_trace_record(args: &mut Args) -> Result<()> {
+    let from = args.get("from").map(PathBuf::from);
+    let workload = args.get("workload").map(|s| s.to_string());
+    let seed_flag = args.get("seed").map(|s| s.to_string());
+    let intervals_flag = args.get("intervals").map(|s| s.to_string());
+    let seed: u64 = match &seed_flag {
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("bad value for --seed: {e}"))?,
+        None => 42,
+    };
+    let intervals: u32 = match &intervals_flag {
+        Some(s) => {
+            s.parse().map_err(|e| anyhow::anyhow!("bad value for --intervals: {e}"))?
+        }
+        None => 120,
+    };
+    let keys = args.get("keys").map(|s| s.to_string());
+    let ops = args.get("ops").map(|s| s.to_string());
+    let out_given = args.get("out").map(PathBuf::from);
+    let store_dir = args.get("store").map(PathBuf::from);
+    let named = args.get("name").map(|s| s.to_string());
+    args.finish()?;
+    if out_given.is_some() && store_dir.is_some() {
+        bail!("--out conflicts with --store (store traces are named with --name)");
+    }
+    if named.is_some() && store_dir.is_none() {
+        bail!("--name requires --store DIR (it names the trace inside the store)");
+    }
+
+    let trace = match (&from, &workload) {
+        (Some(_), Some(_)) => bail!("--from conflicts with --workload"),
+        (Some(path), None) => {
+            // Re-encode an existing trace: the canonical encoding makes
+            // record → replay → re-record byte-for-byte stable. Generator
+            // flags would be silently meaningless here, so reject them.
+            if keys.is_some()
+                || ops.is_some()
+                || seed_flag.is_some()
+                || intervals_flag.is_some()
+            {
+                bail!(
+                    "--seed/--intervals/--keys/--ops apply to generated traces, not \
+                     --from re-records (a re-record copies the stream verbatim)"
+                );
+            }
+            trace_format::load(path)?
+        }
+        (None, Some(name)) => {
+            let mut spec = trace_gen::spec_by_name(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "`{name}` is not a KV generator family; valid: {}",
+                    trace_gen::FAMILY.join(", ")
+                )
+            })?;
+            if let Some(k) = &keys {
+                spec.n_keys = k.parse().map_err(|e| anyhow::anyhow!("bad --keys: {e}"))?;
+            }
+            if let Some(o) = &ops {
+                spec.ops_per_interval =
+                    o.parse().map_err(|e| anyhow::anyhow!("bad --ops: {e}"))?;
+            }
+            // reject degenerate/absurd keyspaces here, not as a panic or
+            // abort inside the generator
+            tuna::trace::check_layout_bounds(spec.n_keys, spec.value_bytes)?;
+            // A trace recorded at N intervals replays to N engine
+            // intervals: the first is the allocation epoch, so the
+            // generator supplies N − 1 op frames.
+            trace_gen::generate(&spec, seed, intervals.saturating_sub(1))
+        }
+        (None, None) => bail!("trace record needs --workload FAMILY or --from FILE"),
+    };
+
+    let out = match (&out_given, &store_dir) {
+        (Some(path), None) => path.clone(),
+        (None, Some(dir)) => {
+            let store = ArtifactStore::open(dir)?;
+            let name = named
+                .unwrap_or_else(|| format!("{}-{}", trace.header.workload, trace.header.seed));
+            store.trace_path(&name)
+        }
+        (None, None) => PathBuf::from(format!(
+            "artifacts/traces/{}-{}.trc",
+            trace.header.workload, trace.header.seed
+        )),
+        (Some(_), Some(_)) => unreachable!("checked above"),
+    };
+    trace_format::save(&out, &trace)?;
+    let s = trace.stats();
+    println!(
+        "trace recorded to {}: {} seed {}, {} ops in {} intervals ({} keys, {})",
+        out.display(),
+        trace.header.workload,
+        trace.header.seed,
+        s.total_ops(),
+        trace.intervals.len(),
+        trace.header.n_keys,
+        human_bytes(std::fs::metadata(&out)?.len()),
+    );
+    Ok(())
+}
+
+fn cmd_trace_replay(args: &mut Args) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: tuna trace replay FILE [flags]"))?;
+    let store_dir = args.get("store").map(PathBuf::from);
+    let path = match &store_dir {
+        Some(dir) => ArtifactStore::open_existing(dir)?.resolve_trace(&file),
+        None => PathBuf::from(&file),
+    };
+    // default run length: the whole trace (frames + allocation epoch)
+    let (_, frames, _) = trace_format::peek(&path)?;
+    let mut spec = RunSpec::new(&format!("trace:{}", path.display()));
+    spec.intervals = args.get_parse("intervals", frames + 1)?;
+    spec.fm_fraction = args.get_parse("fraction", 0.9)?;
+    spec.hot_thr = args.get_parse("hot-thr", spec.hot_thr)?;
+    let policy = SweepPolicy::parse(&args.get_or("policy", "tpp"))?;
+    args.finish()?;
+
+    let baseline = coordinator::run_fm_only(&spec)?;
+    let run = match policy {
+        SweepPolicy::Tpp => coordinator::run_tpp(&spec)?,
+        SweepPolicy::FirstTouch => coordinator::run_first_touch(&spec)?,
+        SweepPolicy::Memtis => coordinator::run_memtis(&spec)?,
+        SweepPolicy::Tuna => bail!(
+            "trace replay under Tuna needs the perf DB: use `tuna tune --workload trace:{}`",
+            path.display()
+        ),
+    };
+    let loss = coordinator::overall_loss(&run, &baseline);
+    let mut t = Table::new(
+        &format!(
+            "replay of {} ({}) under {} at {} fast memory",
+            path.display(),
+            run.workload,
+            run.policy,
+            pct(spec.fm_fraction)
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["intervals".into(), run.trace.len().to_string()]);
+    t.row(vec!["total time".into(), tuna::util::human_ns(run.total_ns as u64)]);
+    t.row(vec!["perf loss vs fast-only".into(), pct(loss)]);
+    t.row(vec!["promotions".into(), run.total_promoted().to_string()]);
+    t.row(vec!["demotions".into(), run.total_demoted().to_string()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_trace_stats(args: &mut Args) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: tuna trace stats FILE [--store DIR]"))?;
+    let store_dir = args.get("store").map(PathBuf::from);
+    args.finish()?;
+    let path = match &store_dir {
+        Some(dir) => ArtifactStore::open_existing(dir)?.resolve_trace(&file),
+        None => PathBuf::from(&file),
+    };
+    // full load: stats double as an integrity check of every frame CRC
+    let trace = trace_format::load(&path)?;
+    let s = trace.stats();
+    let h = &trace.header;
+    let layout = tuna::trace::replay::KeyspaceLayout::new(h.n_keys, h.value_bytes);
+    let mut t = Table::new(&format!("trace {}", path.display()), &["field", "value"]);
+    t.row(vec!["workload".into(), h.workload.clone()]);
+    t.row(vec!["seed".into(), h.seed.to_string()]);
+    t.row(vec!["keys".into(), h.n_keys.to_string()]);
+    t.row(vec!["value bytes".into(), h.value_bytes.to_string()]);
+    t.row(vec!["threads".into(), h.threads.to_string()]);
+    t.row(vec!["intervals".into(), trace.intervals.len().to_string()]);
+    t.row(vec!["ops".into(), s.total_ops().to_string()]);
+    t.row(vec![
+        "mix r/u/i/s".into(),
+        format!("{}/{}/{}/{}", s.reads, s.updates, s.inserts, s.scans),
+    ]);
+    t.row(vec!["mean scan len".into(), format!("{:.1}", s.mean_scan_len())]);
+    t.row(vec![
+        "replay RSS".into(),
+        format!(
+            "{} pages ({})",
+            layout.rss_pages(),
+            human_bytes(layout.rss_pages() as u64 * PAGE_BYTES)
+        ),
+    ]);
+    t.print();
+    Ok(())
 }

@@ -143,6 +143,15 @@ impl Engine {
 
         while let Some(profile) = workload.next_interval() {
             interval += 1;
+            // Histogram invariant: a page appears at most once per
+            // interval (per-page caps, sampled-access saturation and the
+            // KV replayer's random/streamed merge all depend on it).
+            debug_assert!(
+                profile.duplicate_page().is_none(),
+                "workload `{}` emitted page {:?} more than once in interval {interval}",
+                workload.name(),
+                profile.duplicate_page()
+            );
             // --- classify accesses against current placement ---
             let mut inputs = IntervalInputs {
                 threads: workload.threads(),
@@ -424,6 +433,40 @@ mod tests {
             .max()
             .unwrap();
         assert!(per_interval_max <= engine().model.machine.kswapd_pages_per_interval);
+    }
+
+    /// A workload that violates the "page appears at most once per
+    /// interval" histogram invariant must trip the engine's debug
+    /// assertion instead of silently double-counting.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "more than once")]
+    fn duplicate_pages_in_a_profile_trip_the_debug_assertion() {
+        struct Dup;
+        impl Workload for Dup {
+            fn name(&self) -> &'static str {
+                "dup"
+            }
+            fn rss_pages(&self) -> usize {
+                64
+            }
+            fn threads(&self) -> u32 {
+                1
+            }
+            fn next_interval(&mut self) -> Option<AccessProfile> {
+                Some(AccessProfile {
+                    accesses: vec![
+                        PageAccess { page: 5, random: 1, streamed: 0 },
+                        PageAccess { page: 5, random: 2, streamed: 0 },
+                    ],
+                    flops: 0,
+                    iops: 10,
+                })
+            }
+        }
+        let cap = Engine::fm_capacity(64, 1.0);
+        let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+        engine().run(&mut Dup, &mut tpp, cap, |_| None);
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! The durable `TUNATRC1` trace artifact.
+//!
+//! Flat little-endian layout (built on [`crate::artifact::wire`]),
+//! framed so a reader can verify integrity incrementally and a truncated
+//! or corrupted file fails parsing instead of replaying garbage:
+//!
+//! ```text
+//! magic        8   b"TUNATRC1"
+//! header_len   u32
+//! header:          str workload | u64 seed | u32 n_keys | u32 value_bytes
+//!                  | u32 ops_per_interval | u32 threads
+//!                  | u32 n_intervals | u64 total_ops
+//! header_crc   u32 (crc32 of the header payload)
+//! frame × n_intervals:
+//!   frame_len  u32
+//!   payload:       u32 n_ops | (u8 kind, u32 key, u16 len) × n_ops
+//!   frame_crc  u32 (crc32 of the payload)
+//! ```
+//!
+//! Encoding is canonical — one trace has exactly one byte representation
+//! — so determinism tests can compare whole files, and
+//! record → replay → re-record round-trips byte-for-byte. Writes go
+//! through [`crate::artifact::write_atomic`] like every other artifact.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{KvOp, KvOpKind, KvTrace, TraceHeader};
+use crate::artifact::wire::{put_str, put_u32, put_u64, put_u8, Reader};
+use crate::perfdb::store::crc32;
+
+pub const MAGIC: &[u8; 8] = b"TUNATRC1";
+
+/// Longest workload name the header accepts (keeps `peek` bounded).
+const MAX_NAME: usize = 256;
+/// Bytes `peek` reads from the front of the file — enough for the magic,
+/// the largest legal header and both length/CRC words.
+const PEEK_BYTES: usize = 8 + 4 + 4 + MAX_NAME + 8 + 4 * 5 + 8 + 4;
+
+fn encode_header(h: &TraceHeader, n_intervals: u32, total_ops: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_str(&mut out, &h.workload);
+    put_u64(&mut out, h.seed);
+    put_u32(&mut out, h.n_keys);
+    put_u32(&mut out, h.value_bytes);
+    put_u32(&mut out, h.ops_per_interval);
+    put_u32(&mut out, h.threads);
+    put_u32(&mut out, n_intervals);
+    put_u64(&mut out, total_ops);
+    out
+}
+
+fn decode_header(payload: &[u8]) -> Result<(TraceHeader, u32, u64)> {
+    let mut r = Reader::new(payload);
+    let header = TraceHeader {
+        workload: r.str()?,
+        seed: r.u64()?,
+        n_keys: r.u32()?,
+        value_bytes: r.u32()?,
+        ops_per_interval: r.u32()?,
+        threads: r.u32()?,
+    };
+    let n_intervals = r.u32()?;
+    let total_ops = r.u64()?;
+    r.done()?;
+    Ok((header, n_intervals, total_ops))
+}
+
+/// Serialize a trace to its canonical byte representation.
+pub fn encode(trace: &KvTrace) -> Result<Vec<u8>> {
+    if trace.header.workload.len() > MAX_NAME {
+        bail!(
+            "trace workload name is {} bytes (max {MAX_NAME})",
+            trace.header.workload.len()
+        );
+    }
+    trace.validate()?;
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    let header =
+        encode_header(&trace.header, trace.intervals.len() as u32, trace.total_ops());
+    put_u32(&mut out, header.len() as u32);
+    out.extend_from_slice(&header);
+    put_u32(&mut out, crc32(&header));
+    for ops in &trace.intervals {
+        let mut payload = Vec::with_capacity(4 + ops.len() * 7);
+        put_u32(&mut payload, ops.len() as u32);
+        for op in ops {
+            put_u8(&mut payload, op.kind.code());
+            put_u32(&mut payload, op.key);
+            payload.extend_from_slice(&op.len.to_le_bytes());
+        }
+        put_u32(&mut out, payload.len() as u32);
+        out.extend_from_slice(&payload);
+        put_u32(&mut out, crc32(&payload));
+    }
+    Ok(out)
+}
+
+/// Parse a trace from bytes, verifying the magic and every CRC.
+pub fn decode(bytes: &[u8]) -> Result<KvTrace> {
+    let mut r = Reader::new(bytes);
+    let magic = r.take(8).context("reading trace magic")?;
+    if magic != MAGIC {
+        bail!("not a TUNATRC1 trace (bad magic {magic:02x?})");
+    }
+    let header_len = r.u32()? as usize;
+    if header_len > 4 + MAX_NAME + 4 * 5 + 16 {
+        bail!("implausible trace header length {header_len}");
+    }
+    let header_payload = r.take(header_len).context("reading trace header")?;
+    let want = r.u32()?;
+    let got = crc32(header_payload);
+    if want != got {
+        bail!("trace header CRC mismatch: stored {want:#010x}, computed {got:#010x}");
+    }
+    let (header, n_intervals, total_ops) = decode_header(header_payload)?;
+    // frame count is CRC-protected, but don't let a hostile header
+    // pre-allocate gigabytes — growth past this is incremental
+    let mut intervals = Vec::with_capacity(n_intervals.min(1 << 16) as usize);
+    for i in 0..n_intervals {
+        let frame_len = r.u32()? as usize;
+        let payload = r
+            .take(frame_len)
+            .with_context(|| format!("reading trace frame {}/{n_intervals}", i + 1))?;
+        let want = r.u32()?;
+        let got = crc32(payload);
+        if want != got {
+            bail!(
+                "trace frame {}/{n_intervals} CRC mismatch: stored {want:#010x}, computed {got:#010x}",
+                i + 1
+            );
+        }
+        let mut fr = Reader::new(payload);
+        let n_ops = fr.u32()? as usize;
+        if frame_len != 4 + n_ops * 7 {
+            bail!(
+                "trace frame {}: {n_ops} ops need {} bytes, frame has {frame_len}",
+                i + 1,
+                4 + n_ops * 7
+            );
+        }
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let kind = KvOpKind::from_code(fr.u8()?)?;
+            let key = fr.u32()?;
+            let len = u16::from_le_bytes(fr.take(2)?.try_into().unwrap());
+            ops.push(KvOp { kind, key, len });
+        }
+        fr.done()?;
+        intervals.push(ops);
+    }
+    r.done()?;
+    let trace = KvTrace { header, intervals };
+    if trace.total_ops() != total_ops {
+        bail!(
+            "trace op count mismatch: header says {total_ops}, frames hold {}",
+            trace.total_ops()
+        );
+    }
+    trace.validate()?;
+    Ok(trace)
+}
+
+/// Write a trace artifact atomically.
+pub fn save(path: &Path, trace: &KvTrace) -> Result<()> {
+    crate::artifact::write_atomic(path, &encode(trace)?)
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+/// Load and fully verify a trace artifact.
+pub fn load(path: &Path) -> Result<KvTrace> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    decode(&bytes).with_context(|| format!("parsing trace {}", path.display()))
+}
+
+/// Header-only peek: `(header, op_intervals, total_ops)` from the first
+/// few hundred bytes of the file — `tuna store ls` must not read (or
+/// CRC) megabytes of frames just to print one line.
+pub fn peek(path: &Path) -> Result<(TraceHeader, u32, u64)> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let mut buf = vec![0u8; PEEK_BYTES];
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = f.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    buf.truncate(filled);
+    let mut r = Reader::new(&buf);
+    let magic = r.take(8).context("reading trace magic")?;
+    if magic != MAGIC {
+        bail!("not a TUNATRC1 trace (bad magic {magic:02x?})");
+    }
+    let header_len = r.u32()? as usize;
+    let header_payload = r.take(header_len).context("reading trace header")?;
+    let want = r.u32()?;
+    let got = crc32(header_payload);
+    if want != got {
+        bail!("trace header CRC mismatch: stored {want:#010x}, computed {got:#010x}");
+    }
+    decode_header(header_payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{generate, spec_by_name};
+
+    fn sample_trace() -> KvTrace {
+        let mut spec = spec_by_name("kv-scan").unwrap();
+        spec.n_keys = 2_000;
+        spec.ops_per_interval = 500;
+        generate(&spec, 77, 4)
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tuna_trc_{tag}_{}.trc", std::process::id()))
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_exact_and_canonical() {
+        let t = sample_trace();
+        let bytes = encode(&t).unwrap();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, t);
+        // canonical: re-encoding the decoded trace is byte-identical
+        assert_eq!(encode(&back).unwrap(), bytes);
+    }
+
+    #[test]
+    fn save_load_and_peek() {
+        let t = sample_trace();
+        let path = tmp("saveload");
+        save(&path, &t).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, t);
+        let (h, n_iv, n_ops) = peek(&path).unwrap();
+        assert_eq!(h, t.header);
+        assert_eq!(n_iv, 4);
+        assert_eq!(n_ops, t.total_ops());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let t = sample_trace();
+        let bytes = encode(&t).unwrap();
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&bad).is_err());
+        // flip one byte deep inside a frame → parsing must fail (frame
+        // CRC, frame length or op decoding, depending on what it hit)
+        let mut flipped = bytes.clone();
+        let mid = bytes.len() / 2;
+        flipped[mid] ^= 0x01;
+        assert!(decode(&flipped).is_err());
+        // truncation fails instead of panicking
+        assert!(decode(&bytes[..bytes.len() - 3]).is_err());
+        assert!(decode(&bytes[..20]).is_err());
+        // trailing garbage is rejected
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn header_op_count_must_match_frames() {
+        let t = sample_trace();
+        let mut bytes = encode(&t).unwrap();
+        // the header's total_ops is the last 8 bytes of the header
+        // payload; rewrite it (and the header CRC) to lie about counts
+        let header_len =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let hdr_start = 12;
+        let ops_at = hdr_start + header_len - 8;
+        bytes[ops_at..ops_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let crc = crc32(&bytes[hdr_start..hdr_start + header_len]);
+        bytes[hdr_start + header_len..hdr_start + header_len + 4]
+            .copy_from_slice(&crc.to_le_bytes());
+        let err = format!("{:#}", decode(&bytes).unwrap_err());
+        assert!(err.contains("op count mismatch"), "{err}");
+    }
+
+    #[test]
+    fn oversized_name_is_rejected_at_encode() {
+        let mut t = sample_trace();
+        t.header.workload = "x".repeat(300);
+        assert!(encode(&t).is_err());
+    }
+}

@@ -1,0 +1,479 @@
+//! YCSB-style synthetic KV op-stream generators.
+//!
+//! Each family is a named [`KvGenSpec`]: an op mix (read / update /
+//! insert / scan fractions) plus a key distribution. Sampling is
+//! deterministic per seed — the same spec + seed always produces the
+//! same op stream, which is what makes recorded traces bit-reproducible
+//! (`tuna trace record` twice → identical `TUNATRC1` files).
+//!
+//! Skewed distributions sample at *value-page-group* granularity (a
+//! zipf rank picks a group of keys sharing one value page, scattered
+//! over the keyspace by a fixed multiplicative hash, then a uniform key
+//! within the group) — the same trick the Btree workload uses for its
+//! leaves, so page-level heat is organic rather than flattened by
+//! key-level scatter.
+
+use super::{KvOp, KvOpKind, KvTrace, TraceHeader};
+use crate::util::rng::{Rng, Zipf};
+
+/// Key-popularity distribution of a generator family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyDist {
+    /// Every key equally likely.
+    Uniform,
+    /// Zipf over value-page groups with exponent `skew` (YCSB default
+    /// regime; rank scattered by a fixed hash).
+    Zipfian { skew: f64 },
+    /// Zipf over *recency*: rank 0 is the most recently inserted key, so
+    /// the hot set trails the churn head (YCSB-D).
+    Latest { skew: f64 },
+    /// A fraction `hot_frac` of the keyspace receives `hot_op_frac` of
+    /// the operations; both ranges uniform inside (YCSB hotspot).
+    Hotspot { hot_frac: f64, hot_op_frac: f64 },
+    /// Zipfian whose scattered hot set shifts by `shift_frac` of the
+    /// keyspace every `every` intervals — a migrating hot set, the
+    /// access pattern page migration exists for.
+    Drift { skew: f64, every: u32, shift_frac: f64 },
+}
+
+/// Operation mix as cumulative-able fractions (must sum to ~1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpMix {
+    pub read: f64,
+    pub update: f64,
+    pub insert: f64,
+    pub scan: f64,
+}
+
+/// Full generator family specification. Defaults are paper-scale-ish:
+/// the layout ([`super::replay::KeyspaceLayout`]) lands around 7.6 K
+/// pages of RSS (≈ 7.4 paper-GB), between Btree and BFS.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvGenSpec {
+    /// Family name (what the workload registry and trace headers carry).
+    pub name: &'static str,
+    pub dist: KeyDist,
+    pub mix: OpMix,
+    pub n_keys: u32,
+    pub ops_per_interval: u32,
+    /// Max scan length in keys (scan lengths are uniform in `1..=max`).
+    pub scan_max: u16,
+    pub value_bytes: u32,
+    pub threads: u32,
+}
+
+/// Default keyspace size (30 K keys × 1 KiB values ≈ 7.5 K value pages).
+pub const DEFAULT_KEYS: u32 = 30_000;
+/// Default operations per profiling interval.
+pub const DEFAULT_OPS: u32 = 24_000;
+/// Default value size in bytes (4 keys per value page).
+pub const DEFAULT_VALUE_BYTES: u32 = 1024;
+/// Worker threads the KV family models.
+pub const KV_THREADS: u32 = 16;
+
+impl KvGenSpec {
+    fn family(name: &'static str, dist: KeyDist, mix: OpMix, scan_max: u16) -> Self {
+        KvGenSpec {
+            name,
+            dist,
+            mix,
+            n_keys: DEFAULT_KEYS,
+            ops_per_interval: DEFAULT_OPS,
+            scan_max,
+            value_bytes: DEFAULT_VALUE_BYTES,
+            threads: KV_THREADS,
+        }
+    }
+
+    /// The [`TraceHeader`] a recording of this spec carries.
+    pub fn header(&self, seed: u64) -> TraceHeader {
+        TraceHeader {
+            workload: self.name.to_string(),
+            seed,
+            n_keys: self.n_keys,
+            value_bytes: self.value_bytes,
+            ops_per_interval: self.ops_per_interval,
+            threads: self.threads,
+        }
+    }
+}
+
+const READ_MOSTLY: OpMix = OpMix { read: 0.95, update: 0.05, insert: 0.0, scan: 0.0 };
+
+/// Every generator family name, in canonical order — the single source
+/// the workload registry (and its error message) derives the KV entries
+/// from.
+pub const FAMILY: [&str; 6] =
+    ["kv-uniform", "kv-zipfian", "kv-latest", "kv-hotspot", "kv-scan", "kv-drift"];
+
+/// Look up a generator family by (case-insensitive) name.
+pub fn spec_by_name(name: &str) -> Option<KvGenSpec> {
+    let spec = match name.to_ascii_lowercase().as_str() {
+        // YCSB-C-like: uniform point reads with light updates.
+        "kv-uniform" => KvGenSpec::family("kv-uniform", KeyDist::Uniform, READ_MOSTLY, 0),
+        // YCSB-B-like: zipf(0.99) point ops, the classic skewed cache.
+        "kv-zipfian" => {
+            KvGenSpec::family("kv-zipfian", KeyDist::Zipfian { skew: 0.99 }, READ_MOSTLY, 0)
+        }
+        // YCSB-D-like: reads chase the insert head (churn + recency).
+        "kv-latest" => KvGenSpec::family(
+            "kv-latest",
+            KeyDist::Latest { skew: 0.9 },
+            OpMix { read: 0.85, update: 0.0, insert: 0.15, scan: 0.0 },
+            0,
+        ),
+        // 90% of ops on 10% of the keyspace.
+        "kv-hotspot" => KvGenSpec::family(
+            "kv-hotspot",
+            KeyDist::Hotspot { hot_frac: 0.10, hot_op_frac: 0.90 },
+            READ_MOSTLY,
+            0,
+        ),
+        // YCSB-E-like: short range scans dominate, light insert churn.
+        "kv-scan" => KvGenSpec::family(
+            "kv-scan",
+            KeyDist::Zipfian { skew: 0.8 },
+            OpMix { read: 0.0, update: 0.0, insert: 0.05, scan: 0.95 },
+            128,
+        ),
+        // Zipfian whose hot set migrates ~29% of the keyspace every 40
+        // intervals (4 paper-seconds) — sustained promotion pressure.
+        "kv-drift" => KvGenSpec::family(
+            "kv-drift",
+            KeyDist::Drift { skew: 0.99, every: 40, shift_frac: 0.29 },
+            READ_MOSTLY,
+            0,
+        ),
+        _ => return None,
+    };
+    Some(spec)
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// Fixed multiplicative-permutation multiplier for scattering zipf ranks
+/// over group ids (hot groups must not be physically adjacent — same
+/// idiom as the Btree leaf scatter). The golden-ratio constant is
+/// nudged until it is coprime to `n`, so `rank * mul % n` is a true
+/// bijection for every group count (0x9E37…15 itself is divisible by 5,
+/// which would collapse any keyspace whose group count is too).
+fn scatter_multiplier(n: u64) -> u64 {
+    let mut mul = 0x9E37_79B9_7F4A_7C15u64 % n.max(1);
+    if n <= 1 {
+        return 1;
+    }
+    mul = mul.max(2);
+    while gcd(mul, n) != 1 {
+        mul += 1;
+    }
+    mul
+}
+
+/// Stateful, deterministic op-stream generator for one spec + seed.
+pub struct KvGen {
+    spec: KvGenSpec,
+    rng: Rng,
+    /// Zipf over value-page groups (Zipfian / Drift / scan starts).
+    group_zipf: Option<Zipf>,
+    /// Zipf over recency ranks (Latest).
+    recency_zipf: Option<Zipf>,
+    /// Keys per value page (the group size).
+    group_keys: u32,
+    n_groups: u64,
+    /// Multiplier of the rank → group bijection (see [`scatter_multiplier`]).
+    scatter_mul: u64,
+    /// Churn head: next insert overwrites this ring slot.
+    head: u32,
+    /// 1-based index of the interval being generated next.
+    interval: u32,
+}
+
+impl KvGen {
+    pub fn new(spec: KvGenSpec, seed: u64) -> Self {
+        assert!(spec.n_keys > 0, "empty keyspace");
+        // keys per value page: page / value size (≥ 1 key per page)
+        let group_keys = (crate::PAGE_BYTES as u32 / spec.value_bytes.max(1)).max(1);
+        let n_groups = (spec.n_keys as u64).div_ceil(group_keys as u64);
+        let group_zipf = match spec.dist {
+            KeyDist::Zipfian { skew } | KeyDist::Drift { skew, .. } => {
+                Some(Zipf::new(n_groups as usize, skew))
+            }
+            _ => None,
+        };
+        let recency_zipf = match spec.dist {
+            KeyDist::Latest { skew } => Some(Zipf::new(spec.n_keys as usize, skew)),
+            _ => None,
+        };
+        KvGen {
+            rng: Rng::new(seed ^ 0x6b76_7472_6163_6531), // "kvtrace1"
+            spec,
+            group_zipf,
+            recency_zipf,
+            group_keys,
+            n_groups,
+            scatter_mul: scatter_multiplier(n_groups),
+            head: 0,
+            interval: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &KvGenSpec {
+        &self.spec
+    }
+
+    /// Drift offset (in keys) for the interval being generated.
+    fn drift_offset(&self) -> u64 {
+        match self.spec.dist {
+            KeyDist::Drift { every, shift_frac, .. } => {
+                let phase = (self.interval.saturating_sub(1) / every.max(1)) as u64;
+                phase.wrapping_mul((shift_frac * self.spec.n_keys as f64) as u64)
+                    % self.spec.n_keys as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Sample one key according to the family distribution.
+    fn sample_key(&mut self) -> u32 {
+        let n = self.spec.n_keys as u64;
+        match self.spec.dist {
+            KeyDist::Uniform => self.rng.below(n) as u32,
+            KeyDist::Zipfian { .. } | KeyDist::Drift { .. } => {
+                let zipf = self.group_zipf.as_ref().expect("zipf built in new()");
+                let rank = zipf.sample(&mut self.rng) as u64;
+                let group = rank.wrapping_mul(self.scatter_mul) % self.n_groups;
+                let key = (group * self.group_keys as u64
+                    + self.rng.below(self.group_keys as u64))
+                    .min(n - 1);
+                ((key + self.drift_offset()) % n) as u32
+            }
+            KeyDist::Latest { .. } => {
+                let zipf = self.recency_zipf.as_ref().expect("zipf built in new()");
+                let rank = zipf.sample(&mut self.rng) as u64 % n;
+                // rank 0 = most recently inserted slot (head - 1)
+                ((self.head as u64 + n - 1 - rank) % n) as u32
+            }
+            KeyDist::Hotspot { hot_frac, hot_op_frac } => {
+                let hot_n = ((n as f64 * hot_frac) as u64).clamp(1, n);
+                if self.rng.chance(hot_op_frac) {
+                    self.rng.below(hot_n) as u32
+                } else if hot_n == n {
+                    self.rng.below(n) as u32
+                } else {
+                    (hot_n + self.rng.below(n - hot_n)) as u32
+                }
+            }
+        }
+    }
+
+    /// Generate the next interval's operations.
+    pub fn next_interval_ops(&mut self) -> Vec<KvOp> {
+        self.interval += 1;
+        let mix = self.spec.mix;
+        let mut ops = Vec::with_capacity(self.spec.ops_per_interval as usize);
+        for _ in 0..self.spec.ops_per_interval {
+            let roll = self.rng.f64();
+            let op = if roll < mix.scan {
+                let start = self.sample_key();
+                let len = 1 + self.rng.below(self.spec.scan_max.max(1) as u64) as u16;
+                KvOp::scan(start, len)
+            } else if roll < mix.scan + mix.insert {
+                let key = self.head;
+                self.head = (self.head + 1) % self.spec.n_keys;
+                KvOp::point(KvOpKind::Insert, key)
+            } else if roll < mix.scan + mix.insert + mix.update {
+                KvOp::point(KvOpKind::Update, self.sample_key())
+            } else {
+                KvOp::point(KvOpKind::Read, self.sample_key())
+            };
+            ops.push(op);
+        }
+        ops
+    }
+}
+
+/// Generate a complete trace: `op_intervals` profiling intervals of ops
+/// under `spec` + `seed` (the allocation epoch is added by the replayer,
+/// so a trace recorded for an `N`-interval run carries `N − 1` frames).
+pub fn generate(spec: &KvGenSpec, seed: u64, op_intervals: u32) -> KvTrace {
+    let mut g = KvGen::new(spec.clone(), seed);
+    let intervals = (0..op_intervals).map(|_| g.next_interval_ops()).collect();
+    KvTrace { header: spec.header(seed), intervals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(name: &str) -> KvGenSpec {
+        let mut s = spec_by_name(name).unwrap();
+        s.n_keys = 4_000;
+        s.ops_per_interval = 2_000;
+        s
+    }
+
+    #[test]
+    fn every_family_resolves_and_unknowns_do_not() {
+        for name in FAMILY {
+            let s = spec_by_name(name).unwrap();
+            assert_eq!(s.name, name);
+            let total = s.mix.read + s.mix.update + s.mix.insert + s.mix.scan;
+            assert!((total - 1.0).abs() < 1e-9, "{name} mix sums to {total}");
+            assert_eq!(s.mix.scan > 0.0, s.scan_max > 0, "{name} scan_max consistency");
+        }
+        assert!(spec_by_name("kv-nope").is_none());
+        assert!(spec_by_name("KV-ZIPFIAN").is_some(), "case-insensitive");
+    }
+
+    #[test]
+    fn scatter_multiplier_yields_a_bijection() {
+        // includes group counts divisible by 5 (the raw golden-ratio
+        // constant is too, which is exactly the collapse this guards)
+        for n in [1u64, 2, 7, 1000, 7500, 4096] {
+            let m = scatter_multiplier(n);
+            let mut seen = vec![false; n as usize];
+            for r in 0..n {
+                seen[(r.wrapping_mul(m) % n) as usize] = true;
+            }
+            assert!(seen.iter().all(|&b| b), "n={n} mul={m} is not a bijection");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let spec = small("kv-zipfian");
+        let a = generate(&spec, 11, 5);
+        let b = generate(&spec, 11, 5);
+        assert_eq!(a, b);
+        let c = generate(&spec, 12, 5);
+        assert_ne!(a, c);
+        assert_eq!(a.intervals.len(), 5);
+        assert!(a.intervals.iter().all(|i| i.len() == 2_000));
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn mixes_come_out_at_the_configured_fractions() {
+        for name in FAMILY {
+            let t = generate(&small(name), 3, 10);
+            let s = t.stats();
+            let total = s.total_ops() as f64;
+            let spec = small(name);
+            for (got, want, what) in [
+                (s.reads as f64, spec.mix.read, "read"),
+                (s.updates as f64, spec.mix.update, "update"),
+                (s.inserts as f64, spec.mix.insert, "insert"),
+                (s.scans as f64, spec.mix.scan, "scan"),
+            ] {
+                assert!(
+                    (got / total - want).abs() < 0.02,
+                    "{name} {what}: {} vs {want}",
+                    got / total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zipfian_keys_are_page_skewed() {
+        let spec = small("kv-zipfian");
+        let t = generate(&spec, 5, 10);
+        // heat at value-page-group granularity (4 keys per group)
+        let n_groups = spec.n_keys.div_ceil(4) as usize;
+        let mut heat = vec![0u64; n_groups];
+        for op in t.intervals.iter().flatten() {
+            heat[op.key as usize / 4] += 1;
+        }
+        let mut sorted = heat.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let head: u64 = sorted[..n_groups / 10].iter().sum();
+        let all: u64 = sorted.iter().sum();
+        assert!(head as f64 > 0.5 * all as f64, "top 10% groups hold {head}/{all}");
+        // ... and the cold tail is nearly untouched
+        let cold: u64 = sorted[n_groups / 2..].iter().sum();
+        assert!((cold as f64) < 0.12 * all as f64, "cold half holds {cold}/{all}");
+    }
+
+    #[test]
+    fn drift_migrates_the_hot_set() {
+        let mut spec = small("kv-drift");
+        spec.dist = KeyDist::Drift { skew: 0.99, every: 5, shift_frac: 0.29 };
+        let t = generate(&spec, 9, 10);
+        let hot_keys = |ivs: &[Vec<KvOp>]| {
+            let mut heat = vec![0u64; spec.n_keys as usize];
+            for op in ivs.iter().flatten() {
+                heat[op.key as usize] += 1;
+            }
+            let mut idx: Vec<usize> = (0..heat.len()).collect();
+            idx.sort_unstable_by_key(|&i| std::cmp::Reverse(heat[i]));
+            idx.truncate(spec.n_keys as usize / 20);
+            idx.into_iter().collect::<std::collections::HashSet<_>>()
+        };
+        let phase1 = hot_keys(&t.intervals[..5]);
+        let phase2 = hot_keys(&t.intervals[5..]);
+        let overlap = phase1.intersection(&phase2).count();
+        assert!(
+            (overlap as f64) < 0.5 * phase1.len() as f64,
+            "hot set barely moved: {overlap}/{}",
+            phase1.len()
+        );
+    }
+
+    #[test]
+    fn latest_reads_chase_the_insert_head() {
+        let t = generate(&small("kv-latest"), 2, 6);
+        // by the last interval the head has advanced well into the ring;
+        // reads should cluster just behind it
+        let head_after: u64 = (t.stats().inserts) % t.header.n_keys as u64;
+        let last = t.intervals.last().unwrap();
+        let near = last
+            .iter()
+            .filter(|op| op.kind == KvOpKind::Read)
+            .filter(|op| {
+                let dist = (head_after + t.header.n_keys as u64 - op.key as u64)
+                    % t.header.n_keys as u64;
+                dist < t.header.n_keys as u64 / 4
+            })
+            .count();
+        let reads = last.iter().filter(|op| op.kind == KvOpKind::Read).count();
+        assert!(near * 2 > reads, "only {near}/{reads} reads near the head");
+    }
+
+    #[test]
+    fn hotspot_routes_ops_to_the_hot_range() {
+        let spec = small("kv-hotspot");
+        let t = generate(&spec, 13, 8);
+        let hot_n = spec.n_keys / 10;
+        let hot = t
+            .intervals
+            .iter()
+            .flatten()
+            .filter(|op| op.key < hot_n)
+            .count() as f64;
+        let frac = hot / t.total_ops() as f64;
+        assert!((frac - 0.9).abs() < 0.02, "hot fraction {frac}");
+    }
+
+    #[test]
+    fn scan_family_emits_bounded_scans() {
+        let spec = small("kv-scan");
+        let t = generate(&spec, 21, 4);
+        t.validate().unwrap();
+        let s = t.stats();
+        assert!(s.scans > 0);
+        let max = t
+            .intervals
+            .iter()
+            .flatten()
+            .filter(|o| o.kind == KvOpKind::Scan)
+            .map(|o| o.len)
+            .max()
+            .unwrap();
+        assert!(max >= spec.scan_max / 2 && max <= spec.scan_max, "max len {max}");
+    }
+}

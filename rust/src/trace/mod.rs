@@ -1,0 +1,302 @@
+//! Trace-driven key-value workload subsystem.
+//!
+//! The paper evaluates Tuna on five Table-1 applications; related tiering
+//! systems (Nomad, ARMS, MEMTIS) lean heavily on key-value-store
+//! workloads, whose access patterns — skewed point ops, range scans,
+//! insert churn, hot-set drift — the graph/MC workloads never produce.
+//! This module supplies that missing workload family in three layers:
+//!
+//! * [`gen`] — YCSB-style synthetic op-stream generators (uniform,
+//!   zipfian, latest, hotspot, scan-heavy, and a time-varying *drift*
+//!   mix whose hot set migrates mid-run — the case page migration exists
+//!   for). Deterministic per seed: the same spec + seed always yields the
+//!   same op stream.
+//! * [`format`] — the durable `TUNATRC1` trace artifact: length-prefixed,
+//!   CRC'd interval frames behind a CRC'd header (built on
+//!   [`crate::artifact::wire`]), written atomically like every other
+//!   artifact. `tuna trace record|replay|stats` are the CLI verbs.
+//! * [`replay`] — the replay engine: maps a KV op stream onto a simulated
+//!   keyspace → page layout and emits per-interval
+//!   [`crate::workloads::AccessProfile`]s (point ops are latency-exposed
+//!   *random* accesses, scans are prefetch-covered *streamed* spans).
+//!   [`replay::KvReplay`] implements [`crate::workloads::Workload`], so
+//!   KV workloads — live-generated or replayed from a trace file — flow
+//!   unchanged through the engine, the TPP policies, the tuner service,
+//!   sweeps and perf-DB experiments.
+//!
+//! Because the trace is the *op stream* (not the page stream), replaying
+//! a recorded trace reproduces the live run exactly: the replayer is
+//! deterministic given the ops, so `tuna tune --workload trace:FILE`
+//! reaches decisions bit-identical to the run that recorded FILE.
+
+pub mod format;
+pub mod gen;
+pub mod replay;
+
+use anyhow::{bail, Result};
+
+/// One key-value operation kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvOpKind {
+    /// Point read of one key.
+    Read,
+    /// In-place overwrite of one key's value.
+    Update,
+    /// Insert at the churn head (the keyspace is a fixed-size ring: an
+    /// insert overwrites the oldest slot, so RSS stays constant while
+    /// the *hot set* follows the head — YCSB's "latest" regime).
+    Insert,
+    /// Range scan of `len` consecutive keys starting at `key`.
+    Scan,
+}
+
+impl KvOpKind {
+    /// Stable on-disk code (never renumber, only extend).
+    pub fn code(&self) -> u8 {
+        match self {
+            KvOpKind::Read => 0,
+            KvOpKind::Update => 1,
+            KvOpKind::Insert => 2,
+            KvOpKind::Scan => 3,
+        }
+    }
+
+    /// Inverse of [`Self::code`].
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => KvOpKind::Read,
+            1 => KvOpKind::Update,
+            2 => KvOpKind::Insert,
+            3 => KvOpKind::Scan,
+            other => bail!("unknown KV op code {other} in trace"),
+        })
+    }
+}
+
+/// One operation of the stream. `len` is the scan length in keys and 0
+/// for point ops; `key` indexes the fixed-size keyspace ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvOp {
+    pub kind: KvOpKind,
+    pub key: u32,
+    pub len: u16,
+}
+
+impl KvOp {
+    pub fn point(kind: KvOpKind, key: u32) -> Self {
+        KvOp { kind, key, len: 0 }
+    }
+
+    pub fn scan(key: u32, len: u16) -> Self {
+        KvOp { kind: KvOpKind::Scan, key, len }
+    }
+}
+
+/// Everything the replayer needs to rebuild the keyspace → page layout,
+/// persisted verbatim in the trace header so a loaded trace reproduces
+/// the live run's address space exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceHeader {
+    /// Generator family name (`kv-zipfian`, ...) — free-form for
+    /// externally captured traces.
+    pub workload: String,
+    /// Seed the op stream was generated with (informational for captured
+    /// traces; replay consumes the ops, never the seed).
+    pub seed: u64,
+    /// Keys in the keyspace ring.
+    pub n_keys: u32,
+    /// Value size in bytes (sets keys-per-value-page in the layout).
+    pub value_bytes: u32,
+    /// Nominal operations per profiling interval.
+    pub ops_per_interval: u32,
+    /// Worker threads the workload models.
+    pub threads: u32,
+}
+
+/// Largest replay address space a trace header may imply (16 M pages =
+/// 64 GiB of simulated RSS, ~16 paper-TB after scale-down — far beyond
+/// any real experiment, small enough that the replayer's histograms
+/// allocate instead of aborting on a crafted header).
+pub const MAX_REPLAY_RSS_PAGES: u64 = 1 << 24;
+
+/// Bound-check a keyspace before anything sizes itself from it — shared
+/// by [`KvTrace::validate`] (hostile/foreign trace headers) and the CLI
+/// (oversized `--keys`/generator overrides).
+pub fn check_layout_bounds(n_keys: u32, value_bytes: u32) -> Result<()> {
+    if n_keys == 0 {
+        bail!("empty keyspace (n_keys = 0)");
+    }
+    if value_bytes == 0 {
+        bail!("value_bytes = 0");
+    }
+    // u32 × u32 fits u64, so the products cannot overflow
+    let value_pages =
+        (n_keys as u64 * value_bytes as u64).div_ceil(crate::PAGE_BYTES);
+    let index_pages = (n_keys as u64 * replay::INDEX_ENTRY_BYTES)
+        .div_ceil(crate::PAGE_BYTES);
+    let rss = 1 + value_pages + index_pages;
+    if rss > MAX_REPLAY_RSS_PAGES {
+        bail!(
+            "keyspace implies {rss} pages of replay RSS (max {MAX_REPLAY_RSS_PAGES}): \
+             n_keys {n_keys} x value_bytes {value_bytes} is not a simulable working set"
+        );
+    }
+    Ok(())
+}
+
+/// A complete in-memory trace: header + one op vector per profiling
+/// interval (the allocation epoch is a replayer artifact, not part of
+/// the trace).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvTrace {
+    pub header: TraceHeader,
+    pub intervals: Vec<Vec<KvOp>>,
+}
+
+/// Per-kind op counts plus scan-volume summary (for `tuna trace stats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    pub reads: u64,
+    pub updates: u64,
+    pub inserts: u64,
+    pub scans: u64,
+    /// Total keys covered by scans.
+    pub scanned_keys: u64,
+}
+
+impl TraceStats {
+    pub fn total_ops(&self) -> u64 {
+        self.reads + self.updates + self.inserts + self.scans
+    }
+
+    pub fn mean_scan_len(&self) -> f64 {
+        if self.scans == 0 {
+            0.0
+        } else {
+            self.scanned_keys as f64 / self.scans as f64
+        }
+    }
+}
+
+impl KvTrace {
+    pub fn total_ops(&self) -> u64 {
+        self.intervals.iter().map(|i| i.len() as u64).sum()
+    }
+
+    /// Tally the op mix across the whole trace.
+    pub fn stats(&self) -> TraceStats {
+        let mut s = TraceStats::default();
+        for op in self.intervals.iter().flatten() {
+            match op.kind {
+                KvOpKind::Read => s.reads += 1,
+                KvOpKind::Update => s.updates += 1,
+                KvOpKind::Insert => s.inserts += 1,
+                KvOpKind::Scan => {
+                    s.scans += 1;
+                    s.scanned_keys += op.len as u64;
+                }
+            }
+        }
+        s
+    }
+
+    /// Validate internal consistency (key bounds, layout size); loaders
+    /// call this so a corrupt or foreign trace fails before it reaches
+    /// the replayer.
+    pub fn validate(&self) -> Result<()> {
+        // A hostile header must not size the replayer into an abort:
+        // bound the implied address space before anything allocates.
+        check_layout_bounds(self.header.n_keys, self.header.value_bytes)?;
+        for (i, ops) in self.intervals.iter().enumerate() {
+            for op in ops {
+                if op.key >= self.header.n_keys {
+                    bail!(
+                        "interval {}: key {} out of keyspace (n_keys {})",
+                        i + 1,
+                        op.key,
+                        self.header.n_keys
+                    );
+                }
+                if (op.kind == KvOpKind::Scan) != (op.len > 0) {
+                    bail!(
+                        "interval {}: {:?} op with scan length {} (scans need len > 0, point ops len = 0)",
+                        i + 1,
+                        op.kind,
+                        op.len
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> KvTrace {
+        KvTrace {
+            header: TraceHeader {
+                workload: "kv-test".into(),
+                seed: 7,
+                n_keys: 100,
+                value_bytes: 1024,
+                ops_per_interval: 4,
+                threads: 4,
+            },
+            intervals: vec![
+                vec![
+                    KvOp::point(KvOpKind::Read, 1),
+                    KvOp::point(KvOpKind::Update, 2),
+                    KvOp::scan(10, 5),
+                ],
+                vec![KvOp::point(KvOpKind::Insert, 3)],
+            ],
+        }
+    }
+
+    #[test]
+    fn op_codes_roundtrip_and_reject_unknown() {
+        for k in [KvOpKind::Read, KvOpKind::Update, KvOpKind::Insert, KvOpKind::Scan] {
+            assert_eq!(KvOpKind::from_code(k.code()).unwrap(), k);
+        }
+        assert!(KvOpKind::from_code(9).is_err());
+    }
+
+    #[test]
+    fn stats_tally_the_mix() {
+        let t = tiny_trace();
+        let s = t.stats();
+        assert_eq!((s.reads, s.updates, s.inserts, s.scans), (1, 1, 1, 1));
+        assert_eq!(s.scanned_keys, 5);
+        assert_eq!(s.total_ops(), 4);
+        assert_eq!(t.total_ops(), 4);
+        assert!((s.mean_scan_len() - 5.0).abs() < 1e-12);
+        assert_eq!(TraceStats::default().mean_scan_len(), 0.0);
+    }
+
+    #[test]
+    fn validate_catches_bad_traces() {
+        let ok = tiny_trace();
+        ok.validate().unwrap();
+        let mut out_of_range = ok.clone();
+        out_of_range.intervals[0][0].key = 100;
+        assert!(out_of_range.validate().is_err());
+        let mut zero_len_scan = ok.clone();
+        zero_len_scan.intervals[0][2].len = 0;
+        assert!(zero_len_scan.validate().is_err());
+        let mut point_with_len = ok.clone();
+        point_with_len.intervals[0][0].len = 3;
+        assert!(point_with_len.validate().is_err());
+        let mut empty_keys = ok.clone();
+        empty_keys.header.n_keys = 0;
+        assert!(empty_keys.validate().is_err());
+        // a crafted header must not size the replayer into an abort
+        let mut huge = ok;
+        huge.header.n_keys = u32::MAX;
+        huge.header.value_bytes = u32::MAX;
+        let err = format!("{:#}", huge.validate().unwrap_err());
+        assert!(err.contains("replay RSS"), "{err}");
+    }
+}

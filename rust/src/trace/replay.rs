@@ -1,0 +1,360 @@
+//! Replay engine: turn a KV op stream into per-interval
+//! [`AccessProfile`]s over a simulated keyspace → page layout.
+//!
+//! The replayer is deliberately free of randomness — every page touch is
+//! a pure function of the op stream — so a live-generated run and a
+//! replay of its recorded trace produce *identical* profiles, and
+//! therefore identical engine traces, telemetry and tuner decisions.
+//!
+//! Layout (`meta | index | values`, page aligned):
+//!
+//! * one metadata page (superblock / memtable head) touched by every op
+//!   — a guaranteed-hot page, like the Btree root;
+//! * a hash-index region, 16 B per key (256 entries/page);
+//! * a value heap, `value_bytes` per key — consecutive keys share value
+//!   pages, so range scans stream contiguous pages while skewed point
+//!   ops leave a cold tail the tuner can reclaim.
+//!
+//! Point ops are latency-exposed *random* touches; scans stream the
+//! index and value spans through [`PageHisto::touch_span`]
+//! (prefetch-covered, bandwidth-bound) — the random/streamed split the
+//! interval model prices differently.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::gen::{KvGen, KvGenSpec};
+use super::{KvOp, KvOpKind, KvTrace};
+use crate::workloads::graph::{Layout, PageHisto, Region};
+use crate::workloads::{AccessProfile, Workload};
+
+/// Bytes per hash-index entry (key + value pointer).
+pub const INDEX_ENTRY_BYTES: u64 = 16;
+
+/// The keyspace → page mapping shared by live and trace-driven replays.
+#[derive(Clone, Copy, Debug)]
+pub struct KeyspaceLayout {
+    pub r_meta: Region,
+    pub r_index: Region,
+    pub r_values: Region,
+    rss: usize,
+}
+
+impl KeyspaceLayout {
+    pub fn new(n_keys: u32, value_bytes: u32) -> Self {
+        let mut l = Layout::new();
+        let r_meta = l.region(1, crate::PAGE_BYTES);
+        let r_index = l.region(n_keys as u64, INDEX_ENTRY_BYTES);
+        let r_values = l.region(n_keys as u64, value_bytes.max(1) as u64);
+        KeyspaceLayout { r_meta, r_index, r_values, rss: l.total_pages() }
+    }
+
+    pub fn rss_pages(&self) -> usize {
+        self.rss
+    }
+}
+
+/// Where the ops come from: a live generator or a loaded trace.
+enum OpSource {
+    Gen(KvGen),
+    Trace { intervals: std::vec::IntoIter<Vec<KvOp>> },
+}
+
+impl OpSource {
+    fn next_ops(&mut self) -> Option<Vec<KvOp>> {
+        match self {
+            OpSource::Gen(g) => Some(g.next_interval_ops()),
+            OpSource::Trace { intervals } => intervals.next(),
+        }
+    }
+}
+
+/// A KV workload the engine can drive: live-generated
+/// ([`KvReplay::live`]) or replayed from a `TUNATRC1` artifact
+/// ([`KvReplay::from_file`], reachable as workload name `trace:FILE`).
+pub struct KvReplay {
+    name: &'static str,
+    layout: KeyspaceLayout,
+    n_keys: u32,
+    histo: PageHisto,
+    source: OpSource,
+    threads: u32,
+    intervals_left: u32,
+    first_interval: bool,
+    /// Ops replayed so far (reported by benches / stats).
+    pub ops_replayed: u64,
+}
+
+/// Map a trace's workload name onto the registry's `&'static str` (the
+/// [`Workload`] trait reports static names); externally captured traces
+/// fall back to `"kv-trace"`.
+fn static_name(name: &str) -> &'static str {
+    super::gen::FAMILY
+        .iter()
+        .find(|f| f.eq_ignore_ascii_case(name))
+        .copied()
+        .unwrap_or("kv-trace")
+}
+
+impl KvReplay {
+    /// Live generator run: `intervals` total engine intervals (the first
+    /// is the allocation epoch, so the generator supplies
+    /// `intervals − 1` op intervals).
+    pub fn live(spec: &KvGenSpec, seed: u64, intervals: u32) -> Self {
+        let layout = KeyspaceLayout::new(spec.n_keys, spec.value_bytes);
+        KvReplay {
+            name: static_name(spec.name),
+            n_keys: spec.n_keys,
+            histo: PageHisto::new(layout.rss_pages()),
+            source: OpSource::Gen(KvGen::new(spec.clone(), seed)),
+            threads: spec.threads,
+            intervals_left: intervals,
+            first_interval: true,
+            ops_replayed: 0,
+            layout,
+        }
+    }
+
+    /// Replay a loaded trace. `intervals` bounds the run length: the run
+    /// ends at `min(intervals, trace frames + 1)` engine intervals, so a
+    /// larger default simply replays the whole trace.
+    pub fn from_trace(trace: KvTrace, intervals: u32) -> Result<Self> {
+        trace.validate()?;
+        let h = &trace.header;
+        let layout = KeyspaceLayout::new(h.n_keys, h.value_bytes);
+        Ok(KvReplay {
+            name: static_name(&h.workload),
+            n_keys: h.n_keys,
+            histo: PageHisto::new(layout.rss_pages()),
+            threads: h.threads,
+            intervals_left: intervals.min(trace.intervals.len() as u32 + 1),
+            first_interval: true,
+            ops_replayed: 0,
+            layout,
+            source: OpSource::Trace { intervals: trace.intervals.into_iter() },
+        })
+    }
+
+    /// Load a `TUNATRC1` artifact and replay it (the `trace:FILE`
+    /// workload-name path).
+    pub fn from_file(path: &Path, intervals: u32) -> Result<Self> {
+        let trace = super::format::load(path)
+            .with_context(|| format!("loading trace workload {}", path.display()))?;
+        Self::from_trace(trace, intervals)
+    }
+
+    /// Apply one op to the histogram; returns the integer ops it models.
+    fn apply(&mut self, op: KvOp) -> u64 {
+        // superblock / memtable head: every op consults it
+        self.histo.touch(self.layout.r_meta.page_of(0), 1);
+        let key = op.key.min(self.n_keys - 1) as u64;
+        match op.kind {
+            KvOpKind::Read => {
+                self.histo.touch(self.layout.r_index.page_of(key), 1);
+                self.histo.touch(self.layout.r_values.page_of(key), 1);
+                2 + 8 + 4
+            }
+            KvOpKind::Update => {
+                self.histo.touch(self.layout.r_index.page_of(key), 1);
+                self.histo.touch(self.layout.r_values.page_of(key), 2);
+                2 + 8 + 8
+            }
+            KvOpKind::Insert => {
+                // index entry rewrite + fresh value write
+                self.histo.touch(self.layout.r_index.page_of(key), 2);
+                self.histo.touch(self.layout.r_values.page_of(key), 2);
+                2 + 10 + 8
+            }
+            KvOpKind::Scan => {
+                // seek is random; the range itself streams through the
+                // prefetcher in both the index and the value heap
+                let end = (key + op.len.max(1) as u64).min(self.n_keys as u64);
+                self.histo.touch(self.layout.r_index.page_of(key), 1);
+                self.histo.touch_span(&self.layout.r_values, key, end);
+                if end - key > 1 {
+                    self.histo.touch_span(&self.layout.r_index, key + 1, end);
+                }
+                2 + 8 + 2 * (end - key)
+            }
+        }
+    }
+}
+
+impl Workload for KvReplay {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn rss_pages(&self) -> usize {
+        self.layout.rss_pages()
+    }
+
+    fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    fn next_interval(&mut self) -> Option<AccessProfile> {
+        if self.intervals_left == 0 {
+            return None;
+        }
+        self.intervals_left -= 1;
+
+        if self.first_interval {
+            self.first_interval = false;
+            // allocation epoch: fault in the whole address space
+            for p in 0..self.rss_pages() as u32 {
+                self.histo.touch(p, 1);
+            }
+            return Some(AccessProfile {
+                accesses: self.histo.drain(),
+                flops: 0,
+                iops: self.rss_pages() as u64 * 16,
+            });
+        }
+
+        let ops = self.source.next_ops()?;
+        let mut iops: u64 = 0;
+        for op in ops {
+            self.ops_replayed += 1;
+            iops += self.apply(op);
+        }
+        Some(AccessProfile { accesses: self.histo.drain(), flops: 0, iops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{generate, spec_by_name};
+
+    fn small_spec() -> KvGenSpec {
+        let mut s = spec_by_name("kv-zipfian").unwrap();
+        s.n_keys = 4_000;
+        s.ops_per_interval = 2_000;
+        s
+    }
+
+    fn profiles(w: &mut dyn Workload) -> Vec<AccessProfile> {
+        std::iter::from_fn(|| w.next_interval()).collect()
+    }
+
+    #[test]
+    fn layout_covers_meta_index_values() {
+        let l = KeyspaceLayout::new(30_000, 1024);
+        assert_eq!(l.r_meta.pages(), 1);
+        // 30 000 × 16 B = 118 index pages; 30 000 × 1 KiB = 7 500 value pages
+        assert_eq!(l.r_index.pages(), 118);
+        assert_eq!(l.r_values.pages(), 7_500);
+        assert_eq!(l.rss_pages(), 1 + 118 + 7_500);
+    }
+
+    #[test]
+    fn live_and_trace_replays_emit_identical_profiles() {
+        let spec = small_spec();
+        let mut live = KvReplay::live(&spec, 9, 12);
+        let trace = generate(&spec, 9, 11);
+        let mut replay = KvReplay::from_trace(trace, 12).unwrap();
+        let a = profiles(&mut live);
+        let b = profiles(&mut replay);
+        assert_eq!(a.len(), 12);
+        assert_eq!(b.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.accesses, y.accesses);
+            assert_eq!((x.flops, x.iops), (y.flops, y.iops));
+        }
+        assert_eq!(live.ops_replayed, replay.ops_replayed);
+        assert_eq!(live.name(), replay.name());
+        assert_eq!(live.rss_pages(), replay.rss_pages());
+    }
+
+    #[test]
+    fn intervals_bound_caps_and_trace_length_caps() {
+        let spec = small_spec();
+        let trace = generate(&spec, 3, 5);
+        // bound below trace length: stops at the bound
+        let mut short = KvReplay::from_trace(trace.clone(), 3).unwrap();
+        assert_eq!(profiles(&mut short).len(), 3);
+        // bound above: stops when the trace runs dry (5 frames + alloc)
+        let mut long = KvReplay::from_trace(trace, 400).unwrap();
+        assert_eq!(profiles(&mut long).len(), 6);
+    }
+
+    #[test]
+    fn profiles_have_unique_pages_and_a_hot_meta_page() {
+        let spec = small_spec();
+        let mut w = KvReplay::live(&spec, 4, 8);
+        let all = profiles(&mut w);
+        for p in &all {
+            assert_eq!(p.duplicate_page(), None, "merge path must dedupe pages");
+        }
+        // meta page (page 0) is touched every interval after allocation
+        for p in &all[1..] {
+            assert!(p.accesses.iter().any(|a| a.page == 0 && a.random > 0));
+        }
+    }
+
+    #[test]
+    fn scans_stream_and_point_ops_randomize() {
+        let mut scan_spec = spec_by_name("kv-scan").unwrap();
+        scan_spec.n_keys = 4_000;
+        scan_spec.ops_per_interval = 1_000;
+        let mut w = KvReplay::live(&scan_spec, 6, 6);
+        let all = profiles(&mut w);
+        let streamed: u64 = all[1..]
+            .iter()
+            .flat_map(|p| &p.accesses)
+            .map(|a| a.streamed as u64)
+            .sum();
+        let random: u64 = all[1..]
+            .iter()
+            .flat_map(|p| &p.accesses)
+            .map(|a| a.random as u64)
+            .sum();
+        assert!(streamed > random, "scan family must stream: {streamed} vs {random}");
+
+        let mut point = KvReplay::live(&small_spec(), 6, 6);
+        let all = profiles(&mut point);
+        let streamed: u64 = all[1..]
+            .iter()
+            .flat_map(|p| &p.accesses)
+            .map(|a| a.streamed as u64)
+            .sum();
+        assert_eq!(streamed, 0, "point families never stream");
+    }
+
+    #[test]
+    fn zipfian_leaves_a_cold_reclaimable_tail() {
+        let spec = small_spec();
+        let mut w = KvReplay::live(&spec, 8, 20);
+        let rss = w.rss_pages();
+        let mut heat = vec![0u64; rss];
+        let _ = w.next_interval(); // skip allocation epoch
+        while let Some(p) = w.next_interval() {
+            for a in p.accesses {
+                heat[a.page as usize] += a.total() as u64;
+            }
+        }
+        let mut sorted = heat.clone();
+        sorted.sort_unstable();
+        let cold_fifth: u64 = sorted[..rss / 5].iter().sum();
+        let all: u64 = sorted.iter().sum();
+        assert!(
+            (cold_fifth as f64) < 0.05 * all as f64,
+            "cold 20% holds {cold_fifth}/{all}"
+        );
+    }
+
+    #[test]
+    fn from_file_roundtrips_and_missing_file_errors() {
+        let spec = small_spec();
+        let trace = generate(&spec, 2, 3);
+        let path = std::env::temp_dir()
+            .join(format!("tuna_replay_{}.trc", std::process::id()));
+        crate::trace::format::save(&path, &trace).unwrap();
+        let mut w = KvReplay::from_file(&path, 10).unwrap();
+        assert_eq!(profiles(&mut w).len(), 4);
+        std::fs::remove_file(&path).ok();
+        assert!(KvReplay::from_file(Path::new("/nonexistent.trc"), 10).is_err());
+    }
+}

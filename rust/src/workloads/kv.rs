@@ -1,0 +1,57 @@
+//! The KV workload family: registry glue binding the trace subsystem's
+//! generators ([`crate::trace::gen`]) and replay engine
+//! ([`crate::trace::replay`]) into the workload registry, so
+//! `kv-zipfian` & co. are ordinary workload names everywhere —
+//! `tuna run|tune|sweep`, the tuner service, benches.
+//!
+//! The family (one entry per generator spec in
+//! [`crate::trace::gen::FAMILY`]):
+//!
+//! | name         | distribution                  | mix                   |
+//! |--------------|-------------------------------|-----------------------|
+//! | `kv-uniform` | uniform                       | 95% read / 5% update  |
+//! | `kv-zipfian` | zipf(0.99) over value pages   | 95% read / 5% update  |
+//! | `kv-latest`  | recency-zipf behind the head  | 85% read / 15% insert |
+//! | `kv-hotspot` | 90% of ops on 10% of keys     | 95% read / 5% update  |
+//! | `kv-scan`    | zipf(0.8) scan starts         | 95% scan / 5% insert  |
+//! | `kv-drift`   | zipf hot set migrating in time| 95% read / 5% update  |
+//!
+//! Recorded traces replay through the same engine via the pseudo-name
+//! `trace:FILE` (see [`crate::workloads::by_name`]).
+
+use anyhow::Result;
+
+use super::Workload;
+use crate::trace::gen::{spec_by_name, FAMILY};
+use crate::trace::replay::KvReplay;
+
+/// Construct a live-generated KV workload by family name.
+pub fn build(name: &str, seed: u64, intervals: u32) -> Result<Box<dyn Workload>> {
+    let spec = spec_by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("`{name}` is not a KV workload family"))?;
+    Ok(Box::new(KvReplay::live(&spec, seed, intervals)))
+}
+
+/// Family names, re-exported for the registry.
+pub use crate::trace::gen::FAMILY as KV_NAMES;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_member_builds_and_runs() {
+        for name in FAMILY {
+            let mut w = build(name, 1, 3).unwrap();
+            assert_eq!(w.name(), name);
+            assert!(w.rss_pages() > 1_000, "{name} rss");
+            assert!(w.threads() > 0);
+            let mut n = 0;
+            while w.next_interval().is_some() {
+                n += 1;
+            }
+            assert_eq!(n, 3, "{name} honors the interval bound");
+        }
+        assert!(build("kv-bogus", 1, 1).is_err());
+    }
+}

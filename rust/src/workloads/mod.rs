@@ -1,5 +1,7 @@
-//! The paper's five evaluation workloads (Table 1), the workload trait the
-//! simulator drives, and the synthetic graph substrate they share.
+//! The workload registry: the paper's five evaluation workloads
+//! (Table 1) plus the trace-driven KV family ([`kv`], backed by
+//! [`crate::trace`]), the workload trait the simulator drives, and the
+//! synthetic graph substrate the Table 1 workloads share.
 //!
 //! | Workload | paper RSS | here (scaled 1 GiB → 4 MiB)  |
 //! |----------|-----------|------------------------------|
@@ -17,9 +19,12 @@
 pub mod bfs;
 pub mod btree;
 pub mod graph;
+pub mod kv;
 pub mod pagerank;
 pub mod sssp;
 pub mod xsbench;
+
+use anyhow::bail;
 
 use crate::PageId;
 
@@ -71,6 +76,21 @@ impl AccessProfile {
             (self.flops + self.iops) as f64 / bytes as f64
         }
     }
+
+    /// First page that appears more than once in the histogram, if any.
+    ///
+    /// "A page appears at most once per interval" is a documented
+    /// invariant of [`AccessProfile::accesses`]: [`graph::PageHisto`]
+    /// guarantees it by construction, the per-page interval cap and the
+    /// KV replayer's random/streamed merge path both depend on it, and
+    /// the engine asserts it (debug builds) on every interval.
+    pub fn duplicate_page(&self) -> Option<PageId> {
+        let mut seen =
+            std::collections::HashSet::with_capacity(self.accesses.len());
+        self.accesses
+            .iter()
+            .find_map(|a| (!seen.insert(a.page)).then_some(a.page))
+    }
 }
 
 /// A workload the engine can drive. Implementations are deterministic per
@@ -118,20 +138,137 @@ pub const TABLE1: [WorkloadInfo; 5] = [
     },
 ];
 
-/// Construct any of the five paper workloads by name with its paper-scaled
-/// RSS and a deterministic seed. `intervals` bounds the run length.
-pub fn by_name(name: &str, seed: u64, intervals: u32) -> Option<Box<dyn Workload>> {
-    match name.to_ascii_lowercase().as_str() {
-        "bfs" => Some(Box::new(bfs::Bfs::paper_scale(seed, intervals))),
-        "sssp" => Some(Box::new(sssp::Sssp::paper_scale(seed, intervals))),
-        "pagerank" | "pr" => Some(Box::new(pagerank::PageRank::paper_scale(seed, intervals))),
-        "xsbench" => Some(Box::new(xsbench::XsBench::paper_scale(seed, intervals))),
-        "btree" => Some(Box::new(btree::Btree::paper_scale(seed, intervals))),
-        _ => None,
-    }
+/// One constructible workload in the registry.
+pub struct WorkloadEntry {
+    /// Canonical name (what tables, traces and cell stores carry).
+    pub name: &'static str,
+    /// Extra accepted spellings (all matching is case-insensitive).
+    pub aliases: &'static [&'static str],
+    /// `"table1"` for the paper's five applications, `"kv"` for the
+    /// trace-driven key-value family.
+    pub family: &'static str,
+    ctor: fn(u64, u32) -> crate::Result<Box<dyn Workload>>,
 }
 
-/// All five paper workload names, in Table 1 order.
+/// The single workload registry: the five Table 1 applications plus the
+/// KV trace family (see [`crate::trace`]). [`by_name`], the CLI error
+/// message and the KV sweep/bench axes all derive from this list — add
+/// a workload here and every entry point picks it up.
+pub static REGISTRY: &[WorkloadEntry] = &[
+    WorkloadEntry {
+        name: "PageRank",
+        aliases: &["pr"],
+        family: "table1",
+        ctor: |s, i| Ok(Box::new(pagerank::PageRank::paper_scale(s, i))),
+    },
+    WorkloadEntry {
+        name: "XSBench",
+        aliases: &[],
+        family: "table1",
+        ctor: |s, i| Ok(Box::new(xsbench::XsBench::paper_scale(s, i))),
+    },
+    WorkloadEntry {
+        name: "BFS",
+        aliases: &[],
+        family: "table1",
+        ctor: |s, i| Ok(Box::new(bfs::Bfs::paper_scale(s, i))),
+    },
+    WorkloadEntry {
+        name: "SSSP",
+        aliases: &[],
+        family: "table1",
+        ctor: |s, i| Ok(Box::new(sssp::Sssp::paper_scale(s, i))),
+    },
+    WorkloadEntry {
+        name: "Btree",
+        aliases: &[],
+        family: "table1",
+        ctor: |s, i| Ok(Box::new(btree::Btree::paper_scale(s, i))),
+    },
+    WorkloadEntry {
+        name: "kv-uniform",
+        aliases: &[],
+        family: "kv",
+        ctor: |s, i| kv::build("kv-uniform", s, i),
+    },
+    WorkloadEntry {
+        name: "kv-zipfian",
+        aliases: &["kv-zipf"],
+        family: "kv",
+        ctor: |s, i| kv::build("kv-zipfian", s, i),
+    },
+    WorkloadEntry {
+        name: "kv-latest",
+        aliases: &[],
+        family: "kv",
+        ctor: |s, i| kv::build("kv-latest", s, i),
+    },
+    WorkloadEntry {
+        name: "kv-hotspot",
+        aliases: &[],
+        family: "kv",
+        ctor: |s, i| kv::build("kv-hotspot", s, i),
+    },
+    WorkloadEntry {
+        name: "kv-scan",
+        aliases: &[],
+        family: "kv",
+        ctor: |s, i| kv::build("kv-scan", s, i),
+    },
+    WorkloadEntry {
+        name: "kv-drift",
+        aliases: &[],
+        family: "kv",
+        ctor: |s, i| kv::build("kv-drift", s, i),
+    },
+];
+
+/// Every canonical workload name, in registry order.
+pub fn all_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Is `name` a constructible workload (registry entry, alias or
+/// `trace:FILE` pseudo-name)? Does not touch the filesystem.
+pub fn is_known(name: &str) -> bool {
+    name.starts_with("trace:")
+        || REGISTRY.iter().any(|e| {
+            e.name.eq_ignore_ascii_case(name)
+                || e.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+        })
+}
+
+/// Construct any registered workload by name with a deterministic seed;
+/// `intervals` bounds the run length. The pseudo-name `trace:FILE`
+/// replays a recorded `TUNATRC1` op-stream artifact through the KV
+/// replay engine. Unknown names produce an error listing every valid
+/// workload (derived from [`REGISTRY`], so it can never drift).
+pub fn by_name(name: &str, seed: u64, intervals: u32) -> crate::Result<Box<dyn Workload>> {
+    if let Some(path) = name.strip_prefix("trace:") {
+        let w = crate::trace::replay::KvReplay::from_file(
+            std::path::Path::new(path),
+            intervals,
+        )?;
+        return Ok(Box::new(w));
+    }
+    let wanted = name.trim();
+    for e in REGISTRY {
+        if e.name.eq_ignore_ascii_case(wanted)
+            || e.aliases.iter().any(|a| a.eq_ignore_ascii_case(wanted))
+        {
+            return (e.ctor)(seed, intervals);
+        }
+    }
+    bail!(
+        "unknown workload `{name}`; valid workloads: {} (or `trace:FILE` to replay a \
+         recorded KV trace)",
+        all_names().join(", ")
+    )
+}
+
+/// All five paper workload names, in Table 1 order (the KV family is in
+/// [`REGISTRY`]/[`all_names`]; this constant keeps the paper-figure
+/// benches and examples on exactly the Table 1 set).
 pub const ALL_NAMES: [&str; 5] = ["PageRank", "XSBench", "BFS", "SSSP", "Btree"];
 
 #[cfg(test)]
@@ -154,11 +291,54 @@ mod tests {
     }
 
     #[test]
-    fn by_name_constructs_all() {
-        for name in ALL_NAMES {
-            let w = by_name(name, 1, 4).unwrap();
-            assert!(w.rss_pages() > 1000, "{name} rss");
+    fn by_name_constructs_every_registry_entry() {
+        for e in REGISTRY {
+            let w = by_name(e.name, 1, 4).unwrap();
+            assert!(w.rss_pages() > 1000, "{} rss", e.name);
+            for alias in e.aliases {
+                assert!(by_name(alias, 1, 2).is_ok(), "alias {alias}");
+            }
         }
-        assert!(by_name("nope", 1, 1).is_none());
+        // legacy Table 1 constant stays a subset of the registry
+        for name in ALL_NAMES {
+            assert!(is_known(name), "{name} missing from registry");
+            assert_eq!(
+                REGISTRY.iter().find(|e| e.name == name).unwrap().family,
+                "table1"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_workload_error_lists_the_registry() {
+        let err = format!("{:#}", by_name("nope", 1, 1).unwrap_err());
+        for e in REGISTRY {
+            assert!(err.contains(e.name), "error must name `{}`: {err}", e.name);
+        }
+        assert!(err.contains("trace:FILE"), "error must mention trace replay: {err}");
+        assert!(!is_known("nope"));
+        assert!(is_known("trace:/some/file.trc"));
+        assert!(is_known("KV-ZIPFIAN"), "matching is case-insensitive");
+    }
+
+    #[test]
+    fn duplicate_page_detection() {
+        let clean = AccessProfile {
+            accesses: vec![
+                PageAccess { page: 0, random: 1, streamed: 0 },
+                PageAccess { page: 1, random: 0, streamed: 2 },
+            ],
+            ..AccessProfile::default()
+        };
+        assert_eq!(clean.duplicate_page(), None);
+        let dup = AccessProfile {
+            accesses: vec![
+                PageAccess { page: 3, random: 1, streamed: 0 },
+                PageAccess { page: 7, random: 1, streamed: 0 },
+                PageAccess { page: 3, random: 0, streamed: 1 },
+            ],
+            ..AccessProfile::default()
+        };
+        assert_eq!(dup.duplicate_page(), Some(3));
     }
 }

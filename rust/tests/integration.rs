@@ -20,6 +20,7 @@ use tuna::runtime::XlaNn;
 use tuna::service::{IngestOutput, Ingestor, TunerService};
 use tuna::sim::{Engine, IntervalModel, MachineModel};
 use tuna::tpp::{Tpp, Watermarks};
+use tuna::trace::{format as trace_format, gen as trace_gen};
 use tuna::util::proptest::{check, check_u64_range};
 use tuna::util::rng::Rng;
 use tuna::workloads::{self, ALL_NAMES};
@@ -771,11 +772,13 @@ fn microbench_survives_degenerate_configs() {
 
 #[test]
 fn shipped_config_files_parse() {
-    for name in ["configs/sssp_tune.toml", "configs/bfs_sweep.toml"] {
+    for name in
+        ["configs/sssp_tune.toml", "configs/bfs_sweep.toml", "configs/kv_sweep.toml"]
+    {
         let cfg = tuna::config::ExperimentConfig::from_file(Path::new(name))
             .unwrap_or_else(|e| panic!("{name}: {e:#}"));
         assert!(cfg.intervals > 0);
-        assert!(workloads::by_name(&cfg.workload, 1, 1).is_some(), "{name}: workload");
+        assert!(workloads::by_name(&cfg.workload, 1, 1).is_ok(), "{name}: workload");
     }
 }
 
@@ -810,4 +813,150 @@ fn workload_registry_is_complete_and_consistent() {
             w.rss_pages()
         );
     }
+    // ... and the KV trace family is part of the same registry
+    for name in trace_gen::FAMILY {
+        assert!(workloads::is_known(name), "{name} missing from registry");
+        let w = workloads::by_name(name, 1, 2).unwrap();
+        assert!(w.rss_pages() > 1_000, "{name} rss");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV trace subsystem: determinism, replay equivalence, sweep integration
+// ---------------------------------------------------------------------------
+
+fn small_kv_spec(name: &str) -> trace_gen::KvGenSpec {
+    let mut s = trace_gen::spec_by_name(name).unwrap();
+    s.n_keys = 6_000;
+    s.ops_per_interval = 4_000;
+    s
+}
+
+#[test]
+fn kv_trace_files_are_byte_identical_per_seed_and_rerecord_stable() {
+    let dir = std::env::temp_dir().join(format!("tuna_trcit_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = small_kv_spec("kv-zipfian");
+    let (a, b, c) = (dir.join("a.trc"), dir.join("b.trc"), dir.join("c.trc"));
+
+    // same generator spec + seed → byte-identical artifact
+    trace_format::save(&a, &trace_gen::generate(&spec, 7, 20)).unwrap();
+    trace_format::save(&b, &trace_gen::generate(&spec, 7, 20)).unwrap();
+    let bytes_a = std::fs::read(&a).unwrap();
+    assert_eq!(bytes_a, std::fs::read(&b).unwrap());
+    trace_format::save(&c, &trace_gen::generate(&spec, 8, 20)).unwrap();
+    assert_ne!(bytes_a, std::fs::read(&c).unwrap(), "seed must matter");
+
+    // record → load → re-record round-trips byte-for-byte
+    let loaded = trace_format::load(&a).unwrap();
+    trace_format::save(&c, &loaded).unwrap();
+    assert_eq!(bytes_a, std::fs::read(&c).unwrap());
+
+    // traces are store artifacts: `store ls` sees them with a summary
+    let store = ArtifactStore::open(&dir.join("store")).unwrap();
+    trace_format::save(&store.trace_path("zipf"), &loaded).unwrap();
+    let ls = store.ls().unwrap();
+    assert!(
+        ls.iter().any(|i| i.kind == "trace"
+            && i.name == "zipf"
+            && i.detail.contains("kv-zipfian")),
+        "trace artifact not listed: {ls:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_baselines_are_keyed_by_content_not_path() {
+    let path = std::env::temp_dir()
+        .join(format!("tuna_trc_key_{}.trc", std::process::id()));
+    let spec = small_kv_spec("kv-zipfian");
+    trace_format::save(&path, &trace_gen::generate(&spec, 1, 5)).unwrap();
+    let rs = RunSpec::new(&format!("trace:{}", path.display())).with_intervals(6);
+    let cache = BaselineCache::new();
+    let a = cache.get_or_compute(&rs).unwrap();
+    let _ = cache.get_or_compute(&rs).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (1, 1), "same content must hit");
+
+    // re-record different ops at the same path → the key changes and the
+    // baseline is recomputed (a stale baseline here would silently skew
+    // every loss number of a sweep over the re-recorded trace)
+    trace_format::save(&path, &trace_gen::generate(&spec, 2, 5)).unwrap();
+    let b = cache.get_or_compute(&rs).unwrap();
+    assert_eq!(cache.misses(), 2, "content change must invalidate the key");
+    assert!(
+        a.trace
+            .iter()
+            .zip(&b.trace)
+            .any(|(x, y)| x.iops != y.iops || x.wall_ns.to_bits() != y.wall_ns.to_bits()),
+        "re-recorded trace must produce a different baseline run"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn kv_trace_replay_reproduces_live_tuner_decisions() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+
+    // live: the registry's default kv-zipfian generator
+    let live_spec = RunSpec::new("kv-zipfian").with_intervals(40).with_seed(11);
+    let live = coordinator::run_tuna_native(&live_spec, db.clone(), &cfg).unwrap();
+    assert!(!live.decisions.is_empty());
+
+    // recorded: the same spec + seed, 39 op frames (+ allocation epoch)
+    let path = std::env::temp_dir()
+        .join(format!("tuna_trcit_replay_{}.trc", std::process::id()));
+    let gspec = trace_gen::spec_by_name("kv-zipfian").unwrap();
+    trace_format::save(&path, &trace_gen::generate(&gspec, 11, 39)).unwrap();
+    let replay_spec =
+        RunSpec::new(&format!("trace:{}", path.display())).with_intervals(40);
+    let replay = coordinator::run_tuna_native(&replay_spec, db, &cfg).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // decisions bit-identical to the live run
+    assert_eq!(live.decisions.len(), replay.decisions.len());
+    for (x, y) in live.decisions.iter().zip(&replay.decisions) {
+        assert_eq!(x.interval, y.interval);
+        assert_eq!(x.record, y.record);
+        assert_eq!(x.new_fm, y.new_fm);
+        assert_eq!(x.fraction.to_bits(), y.fraction.to_bits());
+        assert_eq!(x.predicted_loss.to_bits(), y.predicted_loss.to_bits());
+    }
+    assert_eq!(live.mean_fraction.to_bits(), replay.mean_fraction.to_bits());
+    // ... and so is the whole engine trace
+    assert_eq!(live.result.trace.len(), replay.result.trace.len());
+    for (x, y) in live.result.trace.iter().zip(&replay.result.trace) {
+        assert_eq!(x.wall_ns.to_bits(), y.wall_ns.to_bits());
+        assert_eq!(x.promoted, y.promoted);
+        assert_eq!(x.demoted_kswapd, y.demoted_kswapd);
+        assert_eq!(x.usable_fm, y.usable_fm);
+    }
+}
+
+#[test]
+fn kv_workloads_flow_through_sweeps_unchanged() {
+    let db = Arc::new(tiny_db());
+    let spec = SweepSpec::new(["kv-zipfian", "kv-drift"])
+        .with_fractions([0.9, 0.7])
+        .with_policies([SweepPolicy::Tpp, SweepPolicy::Tuna])
+        .with_intervals(30)
+        .with_threads(2)
+        .with_tuna(db, TunaConfig { period_s: 1.0, ..TunaConfig::default() });
+    let res = run_sweep(&spec).unwrap();
+    // 2 workloads × (2 Tpp fractions + 1 collapsed Tuna cell)
+    assert_eq!(res.len(), 2 * 3);
+    assert_eq!(res.baselines_computed, 2, "one baseline per KV workload");
+    for c in &res.cells {
+        assert!(c.loss.is_finite(), "{:?}", c.spec);
+        assert!(c.result.total_ns > 0.0);
+    }
+    for c in res.cells.iter().filter(|c| c.spec.policy == SweepPolicy::Tuna) {
+        let stats = c.tuna.as_ref().expect("tuna cell stats");
+        assert!(stats.decisions > 0, "no decisions for {:?}", c.spec);
+    }
+    // shrinking fast memory must cost something on the skewed KV family
+    let l90 = res.cell("kv-zipfian", SweepPolicy::Tpp, 0.9).unwrap().loss;
+    let l70 = res.cell("kv-zipfian", SweepPolicy::Tpp, 0.7).unwrap().loss;
+    assert!(l70 >= l90 - 0.01, "l70={l70} l90={l90}");
 }
