@@ -10,7 +10,9 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use tuna::artifact::shard::{ShardedNn, ShardedPerfDb};
+use tuna::artifact::shard::{
+    LazyShardedNn, LazyShardedPerfDb, ResidencyLimit, ShardedNn, ShardedPerfDb,
+};
 use tuna::perfdb::builder::{build_database, ensure_db, sample_config, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::perfdb::normalize;
@@ -104,6 +106,73 @@ fn main() -> tuna::Result<()> {
             assert_eq!((si, sd.to_bits()), (ni, nd.to_bits()), "sharded != native");
         }
         println!("numerics: sharded == native on {} queries ✓", queries.len());
+    }
+
+    // --- (b3) lazy residency: warm (all segments cached after first
+    // touch) vs the eviction-churn worst case (cap 1 segment: every
+    // query's fan-out reloads all 8 segments from disk). The gap between
+    // the two rows is the price of serving a database N× larger than
+    // resident memory; "warm" should sit at the (b2) sharded row.
+    {
+        let lazy_dir =
+            std::env::temp_dir().join(format!("tuna_bench_lazy_{}", std::process::id()));
+        std::fs::remove_dir_all(&lazy_dir).ok();
+        ShardedPerfDb::from_flat(&db, 8).save(&lazy_dir)?;
+
+        let warm_db = Arc::new(LazyShardedPerfDb::open(&lazy_dir, ResidencyLimit::UNBOUNDED)?);
+        let mut warm = LazyShardedNn::new(warm_db.clone(), 0);
+        let mut qi = 0usize;
+        let tw = time_it(32, 256, || {
+            let q = &queries[qi % queries.len()];
+            qi += 1;
+            std::hint::black_box(warm.nearest(q).unwrap());
+        });
+        t.row(vec![
+            "lazy-sharded (warm: all 8 segments resident)".into(),
+            human_ns(tw.p50_ns() as u64),
+            human_ns(tw.p95_ns() as u64),
+            human_ns(tw.mean_ns() as u64),
+        ]);
+
+        let churn_db =
+            Arc::new(LazyShardedPerfDb::open(&lazy_dir, ResidencyLimit::segments(1))?);
+        let mut churn = LazyShardedNn::new(churn_db.clone(), 1);
+        let mut qi = 0usize;
+        let tc = time_it(8, 64, || {
+            let q = &queries[qi % queries.len()];
+            qi += 1;
+            std::hint::black_box(churn.nearest(q).unwrap());
+        });
+        t.row(vec![
+            "lazy-sharded (churn worst case: cap 1 of 8)".into(),
+            human_ns(tc.p50_ns() as u64),
+            human_ns(tc.p95_ns() as u64),
+            human_ns(tc.mean_ns() as u64),
+        ]);
+
+        // numerics + residency accounting cross-check
+        let mut native = NativeNn::new(&db);
+        for q in &queries {
+            let (wi, wd) = warm.nearest(q)?;
+            let (ci, cd) = churn.nearest(q)?;
+            let (ni, nd) = native.nearest(q)?;
+            assert_eq!((wi, wd.to_bits()), (ni, nd.to_bits()), "lazy warm != native");
+            assert_eq!((ci, cd.to_bits()), (ni, nd.to_bits()), "lazy churn != native");
+        }
+        let ws = warm_db.stats();
+        assert_eq!(ws.loads, 8, "warm path must load each segment exactly once");
+        let cs = churn_db.stats();
+        assert_eq!(cs.peak_resident_segments, 1, "churn path must honor the cap");
+        println!(
+            "numerics: lazy == native on {} queries ✓ (warm: {} loads; churn: {} loads, \
+             {} evictions, peak {} resident)",
+            queries.len(),
+            ws.loads,
+            cs.loads,
+            cs.evictions,
+            cs.peak_resident_segments
+        );
+        std::fs::remove_dir_all(&lazy_dir).ok();
     }
 
     // --- (c) XLA single query, cached + literal modes ---

@@ -7,8 +7,10 @@
 //!
 //! * [`shard`] — the performance database split into N segment files
 //!   (hash of configuration vector → shard) under a CRC-carrying
-//!   manifest; queries fan out across shards and merge, and the builder
-//!   streams completed records straight into segment writers.
+//!   manifest; queries fan out across shards and merge, the builder
+//!   streams completed records straight into segment writers, and
+//!   [`shard::LazyShardedPerfDb`] serves queries from a bounded resident
+//!   set (segments faulted in on first touch, evicted past a cap).
 //! * [`cells`] — append-only binary tables of executed sweep cells
 //!   (workload, policy, fraction, seed, hot_thr → loss/saving/migration
 //!   counts), diffable across commits via `tuna store diff`.
@@ -215,10 +217,12 @@ impl ArtifactStore {
             let name = file_name(&entry);
             let detail = match shard::read_manifest(&entry) {
                 Ok(m) => format!(
-                    "{} records x {} sizes in {} segments",
+                    "{} records x {} sizes in {} segments; {}",
                     m.n_records,
                     m.fractions.len(),
-                    m.segments.len()
+                    m.segments.len(),
+                    // per-segment sizes: what a residency cap would hold
+                    shard::fmt_segment_sizes(&shard::segment_sizes(&entry, &m))
                 ),
                 Err(e) => format!("unreadable manifest: {e:#}"),
             };

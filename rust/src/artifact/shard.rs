@@ -27,17 +27,52 @@
 //! first (every later crash window reads as "no database here", never an
 //! old manifest checksumming new segments), stale segments from a wider
 //! previous generation are swept, and the new manifest lands atomically.
+//!
+//! ## Bounded-resident lazy loading
+//!
+//! [`ShardedPerfDb::load`] materializes every segment — fine up to
+//! resident memory, a hard wall past it. [`LazyShardedPerfDb`] removes
+//! the wall: it reads only the manifest at open, faults segment payloads
+//! in on first query touch (verifying each segment's CRC once, at that
+//! first touch — never at open), and evicts least-recently-touched
+//! segments past a [`ResidencyLimit`] (segment-count and/or byte
+//! budget) before admitting a new one. Query answers are **bit-identical
+//! to the fully-resident path for any eviction schedule and any thread
+//! count** because both paths run the same per-shard scan and the same
+//! [`dist_then_index`] merge over the same on-disk bytes; only *when*
+//! bytes are resident changes. The kept-forever metadata is O(records):
+//! the global→(shard, local) index built incrementally as segments are
+//! first touched — the "management metadata small relative to the data"
+//! that admission-controlled tiering systems rely on.
+//!
+//! Concurrency: one mutex per segment slot (so concurrent queries never
+//! load the same segment twice — a loader holds its slot lock for the
+//! duration of the read) plus one residency mutex for LRU stamps and
+//! accounting. Admission is check-AND-reserve in a single residency
+//! critical section (`resident + in-flight` is what the cap bounds), so
+//! concurrent segment faults cannot race past the limit — the cached
+//! set never exceeds the cap, not even transiently, at any thread
+//! count; a fault that finds all capacity held by in-flight loads
+//! blocks on a condvar until one commits or fails. Lock order is
+//! strictly `slot → residency/index`; no path acquires a slot lock
+//! while holding the residency or index lock, and no path holds two
+//! slot locks, so eviction cannot deadlock with loading. Scans hold
+//! `Arc`s, not locks — evicting a segment mid-scan is safe (memory is
+//! freed when the last reader drops its `Arc`), so in-flight queries
+//! may pin evicted payloads briefly beyond what the cache itself holds.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use super::wire::{self, Reader};
 use super::{unique_tmp_path, write_atomic};
-use crate::perfdb::native::{dist2, NnQuery};
+use crate::perfdb::native::{dist2, dist_then_index, NnQuery};
 use crate::perfdb::store::{crc32, Crc32};
-use crate::perfdb::{PerfDb, Record, DIMS};
+use crate::perfdb::{PerfDb, PerfSource, Record, DIMS};
 use crate::util::parallel::{default_threads, parallel_map};
 
 const MANIFEST_MAGIC: &[u8; 8] = b"TUNASHM1";
@@ -212,51 +247,20 @@ impl ShardedPerfDb {
     /// Nearest record to `q`: fan out one brute-force scan per shard on
     /// the worker pool, then merge. Tie-breaking matches
     /// [`crate::perfdb::native::NativeNn::nearest`]: the lowest global
-    /// index among minimal distances. `threads == 0` means one per core.
+    /// index among minimal distances (under the NaN-safe
+    /// [`dist_then_index`] total order). `threads == 0` means one per
+    /// core.
     pub fn nearest(&self, q: &[f32; DIMS], threads: usize) -> Option<(usize, f32)> {
         if self.is_empty() {
             return None;
         }
-        let scan = |si: usize| -> Option<(usize, f32)> {
-            let sh = &self.shards[si];
-            let mut best: Option<(usize, f32)> = None;
-            for (li, r) in sh.db.records.iter().enumerate() {
-                let d = dist2(q, &r.vec);
-                let g = sh.global[li] as usize;
-                let better = match best {
-                    None => true,
-                    Some((bg, bd)) => d < bd || (d == bd && g < bg),
-                };
-                if better {
-                    best = Some((g, d));
-                }
-            }
-            best
-        };
-        let per = self.fan_out(threads, scan);
-        per.into_iter().flatten().reduce(|a, b| {
-            if b.1 < a.1 || (b.1 == a.1 && b.0 < a.0) {
-                b
-            } else {
-                a
-            }
-        })
+        let per = self.fan_out(threads, |si| scan_shard_nearest(&self.shards[si], q));
+        per.into_iter().fold(None, merge_nearest)
     }
 
-    /// Evaluate `scan` on every shard: serially when the database is too
-    /// small for fan-out to beat thread-spawn cost (or one worker was
-    /// requested), otherwise on the worker pool. Both paths return
-    /// results in shard order, so the merge is scheduling-independent.
+    /// Evaluate `scan` on every shard (see [`fan_out_shards`]).
     fn fan_out<T: Send, F: Fn(usize) -> T + Sync>(&self, threads: usize, scan: F) -> Vec<T> {
-        let serial = threads == 1
-            || self.shards.len() == 1
-            || self.len() <= SERIAL_QUERY_THRESHOLD;
-        if serial {
-            (0..self.shards.len()).map(scan).collect()
-        } else {
-            let threads = if threads == 0 { default_threads() } else { threads };
-            parallel_map(self.shards.len(), threads, scan)
-        }
+        fan_out_shards(self.shards.len(), self.len(), threads, scan)
     }
 
     /// `k` nearest records, ascending by (distance, global index) — the
@@ -266,23 +270,8 @@ impl ShardedPerfDb {
         if self.is_empty() || k == 0 {
             return Vec::new();
         }
-        let per = self.fan_out(threads, |si| {
-            let sh = &self.shards[si];
-            let mut all: Vec<(usize, f32)> = sh
-                .db
-                .records
-                .iter()
-                .enumerate()
-                .map(|(li, r)| (sh.global[li] as usize, dist2(q, &r.vec)))
-                .collect();
-            all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
-            all.truncate(k);
-            all
-        });
-        let mut merged: Vec<(usize, f32)> = per.into_iter().flatten().collect();
-        merged.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
-        merged.truncate(k);
-        merged
+        let per = self.fan_out(threads, |si| scan_shard_top_k(&self.shards[si], q, k));
+        merge_top_k(per, k)
     }
 
     /// Write the database to `dir` (segments streamed, manifest written
@@ -301,61 +290,151 @@ impl ShardedPerfDb {
     /// permutation of `0..n_records`.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = read_manifest(dir)?;
-        let n_sizes = manifest.fractions.len();
-        let rec_size = record_size(n_sizes);
         let mut shards = Vec::with_capacity(manifest.segments.len());
         for (si, seg) in manifest.segments.iter().enumerate() {
             let path = dir.join(segment_name(si));
-            let data = std::fs::read(&path)
-                .with_context(|| format!("opening segment {}", path.display()))?;
-            if data.len() < 8 || &data[..8] != SEGMENT_MAGIC {
-                bail!("bad segment magic in {}", path.display());
-            }
-            let payload = &data[8..];
-            let computed = crc32(payload);
-            if computed != seg.payload_crc {
-                bail!(
-                    "segment {} CRC mismatch: manifest {:#x}, computed {computed:#x}",
-                    path.display(),
-                    seg.payload_crc
-                );
-            }
-            if payload.len() as u64 != seg.n_recs * rec_size as u64 {
-                bail!(
-                    "segment {} holds {} bytes, manifest expects {} records of {} bytes",
-                    path.display(),
-                    payload.len(),
-                    seg.n_recs,
-                    rec_size
-                );
-            }
-            let mut global = Vec::with_capacity(seg.n_recs as usize);
-            let mut records = Vec::with_capacity(seg.n_recs as usize);
-            let mut r = Reader::new(payload);
-            for _ in 0..seg.n_recs {
-                global.push(r.u32()?);
-                let mut raw = [0f64; DIMS];
-                for x in &mut raw {
-                    *x = r.f64()?;
-                }
-                let mut vec = [0f32; DIMS];
-                for x in &mut vec {
-                    *x = r.f32()?;
-                }
-                let mut times_ns = Vec::with_capacity(n_sizes);
-                for _ in 0..n_sizes {
-                    times_ns.push(r.f32()?);
-                }
-                records.push(Record { raw, vec, times_ns });
-            }
-            r.done()?;
-            shards.push(Shard {
-                global,
-                db: PerfDb { fractions: manifest.fractions.clone(), records },
-            });
+            shards.push(read_segment_file(&path, seg, &manifest.fractions, true)?);
         }
         let loc = build_loc(&shards, manifest.n_records as usize)?;
         Ok(ShardedPerfDb { fractions: manifest.fractions, shards, loc })
+    }
+}
+
+/// Read one segment file end-to-end: magic check, payload CRC against the
+/// manifest (skippable when a lazy reload already verified this segment
+/// on its first touch), length check, record decode. Shared by the
+/// fully-resident [`ShardedPerfDb::load`] and the lazy fault-in path, so
+/// both produce identical [`Shard`]s from identical bytes.
+fn read_segment_file(
+    path: &Path,
+    seg: &SegmentMeta,
+    fractions: &[f32],
+    verify_crc: bool,
+) -> Result<Shard> {
+    let n_sizes = fractions.len();
+    let rec_size = record_size(n_sizes);
+    let data = std::fs::read(path)
+        .with_context(|| format!("opening segment {}", path.display()))?;
+    if data.len() < 8 || &data[..8] != SEGMENT_MAGIC {
+        bail!("bad segment magic in {}", path.display());
+    }
+    let payload = &data[8..];
+    if verify_crc {
+        let computed = crc32(payload);
+        if computed != seg.payload_crc {
+            bail!(
+                "segment {} CRC mismatch: manifest {:#x}, computed {computed:#x}",
+                path.display(),
+                seg.payload_crc
+            );
+        }
+    }
+    if payload.len() as u64 != seg.n_recs * rec_size as u64 {
+        bail!(
+            "segment {} holds {} bytes, manifest expects {} records of {} bytes",
+            path.display(),
+            payload.len(),
+            seg.n_recs,
+            rec_size
+        );
+    }
+    let mut global = Vec::with_capacity(seg.n_recs as usize);
+    let mut records = Vec::with_capacity(seg.n_recs as usize);
+    let mut r = Reader::new(payload);
+    for _ in 0..seg.n_recs {
+        global.push(r.u32()?);
+        let mut raw = [0f64; DIMS];
+        for x in &mut raw {
+            *x = r.f64()?;
+        }
+        let mut vec = [0f32; DIMS];
+        for x in &mut vec {
+            *x = r.f32()?;
+        }
+        let mut times_ns = Vec::with_capacity(n_sizes);
+        for _ in 0..n_sizes {
+            times_ns.push(r.f32()?);
+        }
+        records.push(Record { raw, vec, times_ns });
+    }
+    r.done()
+        .with_context(|| format!("decoding segment {}", path.display()))?;
+    Ok(Shard { global, db: PerfDb { fractions: fractions.to_vec(), records } })
+}
+
+/// Brute-force scan of one shard: best `(global, distance)` under the
+/// shared [`dist_then_index`] total order (lowest global index among
+/// minimal distances; NaN-safe).
+fn scan_shard_nearest(sh: &Shard, q: &[f32; DIMS]) -> Option<(usize, f32)> {
+    let mut best: Option<(usize, f32)> = None;
+    for (li, r) in sh.db.records.iter().enumerate() {
+        let cand = (sh.global[li] as usize, dist2(q, &r.vec));
+        let better = match &best {
+            None => true,
+            Some(b) => dist_then_index(&cand, b) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some(cand);
+        }
+    }
+    best
+}
+
+/// One shard's local top-k, ascending by `(distance, global index)`.
+fn scan_shard_top_k(sh: &Shard, q: &[f32; DIMS], k: usize) -> Vec<(usize, f32)> {
+    let mut all: Vec<(usize, f32)> = sh
+        .db
+        .records
+        .iter()
+        .enumerate()
+        .map(|(li, r)| (sh.global[li] as usize, dist2(q, &r.vec)))
+        .collect();
+    all.sort_by(dist_then_index);
+    all.truncate(k);
+    all
+}
+
+/// Fold two per-shard `nearest` candidates under the shared total order.
+fn merge_nearest(a: Option<(usize, f32)>, b: Option<(usize, f32)>) -> Option<(usize, f32)> {
+    match (a, b) {
+        (None, x) | (x, None) => x,
+        (Some(x), Some(y)) => {
+            if dist_then_index(&y, &x) == std::cmp::Ordering::Less {
+                Some(y)
+            } else {
+                Some(x)
+            }
+        }
+    }
+}
+
+/// Merge per-shard top-k lists into the global top-k (each element of the
+/// global top-k is within its own shard's top-k, so the union suffices).
+fn merge_top_k(per: Vec<Vec<(usize, f32)>>, k: usize) -> Vec<(usize, f32)> {
+    let mut merged: Vec<(usize, f32)> = per.into_iter().flatten().collect();
+    merged.sort_by(dist_then_index);
+    merged.truncate(k);
+    merged
+}
+
+/// Evaluate `scan` on every shard: serially when the database is too
+/// small for fan-out to beat thread-spawn cost (or one worker was
+/// requested), otherwise on the worker pool. Results come back in shard
+/// order, so merges are scheduling-independent. ONE implementation
+/// shared by the resident and lazy query paths, so their serial/parallel
+/// selection can never drift apart.
+fn fan_out_shards<T: Send>(
+    n_shards: usize,
+    n_records: usize,
+    threads: usize,
+    scan: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let serial = threads == 1 || n_shards == 1 || n_records <= SERIAL_QUERY_THRESHOLD;
+    if serial {
+        (0..n_shards).map(scan).collect()
+    } else {
+        let threads = if threads == 0 { default_threads() } else { threads };
+        parallel_map(n_shards, threads, scan)
     }
 }
 
@@ -381,6 +460,533 @@ fn build_loc(shards: &[Shard], n_records: usize) -> Result<Vec<(u32, u32)>> {
         bail!("global index {g} missing from every segment");
     }
     Ok(loc)
+}
+
+// ---------------------------------------------------------------------------
+// Bounded-resident lazy loading
+// ---------------------------------------------------------------------------
+
+const LOC_HOLE: (u32, u32) = (u32::MAX, u32::MAX);
+
+/// Cap on cached segment payloads for a [`LazyShardedPerfDb`]. Both axes
+/// are enforced together; `0` disables an axis. A single segment larger
+/// than the byte budget still loads (the cap then holds only it — a
+/// budget that can hold *nothing* would make every query fail).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResidencyLimit {
+    /// Maximum segments resident at once (0 = unbounded).
+    pub max_segments: usize,
+    /// Maximum resident payload bytes (0 = unbounded).
+    pub max_bytes: u64,
+}
+
+impl ResidencyLimit {
+    /// No cap: lazy loading with full residency (segments still fault in
+    /// on first touch, but nothing is ever evicted).
+    pub const UNBOUNDED: ResidencyLimit = ResidencyLimit { max_segments: 0, max_bytes: 0 };
+
+    /// Cap by segment count (the CLI's `--resident-segments`; 0 means
+    /// unbounded).
+    pub fn segments(n: usize) -> Self {
+        ResidencyLimit { max_segments: n, max_bytes: 0 }
+    }
+
+    /// Cap by resident payload bytes (0 means unbounded).
+    pub fn bytes(n: u64) -> Self {
+        ResidencyLimit { max_segments: 0, max_bytes: n }
+    }
+}
+
+/// Residency accounting snapshot ([`LazyShardedPerfDb::stats`]) — the
+/// proof the cap was honored during a run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Disk loads, first touches and post-eviction reloads alike.
+    pub loads: u64,
+    /// Segments dropped from the resident set.
+    pub evictions: u64,
+    /// CRC validations performed (one per segment, on its first touch).
+    pub crc_verifies: u64,
+    /// Segments resident right now.
+    pub resident_segments: usize,
+    /// Payload bytes resident right now.
+    pub resident_bytes: u64,
+    /// High-water marks over the database's lifetime.
+    pub peak_resident_segments: usize,
+    pub peak_resident_bytes: u64,
+}
+
+/// LRU bookkeeping + counters, one mutex for all of it. Never acquires a
+/// slot lock (see the module's lock-order contract).
+struct Residency {
+    clock: u64,
+    /// Last-touch stamp per segment (0 = never touched).
+    stamps: Vec<u64>,
+    resident: Vec<bool>,
+    resident_segments: usize,
+    resident_bytes: u64,
+    /// Capacity reserved by in-flight loads ([`LazyShardedPerfDb::admit`])
+    /// that have not committed or failed yet. `resident + pending` is the
+    /// quantity the cap bounds, so concurrent faults cannot race past it.
+    pending_segments: usize,
+    pending_bytes: u64,
+    loads: u64,
+    evictions: u64,
+    crc_verifies: u64,
+    peak_resident_segments: usize,
+    peak_resident_bytes: u64,
+}
+
+impl Residency {
+    fn new(n_shards: usize) -> Self {
+        Residency {
+            clock: 0,
+            stamps: vec![0; n_shards],
+            resident: vec![false; n_shards],
+            resident_segments: 0,
+            resident_bytes: 0,
+            pending_segments: 0,
+            pending_bytes: 0,
+            loads: 0,
+            evictions: 0,
+            crc_verifies: 0,
+            peak_resident_segments: 0,
+            peak_resident_bytes: 0,
+        }
+    }
+}
+
+/// The global→(shard, local) index, built incrementally as segments are
+/// first touched and kept across evictions — the bounded "management
+/// metadata" (8 bytes per record) that lets `time_at`/`loss_curve`
+/// reach an evicted record without rescanning the directory.
+struct LocIndex {
+    map: Vec<(u32, u32)>,
+    indexed: Vec<bool>,
+}
+
+/// A sharded performance database whose segment payloads are **lazily
+/// resident**: the manifest is read eagerly at [`Self::open`], segment
+/// files are read, CRC-verified (once, on first touch) and parsed on
+/// first query contact, and least-recently-touched segments are evicted
+/// past the [`ResidencyLimit`] *before* a new segment is admitted — so a
+/// database much larger than memory serves `nearest`/`top_k`/`time_at`
+/// from a bounded resident set, bit-identically to [`ShardedPerfDb`].
+pub struct LazyShardedPerfDb {
+    dir: PathBuf,
+    manifest: ManifestInfo,
+    limit: ResidencyLimit,
+    /// One slot per segment; a loader holds the slot's lock for the
+    /// duration of its disk read, so concurrent first touches of one
+    /// segment collapse into a single load.
+    slots: Vec<Mutex<Option<Arc<Shard>>>>,
+    /// Set once a segment's payload CRC has been validated; reloads after
+    /// eviction skip the re-hash (single-writer store discipline — the
+    /// bytes a reload sees are the bytes the first touch verified).
+    crc_done: Vec<AtomicBool>,
+    loc: Mutex<LocIndex>,
+    res: Mutex<Residency>,
+    /// Signalled whenever capacity frees up (a load commits, fails, or a
+    /// segment is evicted) — what [`Self::admit`] blocks on when every
+    /// unit of capacity is an in-flight load with nothing yet evictable.
+    res_cv: std::sync::Condvar,
+}
+
+impl std::fmt::Debug for LazyShardedPerfDb {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LazyShardedPerfDb")
+            .field("dir", &self.dir)
+            .field("n_records", &self.manifest.n_records)
+            .field("n_shards", &self.slots.len())
+            .field("limit", &self.limit)
+            .finish_non_exhaustive()
+    }
+}
+
+impl LazyShardedPerfDb {
+    /// Open the database at `dir`: reads and validates the **manifest
+    /// only**. No segment payload is read, parsed or CRC'd here — that
+    /// happens on first query touch, per segment.
+    pub fn open(dir: &Path, limit: ResidencyLimit) -> Result<Self> {
+        let manifest = read_manifest(dir)?;
+        let n_shards = manifest.segments.len();
+        let n_records = manifest.n_records as usize;
+        Ok(LazyShardedPerfDb {
+            dir: dir.to_path_buf(),
+            limit,
+            slots: (0..n_shards).map(|_| Mutex::new(None)).collect(),
+            crc_done: (0..n_shards).map(|_| AtomicBool::new(false)).collect(),
+            loc: Mutex::new(LocIndex {
+                map: vec![LOC_HOLE; n_records],
+                indexed: vec![false; n_shards],
+            }),
+            res: Mutex::new(Residency::new(n_shards)),
+            res_cv: std::sync::Condvar::new(),
+            manifest,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.manifest.n_records as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.manifest.n_records == 0
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn fractions(&self) -> &[f32] {
+        &self.manifest.fractions
+    }
+
+    pub fn limit(&self) -> ResidencyLimit {
+        self.limit
+    }
+
+    /// Residency accounting snapshot.
+    pub fn stats(&self) -> ResidencyStats {
+        let r = self.res.lock().unwrap();
+        ResidencyStats {
+            loads: r.loads,
+            evictions: r.evictions,
+            crc_verifies: r.crc_verifies,
+            resident_segments: r.resident_segments,
+            resident_bytes: r.resident_bytes,
+            peak_resident_segments: r.peak_resident_segments,
+            peak_resident_bytes: r.peak_resident_bytes,
+        }
+    }
+
+    /// Manifest-derived payload size of one segment (exact: the record
+    /// encoding is fixed-width), available without touching the file.
+    fn segment_payload_bytes(&self, si: usize) -> u64 {
+        self.manifest.segments[si].n_recs * record_size(self.manifest.fractions.len()) as u64
+    }
+
+    fn touch(&self, si: usize) {
+        let mut res = self.res.lock().unwrap();
+        res.clock += 1;
+        res.stamps[si] = res.clock;
+    }
+
+    /// Reserve cache capacity for `incoming` *before* its disk read.
+    /// Admission is check-AND-reserve in one residency critical section
+    /// (`resident + pending` is what the cap bounds), so concurrent
+    /// segment faults cannot race past the limit: the resident set never
+    /// exceeds the cap, not even transiently, for any thread count.
+    ///
+    /// Returns `true` with a reservation held (the caller must release
+    /// it via [`Self::load_reserved`]/[`Self::unreserve`]), or `false`
+    /// when `incoming` became resident while negotiating (take the hit
+    /// path instead). Evicting the LRU victim happens with the residency
+    /// lock *dropped* (slot → residency order, one slot at a time), so
+    /// eviction can never deadlock against loaders; evicting a segment a
+    /// concurrent query is still scanning is safe — scans hold `Arc`s,
+    /// not locks. When every unit of capacity is an in-flight load (no
+    /// victim resident yet), the caller blocks on [`Self::res_cv`] until
+    /// a load commits or fails. A full cache with nothing resident and
+    /// nothing pending always admits — a budget smaller than one segment
+    /// must not fail every query.
+    fn admit(&self, incoming: usize) -> bool {
+        let incoming_bytes = self.segment_payload_bytes(incoming);
+        let mut res = self.res.lock().unwrap();
+        loop {
+            if res.resident[incoming] {
+                return false;
+            }
+            let in_use_segments = res.resident_segments + res.pending_segments;
+            let in_use_bytes = res.resident_bytes + res.pending_bytes;
+            let fits_count = self.limit.max_segments == 0
+                || in_use_segments + 1 <= self.limit.max_segments;
+            let fits_bytes = self.limit.max_bytes == 0
+                || in_use_bytes + incoming_bytes <= self.limit.max_bytes;
+            if (fits_count && fits_bytes) || in_use_segments == 0 {
+                res.pending_segments += 1;
+                res.pending_bytes += incoming_bytes;
+                return true;
+            }
+            // Over the cap: evict the least-recently-touched resident
+            // segment (it cannot be `incoming`, which is not resident).
+            let victim = res
+                .resident
+                .iter()
+                .enumerate()
+                .filter(|&(_, &r)| r)
+                .min_by_key(|&(si, _)| res.stamps[si])
+                .map(|(si, _)| si);
+            match victim {
+                Some(victim) => {
+                    drop(res);
+                    // Victim's slot lock *then* the residency lock: the
+                    // slot lock excludes a concurrent re-load of the
+                    // victim, so residency flags stay consistent with
+                    // slot contents.
+                    let mut slot = self.slots[victim].lock().unwrap();
+                    if slot.take().is_some() {
+                        let mut r = self.res.lock().unwrap();
+                        r.resident[victim] = false;
+                        r.resident_segments -= 1;
+                        r.resident_bytes -= self.segment_payload_bytes(victim);
+                        r.evictions += 1;
+                        self.res_cv.notify_all();
+                    }
+                    drop(slot);
+                    res = self.res.lock().unwrap();
+                }
+                None => {
+                    // every unit of capacity is an in-flight load; its
+                    // commit (or failure) will notify and re-evaluate
+                    res = self.res_cv.wait(res).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Drop an [`Self::admit`] reservation without admitting (the load
+    /// failed, or another thread's load won the slot).
+    fn unreserve(&self, si: usize) {
+        let mut res = self.res.lock().unwrap();
+        res.pending_segments -= 1;
+        res.pending_bytes -= self.segment_payload_bytes(si);
+        self.res_cv.notify_all();
+    }
+
+    /// Populate the global index from a freshly-parsed segment. Validates
+    /// before writing, so a failed segment leaves the index untouched and
+    /// a retry reports the same error instead of a spurious duplicate.
+    fn index_segment(&self, si: usize, shard: &Shard) -> Result<()> {
+        let mut loc = self.loc.lock().unwrap();
+        if loc.indexed[si] {
+            return Ok(());
+        }
+        let n = loc.map.len();
+        let mut seen = std::collections::HashSet::with_capacity(shard.global.len());
+        for &g in &shard.global {
+            let g = g as usize;
+            if g >= n {
+                bail!("segment {si}: global index {g} out of range (n_records {n})");
+            }
+            if loc.map[g] != LOC_HOLE || !seen.insert(g) {
+                bail!("duplicate global index {g} across segments");
+            }
+        }
+        for (li, &g) in shard.global.iter().enumerate() {
+            loc.map[g as usize] = (si as u32, li as u32);
+        }
+        loc.indexed[si] = true;
+        Ok(())
+    }
+
+    /// The segment's payload, faulting it in from disk if not resident.
+    /// First touch verifies the manifest CRC; any failure (I/O, CRC,
+    /// decode) leaves the slot empty and every other segment untouched,
+    /// so one corrupt segment never poisons queries that don't need it.
+    pub fn segment(&self, si: usize) -> Result<Arc<Shard>> {
+        loop {
+            {
+                let slot = self.slots[si].lock().unwrap();
+                if let Some(s) = slot.as_ref() {
+                    let arc = s.clone();
+                    drop(slot);
+                    self.touch(si);
+                    return Ok(arc);
+                }
+            }
+            if self.admit(si) {
+                // capacity reserved — load below
+                return self.load_reserved(si);
+            }
+            // `si` became resident while negotiating capacity: retry the
+            // hit path (it may have been evicted again meanwhile)
+        }
+    }
+
+    /// Load `si` into its slot with capacity already reserved by
+    /// [`Self::admit`]. The reservation is released on every path: folded
+    /// into the residency accounting on success, dropped when another
+    /// loader won the slot or the read failed.
+    fn load_reserved(&self, si: usize) -> Result<Arc<Shard>> {
+        let mut slot = self.slots[si].lock().unwrap();
+        if let Some(s) = slot.as_ref() {
+            // another thread's load won the slot while we reserved
+            let arc = s.clone();
+            drop(slot);
+            self.unreserve(si);
+            self.touch(si);
+            return Ok(arc);
+        }
+        let path = self.dir.join(segment_name(si));
+        let first_touch = !self.crc_done[si].load(Ordering::Acquire);
+        let loaded = read_segment_file(
+            &path,
+            &self.manifest.segments[si],
+            &self.manifest.fractions,
+            first_touch,
+        )
+        .and_then(|shard| self.index_segment(si, &shard).map(|()| shard));
+        let shard = match loaded {
+            Ok(shard) => shard,
+            Err(e) => {
+                drop(slot);
+                self.unreserve(si);
+                return Err(e);
+            }
+        };
+        if first_touch {
+            self.crc_done[si].store(true, Ordering::Release);
+        }
+        let arc = Arc::new(shard);
+        *slot = Some(arc.clone());
+        {
+            let mut res = self.res.lock().unwrap();
+            res.pending_segments -= 1;
+            res.pending_bytes -= self.segment_payload_bytes(si);
+            res.resident[si] = true;
+            res.resident_segments += 1;
+            res.resident_bytes += self.segment_payload_bytes(si);
+            res.loads += 1;
+            if first_touch {
+                res.crc_verifies += 1;
+            }
+            res.peak_resident_segments = res.peak_resident_segments.max(res.resident_segments);
+            res.peak_resident_bytes = res.peak_resident_bytes.max(res.resident_bytes);
+            res.clock += 1;
+            res.stamps[si] = res.clock;
+            self.res_cv.notify_all();
+        }
+        Ok(arc)
+    }
+
+    fn loc_hit(&self, global: usize) -> Option<(u32, u32)> {
+        let loc = self.loc.lock().unwrap();
+        let hit = loc.map[global];
+        (hit != LOC_HOLE).then_some(hit)
+    }
+
+    /// Resolve a global record index to (shard, local), faulting segments
+    /// in (in shard order) until found. A segment that fails to load is
+    /// skipped — its error surfaces only if the record isn't found in any
+    /// readable segment — so a corrupt segment doesn't block lookups of
+    /// records that live elsewhere.
+    fn locate(&self, global: usize) -> Result<(u32, u32)> {
+        let n = self.len();
+        if global >= n {
+            bail!("record index {global} out of range (database holds {n} records)");
+        }
+        if let Some(hit) = self.loc_hit(global) {
+            return Ok(hit);
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for si in 0..self.slots.len() {
+            let unindexed = !self.loc.lock().unwrap().indexed[si];
+            if !unindexed {
+                continue;
+            }
+            if let Err(e) = self.segment(si) {
+                first_err.get_or_insert(e);
+                continue;
+            }
+            if let Some(hit) = self.loc_hit(global) {
+                return Ok(hit);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e.context(format!(
+                "resolving record {global} (an unreadable segment may hold it)"
+            ))),
+            None => bail!("global index {global} missing from every segment"),
+        }
+    }
+
+    /// Predicted execution time at an arbitrary fraction — delegates to
+    /// [`PerfDb::time_at`] on the owning segment, so answers are
+    /// bit-identical to the flat and fully-resident paths.
+    pub fn time_at(&self, global: usize, fraction: f64) -> Result<f64> {
+        let (si, li) = self.locate(global)?;
+        let sh = self.segment(si as usize)?;
+        Ok(sh.db.time_at(li as usize, fraction))
+    }
+
+    /// Evaluate `scan` on every shard (see [`fan_out_shards`]).
+    fn fan_out<T: Send>(&self, threads: usize, scan: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        fan_out_shards(self.slots.len(), self.len(), threads, scan)
+    }
+
+    /// Nearest record to `q` (see [`ShardedPerfDb::nearest`] — same scan,
+    /// same merge, bit-identical result). `Err` only when a needed
+    /// segment fails to load; the first failing shard (in shard order)
+    /// reports, deterministically.
+    pub fn nearest(&self, q: &[f32; DIMS], threads: usize) -> Result<Option<(usize, f32)>> {
+        if self.is_empty() {
+            return Ok(None);
+        }
+        let per = self.fan_out(threads, |si| -> Result<Option<(usize, f32)>> {
+            Ok(scan_shard_nearest(&self.segment(si)?, q))
+        });
+        let mut best = None;
+        for r in per {
+            best = merge_nearest(best, r?);
+        }
+        Ok(best)
+    }
+
+    /// `k` nearest records (see [`ShardedPerfDb::top_k`]).
+    pub fn top_k(&self, q: &[f32; DIMS], k: usize, threads: usize) -> Result<Vec<(usize, f32)>> {
+        if self.is_empty() || k == 0 {
+            return Ok(Vec::new());
+        }
+        let per = self.fan_out(threads, |si| -> Result<Vec<(usize, f32)>> {
+            Ok(scan_shard_top_k(&self.segment(si)?, q, k))
+        });
+        let mut lists = Vec::with_capacity(per.len());
+        for r in per {
+            lists.push(r?);
+        }
+        Ok(merge_top_k(lists, k))
+    }
+}
+
+/// On-disk size of every segment file of a sharded database, in segment
+/// order (manifest-derived payload size + header when a file is
+/// momentarily unreadable) — what `tuna store ls` reports.
+pub fn segment_sizes(dir: &Path, manifest: &ManifestInfo) -> Vec<u64> {
+    let rec = record_size(manifest.fractions.len()) as u64;
+    manifest
+        .segments
+        .iter()
+        .enumerate()
+        .map(|(si, seg)| {
+            std::fs::metadata(dir.join(segment_name(si)))
+                .map(|m| m.len())
+                .unwrap_or(8 + seg.n_recs * rec)
+        })
+        .collect()
+}
+
+/// Compact per-segment size listing for store listings: every size for
+/// small databases, a min/max/total summary past 8 segments.
+pub fn fmt_segment_sizes(sizes: &[u64]) -> String {
+    use crate::util::human_bytes;
+    if sizes.is_empty() {
+        return "no segments".to_string();
+    }
+    if sizes.len() <= 8 {
+        let list: Vec<String> = sizes.iter().map(|&b| human_bytes(b)).collect();
+        format!("seg bytes {}", list.join("/"))
+    } else {
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        let total: u64 = sizes.iter().sum();
+        format!(
+            "seg bytes {}..{} (total {})",
+            human_bytes(min),
+            human_bytes(max),
+            human_bytes(total)
+        )
+    }
 }
 
 /// Streaming writer: routes each completed record straight into its
@@ -650,6 +1256,88 @@ impl NnQuery for ShardedNn {
     }
 }
 
+/// [`NnQuery`] adapter over a bounded-resident lazy database — pluggable
+/// wherever the native or fully-resident sharded backends go (tuner
+/// service, `tuna tune`/`serve`, benches). Segment faults and evictions
+/// happen inside each query; answers stay bit-identical to the resident
+/// backends.
+pub struct LazyShardedNn {
+    db: Arc<LazyShardedPerfDb>,
+    threads: usize,
+}
+
+impl LazyShardedNn {
+    /// `threads == 0` means one worker per core.
+    pub fn new(db: Arc<LazyShardedPerfDb>, threads: usize) -> Self {
+        LazyShardedNn { db, threads }
+    }
+
+    pub fn db(&self) -> &Arc<LazyShardedPerfDb> {
+        &self.db
+    }
+}
+
+impl NnQuery for LazyShardedNn {
+    fn nearest(&mut self, q: &[f32; DIMS]) -> crate::Result<(usize, f32)> {
+        self.db
+            .nearest(q, self.threads)?
+            .ok_or_else(|| anyhow::anyhow!("empty database"))
+    }
+
+    fn top_k(&mut self, q: &[f32; DIMS], k: usize) -> crate::Result<Vec<(usize, f32)>> {
+        anyhow::ensure!(!self.db.is_empty(), "empty database");
+        self.db.top_k(q, k, self.threads)
+    }
+
+    fn backend(&self) -> &'static str {
+        "lazy-sharded"
+    }
+}
+
+impl PerfSource for ShardedPerfDb {
+    fn n_records(&self) -> usize {
+        self.len()
+    }
+
+    fn fraction_grid(&self) -> &[f32] {
+        &self.fractions
+    }
+
+    fn loss_curve_of(&self, record: usize) -> crate::Result<Vec<(f64, f64)>> {
+        anyhow::ensure!(
+            record < self.len(),
+            "record index {record} out of range (database holds {} records)",
+            self.len()
+        );
+        let (si, li) = self.loc[record];
+        Ok(self.shards[si as usize].db.loss_curve(li as usize))
+    }
+
+    fn source_name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+impl PerfSource for LazyShardedPerfDb {
+    fn n_records(&self) -> usize {
+        self.len()
+    }
+
+    fn fraction_grid(&self) -> &[f32] {
+        &self.manifest.fractions
+    }
+
+    fn loss_curve_of(&self, record: usize) -> crate::Result<Vec<(f64, f64)>> {
+        let (si, li) = self.locate(record)?;
+        let sh = self.segment(si as usize)?;
+        Ok(sh.db.loss_curve(li as usize))
+    }
+
+    fn source_name(&self) -> &'static str {
+        "lazy-sharded"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -868,6 +1556,284 @@ mod tests {
         std::fs::remove_file(dir.join(MANIFEST_NAME)).unwrap();
         let err = format!("{:#}", ShardedPerfDb::load(&dir).unwrap_err());
         assert!(err.contains("manifest"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn random_query(rng: &mut Rng) -> [f32; DIMS] {
+        let raw = [
+            rng.range_f64(100.0, 50_000.0),
+            rng.range_f64(0.0, 10_000.0),
+            rng.range_f64(0.0, 400.0),
+            rng.range_f64(0.0, 400.0),
+            rng.range_f64(0.05, 20.0),
+            rng.range_f64(3_000.0, 40_000.0),
+            2.0,
+            16.0,
+        ];
+        normalize(&raw)
+    }
+
+    #[test]
+    fn nan_query_agrees_across_flat_sharded_and_lazy_instead_of_panicking() {
+        // A NaN telemetry feature reaching the query vector used to panic
+        // the shard merge's `partial_cmp().unwrap()`; under the
+        // `total_cmp` order every backend must return the *same*
+        // deterministic answer instead.
+        let db = sample_db(40, 9);
+        let sharded = ShardedPerfDb::from_flat(&db, 4);
+        let dir = std::env::temp_dir().join(format!("tuna_shard_nan_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        sharded.save(&dir).unwrap();
+        let lazy = LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap();
+
+        let mut q = random_query(&mut Rng::new(5));
+        q[2] = f32::NAN;
+        let mut native = NativeNn::new(&db);
+        let (fi, fd) = native.nearest(&q).unwrap();
+        assert!(fd.is_nan(), "all distances to a NaN query are NaN");
+        let (si, sd) = sharded.nearest(&q, 2).unwrap();
+        assert_eq!((si, sd.to_bits()), (fi, fd.to_bits()));
+        let (li, ld) = lazy.nearest(&q, 1).unwrap().unwrap();
+        assert_eq!((li, ld.to_bits()), (fi, fd.to_bits()));
+
+        let ft = NativeNn::new(&db).top_k(&q, 6);
+        let st = sharded.top_k(&q, 6, 2);
+        let lt = lazy.top_k(&q, 6, 1).unwrap();
+        assert_eq!(ft.len(), 6);
+        for ((a, b), c) in ft.iter().zip(&st).zip(&lt) {
+            assert_eq!((a.0, a.1.to_bits()), (b.0, b.1.to_bits()));
+            assert_eq!((a.0, a.1.to_bits()), (c.0, c.1.to_bits()));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_queries_bit_identical_to_resident_under_cap_1_adversarial_schedule() {
+        let db = sample_db(150, 31);
+        let n_shards = 5;
+        let dir = std::env::temp_dir().join(format!("tuna_lazy_cap1_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, n_shards).save(&dir).unwrap();
+        let resident = ShardedPerfDb::load(&dir).unwrap();
+        let lazy = LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap();
+        assert_eq!(lazy.len(), resident.len());
+        assert_eq!(lazy.stats().loads, 0, "open must not touch segments");
+
+        // Adversarial interleaving: every round mixes fan-out queries
+        // (touch all segments, evicting down to 1 between touches) with
+        // point lookups of arbitrary globals (reload whatever was just
+        // evicted). Every answer must match the fully-resident DB to the
+        // bit, regardless of what the eviction schedule did.
+        let mut rng = Rng::new(77);
+        for _ in 0..24 {
+            let q = random_query(&mut rng);
+            let (fi, fd) = resident.nearest(&q, 1).unwrap();
+            let (li, ld) = lazy.nearest(&q, 1).unwrap().unwrap();
+            assert_eq!((li, ld.to_bits()), (fi, fd.to_bits()));
+            let ft = resident.top_k(&q, 5, 1);
+            let lt = lazy.top_k(&q, 5, 1).unwrap();
+            assert_eq!(ft.len(), lt.len());
+            for (a, b) in ft.iter().zip(&lt) {
+                assert_eq!((a.0, a.1.to_bits()), (b.0, b.1.to_bits()));
+            }
+            let g = rng.index(resident.len());
+            let frac = rng.range_f64(0.3, 1.0);
+            assert_eq!(
+                resident.time_at(g, frac).to_bits(),
+                lazy.time_at(g, frac).unwrap().to_bits(),
+                "time_at({g}, {frac})"
+            );
+        }
+        let s = lazy.stats();
+        assert_eq!(s.peak_resident_segments, 1, "cap was 1: {s:?}");
+        assert!(s.resident_segments <= 1, "{s:?}");
+        assert_eq!(s.crc_verifies, n_shards as u64, "one CRC per segment, ever");
+        assert!(s.evictions > 0, "cap 1 over {n_shards} segments must evict");
+        assert!(s.loads > n_shards as u64, "churn must have reloaded evicted segments: {s:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_concurrent_queries_never_double_load_or_deadlock() {
+        let db = sample_db(120, 41);
+        let n_shards = 6;
+        let dir = std::env::temp_dir().join(format!("tuna_lazy_conc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, n_shards).save(&dir).unwrap();
+        let resident = ShardedPerfDb::load(&dir).unwrap();
+
+        // Unbounded: 8 threads race on first touches; the per-slot lock
+        // must collapse them so every segment is read exactly once.
+        let lazy = std::sync::Arc::new(
+            LazyShardedPerfDb::open(&dir, ResidencyLimit::UNBOUNDED).unwrap(),
+        );
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let lazy = &lazy;
+                let resident = &resident;
+                s.spawn(move || {
+                    let mut rng = Rng::new(1000 + t);
+                    for _ in 0..12 {
+                        let q = random_query(&mut rng);
+                        let (fi, fd) = resident.nearest(&q, 1).unwrap();
+                        let (li, ld) = lazy.nearest(&q, 1).unwrap().unwrap();
+                        assert_eq!((li, ld.to_bits()), (fi, fd.to_bits()));
+                    }
+                });
+            }
+        });
+        let s = lazy.stats();
+        assert_eq!(s.loads, n_shards as u64, "concurrent first touches double-loaded");
+        assert_eq!(s.crc_verifies, n_shards as u64);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.resident_segments, n_shards);
+
+        // Cap 1 under concurrency: no deadlock between loaders, waiters
+        // and evictors, answers stay exact, and the reserve-then-load
+        // admission keeps the cached set within the cap at every instant
+        // (peak accounting proves it), not just at quiescence.
+        let capped = std::sync::Arc::new(
+            LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap(),
+        );
+        std::thread::scope(|s| {
+            for t in 0..6u64 {
+                let capped = &capped;
+                let resident = &resident;
+                s.spawn(move || {
+                    let mut rng = Rng::new(2000 + t);
+                    for _ in 0..8 {
+                        let q = random_query(&mut rng);
+                        let (fi, fd) = resident.nearest(&q, 1).unwrap();
+                        let (li, ld) = capped.nearest(&q, 1).unwrap().unwrap();
+                        assert_eq!((li, ld.to_bits()), (fi, fd.to_bits()));
+                        let g = rng.index(resident.len());
+                        assert_eq!(
+                            resident.time_at(g, 0.8).to_bits(),
+                            capped.time_at(g, 0.8).unwrap().to_bits()
+                        );
+                    }
+                });
+            }
+        });
+        let q = random_query(&mut Rng::new(3));
+        let _ = capped.nearest(&q, 1).unwrap();
+        let s = capped.stats();
+        assert!(s.evictions > 0);
+        assert_eq!(s.crc_verifies, n_shards as u64, "CRC still once per segment");
+        assert_eq!(
+            s.peak_resident_segments,
+            1,
+            "concurrent faults must never race the cache past the cap: {s:?}"
+        );
+        assert_eq!(
+            s.resident_segments,
+            1,
+            "a quiescent serial query must leave exactly the cap resident: {s:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_corrupt_segment_detected_at_first_touch_and_does_not_poison_others() {
+        let db = sample_db(30, 13);
+        let n_shards = 3;
+        let dir = std::env::temp_dir().join(format!("tuna_lazy_crc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, n_shards).save(&dir).unwrap();
+
+        // flip a payload byte in a non-empty segment, remembering which
+        let (corrupt_si, seg_path) = (0..n_shards)
+            .map(|si| (si, dir.join(segment_name(si))))
+            .find(|(_, p)| std::fs::metadata(p).unwrap().len() > 8)
+            .unwrap();
+        let pristine = std::fs::read(&seg_path).unwrap();
+        let mut bytes = pristine.clone();
+        let mid = 8 + (bytes.len() - 8) / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&seg_path, &bytes).unwrap();
+
+        // open succeeds — CRC is deferred to first touch, never at open
+        let lazy = LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap();
+        let q = random_query(&mut Rng::new(1));
+        let err = format!("{:#}", lazy.nearest(&q, 1).unwrap_err());
+        assert!(
+            err.contains(&segment_name(corrupt_si)) && err.contains("CRC"),
+            "error must name the corrupt segment: {err}"
+        );
+
+        // records in healthy segments stay reachable (locate skips the
+        // unreadable segment), and an affected record names the segment
+        let healthy_g = db
+            .records
+            .iter()
+            .position(|r| shard_of(&r.raw, n_shards) != corrupt_si)
+            .unwrap();
+        let corrupt_g = db
+            .records
+            .iter()
+            .position(|r| shard_of(&r.raw, n_shards) == corrupt_si)
+            .unwrap();
+        assert_eq!(
+            lazy.time_at(healthy_g, 0.8).unwrap().to_bits(),
+            db.time_at(healthy_g, 0.8).to_bits()
+        );
+        let err = format!("{:#}", lazy.time_at(corrupt_g, 0.8).unwrap_err());
+        assert!(err.contains(&segment_name(corrupt_si)), "{err}");
+
+        // repairing the file heals the same handle: the failed slot was
+        // left empty, not poisoned, and the CRC re-runs on the next touch
+        std::fs::write(&seg_path, &pristine).unwrap();
+        let (li, ld) = lazy.nearest(&q, 1).unwrap().unwrap();
+        let mut native = NativeNn::new(&db);
+        let (fi, fd) = native.nearest(&q).unwrap();
+        assert_eq!((li, ld.to_bits()), (fi, fd.to_bits()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_byte_budget_caps_resident_bytes() {
+        let db = sample_db(90, 59);
+        let dir = std::env::temp_dir().join(format!("tuna_lazy_bytes_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, 4).save(&dir).unwrap();
+        let manifest = read_manifest(&dir).unwrap();
+        let rec = record_size(manifest.fractions.len()) as u64;
+        let largest = manifest.segments.iter().map(|s| s.n_recs * rec).max().unwrap();
+
+        let resident = ShardedPerfDb::load(&dir).unwrap();
+        let lazy = LazyShardedPerfDb::open(&dir, ResidencyLimit::bytes(largest)).unwrap();
+        let mut rng = Rng::new(17);
+        for _ in 0..10 {
+            let q = random_query(&mut rng);
+            let (fi, fd) = resident.nearest(&q, 1).unwrap();
+            let (li, ld) = lazy.nearest(&q, 1).unwrap().unwrap();
+            assert_eq!((li, ld.to_bits()), (fi, fd.to_bits()));
+        }
+        let s = lazy.stats();
+        assert!(s.peak_resident_bytes <= largest, "budget {largest} exceeded: {s:?}");
+        assert!(s.evictions > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segment_size_listing_helpers() {
+        let db = sample_db(25, 3);
+        let dir = std::env::temp_dir().join(format!("tuna_segsz_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardedPerfDb::from_flat(&db, 3).save(&dir).unwrap();
+        let manifest = read_manifest(&dir).unwrap();
+        let sizes = segment_sizes(&dir, &manifest);
+        assert_eq!(sizes.len(), 3);
+        for (si, &sz) in sizes.iter().enumerate() {
+            assert_eq!(sz, std::fs::metadata(dir.join(segment_name(si))).unwrap().len());
+        }
+        let short = fmt_segment_sizes(&sizes);
+        assert!(short.starts_with("seg bytes "), "{short}");
+        assert_eq!(short.matches('/').count(), 2, "{short}");
+        let many: Vec<u64> = (0..20).map(|i| 1000 + i).collect();
+        let summary = fmt_segment_sizes(&many);
+        assert!(summary.contains("..") && summary.contains("total"), "{summary}");
+        assert_eq!(fmt_segment_sizes(&[]), "no segments");
         std::fs::remove_dir_all(&dir).ok();
     }
 

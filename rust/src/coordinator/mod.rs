@@ -11,7 +11,7 @@ pub mod sweep;
 
 pub use sweep::{
     run_sweep, run_sweep_with_cache, BaselineCache, SweepCell, SweepPolicy, SweepResult,
-    SweepSpec,
+    SweepSpec, TunaDb,
 };
 
 use std::sync::Arc;
@@ -20,7 +20,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::{NativeNn, NnQuery};
-use crate::perfdb::PerfDb;
+use crate::perfdb::{PerfDb, PerfSource};
 use crate::service::{Event, SessionSpec, TunerService};
 use crate::sim::{Engine, IntervalModel, MachineModel, RunResult};
 use crate::tpp::{FirstTouch, Tpp, Watermarks};
@@ -173,7 +173,7 @@ impl TunaRun {
 /// the classic in-loop tuner the service is proven bit-identical to.
 pub fn run_tuna(
     spec: &RunSpec,
-    db: Arc<PerfDb>,
+    db: Arc<dyn PerfSource>,
     query: Box<dyn NnQuery + Send>,
     tuna: &TunaConfig,
 ) -> Result<TunaRun> {
@@ -268,7 +268,7 @@ fn run_tuna_session(
 /// (see the integration suite's determinism tests).
 pub fn run_tuna_inloop(
     spec: &RunSpec,
-    db: Arc<PerfDb>,
+    db: Arc<dyn PerfSource>,
     query: Box<dyn NnQuery>,
     tuna: &TunaConfig,
 ) -> Result<TunaRun> {

@@ -30,9 +30,10 @@ use anyhow::{bail, Result};
 use super::{
     overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tuna_service, RunSpec,
 };
+use crate::artifact::shard::{LazyShardedNn, LazyShardedPerfDb};
 use crate::config::experiment::TunaConfig;
-use crate::perfdb::native::NativeNn;
-use crate::perfdb::PerfDb;
+use crate::perfdb::native::{NativeNn, NnQuery};
+use crate::perfdb::{PerfDb, PerfSource};
 use crate::service::TunerService;
 use crate::sim::{MachineModel, RunResult};
 use crate::util::parallel::{default_threads, parallel_map};
@@ -110,6 +111,40 @@ impl SweepPolicy {
     }
 }
 
+/// The performance database behind a sweep's [`SweepPolicy::Tuna`]
+/// cells: either the flat in-memory DB (queried brute-force by
+/// [`NativeNn`]) or a bounded-resident lazy sharded DB from the artifact
+/// store (queried by [`LazyShardedNn`], all cells sharing one segment
+/// cache under one [`crate::artifact::shard::ResidencyLimit`]). Both
+/// back the shared [`TunerService`] with bit-identical decisions for the
+/// same records.
+#[derive(Clone, Debug)]
+pub enum TunaDb {
+    Flat(Arc<PerfDb>),
+    Lazy(Arc<LazyShardedPerfDb>),
+}
+
+impl TunaDb {
+    /// The loss-curve source handed to the tuner service.
+    pub fn source(&self) -> Arc<dyn PerfSource> {
+        match self {
+            TunaDb::Flat(db) => db.clone(),
+            TunaDb::Lazy(db) => db.clone(),
+        }
+    }
+
+    /// A fresh query backend over the same database. Queries run on the
+    /// service's single aggregation thread; the lazy backend scans its
+    /// shards serially there (fan-out threads would fight the sweep's
+    /// own worker pool), which changes nothing about the answers.
+    pub fn query(&self) -> Box<dyn NnQuery + Send> {
+        match self {
+            TunaDb::Flat(db) => Box::new(NativeNn::new(db)),
+            TunaDb::Lazy(db) => Box::new(LazyShardedNn::new(db.clone(), 1)),
+        }
+    }
+}
+
 /// Grid specification: the cross product of every axis below, one cell
 /// per (workload, seed, hot_thr, fraction, policy) combination.
 #[derive(Clone, Debug)]
@@ -127,7 +162,7 @@ pub struct SweepSpec {
     pub threads: usize,
     /// Database + tuner config, required when `policies` contains
     /// [`SweepPolicy::Tuna`].
-    pub tuna: Option<(Arc<PerfDb>, TunaConfig)>,
+    pub tuna: Option<(TunaDb, TunaConfig)>,
 }
 
 impl Default for SweepSpec {
@@ -192,6 +227,13 @@ impl SweepSpec {
     }
 
     pub fn with_tuna(mut self, db: Arc<PerfDb>, cfg: TunaConfig) -> Self {
+        self.tuna = Some((TunaDb::Flat(db), cfg));
+        self
+    }
+
+    /// As [`Self::with_tuna`], but over any [`TunaDb`] backend — e.g. a
+    /// bounded-resident lazy sharded DB from the artifact store.
+    pub fn with_tuna_db(mut self, db: TunaDb, cfg: TunaConfig) -> Self {
         self.tuna = Some((db, cfg));
         self
     }
@@ -297,29 +339,81 @@ pub struct BaselineKey {
     pub machine: String,
 }
 
-/// Content fingerprint of a trace file, memoized per (path, len, mtime):
-/// [`BaselineKey::of`] runs roughly twice per sweep cell, and a sweep
-/// over a large recorded trace must not re-read megabytes on every
-/// cache lookup. A rewrite of the file invalidates the memo through its
-/// metadata stamp.
+/// How far past a file's mtime the clock must be before a (len, mtime,
+/// inode) stamp can be trusted: inside this window an in-place rewrite
+/// can land on the *same* stamp (filesystem mtime granularity is as
+/// coarse as one second), so the memo re-hashes instead.
+const MTIME_SLACK: std::time::Duration = std::time::Duration::from_secs(2);
+
+/// Content fingerprint of a trace file, memoized per (inode, len,
+/// mtime): [`BaselineKey::of`] runs roughly twice per sweep cell, and a
+/// sweep over a large recorded trace must not re-read megabytes on every
+/// cache lookup.
+///
+/// Invalidation has to be airtight — a stale fingerprint silently skews
+/// every loss number derived from the cached baseline — so the memo
+/// guards all three rewrite shapes:
+/// * atomic-rename rewrites (how `trace::format` saves) change the
+///   inode, which is part of the stamp;
+/// * in-place rewrites that change length or mtime change the stamp;
+/// * in-place rewrites *inside mtime granularity* (same length, same
+///   mtime, same inode) are caught by distrusting any memo entry whose
+///   hash was taken within [`MTIME_SLACK`] of the file's mtime — such an
+///   entry re-hashes on every lookup until the file is old enough that a
+///   same-stamp rewrite is impossible.
+///
+/// The guard errs toward re-hashing: a file whose mtime sits *ahead* of
+/// the local clock (NFS skew, a trace copied from another machine) never
+/// looks settled, so every lookup re-reads it — slower, never stale.
+/// Each re-hash refreshes `hashed_at`, so bounded skew self-heals once
+/// the local clock passes `mtime + MTIME_SLACK`.
 fn trace_content_key(path: &str) -> Option<String> {
     use std::sync::OnceLock;
     use std::time::SystemTime;
-    type Memo = Mutex<HashMap<String, ((u64, SystemTime), String)>>;
+    #[derive(Clone)]
+    struct Entry {
+        len: u64,
+        mtime: SystemTime,
+        ino: u64,
+        /// Wall clock at hash time, for the granularity guard.
+        hashed_at: SystemTime,
+        key: String,
+    }
+    type Memo = Mutex<HashMap<String, Entry>>;
     static MEMO: OnceLock<Memo> = OnceLock::new();
+
+    fn inode_of(meta: &std::fs::Metadata) -> u64 {
+        #[cfg(unix)]
+        {
+            std::os::unix::fs::MetadataExt::ino(meta)
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = meta;
+            0
+        }
+    }
+
     let meta = std::fs::metadata(path).ok()?;
-    let stamp = (meta.len(), meta.modified().ok()?);
+    let (len, mtime, ino) = (meta.len(), meta.modified().ok()?, inode_of(&meta));
     let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some((s, key)) = memo.lock().unwrap().get(path) {
-        if *s == stamp {
-            return Some(key.clone());
+    if let Some(e) = memo.lock().unwrap().get(path) {
+        let stamp_matches = e.len == len && e.mtime == mtime && e.ino == ino;
+        let settled = e
+            .hashed_at
+            .duration_since(e.mtime)
+            .map(|age| age > MTIME_SLACK)
+            .unwrap_or(false);
+        if stamp_matches && settled {
+            return Some(e.key.clone());
         }
     }
     let bytes = std::fs::read(path).ok()?;
     let key = format!("trace:{:016x}", crate::artifact::fnv1a64(&bytes));
-    memo.lock()
-        .unwrap()
-        .insert(path.to_string(), (stamp, key.clone()));
+    memo.lock().unwrap().insert(
+        path.to_string(),
+        Entry { len, mtime, ino, hashed_at: SystemTime::now(), key: key.clone() },
+    );
     Some(key)
 }
 
@@ -509,9 +603,7 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
         bail!("SweepPolicy::Tuna requires SweepSpec::tuna (performance database + TunaConfig)");
     }
     let service = match &spec.tuna {
-        Some((db, _)) if has_tuna => {
-            Some(TunerService::spawn(db.clone(), Box::new(NativeNn::new(db))))
-        }
+        Some((db, _)) if has_tuna => Some(TunerService::spawn(db.source(), db.query())),
         _ => None,
     };
     let threads = if spec.threads == 0 { default_threads() } else { spec.threads };
@@ -724,6 +816,35 @@ mod tests {
             assert_eq!(SweepPolicy::from_code(p.code()).unwrap(), p);
         }
         assert!(SweepPolicy::from_code(200).is_err());
+    }
+
+    #[test]
+    fn trace_content_key_catches_same_length_same_mtime_rewrite() {
+        // The stale-baseline window: rewrite a trace in place with the
+        // same byte length, same inode and (thanks to mtime granularity)
+        // the same mtime. The old memo served the stale fingerprint; the
+        // granularity guard must re-hash and see the new content.
+        let path = std::env::temp_dir().join(format!("tuna_trc_stale_{}.trc", std::process::id()));
+        std::fs::write(&path, vec![b'a'; 4096]).unwrap();
+        let key = |p: &std::path::Path| trace_content_key(p.to_str().unwrap()).unwrap();
+        let k1 = key(&path);
+        assert_eq!(k1, key(&path), "same content must keep its fingerprint");
+        let mtime = std::fs::metadata(&path).unwrap().modified().unwrap();
+        // in-place rewrite (same inode, same length)...
+        std::fs::write(&path, vec![b'b'; 4096]).unwrap();
+        // ...pinned to the original mtime, simulating a rewrite that
+        // landed inside the filesystem's mtime tick
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_modified(mtime)
+            .unwrap();
+        let k2 = key(&path);
+        assert_ne!(k1, k2, "same-stamp rewrite was served a stale fingerprint");
+        // and the re-hashed key is itself stable
+        assert_eq!(k2, key(&path));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -30,8 +30,10 @@
 //!   programming), the reference the service path is proven against.
 //! * [`runtime::PerfDbExec`] — the AOT query executable (PJRT CPU).
 //! * [`artifact::ArtifactStore`] — the persistent artifact store: sharded
-//!   perf-DB segments, durable sweep cell tables, KV trace artifacts and
-//!   the cross-process baseline cache (`tuna store ls|diff`).
+//!   perf-DB segments (fully resident or served lazily from a bounded
+//!   resident set via [`artifact::shard::LazyShardedPerfDb`]), durable
+//!   sweep cell tables, KV trace artifacts and the cross-process baseline
+//!   cache (`tuna store ls|diff`).
 //! * [`trace`] — the trace-driven KV workload subsystem: YCSB-style op
 //!   generators, the durable `TUNATRC1` trace format and the replay
 //!   engine behind the `kv-*` workload family and `tuna trace` verbs.

@@ -8,12 +8,18 @@
 //! tuna run  --workload BFS [--fraction 0.9] [--policy tpp|first-touch]
 //!           [--intervals N] [--seed S] [--config FILE]
 //! tuna tune --workload BFS [--target 0.05] [--period 2.5] [--xla]
-//!           [--db artifacts/perfdb.bin] [--artifacts artifacts]
+//!           [--db artifacts/perfdb.bin | --store DIR [--name perfdb]
+//!            [--resident-segments N]] [--artifacts artifacts]
 //!           [--intervals N] [--config FILE] [--record FILE]
 //!                               --record writes the run's telemetry
 //!                               stream (tuna-telemetry v1) for replay
-//!                               through `tuna serve`
-//! tuna serve [--db artifacts/perfdb.bin | --store DIR [--name perfdb]]
+//!                               through `tuna serve`; --store serves the
+//!                               store's sharded perf DB lazily from a
+//!                               bounded resident set (--resident-segments
+//!                               caps it; decisions are bit-identical to
+//!                               the fully-resident backend)
+//! tuna serve [--db artifacts/perfdb.bin | --store DIR [--name perfdb]
+//!            [--resident-segments N]]
 //!           [--artifacts artifacts] [--target 0.05] [--period 2.5] [FILE...]
 //!                               tuner-as-a-service ingestion: tail
 //!                               telemetry sample streams from FILEs (or
@@ -24,12 +30,20 @@
 //!           [--hot-thrs 2,4] [--threads N] [--intervals N]
 //!           [--memtis | --first-touch] [--db artifacts/perfdb.bin]
 //!           [--store DIR] [--name NAME] [--append]
+//!           [--resident-segments N [--db-name perfdb]]
 //!                               parallel grid sweep (Fig. 1 and beyond);
 //!                               with --store, baselines are served from /
 //!                               persisted to the artifact store and the
-//!                               cells are saved as a diffable table
+//!                               cells are saved as a diffable table; with
+//!                               --resident-segments, Tuna cells query the
+//!                               store's sharded perf DB from a bounded
+//!                               resident set
 //! tuna build-db --store DIR [--shards N] [--name perfdb]
-//!                               sharded build streaming into store segments
+//!              [--resident-segments N]
+//!                               sharded build streaming into store
+//!                               segments; --resident-segments additionally
+//!                               opens the result lazily and reports the
+//!                               serving-memory budget at that cap
 //! tuna store ls   [--store DIR] list artifacts (perfdbs, sweeps, baselines,
 //!                               traces)
 //! tuna store diff A B [--store DIR] [--tol T] [--strict]
@@ -58,15 +72,17 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use tuna::artifact::cells::{diff, SweepTable};
-use tuna::artifact::shard::{ShardedPerfDb, DEFAULT_SHARDS};
+use tuna::artifact::shard::{
+    LazyShardedNn, LazyShardedPerfDb, ResidencyLimit, DEFAULT_SHARDS,
+};
 use tuna::artifact::{fnv1a64, ArtifactStore};
 use tuna::cli::Args;
 use tuna::config::ExperimentConfig;
-use tuna::coordinator::sweep::{run_sweep_with_cache, BaselineCache};
+use tuna::coordinator::sweep::{run_sweep_with_cache, BaselineCache, TunaDb};
 use tuna::coordinator::{self, RunSpec, SweepPolicy, SweepSpec};
 use tuna::perfdb::builder::{build_database_sharded, ensure_db, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
-use tuna::perfdb::PerfDb;
+use tuna::perfdb::PerfSource;
 use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
 use tuna::service::{IngestOutput, Ingestor, TunerService};
@@ -160,6 +176,8 @@ fn cmd_build_db(args: &mut Args) -> Result<()> {
     let shards_given = args.get("shards").is_some();
     let shards: usize = args.get_parse("shards", DEFAULT_SHARDS)?;
     let named = args.get("name").map(|s| s.to_string());
+    let resident_given = args.get("resident-segments").is_some();
+    let resident: usize = args.get_parse("resident-segments", 0usize)?;
     args.finish()?;
 
     if let Some(dir) = store_dir {
@@ -181,10 +199,34 @@ fn cmd_build_db(args: &mut Args) -> Result<()> {
             manifest.segments.len(),
             t0.elapsed().as_secs_f64()
         );
+        if resident_given {
+            // Open the result lazily at the requested cap and report the
+            // serving-memory budget: the cap's worst-case resident bytes
+            // (the largest `resident` segments) vs the whole database.
+            let lazydb =
+                LazyShardedPerfDb::open(&target, ResidencyLimit::segments(resident))?;
+            let mut sizes = tuna::artifact::shard::segment_sizes(&target, &manifest);
+            let total: u64 = sizes.iter().sum();
+            sizes.sort_unstable_by(|a, b| b.cmp(a));
+            let keep = if resident == 0 { sizes.len() } else { resident.min(sizes.len()) };
+            let budget: u64 = sizes[..keep].iter().sum();
+            println!(
+                "lazy residency budget at cap {}: ≤ {} resident of {} on disk \
+                 ({} of {} segments); manifest validated, segments untouched",
+                if resident == 0 { "unbounded".to_string() } else { resident.to_string() },
+                human_bytes(budget),
+                human_bytes(total),
+                keep,
+                lazydb.n_shards()
+            );
+        }
         return Ok(());
     }
-    if shards_given || named.is_some() {
-        bail!("--shards/--name require --store DIR (sharded builds live in the artifact store)");
+    if shards_given || named.is_some() || resident_given {
+        bail!(
+            "--shards/--name/--resident-segments require --store DIR (sharded builds live \
+             in the artifact store)"
+        );
     }
 
     let db = ensure_db(&out, &params)?;
@@ -231,30 +273,65 @@ fn cmd_run(args: &mut Args) -> Result<()> {
 fn cmd_tune(args: &mut Args) -> Result<()> {
     let exp = load_exp(args)?;
     let spec = spec_from(args, &exp)?;
-    let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
+    let db_given = args.get("db").map(|s| s.to_string());
+    let db_path = PathBuf::from(db_given.clone().unwrap_or_else(|| exp.perfdb_path.clone()));
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let use_xla = args.switch("xla") || exp.tuna.use_xla;
     let record = args.get("record").map(PathBuf::from);
+    let store_dir = args.get("store").map(PathBuf::from);
+    let named = args.get("name").map(|s| s.to_string());
+    let resident_given = args.get("resident-segments").is_some();
+    let resident: usize = args.get_parse("resident-segments", 0usize)?;
     let mut tuna_cfg = exp.tuna.clone();
     tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
     tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
     let mut params = BuildParams::default();
     params.n_configs = args.get_parse("configs", params.n_configs)?;
     args.finish()?;
+    if named.is_some() && store_dir.is_none() {
+        bail!("--name requires --store DIR (it names the sharded perf DB inside the store)");
+    }
+    if resident_given && store_dir.is_none() {
+        bail!("--resident-segments requires --store DIR (it caps the store's sharded perf DB)");
+    }
+    if store_dir.is_some() && db_given.is_some() {
+        bail!("--db conflicts with --store (the store's sharded perf DB is the backend)");
+    }
+    if store_dir.is_some() && use_xla {
+        bail!("--xla needs the flat perf DB (--db); the store backend queries its shards directly");
+    }
 
-    let db = Arc::new(ensure_db(&db_path, &params)?);
-    let query: Box<dyn NnQuery + Send> = if use_xla {
-        Box::new(XlaNn::from_manifest(&artifacts, &db)?)
-    } else {
-        Box::new(NativeNn::new(&db))
+    // The database: the store's sharded perf DB served lazily from a
+    // bounded resident set, or the flat artifact (built on first use).
+    let mut lazy: Option<Arc<LazyShardedPerfDb>> = None;
+    let (source, query): (Arc<dyn PerfSource>, Box<dyn NnQuery + Send>) = match &store_dir {
+        Some(dir) => {
+            let store = ArtifactStore::open_existing(dir)?;
+            let name = named.unwrap_or_else(|| "perfdb".to_string());
+            let db = Arc::new(LazyShardedPerfDb::open(
+                &store.perfdb_dir().join(&name),
+                ResidencyLimit::segments(resident),
+            )?);
+            lazy = Some(db.clone());
+            (db.clone() as Arc<dyn PerfSource>, Box::new(LazyShardedNn::new(db, 0)))
+        }
+        None => {
+            let db = Arc::new(ensure_db(&db_path, &params)?);
+            let query: Box<dyn NnQuery + Send> = if use_xla {
+                Box::new(XlaNn::from_manifest(&artifacts, &db)?)
+            } else {
+                Box::new(NativeNn::new(&db))
+            };
+            (db as Arc<dyn PerfSource>, query)
+        }
     };
 
     let baseline = coordinator::run_fm_only(&spec)?;
+    let service = TunerService::inline(source, query);
     let run = match &record {
         Some(path) => {
             // Tap the session's stream events into a tuna-telemetry v1
             // file that `tuna serve` replays to the same decisions.
-            let service = TunerService::inline(db.clone(), query);
             let mut stream = format!("{}\n", tuna::service::ingest::STREAM_HEADER);
             let run =
                 coordinator::run_tuna_service_tapped(&spec, &service, &tuna_cfg, |ev| {
@@ -265,7 +342,7 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
             println!("telemetry stream recorded to {}", path.display());
             run
         }
-        None => coordinator::run_tuna(&spec, db, query, &tuna_cfg)?,
+        None => coordinator::run_tuna_service(&spec, &service, &tuna_cfg)?,
     };
     let loss = coordinator::overall_loss(&run.result, &baseline);
 
@@ -297,7 +374,34 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
         t.row(vec![format!("vmstat {name}"), v.to_string()]);
     }
     t.print();
+    if let Some(db) = &lazy {
+        print_residency(db);
+    }
     Ok(())
+}
+
+/// Residency accounting after a run over a [`LazyShardedPerfDb`] — the
+/// proof the `--resident-segments` cap was honored (CI greps the
+/// `peak N resident` phrase).
+fn print_residency(db: &LazyShardedPerfDb) {
+    let s = db.stats();
+    let cap = db.limit();
+    let cap_str = match (cap.max_segments, cap.max_bytes) {
+        (0, 0) => "unbounded".to_string(),
+        (n, 0) => format!("{n} segment(s)"),
+        (0, b) => human_bytes(b),
+        (n, b) => format!("{n} segment(s) / {}", human_bytes(b)),
+    };
+    println!(
+        "lazy perfdb residency: cap {cap_str}, peak {} resident of {} segments ({}), \
+         {} loads, {} evictions, {} CRC checks",
+        s.peak_resident_segments,
+        db.n_shards(),
+        human_bytes(s.peak_resident_bytes),
+        s.loads,
+        s.evictions,
+        s.crc_verifies
+    );
 }
 
 /// `tuna serve`: the tuner as a standalone service. Telemetry arrives
@@ -322,6 +426,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let db_name = named.unwrap_or_else(|| "perfdb".to_string());
     let db_path = PathBuf::from(db_given.unwrap_or_else(|| exp.perfdb_path.clone()));
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let resident_given = args.get("resident-segments").is_some();
+    let resident: usize = args.get_parse("resident-segments", 0usize)?;
     let mut tuna_cfg = exp.tuna.clone();
     tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
     tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
@@ -329,27 +435,41 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     params.n_configs = args.get_parse("configs", params.n_configs)?;
     let files = args.positional.clone();
     args.finish()?;
+    if resident_given && store_dir.is_none() {
+        bail!("--resident-segments requires --store DIR (it caps the store's sharded perf DB)");
+    }
 
-    // The database backend: a sharded store perf DB when --store is
-    // given, else the flat artifact (built on first use).
-    let db: Arc<PerfDb> = match &store_dir {
-        Some(dir) => {
-            let store = ArtifactStore::open_existing(dir)?;
-            let sharded = ShardedPerfDb::load(&store.perfdb_dir().join(&db_name))?;
-            Arc::new(sharded.to_flat())
-        }
-        None => Arc::new(ensure_db(&db_path, &params)?),
-    };
-    let (query, backend) = tuna::runtime::service_backend(&artifacts, &db);
+    // The database backend: the store's sharded perf DB — served lazily
+    // from a bounded resident set, never materialized whole — when
+    // --store is given, else the flat artifact (built on first use).
+    let mut lazy: Option<Arc<LazyShardedPerfDb>> = None;
+    let (source, query, backend): (Arc<dyn PerfSource>, Box<dyn NnQuery + Send>, &str) =
+        match &store_dir {
+            Some(dir) => {
+                let store = ArtifactStore::open_existing(dir)?;
+                let db = Arc::new(LazyShardedPerfDb::open(
+                    &store.perfdb_dir().join(&db_name),
+                    ResidencyLimit::segments(resident),
+                )?);
+                lazy = Some(db.clone());
+                let query: Box<dyn NnQuery + Send> = Box::new(LazyShardedNn::new(db.clone(), 0));
+                (db as Arc<dyn PerfSource>, query, "lazy-sharded")
+            }
+            None => {
+                let db = Arc::new(ensure_db(&db_path, &params)?);
+                let (query, backend) = tuna::runtime::service_backend(&artifacts, &db);
+                (db as Arc<dyn PerfSource>, query, backend)
+            }
+        };
     println!(
         "tuner service up: {} records x {} fm sizes, backend {backend}, target {}, period {}s",
-        db.len(),
-        db.fractions.len(),
+        source.n_records(),
+        source.fraction_grid().len(),
         pct(tuna_cfg.loss_target),
         tuna_cfg.period_s
     );
 
-    let service = TunerService::spawn(db.clone(), query);
+    let service = TunerService::spawn(source, query);
     let mut ingestor = Ingestor::new(&service, tuna_cfg);
     let print = |out: IngestOutput| match out {
         IngestOutput::Decision { session, interval, usable_fm, .. } => {
@@ -388,6 +508,9 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         "served {} lines: {} samples -> {} decisions",
         totals.0, totals.1, totals.2
     );
+    if let Some(db) = &lazy {
+        print_residency(db);
+    }
     Ok(())
 }
 
@@ -433,16 +556,38 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .split(',')
         .map(|s| SweepPolicy::parse(s.trim()))
         .collect::<Result<_>>()?;
-    let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
+    let db_given = args.get("db").map(|s| s.to_string());
+    let db_path = PathBuf::from(db_given.clone().unwrap_or_else(|| exp.perfdb_path.clone()));
     let store_dir = args.get("store").map(PathBuf::from);
     let sweep_name = args.get("name").map(|s| s.to_string());
     let append = args.switch("append");
+    let resident_given = args.get("resident-segments").is_some();
+    let resident: usize = args.get_parse("resident-segments", 0usize)?;
+    let tuna_db_name = args.get("db-name").map(|s| s.to_string());
     args.finish()?;
     if store_dir.is_none() && sweep_name.is_some() {
         bail!("--name requires --store DIR (it names the persisted cell table)");
     }
     if append && (store_dir.is_none() || sweep_name.is_none()) {
         bail!("--append requires --store DIR and --name NAME (the table to accumulate into)");
+    }
+    if (resident_given || tuna_db_name.is_some()) && store_dir.is_none() {
+        bail!(
+            "--resident-segments/--db-name require --store DIR (they select the store's \
+             sharded perf DB for Tuna cells)"
+        );
+    }
+    if tuna_db_name.is_some() && !resident_given {
+        bail!(
+            "--db-name requires --resident-segments (it names the store perf DB the lazy \
+             Tuna backend serves; without the knob, Tuna cells use the flat --db path)"
+        );
+    }
+    if resident_given && db_given.is_some() {
+        bail!(
+            "--db conflicts with --resident-segments (Tuna cells then query the store's \
+             sharded perf DB; pick it with --db-name)"
+        );
     }
 
     let mut spec = SweepSpec::new(&workloads)
@@ -453,9 +598,25 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .with_intervals(intervals)
         .with_threads(threads)
         .with_machine(exp.machine.clone());
+    let mut lazy: Option<Arc<LazyShardedPerfDb>> = None;
     if policies.contains(&SweepPolicy::Tuna) {
-        let db = Arc::new(ensure_db(&db_path, &BuildParams::default())?);
-        spec = spec.with_tuna(db, exp.tuna.clone());
+        // With --resident-segments, Tuna cells query the store's sharded
+        // perf DB from a bounded resident set (all cells share one
+        // segment cache through the sweep's single tuner service).
+        let tuna_db = match (&store_dir, resident_given) {
+            (Some(dir), true) => {
+                let name = tuna_db_name.unwrap_or_else(|| "perfdb".to_string());
+                let store = ArtifactStore::open_existing(dir)?;
+                let db = Arc::new(LazyShardedPerfDb::open(
+                    &store.perfdb_dir().join(&name),
+                    ResidencyLimit::segments(resident),
+                )?);
+                lazy = Some(db.clone());
+                TunaDb::Lazy(db)
+            }
+            _ => TunaDb::Flat(Arc::new(ensure_db(&db_path, &BuildParams::default())?)),
+        };
+        spec = spec.with_tuna_db(tuna_db, exp.tuna.clone());
     }
 
     // With --store, fast-memory-only baselines are served from (and
@@ -504,6 +665,9 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         res.baseline_hits,
         res.baseline_disk_hits
     );
+    if let Some(db) = &lazy {
+        print_residency(db);
+    }
 
     if let Some(store) = &store {
         let table = SweepTable::from_sweep(&res);
@@ -748,10 +912,12 @@ fn cmd_trace_replay(args: &mut Args) -> Result<()> {
         Some(dir) => ArtifactStore::open_existing(dir)?.resolve_trace(&file),
         None => PathBuf::from(&file),
     };
-    // default run length: the whole trace (frames + allocation epoch)
+    // default run length: the whole trace (frames + allocation epoch);
+    // saturate — a crafted header can declare u32::MAX frames and peek,
+    // unlike the full load, does not bound the count
     let (_, frames, _) = trace_format::peek(&path)?;
     let mut spec = RunSpec::new(&format!("trace:{}", path.display()));
-    spec.intervals = args.get_parse("intervals", frames + 1)?;
+    spec.intervals = args.get_parse("intervals", frames.saturating_add(1))?;
     spec.fm_fraction = args.get_parse("fraction", 0.9)?;
     spec.hot_thr = args.get_parse("hot-thr", spec.hot_thr)?;
     let policy = SweepPolicy::parse(&args.get_or("policy", "tpp"))?;

@@ -67,6 +67,87 @@ pub fn interp_desc(curve: &[(f64, f64)], x: f64) -> f64 {
     y_lo * (1.0 - t) + y_hi * t
 }
 
+/// Read-side abstraction over a performance database: everything the
+/// tuner's decision path needs, independent of how records are resident.
+///
+/// Implementations: the flat in-memory [`PerfDb`], the fully-resident
+/// [`crate::artifact::shard::ShardedPerfDb`], and the bounded-resident
+/// [`crate::artifact::shard::LazyShardedPerfDb`] (segments faulted in on
+/// first query and evicted past a residency cap). The methods are
+/// fallible because a lazy source performs I/O (and CRC validation) on
+/// first touch; in-memory sources never return `Err`.
+///
+/// Bit-identity contract: for the same underlying records,
+/// [`Self::weighted_loss_curve_of`] must return bit-identical curves
+/// across implementations — the default method reproduces
+/// [`PerfDb::weighted_loss_curve`]'s accumulation order exactly, and
+/// implementors of [`Self::loss_curve_of`] delegate to
+/// [`PerfDb::loss_curve`] on their resident segment, so tuner decisions
+/// do not depend on which source backs the service.
+pub trait PerfSource: Send + Sync {
+    /// Total records in the database.
+    fn n_records(&self) -> usize;
+
+    /// The shared fast-memory fraction grid (descending from 1.0).
+    fn fraction_grid(&self) -> &[f32];
+
+    /// Loss-vs-size curve of one record (see [`PerfDb::loss_curve`]).
+    fn loss_curve_of(&self, record: usize) -> crate::Result<Vec<(f64, f64)>>;
+
+    /// Distance-weighted average loss curve over several records —
+    /// the per-decision hot path ([`PerfDb::weighted_loss_curve`]).
+    fn weighted_loss_curve_of(
+        &self,
+        neighbors: &[(usize, f32)],
+    ) -> crate::Result<Vec<(f64, f64)>> {
+        assert!(!neighbors.is_empty());
+        let fractions = self.fraction_grid();
+        let mut acc = vec![0.0f64; fractions.len()];
+        let mut wsum = 0.0f64;
+        for &(rec, d2) in neighbors {
+            let w = 1.0 / (d2 as f64 + 1e-2);
+            wsum += w;
+            for (i, (_, loss)) in self.loss_curve_of(rec)?.into_iter().enumerate() {
+                acc[i] += w * loss;
+            }
+        }
+        Ok(fractions
+            .iter()
+            .zip(&acc)
+            .map(|(&f, &a)| (f as f64, a / wsum))
+            .collect())
+    }
+
+    /// Short implementation name for logs/reports ("flat", "sharded",
+    /// "lazy-sharded").
+    fn source_name(&self) -> &'static str;
+}
+
+impl PerfSource for PerfDb {
+    fn n_records(&self) -> usize {
+        self.records.len()
+    }
+
+    fn fraction_grid(&self) -> &[f32] {
+        &self.fractions
+    }
+
+    fn loss_curve_of(&self, record: usize) -> crate::Result<Vec<(f64, f64)>> {
+        Ok(self.loss_curve(record))
+    }
+
+    fn weighted_loss_curve_of(
+        &self,
+        neighbors: &[(usize, f32)],
+    ) -> crate::Result<Vec<(f64, f64)>> {
+        Ok(self.weighted_loss_curve(neighbors))
+    }
+
+    fn source_name(&self) -> &'static str {
+        "flat"
+    }
+}
+
 /// One execution record: a configuration and its execution times at each
 /// of the database's fast-memory fractions.
 #[derive(Clone, Debug)]
@@ -287,6 +368,51 @@ mod tests {
         // generous target: smallest fraction wins
         let f = db.min_fraction_within(0, 0.5).unwrap();
         assert!((f - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perf_source_default_weighted_curve_is_bit_identical() {
+        // A source that only supplies `loss_curve_of` (exercising the
+        // trait's default `weighted_loss_curve_of`) must reproduce
+        // `PerfDb::weighted_loss_curve` bit-for-bit — the contract that
+        // lets lazy sources back the tuner without changing decisions.
+        struct DefaultOnly<'a>(&'a PerfDb);
+        impl PerfSource for DefaultOnly<'_> {
+            fn n_records(&self) -> usize {
+                self.0.records.len()
+            }
+            fn fraction_grid(&self) -> &[f32] {
+                &self.0.fractions
+            }
+            fn loss_curve_of(&self, record: usize) -> crate::Result<Vec<(f64, f64)>> {
+                Ok(self.0.loss_curve(record))
+            }
+            fn source_name(&self) -> &'static str {
+                "test"
+            }
+        }
+        let mut db = tiny_db();
+        let raw2 = [9000.0, 700.0, 30.0, 20.0, 2.0, 9000.0, 2.0, 16.0];
+        db.records.push(Record {
+            raw: raw2,
+            vec: normalize(&raw2),
+            times_ns: vec![100.0, 108.0, 121.0, 160.0],
+        });
+        let neighbors = [(1usize, 0.3f32), (0usize, 0.01f32)];
+        let inherent = db.weighted_loss_curve(&neighbors);
+        let via_default = DefaultOnly(&db).weighted_loss_curve_of(&neighbors).unwrap();
+        let direct = db.weighted_loss_curve_of(&neighbors).unwrap();
+        assert_eq!(inherent.len(), via_default.len());
+        for ((xa, ya), ((xb, yb), (xc, yc))) in
+            inherent.iter().zip(via_default.iter().zip(&direct))
+        {
+            assert_eq!(xa.to_bits(), xb.to_bits());
+            assert_eq!(ya.to_bits(), yb.to_bits());
+            assert_eq!(xa.to_bits(), xc.to_bits());
+            assert_eq!(ya.to_bits(), yc.to_bits());
+        }
+        assert_eq!(DefaultOnly(&db).n_records(), 2);
+        assert_eq!(PerfSource::source_name(&db), "flat");
     }
 
     #[test]

@@ -14,6 +14,19 @@ pub fn dist2(a: &[f32; DIMS], b: &[f32; DIMS]) -> f32 {
     acc
 }
 
+/// The query ordering every backend shares: ascending `(distance, global
+/// index)` under [`f32::total_cmp`]. `total_cmp` is a *total* order, so a
+/// NaN distance (e.g. a NaN telemetry feature reaching the query vector)
+/// sorts deterministically instead of panicking the merge — NaN compares
+/// equal to itself bit-for-bit and the index breaks the tie, which is
+/// what keeps flat, sharded and lazy backends in exact agreement even on
+/// poisoned queries. `dist2` never produces `-0.0` (it sums squares), so
+/// `total_cmp`'s `-0.0 < 0.0` refinement cannot reorder finite results.
+#[inline]
+pub fn dist_then_index(a: &(usize, f32), b: &(usize, f32)) -> std::cmp::Ordering {
+    a.1.total_cmp(&b.1).then(a.0.cmp(&b.0))
+}
+
 /// Query interface shared by the native and XLA paths.
 pub trait NnQuery {
     /// Index of the nearest record and its squared distance.
@@ -38,8 +51,11 @@ impl NativeNn {
         NativeNn { vecs: db.records.iter().map(|r| r.vec).collect() }
     }
 
-    /// k nearest records, ascending by distance (used by tests and the
-    /// ablation bench comparing 1-NN against k-NN averaging).
+    /// k nearest records, ascending by (distance, index) under the shared
+    /// total order [`dist_then_index`] (used by tests and the ablation
+    /// bench comparing 1-NN against k-NN averaging). NaN-safe: a NaN
+    /// query degrades to the deterministic index order instead of
+    /// panicking.
     pub fn top_k(&self, q: &[f32; DIMS], k: usize) -> Vec<(usize, f32)> {
         let mut all: Vec<(usize, f32)> = self
             .vecs
@@ -47,7 +63,7 @@ impl NativeNn {
             .enumerate()
             .map(|(i, v)| (i, dist2(q, v)))
             .collect();
-        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.sort_by(dist_then_index);
         all.truncate(k);
         all
     }
@@ -61,14 +77,22 @@ impl NnQuery for NativeNn {
 
     fn nearest(&mut self, q: &[f32; DIMS]) -> crate::Result<(usize, f32)> {
         anyhow::ensure!(!self.vecs.is_empty(), "empty database");
-        let mut best = (0usize, f32::INFINITY);
+        // Argmin under the shared total order (not `<`): the first record
+        // seeds `best` with its *actual* distance, so even an all-NaN
+        // distance set yields the deterministic (index 0) answer every
+        // backend agrees on, rather than a sentinel that never updates.
+        let mut best: Option<(usize, f32)> = None;
         for (i, v) in self.vecs.iter().enumerate() {
-            let d = dist2(q, v);
-            if d < best.1 {
-                best = (i, d);
+            let cand = (i, dist2(q, v));
+            let better = match &best {
+                None => true,
+                Some(b) => dist_then_index(&cand, b) == std::cmp::Ordering::Less,
+            };
+            if better {
+                best = Some(cand);
             }
         }
-        Ok(best)
+        Ok(best.expect("non-empty database"))
     }
 
     fn backend(&self) -> &'static str {

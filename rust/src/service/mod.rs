@@ -39,7 +39,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::NnQuery;
-use crate::perfdb::PerfDb;
+use crate::perfdb::PerfSource;
 use crate::telemetry::TelemetrySample;
 use crate::tpp::Watermarks;
 use crate::tuner::{Decision, TunerState};
@@ -107,8 +107,13 @@ struct Session {
 /// The service state proper: shared query backend + per-session states.
 /// Lives behind a mutex (inline mode) or on the aggregation thread
 /// (channel mode); the code paths are the same either way.
+///
+/// The database is any [`PerfSource`] — flat and in memory, or a lazy
+/// sharded DB serving every session from one bounded resident set (the
+/// sessions share the source's segment cache *and* its cap; decisions
+/// stay bit-identical to a flat-backed service).
 struct Core {
-    db: Arc<PerfDb>,
+    db: Arc<dyn PerfSource>,
     query: Box<dyn NnQuery + Send>,
     sessions: HashMap<u64, Session>,
 }
@@ -209,7 +214,7 @@ impl TunerService {
     /// caller's thread. No background thread — the mode the channel path
     /// is proven equivalent to, and the right choice for single-run CLI
     /// commands.
-    pub fn inline(db: Arc<PerfDb>, query: Box<dyn NnQuery + Send>) -> Self {
+    pub fn inline(db: Arc<dyn PerfSource>, query: Box<dyn NnQuery + Send>) -> Self {
         let backend = query.backend();
         TunerService {
             mode: Mode::Inline(Mutex::new(Core { db, query, sessions: HashMap::new() })),
@@ -219,7 +224,7 @@ impl TunerService {
     }
 
     /// Channel service with the default channel capacity.
-    pub fn spawn(db: Arc<PerfDb>, query: Box<dyn NnQuery + Send>) -> Self {
+    pub fn spawn(db: Arc<dyn PerfSource>, query: Box<dyn NnQuery + Send>) -> Self {
         Self::spawn_with_capacity(db, query, DEFAULT_CHANNEL_CAPACITY)
     }
 
@@ -227,7 +232,7 @@ impl TunerService {
     /// background thread fed by a bounded mpsc channel of `capacity`
     /// messages.
     pub fn spawn_with_capacity(
-        db: Arc<PerfDb>,
+        db: Arc<dyn PerfSource>,
         query: Box<dyn NnQuery + Send>,
         capacity: usize,
     ) -> Self {
@@ -449,7 +454,7 @@ impl SessionHandle<'_> {
 mod tests {
     use super::*;
     use crate::perfdb::native::NativeNn;
-    use crate::perfdb::{normalize, Record};
+    use crate::perfdb::{normalize, PerfDb, Record};
 
     fn db() -> Arc<PerfDb> {
         let fractions = vec![1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5];

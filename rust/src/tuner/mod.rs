@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::NnQuery;
-use crate::perfdb::{normalize, PerfDb};
+use crate::perfdb::{normalize, PerfSource};
 use crate::sim::RunTrace;
 use crate::telemetry::{TelemetrySample, VmstatCounters, WindowAggregator};
 use crate::tpp::Watermarks;
@@ -48,7 +48,11 @@ pub struct Decision {
 /// decision, so many states can share one backend (the service) or each
 /// own one ([`Tuner`]).
 pub struct TunerState {
-    db: Arc<PerfDb>,
+    /// The performance database behind this session's loss curves — any
+    /// [`PerfSource`]: the flat in-memory DB, or a (lazy) sharded one
+    /// serving from a bounded resident set. Decisions are bit-identical
+    /// across sources holding the same records.
+    db: Arc<dyn PerfSource>,
     cfg: TunaConfig,
     window: WindowAggregator,
     counters: VmstatCounters,
@@ -65,7 +69,7 @@ pub struct TunerState {
 
 impl TunerState {
     pub fn new(
-        db: Arc<PerfDb>,
+        db: Arc<dyn PerfSource>,
         cfg: TunaConfig,
         capacity: u64,
         rss_pages: u64,
@@ -130,7 +134,15 @@ impl TunerState {
         // are near-step functions.
         let neighbors = match query.top_k(&q, KNN) {
             Ok(n) if !n.is_empty() => n,
-            _ => return None,
+            Ok(_) => return None,
+            Err(e) => {
+                // A lazy backend surfaces segment I/O or CRC failures
+                // here (first touch is at query time). One session's bad
+                // segment must not panic or wedge the shared service —
+                // skip the decision, name the cause.
+                eprintln!("warning: tuning decision skipped at interval {interval}: {e:#}");
+                return None;
+            }
         };
         let (record, dist) = neighbors[0];
         // Smallest fraction within the loss target; keep the current fast
@@ -140,7 +152,17 @@ impl TunerState {
         // growing back is immediate. The weighted curve is computed once
         // and reused for both the target scan and the loss prediction —
         // this is the per-decision hot path.
-        let curve = self.db.weighted_loss_curve(&neighbors);
+        let curve = match self.db.weighted_loss_curve_of(&neighbors) {
+            Ok(curve) => curve,
+            Err(e) => {
+                // A lazy source can fail here (I/O or CRC on a segment
+                // fault). Skip the decision — the run continues at its
+                // current size — but say why, naming the segment: a
+                // silently undecided session is undebuggable.
+                eprintln!("warning: tuning decision skipped at interval {interval}: {e:#}");
+                return None;
+            }
+        };
         let target = curve
             .iter()
             .rev() // descending grid → iterate ascending fraction
@@ -194,7 +216,7 @@ pub struct Tuner {
 
 impl Tuner {
     pub fn new(
-        db: Arc<PerfDb>,
+        db: Arc<dyn PerfSource>,
         query: Box<dyn NnQuery>,
         cfg: TunaConfig,
         capacity: u64,
@@ -254,7 +276,7 @@ impl Tuner {
 mod tests {
     use super::*;
     use crate::perfdb::native::NativeNn;
-    use crate::perfdb::Record;
+    use crate::perfdb::{PerfDb, Record};
     use crate::sim::interval::IntervalOutcome;
 
     /// A hand-built database with two records: one memory-tolerant

@@ -6,7 +6,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use tuna::artifact::cells::{diff, SweepTable};
-use tuna::artifact::shard::ShardedPerfDb;
+use tuna::artifact::shard::{
+    LazyShardedNn, LazyShardedPerfDb, ResidencyLimit, ShardedPerfDb,
+};
 use tuna::artifact::ArtifactStore;
 use tuna::config::experiment::TunaConfig;
 use tuna::coordinator::sweep::{
@@ -312,6 +314,154 @@ fn serve_replay_reproduces_recorded_decisions() {
         assert_eq!(d.interval, *interval);
         assert_eq!(d.new_fm, *usable_fm);
     }
+}
+
+// ---------------------------------------------------------------------------
+// bounded-resident lazy perf DB behind the tuner service
+// ---------------------------------------------------------------------------
+
+/// Acceptance: a shared channel-mode service backed by a *lazy* sharded
+/// DB capped at ONE resident segment, hammered by concurrent sessions,
+/// must reach decisions (and whole engine traces) bit-identical to the
+/// flat in-memory backend — while the residency accounting proves the
+/// cap was honored and every segment's CRC ran exactly once.
+#[test]
+fn lazy_capped_service_matches_flat_decisions_under_concurrent_sessions() {
+    let db = Arc::new(tiny_db());
+    let dir = std::env::temp_dir().join(format!("tuna_it_lazy_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardedPerfDb::from_flat(&db, 4).save(&dir).unwrap();
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let specs: Vec<RunSpec> = ["BFS", "Btree"]
+        .iter()
+        .flat_map(|w| {
+            [1u64, 2].map(|seed| RunSpec::new(w).with_intervals(40).with_seed(seed))
+        })
+        .collect();
+
+    // flat reference, one session at a time
+    let reference: Vec<_> = specs
+        .iter()
+        .map(|spec| coordinator::run_tuna_native(spec, db.clone(), &cfg).unwrap())
+        .collect();
+    assert!(reference.iter().all(|r| !r.decisions.is_empty()));
+
+    // lazy: every session shares one channel service and one segment
+    // cache capped at a single resident segment
+    let lazy = Arc::new(LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap());
+    let service = TunerService::spawn(lazy.clone(), Box::new(LazyShardedNn::new(lazy.clone(), 1)));
+    let concurrent: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|spec| {
+                let service = &service;
+                let cfg = &cfg;
+                s.spawn(move || coordinator::run_tuna_service(spec, service, cfg).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (a, b) in reference.iter().zip(&concurrent) {
+        assert_decisions_bit_identical(&a.decisions, &b.decisions, "lazy service");
+        assert_eq!(
+            a.result.total_ns.to_bits(),
+            b.result.total_ns.to_bits(),
+            "lazy-backed run trace must be bit-identical to flat"
+        );
+        assert_eq!(a.mean_fraction.to_bits(), b.mean_fraction.to_bits());
+        assert_eq!(a.vmstat, b.vmstat);
+    }
+    let s = lazy.stats();
+    assert_eq!(
+        s.peak_resident_segments,
+        1,
+        "queries run on the single aggregation thread; the cap must hold: {s:?}"
+    );
+    assert_eq!(s.crc_verifies, 4, "one CRC per segment across all sessions");
+    assert!(s.evictions > 0, "cap 1 over 4 segments must churn: {s:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: sweeps route Tuna cells through the lazy backend
+/// unchanged — `TunaDb::Lazy` cells are bit-identical to `TunaDb::Flat`
+/// cells for any thread count.
+#[test]
+fn sweep_tuna_cells_over_lazy_db_match_flat_cells() {
+    use tuna::coordinator::TunaDb;
+    let db = Arc::new(tiny_db());
+    let dir = std::env::temp_dir().join(format!("tuna_it_lazysweep_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardedPerfDb::from_flat(&db, 3).save(&dir).unwrap();
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let grid = |tuna_db: TunaDb, threads: usize| {
+        let spec = SweepSpec::new(["Btree", "BFS"])
+            .with_policies([SweepPolicy::Tuna])
+            .with_intervals(30)
+            .with_threads(threads)
+            .with_tuna_db(tuna_db, cfg.clone());
+        run_sweep(&spec).unwrap()
+    };
+    let flat = grid(TunaDb::Flat(db.clone()), 2);
+    let lazy_db = Arc::new(LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap());
+    let lazy = grid(TunaDb::Lazy(lazy_db.clone()), 4);
+    assert_eq!(flat.len(), lazy.len());
+    for (a, b) in flat.cells.iter().zip(&lazy.cells) {
+        let ctx = format!("{} seed {}", a.spec.workload, a.spec.seed);
+        assert_eq!(
+            a.result.total_ns.to_bits(),
+            b.result.total_ns.to_bits(),
+            "{ctx}: lazy sweep cell diverged"
+        );
+        let (sa, sb) = (a.tuna.as_ref().unwrap(), b.tuna.as_ref().unwrap());
+        assert_eq!(sa.decisions, sb.decisions, "{ctx}");
+        assert_eq!(sa.mean_fraction.to_bits(), sb.mean_fraction.to_bits(), "{ctx}");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{ctx}");
+    }
+    assert_eq!(lazy_db.stats().peak_resident_segments, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A corrupt segment surfaces at first query touch — sessions on the
+/// shared service skip decisions (with a diagnostic) instead of
+/// panicking, deadlocking or poisoning each other.
+#[test]
+fn corrupt_lazy_segment_skips_decisions_without_poisoning_sessions() {
+    let db = Arc::new(tiny_db());
+    let dir = std::env::temp_dir().join(format!("tuna_it_lazycrc_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardedPerfDb::from_flat(&db, 3).save(&dir).unwrap();
+    // flip a payload byte in the first non-empty segment
+    let seg = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name()
+                .map(|n| {
+                    let n = n.to_string_lossy();
+                    n.starts_with("seg-") && n.ends_with(".bin")
+                })
+                .unwrap_or(false)
+        })
+        .find(|p| std::fs::metadata(p).unwrap().len() > 8)
+        .unwrap();
+    let mut bytes = std::fs::read(&seg).unwrap();
+    let mid = 8 + (bytes.len() - 8) / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&seg, &bytes).unwrap();
+
+    // open succeeds (CRC is deferred); sessions run to completion with
+    // zero decisions rather than erroring out or hanging
+    let lazy = Arc::new(LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap());
+    let service = TunerService::spawn(lazy.clone(), Box::new(LazyShardedNn::new(lazy.clone(), 1)));
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    for seed in [1u64, 2] {
+        let spec = RunSpec::new("Btree").with_intervals(30).with_seed(seed);
+        let run = coordinator::run_tuna_service(&spec, &service, &cfg).unwrap();
+        assert!(run.decisions.is_empty(), "seed {seed}: decisions over a corrupt database");
+        assert_eq!(run.result.trace.len(), 30, "the run itself must complete");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ---------------------------------------------------------------------------
