@@ -6,17 +6,23 @@
 //! (c) TPP promotion threshold `hot_thr`;
 //! (d) k-NN averaging vs 1-NN on the query side;
 //! (e) policy family: TPP (fixed hot_thr) vs MEMTIS (dynamic hot_thr)
-//!     vs first-touch under the same fast-memory pressure.
+//!     vs first-touch under the same fast-memory pressure;
+//! (f) migration model: the engine-side cost of the Nomad-style
+//!     transactional machinery (shadow tracking, in-flight copies) —
+//!     exclusive and non-exclusive runs should stay within a few
+//!     percent of each other in simulation throughput.
 
 use std::path::Path;
+use std::time::Instant;
 
 use tuna::coordinator::{self, RunSpec};
 use tuna::perfdb::builder::{ensure_db, BuildParams};
 use tuna::perfdb::native::NativeNn;
 use tuna::perfdb::normalize;
 use tuna::report::{pct, results_dir, Table};
-use tuna::sim::{Engine, IntervalModel, MachineModel};
+use tuna::sim::{Engine, IntervalModel, MachineModel, MigrationModel};
 use tuna::tpp::{Tpp, Watermarks};
+use tuna::util::human_ns;
 use tuna::workloads;
 
 fn main() -> tuna::Result<()> {
@@ -130,5 +136,41 @@ fn main() -> tuna::Result<()> {
     }
     t_e.print();
     t_e.to_csv(&results_dir().join("ablation_policy.csv"))?;
+
+    // --- (f) migration model: cost of the transactional machinery ---
+    let mut t_f = Table::new(
+        "(f) migration model (kv-drift @ 60% FM): engine cost of transactional migration",
+        &["model", "loss", "sim wall", "intervals/sec", "shadow hits", "txn aborts"],
+    );
+    let spec = RunSpec::new("kv-drift").with_intervals(200).with_fraction(0.6);
+    let base = coordinator::run_fm_only(&spec)?;
+    let mut walls = [0u64; 2];
+    for (i, (name, migration)) in [
+        ("exclusive", MigrationModel::Exclusive),
+        ("non-exclusive", MigrationModel::non_exclusive_default()),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let spec = spec.clone().with_migration(migration);
+        let t0 = Instant::now();
+        let run = coordinator::run_tpp(&spec)?;
+        let wall = t0.elapsed().as_nanos() as u64;
+        walls[i] = wall;
+        t_f.row(vec![
+            name.to_string(),
+            pct(coordinator::overall_loss(&run, &base)),
+            human_ns(wall),
+            format!("{:.0}", run.trace.len() as f64 / (wall as f64 / 1e9)),
+            run.total_shadow_hits().to_string(),
+            run.total_txn_aborts().to_string(),
+        ]);
+    }
+    t_f.print();
+    println!(
+        "non-exclusive engine cost: {:+.1}% vs exclusive (transactional bookkeeping should stay within ~5%)",
+        (walls[1] as f64 / walls[0] as f64 - 1.0) * 100.0
+    );
+    t_f.to_csv(&results_dir().join("ablation_migration.csv"))?;
     Ok(())
 }

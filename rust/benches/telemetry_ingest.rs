@@ -47,6 +47,10 @@ fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
         promote_failed: 1,
         demoted_kswapd: 22,
         demoted_direct: 3,
+        shadow_hits: salt % 64,
+        shadow_free_demotions: 5,
+        txn_aborts: 2,
+        txn_retried_copies: 1,
         fast_free: 180,
     }
 }

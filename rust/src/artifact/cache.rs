@@ -124,6 +124,10 @@ fn put_trace(out: &mut Vec<u8>, t: &RunTrace) {
     wire::put_u64(out, t.promote_failed);
     wire::put_u64(out, t.demoted_kswapd);
     wire::put_u64(out, t.demoted_direct);
+    wire::put_u64(out, t.shadow_hits);
+    wire::put_u64(out, t.shadow_free_demotions);
+    wire::put_u64(out, t.txn_aborts);
+    wire::put_u64(out, t.txn_retried_copies);
     wire::put_u64(out, t.fast_used);
     wire::put_u64(out, t.fast_free);
     wire::put_u64(out, t.usable_fm);
@@ -151,6 +155,10 @@ fn take_trace(r: &mut Reader<'_>) -> Result<RunTrace> {
         promote_failed: r.u64()?,
         demoted_kswapd: r.u64()?,
         demoted_direct: r.u64()?,
+        shadow_hits: r.u64()?,
+        shadow_free_demotions: r.u64()?,
+        txn_aborts: r.u64()?,
+        txn_retried_copies: r.u64()?,
         fast_used: r.u64()?,
         fast_free: r.u64()?,
         usable_fm: r.u64()?,
@@ -368,6 +376,10 @@ mod tests {
             promote_failed: 1,
             demoted_kswapd: 3,
             demoted_direct: 2,
+            shadow_hits: 7 + i as u64,
+            shadow_free_demotions: 4,
+            txn_aborts: 2,
+            txn_retried_copies: 1,
             fast_used: 800,
             fast_free: 200,
             usable_fm: 950,
@@ -402,6 +414,10 @@ mod tests {
             assert_eq!(x.wall_ns.to_bits(), y.wall_ns.to_bits());
             assert_eq!(x.acc_fast, y.acc_fast);
             assert_eq!(x.promoted, y.promoted);
+            assert_eq!(x.shadow_hits, y.shadow_hits);
+            assert_eq!(x.shadow_free_demotions, y.shadow_free_demotions);
+            assert_eq!(x.txn_aborts, y.txn_aborts);
+            assert_eq!(x.txn_retried_copies, y.txn_retried_copies);
             assert_eq!(x.usable_fm, y.usable_fm);
             assert_eq!(x.outcome.bound, y.outcome.bound);
             assert_eq!(x.outcome.wall_ns.to_bits(), y.outcome.wall_ns.to_bits());

@@ -1,6 +1,7 @@
 //! Durable sweep cells: an append-only binary table of executed sweep
-//! cells — (workload, policy, seed, hot_thr, fraction) → loss, saving,
-//! migration counts (+ Tuna stats when present).
+//! cells — (workload, policy, seed, hot_thr, fraction, migration mode) →
+//! loss, saving, migration counts (+ Tuna stats when present, + shadow /
+//! transactional counters for non-exclusive cells).
 //!
 //! Tables are the diffable unit of the artifact store: `tuna store diff`
 //! compares two of them cell-by-cell and reports loss/saving regressions,
@@ -26,6 +27,7 @@ use super::wire::{self, Reader};
 use super::write_atomic;
 use crate::coordinator::sweep::{SweepPolicy, SweepResult};
 use crate::perfdb::store::crc32;
+use crate::sim::MigrationModel;
 
 const MAGIC: &[u8; 8] = b"TUNACEL1";
 
@@ -53,6 +55,15 @@ pub struct CellRow {
     pub promoted: u64,
     pub promote_failed: u64,
     pub demoted: u64,
+    /// Migration semantics the cell ran under. Serialized as a trailing
+    /// payload block *only* when non-exclusive, so tables of exclusive
+    /// cells are byte-identical to pre-migration-axis tables (and old
+    /// tables load with `Exclusive` + zero counters).
+    pub migration: MigrationModel,
+    pub shadow_hits: u64,
+    pub shadow_free_demotions: u64,
+    pub txn_aborts: u64,
+    pub txn_retried_copies: u64,
     pub tuna: Option<TunaRowStats>,
 }
 
@@ -63,13 +74,14 @@ impl CellRow {
 
     /// Identity of the grid cell this row measures (everything except the
     /// measured outputs), used to match rows across tables.
-    pub fn key(&self) -> (String, u8, u64, u32, u64) {
+    pub fn key(&self) -> (String, u8, u64, u32, u64, (u8, u8, u32)) {
         (
             self.workload.to_ascii_lowercase(),
             self.policy.code(),
             self.seed,
             self.hot_thr,
             self.fm_fraction.to_bits(),
+            self.migration.key(),
         )
     }
 
@@ -95,6 +107,24 @@ impl CellRow {
                 wire::put_f64(&mut out, t.min_fraction);
                 wire::put_u128(&mut out, t.decide_ns);
             }
+        }
+        // trailing migration block, written only for non-exclusive rows:
+        // exclusive rows keep the pre-migration-axis byte layout exactly
+        // (nonzero counters force the block even on a mislabeled row —
+        // better an extra block than silently dropped measurements)
+        let counters = self.shadow_hits
+            + self.shadow_free_demotions
+            + self.txn_aborts
+            + self.txn_retried_copies;
+        if !self.migration.is_exclusive() || counters > 0 {
+            let (mode, abort, copy) = self.migration.key();
+            wire::put_u8(&mut out, mode);
+            wire::put_u8(&mut out, abort);
+            wire::put_u32(&mut out, copy);
+            wire::put_u64(&mut out, self.shadow_hits);
+            wire::put_u64(&mut out, self.shadow_free_demotions);
+            wire::put_u64(&mut out, self.txn_aborts);
+            wire::put_u64(&mut out, self.txn_retried_copies);
         }
         out
     }
@@ -122,6 +152,17 @@ impl CellRow {
             }),
             other => bail!("bad tuna-stats tag {other} in cell row"),
         };
+        // absent trailing block (old tables, exclusive rows) → Exclusive
+        let (migration, shadow) = if r.remaining() > 0 {
+            let mode = r.u8()?;
+            let abort = r.u8()?;
+            let copy = r.u32()?;
+            let m = MigrationModel::from_key(mode, abort, copy)
+                .map_err(|e| anyhow::anyhow!("{e} in cell row"))?;
+            (m, (r.u64()?, r.u64()?, r.u64()?, r.u64()?))
+        } else {
+            (MigrationModel::Exclusive, (0, 0, 0, 0))
+        };
         r.done()?;
         Ok(CellRow {
             workload,
@@ -135,6 +176,11 @@ impl CellRow {
             promoted,
             promote_failed,
             demoted,
+            migration,
+            shadow_hits: shadow.0,
+            shadow_free_demotions: shadow.1,
+            txn_aborts: shadow.2,
+            txn_retried_copies: shadow.3,
             tuna,
         })
     }
@@ -165,6 +211,11 @@ impl SweepTable {
                 promoted: c.result.total_promoted(),
                 promote_failed: c.result.total_promote_failed(),
                 demoted: c.result.total_demoted(),
+                migration: c.spec.migration,
+                shadow_hits: c.result.total_shadow_hits(),
+                shadow_free_demotions: c.result.total_shadow_free_demotions(),
+                txn_aborts: c.result.total_txn_aborts(),
+                txn_retried_copies: c.result.total_txn_retried_copies(),
                 tuna: c.tuna.as_ref().map(|t| TunaRowStats {
                     decisions: t.decisions as u64,
                     mean_fraction: t.mean_fraction,
@@ -407,6 +458,11 @@ mod tests {
             promoted: 100,
             promote_failed: 3,
             demoted: 90,
+            migration: MigrationModel::Exclusive,
+            shadow_hits: 0,
+            shadow_free_demotions: 0,
+            txn_aborts: 0,
+            txn_retried_copies: 0,
             tuna: None,
         }
     }
@@ -434,6 +490,51 @@ mod tests {
         let back = SweepTable::from_bytes(&bytes).unwrap();
         assert_eq!(back, t);
         assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn non_exclusive_rows_roundtrip_and_key_on_migration() {
+        let mut nx = row("kv-drift", 0.6, 0.07);
+        nx.policy = SweepPolicy::TppNomad;
+        nx.migration = MigrationModel::NonExclusive { abort_on_write: true, copy_intervals: 3 };
+        nx.shadow_hits = 12_345;
+        nx.shadow_free_demotions = 678;
+        nx.txn_aborts = 90;
+        nx.txn_retried_copies = 12;
+        let t = SweepTable { rows: vec![row("kv-drift", 0.6, 0.05), nx.clone()] };
+        let back = SweepTable::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(back, t);
+        // migration is part of the cell identity: same grid coordinates
+        // under different semantics are different cells
+        assert_ne!(back.rows[0].key(), back.rows[1].key());
+        assert_eq!(back.rows[1].shadow_free_demotions, 678);
+    }
+
+    #[test]
+    fn exclusive_rows_keep_the_pre_migration_axis_byte_layout() {
+        // a table of exclusive cells must serialize to the exact bytes the
+        // format produced before the migration axis existed, so `store
+        // diff --strict` across the change sees unchanged cells — the row
+        // payload is reproduced field-by-field here as the old writer
+        // emitted it
+        let r = row("BFS", 0.9, 0.04);
+        let mut old = Vec::new();
+        wire::put_str(&mut old, &r.workload);
+        wire::put_u8(&mut old, r.policy.code());
+        wire::put_u64(&mut old, r.seed);
+        wire::put_u32(&mut old, r.hot_thr);
+        wire::put_f64(&mut old, r.fm_fraction);
+        wire::put_f64(&mut old, r.loss);
+        wire::put_f64(&mut old, r.saving);
+        wire::put_f64(&mut old, r.total_ns);
+        wire::put_u64(&mut old, r.promoted);
+        wire::put_u64(&mut old, r.promote_failed);
+        wire::put_u64(&mut old, r.demoted);
+        wire::put_u8(&mut old, 0); // no tuna stats
+        assert_eq!(r.to_payload(), old, "exclusive rows must not grow a trailing block");
+        // and the old payload parses as Exclusive with zero counters
+        let back = CellRow::from_payload(&old).unwrap();
+        assert_eq!(back, r);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use super::parse::ConfigDoc;
 use crate::sim::machine::MachineModel;
+use crate::sim::mem::MigrationModel;
 
 /// Tuna's online-tuner parameters (§4, §6.2).
 #[derive(Clone, Debug)]
@@ -61,6 +62,10 @@ pub struct ExperimentConfig {
     /// TPP promotion threshold.
     pub hot_thr: u32,
     pub seed: u64,
+    /// Page-migration semantics (`[migration]` table: `mode`,
+    /// `abort_on_write`, `copy_intervals`). Default exclusive — defers
+    /// to each policy's own model.
+    pub migration: MigrationModel,
     pub tuna: TunaConfig,
     /// Path to the performance database (binary, built offline).
     pub perfdb_path: String,
@@ -77,6 +82,7 @@ impl Default for ExperimentConfig {
             fm_fraction: 1.0,
             hot_thr: 2,
             seed: 42,
+            migration: MigrationModel::Exclusive,
             tuna: TunaConfig::default(),
             perfdb_path: "artifacts/perfdb.bin".to_string(),
             hlo_path: "artifacts/perfdb_query.hlo.txt".to_string(),
@@ -120,6 +126,17 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(tuna.period_s > 0.0, "period_s must be positive");
 
+        let migration = MigrationModel::parse(
+            doc.str_or("migration", "mode", "exclusive"),
+            doc.bool_or("migration", "abort_on_write", true),
+            doc.i64_or(
+                "migration",
+                "copy_intervals",
+                MigrationModel::DEFAULT_COPY_INTERVALS as i64,
+            ) as u32,
+        )
+        .map_err(|e| anyhow::anyhow!("[migration] {e}"))?;
+
         Ok(ExperimentConfig {
             machine,
             workload: doc.str_or("workload", "name", &d.workload).to_string(),
@@ -127,6 +144,7 @@ impl ExperimentConfig {
             fm_fraction: doc.f64_or("workload", "fm_fraction", d.fm_fraction),
             hot_thr: doc.i64_or("tpp", "hot_thr", d.hot_thr as i64) as u32,
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
+            migration,
             tuna,
             perfdb_path: doc.str_or("paths", "perfdb", &d.perfdb_path).to_string(),
             hlo_path: doc.str_or("paths", "hlo", &d.hlo_path).to_string(),
@@ -189,5 +207,35 @@ mod tests {
         assert!(ExperimentConfig::from_str("[tuna]\nloss_target = 2.0\n").is_err());
         assert!(ExperimentConfig::from_str("[tuna]\nperiod_s = -1.0\n").is_err());
         assert!(ExperimentConfig::from_str("[machine]\ncores = 0\n").is_err());
+        assert!(ExperimentConfig::from_str("[migration]\nmode = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn migration_table_parses_and_defaults_to_exclusive() {
+        let c = ExperimentConfig::from_str("").unwrap();
+        assert!(c.migration.is_exclusive());
+
+        let c = ExperimentConfig::from_str(
+            r#"
+            [migration]
+            mode = "non-exclusive"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.migration, MigrationModel::non_exclusive_default());
+
+        let c = ExperimentConfig::from_str(
+            r#"
+            [migration]
+            mode = "nomad"
+            abort_on_write = false
+            copy_intervals = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.migration,
+            MigrationModel::NonExclusive { abort_on_write: false, copy_intervals: 3 }
+        );
     }
 }

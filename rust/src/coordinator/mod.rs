@@ -22,8 +22,8 @@ use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::{NativeNn, NnQuery};
 use crate::perfdb::{PerfDb, PerfSource};
 use crate::service::{Event, SessionSpec, TunerService};
-use crate::sim::{Engine, IntervalModel, MachineModel, RunResult};
-use crate::tpp::{FirstTouch, Tpp, Watermarks};
+use crate::sim::{Engine, IntervalModel, MachineModel, MigrationModel, RunResult};
+use crate::tpp::{FirstTouch, Tpp, TppNomad, Watermarks};
 use crate::tuner::{Decision, Tuner};
 use crate::workloads::{self, Workload};
 
@@ -38,6 +38,11 @@ pub struct RunSpec {
     pub fm_fraction: f64,
     pub hot_thr: u32,
     pub machine: MachineModel,
+    /// Migration semantics for the run. [`MigrationModel::Exclusive`]
+    /// (the default) defers to the policy's own preference, so stock
+    /// policies behave exactly as pre-refactor and `tpp-nomad` gets its
+    /// transactional mode; a non-exclusive value overrides any policy.
+    pub migration: MigrationModel,
 }
 
 impl RunSpec {
@@ -49,6 +54,7 @@ impl RunSpec {
             fm_fraction: 1.0,
             hot_thr: 2,
             machine: MachineModel::default(),
+            migration: MigrationModel::Exclusive,
         }
     }
 
@@ -67,12 +73,22 @@ impl RunSpec {
         self
     }
 
+    pub fn with_migration(mut self, migration: MigrationModel) -> Self {
+        self.migration = migration;
+        self
+    }
+
     fn make_workload(&self) -> Result<Box<dyn Workload>> {
         workloads::by_name(&self.workload, self.seed, self.intervals)
     }
 
     fn engine(&self) -> Engine {
-        Engine::new(IntervalModel::new(self.machine.clone()))
+        let mut engine = Engine::new(IntervalModel::new(self.machine.clone()));
+        engine.migration = match self.migration {
+            MigrationModel::Exclusive => None, // defer to the policy
+            m => Some(m),
+        };
+        engine
     }
 }
 
@@ -102,9 +118,26 @@ pub fn run_memtis(spec: &RunSpec) -> Result<RunResult> {
     Ok(spec.engine().run(w.as_mut(), &mut m, cap, |_| None))
 }
 
-/// The fast-memory-only baseline: 100% of RSS in fast memory.
+/// Run under `tpp-nomad`: TPP's control loop with Nomad-style
+/// transactional non-exclusive migration. A spec without an explicit
+/// non-exclusive mode runs the policy's default transactional knobs.
+pub fn run_tpp_nomad(spec: &RunSpec) -> Result<RunResult> {
+    let mut w = spec.make_workload()?;
+    let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
+    let mut p = TppNomad::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    p.set_scan_budget(spec.machine.promote_scan_pages_per_interval);
+    if let m @ MigrationModel::NonExclusive { .. } = spec.migration {
+        p = p.with_migration(m);
+    }
+    Ok(spec.engine().run(w.as_mut(), &mut p, cap, |_| None))
+}
+
+/// The fast-memory-only baseline: 100% of RSS in fast memory. Always
+/// exclusive — at 100% fast there is nothing to migrate, and forcing the
+/// mode keeps one cached baseline valid for every migration-mode cell
+/// (the baseline cache is keyed without the migration axis).
 pub fn run_fm_only(spec: &RunSpec) -> Result<RunResult> {
-    run_tpp(&spec.clone().with_fraction(1.0))
+    run_tpp(&spec.clone().with_fraction(1.0).with_migration(MigrationModel::Exclusive))
 }
 
 /// Run under TPP while profiling: returns the run plus the telemetry
@@ -438,5 +471,46 @@ mod tests {
     #[test]
     fn unknown_workload_is_an_error() {
         assert!(run_tpp(&RunSpec::new("nope")).is_err());
+    }
+
+    #[test]
+    fn tpp_nomad_run_exercises_transactional_counters() {
+        let res = run_tpp_nomad(&small_spec("kv-drift").with_fraction(0.6)).unwrap();
+        assert_eq!(res.policy, "tpp-nomad");
+        let c = res.total_migration_counters();
+        assert!(
+            c.shadow_hits + c.shadow_free_demotions + c.txn_aborts > 0,
+            "non-exclusive kv-drift run must show shadow/txn activity: {c:?}"
+        );
+    }
+
+    #[test]
+    fn migration_spec_threads_through_stock_policies() {
+        // the same TPP run under exclusive vs non-exclusive semantics
+        let spec = small_spec("kv-drift").with_fraction(0.6);
+        let excl = run_tpp(&spec).unwrap();
+        let c = excl.total_migration_counters();
+        assert_eq!(
+            (c.shadow_hits, c.shadow_free_demotions, c.txn_aborts, c.txn_retried_copies),
+            (0, 0, 0, 0),
+            "exclusive runs must report zero shadow/txn counters"
+        );
+        let nonexcl =
+            run_tpp(&spec.clone().with_migration(MigrationModel::non_exclusive_default()))
+                .unwrap();
+        let n = nonexcl.total_migration_counters();
+        assert!(
+            n.shadow_hits + n.shadow_free_demotions + n.txn_aborts > 0,
+            "spec-level migration mode must reach the engine: {n:?}"
+        );
+    }
+
+    #[test]
+    fn fm_only_baseline_is_identical_across_migration_modes() {
+        let spec = small_spec("Btree");
+        let a = run_fm_only(&spec).unwrap();
+        let b = run_fm_only(&spec.clone().with_migration(MigrationModel::non_exclusive_default()))
+            .unwrap();
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
     }
 }

@@ -28,14 +28,15 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::{
-    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tuna_service, RunSpec,
+    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tpp_nomad,
+    run_tuna_service, RunSpec,
 };
 use crate::artifact::shard::{LazyShardedNn, LazyShardedPerfDb};
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::{NativeNn, NnQuery};
 use crate::perfdb::{PerfDb, PerfSource};
 use crate::service::TunerService;
-use crate::sim::{MachineModel, RunResult};
+use crate::sim::{MachineModel, MigrationModel, RunResult};
 use crate::util::parallel::{default_threads, parallel_map};
 
 /// Page-management policy a sweep cell runs under.
@@ -51,16 +52,23 @@ pub enum SweepPolicy {
     /// [`SweepSpec::expand`] collapses the fraction axis to a single cell
     /// at `fm_fraction = 1.0`). Requires [`SweepSpec::tuna`].
     Tuna,
+    /// TPP under Nomad-style non-exclusive tiering: transactional
+    /// promotion copies that abort on write, shadow copies on the slow
+    /// tier, free demotions of clean shadowed pages. The cell's migration
+    /// mode is forced non-exclusive even when the sweep's migration axis
+    /// says `exclusive` (run plain [`SweepPolicy::Tpp`] for that).
+    TppNomad,
 }
 
 impl SweepPolicy {
     /// Every policy, in canonical (on-disk code) order — the single
     /// source of truth for [`Self::parse`]'s error message.
-    pub const ALL: [SweepPolicy; 4] = [
+    pub const ALL: [SweepPolicy; 5] = [
         SweepPolicy::Tpp,
         SweepPolicy::FirstTouch,
         SweepPolicy::Memtis,
         SweepPolicy::Tuna,
+        SweepPolicy::TppNomad,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -69,6 +77,7 @@ impl SweepPolicy {
             SweepPolicy::FirstTouch => "first-touch",
             SweepPolicy::Memtis => "memtis",
             SweepPolicy::Tuna => "tuna",
+            SweepPolicy::TppNomad => "tpp-nomad",
         }
     }
 
@@ -81,6 +90,7 @@ impl SweepPolicy {
             "first-touch" | "firsttouch" | "first_touch" | "ft" => Ok(SweepPolicy::FirstTouch),
             "memtis" => Ok(SweepPolicy::Memtis),
             "tuna" => Ok(SweepPolicy::Tuna),
+            "tpp-nomad" | "tppnomad" | "tpp_nomad" | "nomad" => Ok(SweepPolicy::TppNomad),
             other => {
                 let valid: Vec<&str> = Self::ALL.iter().map(|p| p.name()).collect();
                 bail!("unknown policy `{other}`; valid policies: {}", valid.join(", "))
@@ -96,6 +106,7 @@ impl SweepPolicy {
             SweepPolicy::FirstTouch => 1,
             SweepPolicy::Memtis => 2,
             SweepPolicy::Tuna => 3,
+            SweepPolicy::TppNomad => 4,
         }
     }
 
@@ -106,6 +117,7 @@ impl SweepPolicy {
             1 => SweepPolicy::FirstTouch,
             2 => SweepPolicy::Memtis,
             3 => SweepPolicy::Tuna,
+            4 => SweepPolicy::TppNomad,
             other => bail!("unknown policy code {other} in artifact"),
         })
     }
@@ -146,7 +158,8 @@ impl TunaDb {
 }
 
 /// Grid specification: the cross product of every axis below, one cell
-/// per (workload, seed, hot_thr, fraction, policy) combination.
+/// per (workload, seed, hot_thr, fraction, policy, migration)
+/// combination.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     pub workloads: Vec<String>,
@@ -155,6 +168,11 @@ pub struct SweepSpec {
     pub seeds: Vec<u64>,
     pub hot_thrs: Vec<u32>,
     pub policies: Vec<SweepPolicy>,
+    /// Page-migration semantics axis. The default single-element
+    /// `[Exclusive]` axis reproduces the pre-axis grid exactly — same
+    /// cells, same results — because an `Exclusive` cell defers to the
+    /// policy's own model (see [`RunSpec::migration`]).
+    pub migrations: Vec<MigrationModel>,
     /// Run length in profiling intervals (shared by every cell).
     pub intervals: u32,
     pub machine: MachineModel,
@@ -173,6 +191,7 @@ impl Default for SweepSpec {
             seeds: vec![42],
             hot_thrs: vec![2],
             policies: vec![SweepPolicy::Tpp],
+            migrations: vec![MigrationModel::Exclusive],
             intervals: 300,
             machine: MachineModel::default(),
             threads: 0,
@@ -211,6 +230,14 @@ impl SweepSpec {
         self
     }
 
+    pub fn with_migrations<I: IntoIterator<Item = MigrationModel>>(
+        mut self,
+        migrations: I,
+    ) -> Self {
+        self.migrations = migrations.into_iter().collect();
+        self
+    }
+
     pub fn with_intervals(mut self, intervals: u32) -> Self {
         self.intervals = intervals;
         self
@@ -239,15 +266,16 @@ impl SweepSpec {
     }
 
     /// Expand the grid into cells in deterministic order:
-    /// workload → seed → hot_thr → fraction → policy.
+    /// workload → seed → hot_thr → fraction → policy → migration.
     ///
     /// Errors on any empty grid dimension, naming it — a silently empty
     /// cross product would let a sweep "succeed" with an empty table.
     ///
     /// [`SweepPolicy::Tuna`] ignores the fixed fraction (the tuner always
     /// starts at 100% and shrinks), so the fraction axis is collapsed for
-    /// Tuna cells: one cell per (workload, seed, hot_thr), recorded at
-    /// `fm_fraction = 1.0`, instead of `fractions.len()` identical runs.
+    /// Tuna cells: one cell per (workload, seed, hot_thr, migration),
+    /// recorded at `fm_fraction = 1.0`, instead of `fractions.len()`
+    /// identical runs.
     pub fn expand(&self) -> Result<Vec<SweepCellSpec>> {
         let empties = [
             ("workloads", self.workloads.is_empty()),
@@ -255,6 +283,7 @@ impl SweepSpec {
             ("seeds", self.seeds.is_empty()),
             ("hot_thrs", self.hot_thrs.is_empty()),
             ("policies", self.policies.is_empty()),
+            ("migrations", self.migrations.is_empty()),
         ];
         for (axis, empty) in empties {
             if empty {
@@ -269,7 +298,8 @@ impl SweepSpec {
                 * self.seeds.len()
                 * self.hot_thrs.len()
                 * self.fractions.len()
-                * self.policies.len(),
+                * self.policies.len()
+                * self.migrations.len(),
         );
         for workload in &self.workloads {
             for &seed in &self.seeds {
@@ -284,13 +314,26 @@ impl SweepSpec {
                             } else {
                                 fm_fraction
                             };
-                            cells.push(SweepCellSpec {
-                                workload: workload.clone(),
-                                seed,
-                                hot_thr,
-                                fm_fraction,
-                                policy,
-                            });
+                            for &migration in &self.migrations {
+                                // tpp-nomad is the transactional variant by
+                                // definition: normalize an exclusive axis
+                                // value to its effective model so the cell
+                                // spec describes the run truthfully
+                                let migration = match (policy, migration) {
+                                    (SweepPolicy::TppNomad, MigrationModel::Exclusive) => {
+                                        MigrationModel::non_exclusive_default()
+                                    }
+                                    (_, m) => m,
+                                };
+                                cells.push(SweepCellSpec {
+                                    workload: workload.clone(),
+                                    seed,
+                                    hot_thr,
+                                    fm_fraction,
+                                    policy,
+                                    migration,
+                                });
+                            }
                         }
                     }
                 }
@@ -308,6 +351,9 @@ pub struct SweepCellSpec {
     pub hot_thr: u32,
     pub fm_fraction: f64,
     pub policy: SweepPolicy,
+    /// Page-migration semantics this cell runs under.
+    /// [`MigrationModel::Exclusive`] defers to the policy's own model.
+    pub migration: MigrationModel,
 }
 
 impl SweepCellSpec {
@@ -320,6 +366,7 @@ impl SweepCellSpec {
             fm_fraction: self.fm_fraction,
             hot_thr: self.hot_thr,
             machine: sweep.machine.clone(),
+            migration: self.migration,
         }
     }
 }
@@ -637,6 +684,7 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
             SweepPolicy::Tpp => (run_tpp(&rs)?, None),
             SweepPolicy::FirstTouch => (run_first_touch(&rs)?, None),
             SweepPolicy::Memtis => (run_memtis(&rs)?, None),
+            SweepPolicy::TppNomad => (run_tpp_nomad(&rs)?, None),
             SweepPolicy::Tuna => {
                 let (_, cfg) = spec.tuna.as_ref().expect("checked above");
                 let svc = service.as_ref().expect("created above");
@@ -730,6 +778,9 @@ mod tests {
             ("FIRSTTOUCH", SweepPolicy::FirstTouch),
             ("fT", SweepPolicy::FirstTouch),
             (" tpp ", SweepPolicy::Tpp),
+            ("TPP-Nomad", SweepPolicy::TppNomad),
+            ("nomad", SweepPolicy::TppNomad),
+            ("tpp_nomad", SweepPolicy::TppNomad),
         ] {
             assert_eq!(SweepPolicy::parse(alias).unwrap(), want, "alias `{alias}`");
         }
@@ -807,15 +858,86 @@ mod tests {
 
     #[test]
     fn policy_codes_roundtrip_and_reject_unknown() {
-        for p in [
-            SweepPolicy::Tpp,
-            SweepPolicy::FirstTouch,
-            SweepPolicy::Memtis,
-            SweepPolicy::Tuna,
-        ] {
+        for p in SweepPolicy::ALL {
             assert_eq!(SweepPolicy::from_code(p.code()).unwrap(), p);
         }
+        assert_eq!(SweepPolicy::TppNomad.code(), 4, "on-disk codes are frozen");
         assert!(SweepPolicy::from_code(200).is_err());
+    }
+
+    #[test]
+    fn migration_axis_crosses_innermost_and_defaults_to_exclusive() {
+        // default axis: every cell is Exclusive and the grid is unchanged
+        let spec = tiny(&["BFS"]).with_fractions([0.9, 0.8]);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells.iter().all(|c| c.migration.is_exclusive()));
+
+        // explicit two-mode axis doubles the grid, migration innermost
+        let nx = MigrationModel::non_exclusive_default();
+        let spec = spec.with_migrations([MigrationModel::Exclusive, nx]);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert!(cells[0].migration.is_exclusive());
+        assert_eq!(cells[1].migration, nx);
+        assert_eq!(cells[0].fm_fraction, cells[1].fm_fraction);
+        assert_eq!(cells[2].fm_fraction, 0.8);
+
+        // empty axis is named like the others
+        let msg =
+            format!("{:#}", tiny(&["BFS"]).with_migrations([]).expand().unwrap_err());
+        assert!(msg.contains("migrations"), "{msg}");
+    }
+
+    #[test]
+    fn exclusive_cells_are_bit_identical_when_nomad_rides_along() {
+        let plain = run_sweep(&tiny(&["Btree"]).with_fractions([0.8])).unwrap();
+        let mixed = run_sweep(
+            &tiny(&["Btree"])
+                .with_fractions([0.8])
+                .with_policies([SweepPolicy::Tpp, SweepPolicy::TppNomad])
+                .with_threads(2),
+        )
+        .unwrap();
+        assert_eq!(mixed.len(), 2);
+        let tpp = mixed.cell("Btree", SweepPolicy::Tpp, 0.8).unwrap();
+        let base = plain.cell("Btree", SweepPolicy::Tpp, 0.8).unwrap();
+        assert_eq!(tpp.result.total_ns.to_bits(), base.result.total_ns.to_bits());
+        assert_eq!(tpp.loss.to_bits(), base.loss.to_bits());
+
+        let nomad = mixed.cell("Btree", SweepPolicy::TppNomad, 0.8).unwrap();
+        assert_eq!(nomad.result.policy, "tpp-nomad");
+        let c = nomad.result.total_migration_counters();
+        assert!(
+            c.shadow_hits + c.shadow_free_demotions + c.txn_aborts > 0,
+            "nomad sweep cell must exercise transactional accounting: {c:?}"
+        );
+        // one workload instance → one shared baseline across both cells
+        assert_eq!(mixed.baselines_computed, 1);
+    }
+
+    #[test]
+    fn migration_axis_shifts_results_for_stock_tpp() {
+        let nx = MigrationModel::non_exclusive_default();
+        let res = run_sweep(
+            &tiny(&["kv-drift"])
+                .with_fractions([0.6])
+                .with_migrations([MigrationModel::Exclusive, nx]),
+        )
+        .unwrap();
+        assert_eq!(res.len(), 2);
+        let excl = &res.cells[0];
+        let non = &res.cells[1];
+        assert!(excl.spec.migration.is_exclusive());
+        let ec = excl.result.total_migration_counters();
+        assert_eq!((ec.shadow_hits, ec.txn_aborts), (0, 0));
+        let nc = non.result.total_migration_counters();
+        assert!(
+            nc.shadow_hits + nc.shadow_free_demotions + nc.txn_aborts > 0,
+            "non-exclusive cell must differ: {nc:?}"
+        );
+        // both modes share the one fm-only baseline
+        assert_eq!(res.baselines_computed, 1);
     }
 
     #[test]

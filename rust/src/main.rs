@@ -7,6 +7,12 @@
 //! tuna build-db [--configs N] [--out artifacts/perfdb.bin] [--seed S]
 //! tuna run  --workload BFS [--fraction 0.9] [--policy tpp|first-touch]
 //!           [--intervals N] [--seed S] [--config FILE]
+//!           [--migration exclusive|non-exclusive [--abort-on-write BOOL]
+//!            [--copy-intervals N]]
+//!                               --migration non-exclusive runs the
+//!                               Nomad-style transactional model (shadow
+//!                               copies, abort-on-write) and reports the
+//!                               shadow/txn counters
 //! tuna tune --workload BFS [--target 0.05] [--period 2.5] [--xla]
 //!           [--db artifacts/perfdb.bin | --store DIR [--name perfdb]
 //!            [--resident-segments N]] [--artifacts artifacts]
@@ -26,8 +32,10 @@
 //!                               stdin) and print watermark decisions as
 //!                               sessions hit their tuning periods
 //! tuna sweep [--workloads BFS,SSSP] [--fractions 1.0,0.9,0.8,...]
-//!           [--policy tpp,first-touch,memtis,tuna] [--seeds 1,2,3]
+//!           [--policy tpp,first-touch,memtis,tuna,tpp-nomad] [--seeds 1,2,3]
 //!           [--hot-thrs 2,4] [--threads N] [--intervals N]
+//!           [--migrations exclusive,non-exclusive
+//!            [--abort-on-write BOOL] [--copy-intervals N]]
 //!           [--memtis | --first-touch] [--db artifacts/perfdb.bin]
 //!           [--store DIR] [--name NAME] [--append]
 //!           [--resident-segments N [--db-name perfdb]]
@@ -53,7 +61,8 @@
 //!                               generate + persist a TUNATRC1 op-stream
 //!                               artifact (with --from FILE: re-encode an
 //!                               existing trace, byte-identically)
-//! tuna trace replay FILE [--fraction F] [--policy tpp|first-touch|memtis]
+//! tuna trace replay FILE [--fraction F]
+//!                  [--policy tpp|first-touch|memtis|tpp-nomad]
 //!                  [--intervals N] [--hot-thr T] [--store DIR]
 //!                               drive the recorded op stream through a
 //!                               policy run (Tuna: `tuna tune --workload
@@ -86,7 +95,7 @@ use tuna::perfdb::PerfSource;
 use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
 use tuna::service::{IngestOutput, Ingestor, TunerService};
-use tuna::sim::MachineModel;
+use tuna::sim::{MachineModel, MigrationModel};
 use tuna::trace::{format as trace_format, gen as trace_gen};
 use tuna::util::human_bytes;
 use tuna::workloads::{PAGES_PER_PAPER_GB, TABLE1};
@@ -140,8 +149,28 @@ fn spec_from(args: &mut Args, exp: &ExperimentConfig) -> Result<RunSpec> {
     spec.intervals = args.get_parse("intervals", exp.intervals)?;
     spec.fm_fraction = args.get_parse("fraction", exp.fm_fraction)?;
     spec.hot_thr = args.get_parse("hot-thr", exp.hot_thr)?;
+    spec.migration = migration_from(args, exp.migration)?;
     spec.machine = exp.machine.clone();
     Ok(spec)
+}
+
+/// Resolve the migration model from `--migration MODE`,
+/// `--abort-on-write BOOL` and `--copy-intervals N`, layered over the
+/// `[migration]` table of `--config` (flags win; with neither, the
+/// policy's own default applies).
+fn migration_from(args: &mut Args, default: MigrationModel) -> Result<MigrationModel> {
+    let (dmode, dabort, dcopy) = match default {
+        MigrationModel::Exclusive => {
+            ("exclusive", true, MigrationModel::DEFAULT_COPY_INTERVALS)
+        }
+        MigrationModel::NonExclusive { abort_on_write, copy_intervals } => {
+            ("non-exclusive", abort_on_write, copy_intervals)
+        }
+    };
+    let mode = args.get_or("migration", dmode);
+    let abort: bool = args.get_parse("abort-on-write", dabort)?;
+    let copy: u32 = args.get_parse("copy-intervals", dcopy)?;
+    MigrationModel::parse(&mode, abort, copy).map_err(anyhow::Error::msg)
 }
 
 fn cmd_info(args: &mut Args) -> Result<()> {
@@ -266,6 +295,26 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     t.row(vec!["promotions".into(), run.total_promoted().to_string()]);
     t.row(vec!["promotion failures".into(), run.total_promote_failed().to_string()]);
     t.row(vec!["demotions".into(), run.total_demoted().to_string()]);
+    // The transactional-migration counters appear whenever the run used
+    // the non-exclusive model (even if all zero, so scripts can grep for
+    // the rows); exclusive runs keep the pre-migration-axis output.
+    let txn_total = run.total_shadow_hits()
+        + run.total_shadow_free_demotions()
+        + run.total_txn_aborts()
+        + run.total_txn_retried_copies();
+    if !spec.migration.is_exclusive() || txn_total > 0 {
+        t.row(vec!["migration mode".into(), spec.migration.mode_name().to_string()]);
+        t.row(vec!["shadow_hits".into(), run.total_shadow_hits().to_string()]);
+        t.row(vec![
+            "shadow_free_demotions".into(),
+            run.total_shadow_free_demotions().to_string(),
+        ]);
+        t.row(vec!["txn_aborts".into(), run.total_txn_aborts().to_string()]);
+        t.row(vec![
+            "txn_retried_copies".into(),
+            run.total_txn_retried_copies().to_string(),
+        ]);
+    }
     t.print();
     Ok(())
 }
@@ -485,6 +534,26 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                 pct(1.0 - report.min_fraction),
                 tuna::util::human_ns(report.decide_ns as u64)
             );
+            // Sessions whose telemetry carried transactional-migration
+            // counters get one extra line; exclusive-mode streams (and
+            // pre-migration-axis recordings) print exactly as before.
+            let vm = |name: &str| {
+                report.vmstat.iter().find(|(k, _)| *k == name).map_or(0, |&(_, v)| v)
+            };
+            let txn = vm("shadow_hits")
+                + vm("shadow_free_demotions")
+                + vm("txn_aborts")
+                + vm("txn_retried_copies");
+            if txn > 0 {
+                println!(
+                    "  migration {}: shadow_hits={} shadow_free_demotions={} txn_aborts={} txn_retried_copies={}",
+                    report.name,
+                    vm("shadow_hits"),
+                    vm("shadow_free_demotions"),
+                    vm("txn_aborts"),
+                    vm("txn_retried_copies")
+                );
+            }
         }
     };
     let mut totals = (0u64, 0u64, 0u64); // lines, samples, decisions
@@ -556,6 +625,28 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .split(',')
         .map(|s| SweepPolicy::parse(s.trim()))
         .collect::<Result<_>>()?;
+    // Migration-mode axis. `--migrations exclusive,non-exclusive` crosses
+    // the grid with both models; the shared --abort-on-write and
+    // --copy-intervals knobs apply to every non-exclusive mode listed,
+    // and the singular --migration stays accepted as an alias.
+    let (dmode, cabort, ccopy) = match exp.migration {
+        MigrationModel::Exclusive => {
+            ("exclusive", true, MigrationModel::DEFAULT_COPY_INTERVALS)
+        }
+        MigrationModel::NonExclusive { abort_on_write, copy_intervals } => {
+            ("non-exclusive", abort_on_write, copy_intervals)
+        }
+    };
+    let abort: bool = args.get_parse("abort-on-write", cabort)?;
+    let copy: u32 = args.get_parse("copy-intervals", ccopy)?;
+    let single_migration = args.get_or("migration", dmode);
+    let migrations: Vec<MigrationModel> = args
+        .get_or("migrations", &single_migration)
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| MigrationModel::parse(s, abort, copy).map_err(anyhow::Error::msg))
+        .collect::<Result<_>>()?;
     let db_given = args.get("db").map(|s| s.to_string());
     let db_path = PathBuf::from(db_given.clone().unwrap_or_else(|| exp.perfdb_path.clone()));
     let store_dir = args.get("store").map(PathBuf::from);
@@ -595,6 +686,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .with_seeds(seeds)
         .with_hot_thrs(hot_thrs)
         .with_policies(policies.clone())
+        .with_migrations(migrations)
         .with_intervals(intervals)
         .with_threads(threads)
         .with_machine(exp.machine.clone());
@@ -634,20 +726,25 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
 
     let mut t = Table::new(
         &format!(
-            "parallel sweep: {} workloads × {} fractions × {} seeds × {} hot-thrs × {} policies = {} cells",
+            "parallel sweep: {} workloads × {} fractions × {} seeds × {} hot-thrs × {} policies × {} migration modes = {} cells",
             spec.workloads.len(),
             spec.fractions.len(),
             spec.seeds.len(),
             spec.hot_thrs.len(),
             spec.policies.len(),
+            spec.migrations.len(),
             res.len()
         ),
-        &["workload", "policy", "seed", "FM size", "perf loss", "saving", "migrations", "failures"],
+        &[
+            "workload", "policy", "migration", "seed", "FM size", "perf loss", "saving",
+            "migrations", "failures",
+        ],
     );
     for c in &res.cells {
         t.row(vec![
             c.spec.workload.clone(),
             c.spec.policy.name().to_string(),
+            c.spec.migration.mode_name().to_string(),
             c.spec.seed.to_string(),
             pct(c.spec.fm_fraction),
             pct(c.loss),
@@ -691,6 +788,17 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             }
             for p in &spec.policies {
                 fp.push(p.code());
+            }
+            // The migration axis only contributes when it departs from
+            // the default [exclusive], so pre-axis sweeps keep their
+            // auto-names (reruns overwrite the same table).
+            if spec.migrations != [MigrationModel::Exclusive] {
+                for m in &spec.migrations {
+                    let (mode, abort, copy) = m.key();
+                    fp.push(mode);
+                    fp.push(abort);
+                    fp.extend_from_slice(&copy.to_le_bytes());
+                }
             }
             fp.extend_from_slice(&spec.intervals.to_le_bytes());
             fp.extend_from_slice(format!("{:?}", spec.machine).as_bytes());
@@ -920,6 +1028,7 @@ fn cmd_trace_replay(args: &mut Args) -> Result<()> {
     spec.intervals = args.get_parse("intervals", frames.saturating_add(1))?;
     spec.fm_fraction = args.get_parse("fraction", 0.9)?;
     spec.hot_thr = args.get_parse("hot-thr", spec.hot_thr)?;
+    spec.migration = migration_from(args, MigrationModel::Exclusive)?;
     let policy = SweepPolicy::parse(&args.get_or("policy", "tpp"))?;
     args.finish()?;
 
@@ -928,6 +1037,7 @@ fn cmd_trace_replay(args: &mut Args) -> Result<()> {
         SweepPolicy::Tpp => coordinator::run_tpp(&spec)?,
         SweepPolicy::FirstTouch => coordinator::run_first_touch(&spec)?,
         SweepPolicy::Memtis => coordinator::run_memtis(&spec)?,
+        SweepPolicy::TppNomad => coordinator::run_tpp_nomad(&spec)?,
         SweepPolicy::Tuna => bail!(
             "trace replay under Tuna needs the perf DB: use `tuna tune --workload trace:{}`",
             path.display()

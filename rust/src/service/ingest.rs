@@ -9,16 +9,21 @@
 //! open <session> <capacity> <rss_pages> <hot_thr> <threads>
 //! sample <session> <interval> <acc_fast> <acc_slow> <sacc_fast> <sacc_slow> \
 //!        <flops> <iops> <promoted> <promote_failed> <demoted_kswapd> \
-//!        <demoted_direct> <fast_free>
+//!        <demoted_direct> <fast_free> [<shadow_hits> <shadow_free_demotions> \
+//!        <txn_aborts> <txn_retried_copies>]
 //! close <session>
 //! ```
 //!
 //! (`sample` is one line; it is wrapped here for readability.) Blank
 //! lines and `#` comments are skipped. Session names are free-form
 //! tokens without whitespace; any number of sessions may be interleaved
-//! in one stream. Replaying a recorded stream through [`Ingestor`]
-//! produces decisions bit-identical to the run that recorded it — the
-//! determinism tests in the integration suite prove it.
+//! in one stream. The bracketed non-exclusive-migration counters are
+//! optional: streams recorded before the migration-model axis existed
+//! carry 12 sample fields and parse with those counters as 0, so
+//! replaying an old recording still produces bit-identical decisions.
+//! Writers always emit all 16 fields. Replaying a recorded stream
+//! through [`Ingestor`] produces decisions bit-identical to the run that
+//! recorded it — the determinism tests in the integration suite prove it.
 
 use std::collections::HashMap;
 use std::io::BufRead;
@@ -53,6 +58,15 @@ where
     tok.parse::<T>().map_err(|e| anyhow!("bad {what} `{tok}`: {e}"))
 }
 
+/// Optional trailing field: absent means 0 (pre-migration-axis streams),
+/// present-but-malformed is still an error.
+fn opt_field(it: &mut std::str::SplitWhitespace<'_>, what: &'static str) -> Result<u64> {
+    match it.next() {
+        None => Ok(0),
+        Some(tok) => tok.parse::<u64>().map_err(|e| anyhow!("bad {what} `{tok}`: {e}")),
+    }
+}
+
 impl Event {
     /// Parse one stream line. Returns `Ok(None)` for blanks and comments.
     pub fn parse(line: &str) -> Result<Option<Event>> {
@@ -85,6 +99,12 @@ impl Event {
                     demoted_kswapd: field(&mut it, "demoted_kswapd")?,
                     demoted_direct: field(&mut it, "demoted_direct")?,
                     fast_free: field(&mut it, "fast_free")?,
+                    // optional trailing counters (v1 streams recorded
+                    // before the migration-model axis omit them)
+                    shadow_hits: opt_field(&mut it, "shadow_hits")?,
+                    shadow_free_demotions: opt_field(&mut it, "shadow_free_demotions")?,
+                    txn_aborts: opt_field(&mut it, "txn_aborts")?,
+                    txn_retried_copies: opt_field(&mut it, "txn_retried_copies")?,
                 },
             },
             "close" => Event::Close { name: field(&mut it, "session name")? },
@@ -103,7 +123,7 @@ impl Event {
                 format!("open {name} {capacity} {rss_pages} {hot_thr} {threads}")
             }
             Event::Sample { name, sample: s } => format!(
-                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {}",
+                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
                 s.interval,
                 s.acc_fast,
                 s.acc_slow,
@@ -115,7 +135,11 @@ impl Event {
                 s.promote_failed,
                 s.demoted_kswapd,
                 s.demoted_direct,
-                s.fast_free
+                s.fast_free,
+                s.shadow_hits,
+                s.shadow_free_demotions,
+                s.txn_aborts,
+                s.txn_retried_copies
             ),
             Event::Close { name } => format!("close {name}"),
         }
@@ -293,6 +317,10 @@ mod tests {
                     promote_failed: 8,
                     demoted_kswapd: 9,
                     demoted_direct: 10,
+                    shadow_hits: 12,
+                    shadow_free_demotions: 13,
+                    txn_aborts: 14,
+                    txn_retried_copies: 15,
                     fast_free: 11,
                 },
             },
@@ -303,6 +331,32 @@ mod tests {
             let back = Event::parse(&line).unwrap().expect("a real event");
             assert_eq!(back, ev, "line `{line}`");
         }
+    }
+
+    #[test]
+    fn pre_migration_axis_sample_lines_still_parse() {
+        // a 12-field sample line from a stream recorded before the
+        // non-exclusive counters existed: the trailing counters read as 0
+        let old = "sample bfs#1 7 1 2 3 4 5 6 7 8 9 10 11";
+        let Some(Event::Sample { sample, .. }) = Event::parse(old).unwrap() else {
+            panic!("old-format sample line must parse");
+        };
+        assert_eq!(sample.fast_free, 11);
+        assert_eq!(
+            (
+                sample.shadow_hits,
+                sample.shadow_free_demotions,
+                sample.txn_aborts,
+                sample.txn_retried_copies
+            ),
+            (0, 0, 0, 0)
+        );
+        // 17th field is still a trailing-token error
+        let long = format!("{} 0 0 0 0 99", old);
+        assert!(Event::parse(&long).is_err(), "overlong sample must be rejected");
+        // a present-but-malformed optional field is an error, not a 0
+        let bad = format!("{} nope", old);
+        assert!(Event::parse(&bad).is_err());
     }
 
     #[test]

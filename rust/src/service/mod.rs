@@ -501,6 +501,10 @@ mod tests {
             promote_failed: 0,
             demoted_kswapd: 20,
             demoted_direct: 0,
+            shadow_hits: 0,
+            shadow_free_demotions: 0,
+            txn_aborts: 0,
+            txn_retried_copies: 0,
             fast_free: 100,
         }
     }

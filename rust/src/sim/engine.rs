@@ -3,7 +3,7 @@
 //! run trace (wall times, migrations, occupancy) for reports and benches.
 
 use super::interval::{IntervalInputs, IntervalModel, IntervalOutcome};
-use super::mem::TieredMemory;
+use super::mem::{MigrationCounters, MigrationModel, TieredMemory};
 use crate::tpp::{PagePolicy, Watermarks};
 use crate::workloads::Workload;
 
@@ -30,6 +30,16 @@ pub struct RunTrace {
     pub promote_failed: u64,
     pub demoted_kswapd: u64,
     pub demoted_direct: u64,
+    /// Accesses served by pages holding a valid shadow copy (always 0 in
+    /// exclusive mode, like the three counters below).
+    pub shadow_hits: u64,
+    /// Free-unmap demotions of clean shadowed pages (not in
+    /// `demoted_kswapd`/`demoted_direct`).
+    pub shadow_free_demotions: u64,
+    /// Transactional copies aborted by write traffic.
+    pub txn_aborts: u64,
+    /// Aborted copies restarted because the page was still hot.
+    pub txn_retried_copies: u64,
     pub fast_used: u64,
     pub fast_free: u64,
     /// Usable fast-memory size implied by the watermarks at this interval.
@@ -62,6 +72,42 @@ impl RunResult {
         self.trace.iter().map(|t| t.acc_fast + t.acc_slow).sum()
     }
 
+    /// Sum of the per-interval migration counters over the whole trace.
+    ///
+    /// Exhaustive by construction: the accumulator is destructured without
+    /// `..`, so adding a `MigrationCounters` field without deciding how it
+    /// aggregates here is a compile error — new counters can't silently
+    /// drop out of run totals.
+    pub fn total_migration_counters(&self) -> MigrationCounters {
+        let mut total = MigrationCounters::default();
+        let MigrationCounters {
+            promoted,
+            promote_failed,
+            demoted_kswapd,
+            demoted_direct,
+            // Allocation counters are not carried in the trace (they are
+            // nonzero only during the allocation epoch, which every
+            // consumer excludes); they stay 0 in the totals.
+            alloc_fast: _,
+            alloc_slow: _,
+            shadow_hits,
+            shadow_free_demotions,
+            txn_aborts,
+            txn_retried_copies,
+        } = &mut total;
+        for t in &self.trace {
+            *promoted += t.promoted;
+            *promote_failed += t.promote_failed;
+            *demoted_kswapd += t.demoted_kswapd;
+            *demoted_direct += t.demoted_direct;
+            *shadow_hits += t.shadow_hits;
+            *shadow_free_demotions += t.shadow_free_demotions;
+            *txn_aborts += t.txn_aborts;
+            *txn_retried_copies += t.txn_retried_copies;
+        }
+        total
+    }
+
     pub fn total_promoted(&self) -> u64 {
         self.trace.iter().map(|t| t.promoted).sum()
     }
@@ -70,12 +116,33 @@ impl RunResult {
         self.trace.iter().map(|t| t.promote_failed).sum()
     }
 
+    /// All demotions, copying (kswapd + direct) and free shadow unmaps.
+    /// Exclusive runs have no shadow unmaps, so their value is unchanged.
     pub fn total_demoted(&self) -> u64 {
-        self.trace.iter().map(|t| t.demoted_kswapd + t.demoted_direct).sum()
+        self.trace
+            .iter()
+            .map(|t| t.demoted_kswapd + t.demoted_direct + t.shadow_free_demotions)
+            .sum()
     }
 
     pub fn total_migrations(&self) -> u64 {
         self.total_promoted() + self.total_demoted()
+    }
+
+    pub fn total_shadow_hits(&self) -> u64 {
+        self.trace.iter().map(|t| t.shadow_hits).sum()
+    }
+
+    pub fn total_shadow_free_demotions(&self) -> u64 {
+        self.trace.iter().map(|t| t.shadow_free_demotions).sum()
+    }
+
+    pub fn total_txn_aborts(&self) -> u64 {
+        self.trace.iter().map(|t| t.txn_aborts).sum()
+    }
+
+    pub fn total_txn_retried_copies(&self) -> u64 {
+        self.trace.iter().map(|t| t.txn_retried_copies).sum()
     }
 
     /// Relative slowdown vs a baseline run of the same work:
@@ -95,11 +162,23 @@ impl RunResult {
 /// The engine. Holds the interval model; memory/policy/workload are per-run.
 pub struct Engine {
     pub model: IntervalModel,
+    /// Migration-semantics override for runs. `None` (the default) defers
+    /// to the policy's [`crate::tpp::PagePolicy::migration_model`], which
+    /// is [`MigrationModel::Exclusive`] for every policy except
+    /// `tpp-nomad` — so existing callers are bit-identical to the
+    /// pre-refactor engine.
+    pub migration: Option<MigrationModel>,
 }
 
 impl Engine {
     pub fn new(model: IntervalModel) -> Self {
-        Engine { model }
+        Engine { model, migration: None }
+    }
+
+    /// Builder-style migration override (see [`Self::migration`]).
+    pub fn with_migration(mut self, migration: MigrationModel) -> Self {
+        self.migration = Some(migration);
+        self
     }
 
     /// Fast-tier capacity (pages) whose *usable* size under default
@@ -136,7 +215,13 @@ impl Engine {
         fast_capacity: u64,
         mut observer: impl FnMut(&RunTrace) -> Option<Watermarks>,
     ) -> RunResult {
-        let mut mem = TieredMemory::new(workload.rss_pages(), fast_capacity);
+        let migration = self.migration.unwrap_or_else(|| policy.migration_model());
+        // Every non-exclusive hook below is guarded by this flag, so the
+        // exclusive path executes exactly the pre-refactor arithmetic
+        // (the bit-identity invariant the artifact store depends on).
+        let nonexclusive = !migration.is_exclusive();
+        let mut mem =
+            TieredMemory::with_migration(workload.rss_pages(), fast_capacity, migration);
         let mut trace: Vec<RunTrace> = Vec::new();
         let mut clock_ns = 0.0f64;
         let mut interval: u32 = 0;
@@ -180,11 +265,26 @@ impl Engine {
                         inputs.max_page_slow = inputs.max_page_slow.max(a.random);
                     }
                 }
+                if nonexclusive {
+                    // shadow hits, shadow invalidation, copy aborts
+                    mem.note_access(id, a.random, a.streamed, hot_thr);
+                }
             }
 
             // --- policy reacts (promotions, kswapd, direct reclaim) ---
             let kswapd_budget = self.model.machine.kswapd_pages_per_interval;
             policy.run_interval(&mut mem, &profile.accesses, interval, kswapd_budget);
+            if nonexclusive {
+                mem.advance_transactions();
+            }
+            // Per-interval accounting invariant (debug builds): tier
+            // occupancy, shadow frames and in-flight reservations must
+            // reconcile with the page table after every policy step.
+            if cfg!(debug_assertions) {
+                if let Err(e) = mem.check_invariants() {
+                    panic!("interval {interval}: tier accounting invariant violated: {e}");
+                }
+            }
             inputs.migrations = mem.take_counters();
 
             // --- time model ---
@@ -192,6 +292,21 @@ impl Engine {
             clock_ns += outcome.wall_ns;
 
             let wm = policy.watermarks();
+            // Exhaustive over counters: a `MigrationCounters` field that is
+            // neither carried into the trace nor explicitly dropped here is
+            // a compile error.
+            let MigrationCounters {
+                promoted,
+                promote_failed,
+                demoted_kswapd,
+                demoted_direct,
+                alloc_fast: _,
+                alloc_slow: _,
+                shadow_hits,
+                shadow_free_demotions,
+                txn_aborts,
+                txn_retried_copies,
+            } = inputs.migrations;
             let rec = RunTrace {
                 interval,
                 clock_ns,
@@ -202,10 +317,14 @@ impl Engine {
                 sacc_slow,
                 flops: profile.flops,
                 iops: profile.iops,
-                promoted: inputs.migrations.promoted,
-                promote_failed: inputs.migrations.promote_failed,
-                demoted_kswapd: inputs.migrations.demoted_kswapd,
-                demoted_direct: inputs.migrations.demoted_direct,
+                promoted,
+                promote_failed,
+                demoted_kswapd,
+                demoted_direct,
+                shadow_hits,
+                shadow_free_demotions,
+                txn_aborts,
+                txn_retried_copies,
                 fast_used: mem.fast_used(),
                 fast_free: mem.fast_free(),
                 usable_fm: wm.usable(fast_capacity),
@@ -467,6 +586,150 @@ mod tests {
         let cap = Engine::fm_capacity(64, 1.0);
         let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
         engine().run(&mut Dup, &mut tpp, cap, |_| None);
+    }
+
+    /// Satellite: a policy that desynchronizes the occupancy accounting
+    /// must trip the engine's per-interval invariant assertion.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "tier accounting invariant violated")]
+    fn corrupted_tier_accounting_trips_the_per_interval_assertion() {
+        struct Corrupting {
+            wm: Watermarks,
+        }
+        impl crate::tpp::PagePolicy for Corrupting {
+            fn name(&self) -> &'static str {
+                "corrupting"
+            }
+            fn hot_thr(&self) -> u32 {
+                2
+            }
+            fn watermarks(&self) -> Watermarks {
+                self.wm
+            }
+            fn set_watermarks(&mut self, wm: Watermarks) {
+                self.wm = wm;
+            }
+            fn alloc_reserve(&self) -> u64 {
+                0
+            }
+            fn run_interval(
+                &mut self,
+                mem: &mut TieredMemory,
+                _touched: &[PageAccess],
+                _now: u32,
+                _kswapd_budget: u64,
+            ) {
+                mem.corrupt_accounting_for_test();
+            }
+        }
+        let mut w = Toy { rss: 128, hot: 16, left: 3, tick: 0 };
+        let cap = Engine::fm_capacity(128, 1.0);
+        let mut bad = Corrupting { wm: Watermarks::default_for_capacity(cap) };
+        engine().run(&mut w, &mut bad, cap, |_| None);
+    }
+
+    #[test]
+    fn explicit_exclusive_override_matches_the_default_engine() {
+        let run = |e: Engine| {
+            let mut w = Toy { rss: 2_000, hot: 400, left: 15, tick: 0 };
+            let cap = Engine::fm_capacity(2_000, 0.5);
+            let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+            e.run(&mut w, &mut tpp, cap, |_| None)
+        };
+        let a = run(engine());
+        let b = run(engine().with_migration(MigrationModel::Exclusive));
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.wall_ns.to_bits(), y.wall_ns.to_bits());
+            assert_eq!(x.promoted, y.promoted);
+            assert_eq!(x.demoted_kswapd, y.demoted_kswapd);
+        }
+    }
+
+    /// Hot set in the *last* 30% of the address space (allocated after
+    /// fast memory filled, so it lands in slow and must be promoted),
+    /// with dirtying (random) or clean (streamed) hot traffic.
+    struct HotTail {
+        rss: usize,
+        left: u32,
+        total: u32,
+        random_hot: bool,
+    }
+
+    impl Workload for HotTail {
+        fn name(&self) -> &'static str {
+            "hottail"
+        }
+        fn rss_pages(&self) -> usize {
+            self.rss
+        }
+        fn threads(&self) -> u32 {
+            4
+        }
+        fn next_interval(&mut self) -> Option<AccessProfile> {
+            if self.left == 0 {
+                return None;
+            }
+            self.left -= 1;
+            let mut accesses = Vec::new();
+            if self.left + 1 == self.total {
+                for p in 0..self.rss {
+                    accesses.push(PageAccess { page: p as u32, random: 1, streamed: 0 });
+                }
+            } else {
+                for p in (self.rss * 7 / 10)..self.rss {
+                    let (random, streamed) = if self.random_hot { (8, 0) } else { (0, 8) };
+                    accesses.push(PageAccess { page: p as u32, random, streamed });
+                }
+            }
+            Some(AccessProfile { accesses, flops: 0, iops: 10_000 })
+        }
+    }
+
+    #[test]
+    fn exclusive_runs_report_zero_shadow_and_txn_counters() {
+        let mut w = HotTail { rss: 4_000, left: 30, total: 30, random_hot: true };
+        let cap = Engine::fm_capacity(4_000, 0.5);
+        let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+        let res = engine().run(&mut w, &mut tpp, cap, |_| None);
+        assert!(res.total_promoted() > 0, "pressure must migrate");
+        assert_eq!(res.total_shadow_hits(), 0);
+        assert_eq!(res.total_shadow_free_demotions(), 0);
+        assert_eq!(res.total_txn_aborts(), 0);
+        assert_eq!(res.total_txn_retried_copies(), 0);
+    }
+
+    /// Read-mostly hot set under pressure: transactional promotions
+    /// complete with shadows, and kswapd's shadow-preferring victim order
+    /// turns demotions into free unmaps.
+    #[test]
+    fn non_exclusive_clean_hot_set_yields_free_demotions() {
+        let cap = Engine::fm_capacity(4_000, 0.5);
+        let mut w = HotTail { rss: 4_000, left: 60, total: 60, random_hot: false };
+        let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+        let res = engine()
+            .with_migration(MigrationModel::non_exclusive_default())
+            .run(&mut w, &mut tpp, cap, |_| None);
+        assert!(res.total_promoted() > 0, "transactional copies must complete");
+        assert!(res.total_shadow_free_demotions() > 0, "pressure must find shadowed victims");
+        assert!(res.total_shadow_hits() > 0);
+        assert_eq!(res.total_txn_aborts(), 0, "clean traffic never aborts");
+    }
+
+    /// Write-heavy hot set: in-flight copies are raced by the next
+    /// interval's writes, so the transactional path aborts and retries.
+    #[test]
+    fn non_exclusive_write_heavy_hot_set_aborts_copies() {
+        let cap = Engine::fm_capacity(4_000, 0.5);
+        let mut w = HotTail { rss: 4_000, left: 30, total: 30, random_hot: true };
+        let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+        let res = engine()
+            .with_migration(MigrationModel::non_exclusive_default())
+            .run(&mut w, &mut tpp, cap, |_| None);
+        assert!(res.total_txn_aborts() > 0, "random writes must race copies");
+        assert!(res.total_txn_retried_copies() > 0, "hot pages retry the copy");
     }
 
     #[test]

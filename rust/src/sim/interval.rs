@@ -128,12 +128,20 @@ impl IntervalModel {
         let mig = &x.migrations;
         let pm_pr = mig.promoted;
         let pm_de = mig.demoted_total();
-        // Fast tier sees: app lines + promoted pages written + demoted read.
-        let fast_bytes = x.acc_fast() * LINE_BYTES + (pm_pr + pm_de) * PAGE_BYTES;
+        // Fast tier sees: app lines + promoted pages written + demoted
+        // read. Aborted transactional copies (non-exclusive mode) wasted a
+        // partial page write into the reserved fast frame; free shadow
+        // demotions deliberately appear nowhere — they move no bytes.
+        // The abort terms are integer byte additions, so they are exactly
+        // zero (bit-identical arithmetic) for exclusive runs.
+        let fast_bytes =
+            x.acc_fast() * LINE_BYTES + (pm_pr + pm_de) * PAGE_BYTES + mig.txn_aborts * PAGE_BYTES;
         let t_bw_fast = fast_bytes as f64 / m.fast_bw;
-        // Slow tier: app lines (loads) + promotion reads at read bw,
-        // demotion writes at (much lower) write bw.
-        let slow_read_bytes = x.acc_slow() * LINE_BYTES + pm_pr * PAGE_BYTES;
+        // Slow tier: app lines (loads) + promotion reads at read bw
+        // (aborted copies read their source pages too), demotion writes at
+        // (much lower) write bw.
+        let slow_read_bytes =
+            x.acc_slow() * LINE_BYTES + pm_pr * PAGE_BYTES + mig.txn_aborts * PAGE_BYTES;
         let slow_write_bytes = pm_de * PAGE_BYTES;
         let t_bw_slow = slow_read_bytes as f64 / m.slow_read_bw
             + slow_write_bytes as f64 / m.slow_write_bw;
@@ -141,9 +149,14 @@ impl IntervalModel {
         // --- blocking time (spread across threads) ---
         // TPP promotes in the faulting task's context ⇒ blocking. Failed
         // promotions still take the fault. Direct reclaim blocks too.
+        // Aborted transactional copies are charged like failed promotions
+        // (fault taken, no page landed); the term is appended *last* so an
+        // exclusive run adds a trailing +0.0 — bit-identical for the
+        // finite non-negative sums this expression produces.
         let t_block = (pm_pr as f64 * m.promote_cpu_ns
             + mig.promote_failed as f64 * m.promote_fail_cpu_ns
-            + mig.demoted_direct as f64 * m.direct_reclaim_ns)
+            + mig.demoted_direct as f64 * m.direct_reclaim_ns
+            + mig.txn_aborts as f64 * m.promote_fail_cpu_ns)
             / threads as f64;
 
         let (mut bound, mut roof) = (Bound::Compute, t_comp);
@@ -290,6 +303,28 @@ mod tests {
         let out2 = m.evaluate(&y);
         assert!(out2.t_block_ns > 0.0);
         assert!(out2.wall_ns > base.wall_ns + out2.t_block_ns - 1e-6);
+    }
+
+    #[test]
+    fn aborted_copies_cost_bandwidth_and_blocking_but_free_demotions_are_free() {
+        let m = model();
+        let base = m.evaluate(&base_inputs());
+        let mut x = base_inputs();
+        x.migrations.txn_aborts = 10_000;
+        let out = m.evaluate(&x);
+        assert!(out.t_block_ns > base.t_block_ns, "aborts must block like failed faults");
+        assert!(out.t_bw_fast_ns > base.t_bw_fast_ns, "wasted copy writes hit fast bw");
+        assert!(out.t_bw_slow_ns > base.t_bw_slow_ns, "wasted copy reads hit slow bw");
+        assert!(out.wall_ns > base.wall_ns);
+        // free shadow demotions, shadow hits and retry bookkeeping move no
+        // bytes and block nothing: the outcome is bit-identical
+        let mut y = base_inputs();
+        y.migrations.shadow_free_demotions = 1_000_000;
+        y.migrations.shadow_hits = 123;
+        y.migrations.txn_retried_copies = 55;
+        let free = m.evaluate(&y);
+        assert_eq!(free.wall_ns.to_bits(), base.wall_ns.to_bits());
+        assert_eq!(free.t_block_ns.to_bits(), base.t_block_ns.to_bits());
     }
 
     #[test]

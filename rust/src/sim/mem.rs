@@ -4,6 +4,26 @@
 //! each page carries its current tier, a decayed access counter (the
 //! "profiling window" frequency TPP uses for promotion decisions) and a
 //! last-touch timestamp (recency, used for demotion victim selection).
+//!
+//! Migration *semantics* are pluggable via [`MigrationModel`]:
+//!
+//! * [`MigrationModel::Exclusive`] — the paper's (and TPP's) model: a page
+//!   lives in exactly one tier and migration is an instantaneous move.
+//!   This mode is bit-identical to the pre-refactor engine.
+//! * [`MigrationModel::NonExclusive`] — Nomad-style transactional
+//!   migration (PAPERS.md): a promotion *copies* the page while it stays
+//!   mapped in the slow tier (the copy reserves a fast frame for
+//!   `copy_intervals` intervals before the page flips), a write to an
+//!   in-flight page aborts the copy (`abort_on_write`), and a completed
+//!   promotion keeps its slow-tier source frame as a **shadow copy**:
+//!   until the page is dirtied, demoting it back is a free unmap instead
+//!   of a page copy.
+//!
+//! Dirtiness model: the workloads' access histograms have no read/write
+//! split, so *random* accesses are treated as dirtying (they model
+//! pointer-chasing read-modify-write traffic) and *streamed* accesses as
+//! clean sequential reads. This is a deterministic modeling convention,
+//! applied uniformly to shadow invalidation and copy aborts.
 
 use crate::PageId;
 
@@ -12,6 +32,87 @@ use crate::PageId;
 pub enum Tier {
     Fast,
     Slow,
+}
+
+/// Migration semantics for a run (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum MigrationModel {
+    /// Exclusive tiering: instantaneous move, one resident copy per page.
+    #[default]
+    Exclusive,
+    /// Nomad-style non-exclusive tiering with transactional promotion.
+    NonExclusive {
+        /// Abort an in-flight copy when the interval's write (random)
+        /// traffic touches the page being copied.
+        abort_on_write: bool,
+        /// Intervals a promotion copy occupies its reserved destination
+        /// frame before the page flips tiers (clamped to ≥ 1).
+        copy_intervals: u32,
+    },
+}
+
+impl MigrationModel {
+    /// Default transactional configuration (the `tpp-nomad` policy's
+    /// built-in mode): abort on write, two-interval copy window.
+    pub const DEFAULT_COPY_INTERVALS: u32 = 2;
+
+    pub fn non_exclusive_default() -> Self {
+        MigrationModel::NonExclusive {
+            abort_on_write: true,
+            copy_intervals: Self::DEFAULT_COPY_INTERVALS,
+        }
+    }
+
+    pub fn is_exclusive(&self) -> bool {
+        matches!(self, MigrationModel::Exclusive)
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            MigrationModel::Exclusive => "exclusive",
+            MigrationModel::NonExclusive { .. } => "non-exclusive",
+        }
+    }
+
+    /// Parse a CLI/config mode string. `abort_on_write`/`copy_intervals`
+    /// apply only to non-exclusive mode.
+    pub fn parse(mode: &str, abort_on_write: bool, copy_intervals: u32) -> Result<Self, String> {
+        match mode.trim().to_ascii_lowercase().as_str() {
+            "exclusive" | "excl" => Ok(MigrationModel::Exclusive),
+            "non-exclusive" | "nonexclusive" | "non_exclusive" | "nomad" | "transactional" => {
+                Ok(MigrationModel::NonExclusive {
+                    abort_on_write,
+                    copy_intervals: copy_intervals.max(1),
+                })
+            }
+            other => Err(format!(
+                "unknown migration mode `{other}` (valid: exclusive, non-exclusive)"
+            )),
+        }
+    }
+
+    /// Stable (mode, abort, copy_intervals) triple for artifact keys and
+    /// fingerprints (never renumber mode codes, only extend).
+    pub fn key(&self) -> (u8, u8, u32) {
+        match self {
+            MigrationModel::Exclusive => (0, 0, 0),
+            MigrationModel::NonExclusive { abort_on_write, copy_intervals } => {
+                (1, *abort_on_write as u8, *copy_intervals)
+            }
+        }
+    }
+
+    /// Inverse of [`Self::key`].
+    pub fn from_key(mode: u8, abort: u8, copy_intervals: u32) -> Result<Self, String> {
+        match mode {
+            0 => Ok(MigrationModel::Exclusive),
+            1 => Ok(MigrationModel::NonExclusive {
+                abort_on_write: abort != 0,
+                copy_intervals,
+            }),
+            other => Err(format!("unknown migration mode code {other}")),
+        }
+    }
 }
 
 /// Per-page metadata.
@@ -24,19 +125,37 @@ pub struct PageState {
     pub last_touch: u32,
     /// Whether the page has ever been touched (physically allocated).
     pub allocated: bool,
+    /// Non-exclusive mode: the page is resident in fast memory but its
+    /// slow-tier source frame still holds a valid copy (free to demote).
+    pub shadowed: bool,
+    /// Non-exclusive mode: the page has been written (by random traffic)
+    /// since its current copy/shadow epoch began.
+    pub dirty: bool,
+    /// Non-exclusive mode: intervals left on an in-flight promotion copy
+    /// (0 = no transaction). The page stays mapped in Slow while > 0.
+    pub copying: u32,
 }
 
 impl Default for PageState {
     fn default() -> Self {
-        PageState { tier: Tier::Slow, window_count: 0, last_touch: 0, allocated: false }
+        PageState {
+            tier: Tier::Slow,
+            window_count: 0,
+            last_touch: 0,
+            allocated: false,
+            shadowed: false,
+            dirty: false,
+            copying: 0,
+        }
     }
 }
 
 /// Counters for one interval's migration activity (consumed by the
 /// interval time model and telemetry, then reset).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MigrationCounters {
-    /// Successful promotions (slow → fast).
+    /// Successful promotions (slow → fast). In non-exclusive mode this is
+    /// counted when the transactional copy *completes* and the page flips.
     pub promoted: u64,
     /// Promotion attempts that failed for lack of free fast memory
     /// ("page migration failures" in the paper's motivation study).
@@ -49,9 +168,20 @@ pub struct MigrationCounters {
     pub alloc_fast: u64,
     /// New-page allocations that spilled to slow memory.
     pub alloc_slow: u64,
+    /// Accesses served by pages holding a valid shadow copy.
+    pub shadow_hits: u64,
+    /// Demotions of clean shadowed pages: a free unmap, **not** counted in
+    /// `demoted_kswapd`/`demoted_direct` and charged no copy bandwidth.
+    pub shadow_free_demotions: u64,
+    /// In-flight transactional copies aborted by write traffic.
+    pub txn_aborts: u64,
+    /// Aborted copies immediately restarted because the page is still hot.
+    pub txn_retried_copies: u64,
 }
 
 impl MigrationCounters {
+    /// Demotions that move a page copy (kswapd + direct). Free shadow
+    /// demotions are deliberately excluded: they move no bytes.
     pub fn demoted_total(&self) -> u64 {
         self.demoted_kswapd + self.demoted_direct
     }
@@ -66,21 +196,37 @@ pub struct TieredMemory {
     fast_capacity: u64,
     fast_used: u64,
     slow_used: u64,
+    /// Migration semantics for this address space.
+    migration: MigrationModel,
+    /// In-flight transactional promotions, in start order.
+    txns: Vec<PageId>,
     pub counters: MigrationCounters,
 }
 
 impl TieredMemory {
     /// Create an address space of `rss_pages` (all unallocated) over a
-    /// fast tier with `fast_capacity` pages. The slow tier is unbounded
-    /// (756 GB on the testbed — never the constraint).
+    /// fast tier with `fast_capacity` pages, under exclusive migration.
+    /// The slow tier is unbounded (756 GB on the testbed — never the
+    /// constraint).
     pub fn new(rss_pages: usize, fast_capacity: u64) -> Self {
+        Self::with_migration(rss_pages, fast_capacity, MigrationModel::Exclusive)
+    }
+
+    /// As [`Self::new`] with explicit migration semantics.
+    pub fn with_migration(rss_pages: usize, fast_capacity: u64, migration: MigrationModel) -> Self {
         TieredMemory {
             pages: vec![PageState::default(); rss_pages],
             fast_capacity,
             fast_used: 0,
             slow_used: 0,
+            migration,
+            txns: Vec::new(),
             counters: MigrationCounters::default(),
         }
+    }
+
+    pub fn migration(&self) -> MigrationModel {
+        self.migration
     }
 
     pub fn rss_pages(&self) -> usize {
@@ -144,11 +290,107 @@ impl TieredMemory {
         p.tier
     }
 
+    /// Non-exclusive bookkeeping for one page's interval traffic, called
+    /// by the engine after [`Self::touch`] (never called in exclusive
+    /// mode): count shadow hits, invalidate the shadow on a dirtying
+    /// (random) access, and abort an in-flight copy the write races with.
+    /// An aborted copy restarts immediately (a *retried copy*) when the
+    /// page's window count still clears `hot_thr`; otherwise the
+    /// transaction is cancelled and its reserved fast frame released.
+    pub fn note_access(&mut self, id: PageId, random: u32, streamed: u32, hot_thr: u32) {
+        let MigrationModel::NonExclusive { abort_on_write, copy_intervals } = self.migration
+        else {
+            return;
+        };
+        let p = &mut self.pages[id as usize];
+        if p.shadowed {
+            self.counters.shadow_hits += (random + streamed) as u64;
+        }
+        if random == 0 {
+            return; // streamed accesses are clean: shadow and copy survive
+        }
+        p.dirty = true;
+        if p.shadowed {
+            // first write since promotion: the slow source copy is stale
+            p.shadowed = false;
+            self.slow_used -= 1;
+        }
+        if abort_on_write && p.copying > 0 {
+            self.counters.txn_aborts += 1;
+            if p.window_count >= hot_thr {
+                // still hot: restart the copy, keeping the reservation
+                self.counters.txn_retried_copies += 1;
+                p.copying = copy_intervals.max(1);
+                p.dirty = false;
+            } else {
+                // cooled off: cancel and release the reserved fast frame
+                p.copying = 0;
+                self.fast_used -= 1;
+            }
+        }
+    }
+
+    /// Tick every in-flight transactional copy by one interval (engine
+    /// calls this once per interval in non-exclusive mode, after the
+    /// policy ran). A copy that reaches zero completes: the page flips to
+    /// fast and — if still clean — its slow source frame becomes a shadow
+    /// copy (so `slow_used` is unchanged; the shadow holds the frame).
+    pub fn advance_transactions(&mut self) {
+        if self.txns.is_empty() {
+            return;
+        }
+        let mut txns = std::mem::take(&mut self.txns);
+        txns.retain(|&id| {
+            let p = &mut self.pages[id as usize];
+            if p.copying == 0 {
+                return false; // aborted and cancelled this interval
+            }
+            p.copying -= 1;
+            if p.copying > 0 {
+                return true;
+            }
+            // copy finished: flip tiers; fast_used already counts the
+            // reserved destination frame
+            p.tier = Tier::Fast;
+            if p.dirty {
+                // only reachable with abort_on_write=false: the page was
+                // written mid-copy, so no valid shadow survives
+                p.shadowed = false;
+                self.slow_used -= 1;
+            } else {
+                p.shadowed = true;
+            }
+            self.counters.promoted += 1;
+            false
+        });
+        self.txns = txns;
+    }
+
     /// Promote a page slow → fast. Fails (returning false and counting a
     /// migration failure) if no free fast page is available above the
     /// `reserve_free` watermark.
+    ///
+    /// Non-exclusive mode: starts (or confirms) a transactional copy
+    /// instead of moving the page — the destination frame is reserved
+    /// immediately, the page stays mapped in Slow until the copy
+    /// completes, and `promoted` is counted at completion.
     pub fn promote(&mut self, id: PageId, reserve_free: u64) -> bool {
         debug_assert_eq!(self.pages[id as usize].tier, Tier::Slow);
+        if let MigrationModel::NonExclusive { copy_intervals, .. } = self.migration {
+            if self.pages[id as usize].copying > 0 {
+                return true; // copy already underway
+            }
+            if self.fast_used + reserve_free >= self.fast_capacity {
+                self.counters.promote_failed += 1;
+                return false;
+            }
+            let p = &mut self.pages[id as usize];
+            p.copying = copy_intervals.max(1);
+            p.dirty = false; // the copy snapshots the page's current state
+            self.fast_used += 1; // destination frame reserved for the copy
+            self.txns.push(id);
+            return true;
+        }
         if self.fast_used + reserve_free >= self.fast_capacity {
             self.counters.promote_failed += 1;
             return false;
@@ -162,9 +404,21 @@ impl TieredMemory {
 
     /// Demote a page fast → slow. `direct` selects which counter the
     /// demotion is charged to (kswapd vs direct reclaim).
+    ///
+    /// A clean shadowed page (non-exclusive mode only) demotes for free:
+    /// its slow source copy is still valid, so the "demotion" is a bare
+    /// unmap counted in `shadow_free_demotions` and charged no bandwidth.
     pub fn demote(&mut self, id: PageId, direct: bool) {
         debug_assert_eq!(self.pages[id as usize].tier, Tier::Fast);
-        self.pages[id as usize].tier = Tier::Slow;
+        let p = &mut self.pages[id as usize];
+        if p.shadowed {
+            p.tier = Tier::Slow;
+            p.shadowed = false;
+            self.fast_used -= 1; // slow_used already counts the shadow frame
+            self.counters.shadow_free_demotions += 1;
+            return;
+        }
+        p.tier = Tier::Slow;
         self.fast_used -= 1;
         self.slow_used += 1;
         if direct {
@@ -192,28 +446,87 @@ impl TieredMemory {
     }
 
     /// Take and reset this interval's migration counters.
+    ///
+    /// Exhaustive by construction: the destructuring pattern has no `..`,
+    /// so adding a counter field without threading it through here is a
+    /// compile error — new counters can't silently drop out of reports.
     pub fn take_counters(&mut self) -> MigrationCounters {
-        std::mem::take(&mut self.counters)
+        let MigrationCounters {
+            promoted,
+            promote_failed,
+            demoted_kswapd,
+            demoted_direct,
+            alloc_fast,
+            alloc_slow,
+            shadow_hits,
+            shadow_free_demotions,
+            txn_aborts,
+            txn_retried_copies,
+        } = std::mem::take(&mut self.counters);
+        MigrationCounters {
+            promoted,
+            promote_failed,
+            demoted_kswapd,
+            demoted_direct,
+            alloc_fast,
+            alloc_slow,
+            shadow_hits,
+            shadow_free_demotions,
+            txn_aborts,
+            txn_retried_copies,
+        }
     }
 
-    /// Internal consistency check (used by tests and the property suite):
-    /// tier occupancy counters must match the page table exactly.
+    /// Internal consistency check (used by tests, the property suite and
+    /// the engine's per-interval debug assertion): tier occupancy counters
+    /// must match the page table exactly, including shadow frames and
+    /// in-flight copy reservations.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut fast = 0u64;
         let mut slow = 0u64;
-        for p in &self.pages {
-            if p.allocated {
-                match p.tier {
-                    Tier::Fast => fast += 1,
-                    Tier::Slow => slow += 1,
+        let mut shadowed = 0u64;
+        let mut copying = 0u64;
+        for (i, p) in self.pages.iter().enumerate() {
+            if p.shadowed && p.tier == Tier::Slow {
+                return Err(format!("page {i} is shadowed but resident in the Slow tier"));
+            }
+            if p.shadowed && p.copying > 0 {
+                return Err(format!("page {i} is both shadowed and mid-copy"));
+            }
+            if !p.allocated {
+                if p.shadowed || p.copying > 0 {
+                    return Err(format!("unallocated page {i} has shadow/copy state"));
                 }
+                continue;
+            }
+            match p.tier {
+                Tier::Fast => fast += 1,
+                Tier::Slow => slow += 1,
+            }
+            if p.shadowed {
+                shadowed += 1;
+            }
+            if p.copying > 0 {
+                copying += 1;
             }
         }
-        if fast != self.fast_used {
-            return Err(format!("fast_used={} but page table has {fast}", self.fast_used));
+        if fast + copying != self.fast_used {
+            return Err(format!(
+                "fast_used={} but page table has {fast} fast + {copying} in-flight",
+                self.fast_used
+            ));
         }
-        if slow != self.slow_used {
-            return Err(format!("slow_used={} but page table has {slow}", self.slow_used));
+        if slow + shadowed != self.slow_used {
+            return Err(format!(
+                "slow_used={} but page table has {slow} slow + {shadowed} shadow frames",
+                self.slow_used
+            ));
+        }
+        if shadowed > self.slow_used {
+            return Err(format!(
+                "shadow frames ({shadowed}) exceed slow_used ({})",
+                self.slow_used
+            ));
         }
         if self.fast_used > self.fast_capacity {
             return Err(format!(
@@ -222,6 +535,13 @@ impl TieredMemory {
             ));
         }
         Ok(())
+    }
+
+    /// Deliberately desynchronize the occupancy accounting — test hook for
+    /// the engine's per-interval invariant assertion.
+    #[cfg(test)]
+    pub(crate) fn corrupt_accounting_for_test(&mut self) {
+        self.fast_used += 1;
     }
 }
 
@@ -303,5 +623,174 @@ mod tests {
         assert_eq!(c.alloc_fast, 1);
         assert_eq!(c.alloc_slow, 1);
         assert_eq!(m.counters.alloc_fast, 0);
+    }
+
+    #[test]
+    fn migration_model_parse_and_key_roundtrip() {
+        assert_eq!(MigrationModel::parse("exclusive", true, 5).unwrap(), MigrationModel::Exclusive);
+        assert_eq!(
+            MigrationModel::parse("non-exclusive", true, 3).unwrap(),
+            MigrationModel::NonExclusive { abort_on_write: true, copy_intervals: 3 }
+        );
+        assert_eq!(
+            MigrationModel::parse("nomad", false, 0).unwrap(),
+            MigrationModel::NonExclusive { abort_on_write: false, copy_intervals: 1 },
+            "copy_intervals must clamp to >= 1"
+        );
+        assert!(MigrationModel::parse("bogus", true, 2).is_err());
+        for m in [
+            MigrationModel::Exclusive,
+            MigrationModel::non_exclusive_default(),
+            MigrationModel::NonExclusive { abort_on_write: false, copy_intervals: 7 },
+        ] {
+            let (mode, abort, copy) = m.key();
+            assert_eq!(MigrationModel::from_key(mode, abort, copy).unwrap(), m);
+        }
+        assert!(MigrationModel::from_key(9, 0, 0).is_err());
+    }
+
+    fn nonexclusive(rss: usize, cap: u64, copy_intervals: u32) -> TieredMemory {
+        let mut m = TieredMemory::with_migration(
+            rss,
+            cap,
+            MigrationModel::NonExclusive { abort_on_write: true, copy_intervals },
+        );
+        for id in 0..rss as u32 {
+            m.allocate(id, 0, 0);
+        }
+        m
+    }
+
+    #[test]
+    fn transactional_promotion_reserves_then_flips_with_shadow() {
+        let mut m = nonexclusive(4, 3, 2); // pages 0..3 fast, 3 slow
+        assert_eq!(m.page(3).tier, Tier::Slow);
+        m.demote(0, false); // make room
+        assert!(m.promote(3, 0));
+        // in-flight: page still slow, destination frame reserved
+        assert_eq!(m.page(3).tier, Tier::Slow);
+        assert_eq!(m.page(3).copying, 2);
+        assert_eq!(m.fast_used(), 3, "reservation counts against fast");
+        assert_eq!(m.counters.promoted, 0, "promoted counts at completion");
+        m.check_invariants().unwrap();
+        // re-promoting an in-flight page is a confirming no-op
+        assert!(m.promote(3, 0));
+        assert_eq!(m.page(3).copying, 2);
+
+        m.advance_transactions();
+        assert_eq!(m.page(3).copying, 1);
+        assert_eq!(m.page(3).tier, Tier::Slow);
+        m.check_invariants().unwrap();
+
+        m.advance_transactions();
+        assert_eq!(m.page(3).copying, 0);
+        assert_eq!(m.page(3).tier, Tier::Fast);
+        assert!(m.page(3).shadowed, "clean completion keeps the slow frame as shadow");
+        assert_eq!(m.counters.promoted, 1);
+        // the shadow holds the slow frame: slow_used unchanged by the flip
+        assert_eq!(m.slow_used(), 2, "demoted page 0 + page 3's shadow frame");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn write_aborts_inflight_copy_and_retries_while_hot() {
+        let mut m = nonexclusive(4, 3, 2);
+        m.demote(0, false);
+        m.touch(3, 8, 1); // hot
+        assert!(m.promote(3, 0));
+        // a dirtying (random) access aborts the copy; page is still hot
+        // (window 8 ≥ hot_thr 2) so the copy restarts immediately
+        m.note_access(3, 1, 0, 2);
+        assert_eq!(m.counters.txn_aborts, 1);
+        assert_eq!(m.counters.txn_retried_copies, 1);
+        assert_eq!(m.page(3).copying, 2, "retry restarts the copy window");
+        assert_eq!(m.fast_used(), 3, "reservation retained across retry");
+        m.check_invariants().unwrap();
+
+        // cold abort: zero the window, write again ⇒ cancelled outright
+        m.page_mut(3).window_count = 0;
+        m.note_access(3, 1, 0, 2);
+        assert_eq!(m.counters.txn_aborts, 2);
+        assert_eq!(m.counters.txn_retried_copies, 1);
+        assert_eq!(m.page(3).copying, 0);
+        assert_eq!(m.fast_used(), 2, "cancelled txn releases its reservation");
+        m.advance_transactions(); // drops the cancelled entry
+        assert_eq!(m.counters.promoted, 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn streamed_accesses_do_not_abort_or_dirty() {
+        let mut m = nonexclusive(4, 3, 1);
+        m.demote(0, false);
+        assert!(m.promote(3, 0));
+        m.note_access(3, 0, 16, 2); // clean streamed traffic
+        assert_eq!(m.counters.txn_aborts, 0);
+        m.advance_transactions();
+        assert!(m.page(3).shadowed);
+        // shadow hits count accesses to the shadowed page
+        m.note_access(3, 0, 4, 2);
+        assert_eq!(m.counters.shadow_hits, 4);
+        assert!(m.page(3).shadowed, "streamed traffic keeps the shadow valid");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dirty_write_invalidates_shadow_and_demotion_becomes_a_copy() {
+        let mut m = nonexclusive(4, 3, 1);
+        m.demote(0, false);
+        assert!(m.promote(3, 0));
+        m.advance_transactions();
+        assert!(m.page(3).shadowed);
+        let slow_before = m.slow_used();
+        m.note_access(3, 2, 0, 2); // dirtying write
+        assert!(!m.page(3).shadowed);
+        assert_eq!(m.slow_used(), slow_before - 1, "stale shadow frame freed");
+        m.check_invariants().unwrap();
+        // demoting the now-unshadowed page is a normal copying demotion
+        m.demote(3, false);
+        assert_eq!(m.counters.shadow_free_demotions, 0);
+        assert_eq!(m.counters.demoted_kswapd, 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clean_shadowed_page_demotes_for_free() {
+        let mut m = nonexclusive(4, 3, 1);
+        m.demote(0, false);
+        assert!(m.promote(3, 0));
+        m.advance_transactions();
+        assert!(m.page(3).shadowed);
+        let (slow_before, kswapd_before) = (m.slow_used(), m.counters.demoted_kswapd);
+        m.demote(3, false);
+        assert_eq!(m.page(3).tier, Tier::Slow);
+        assert!(!m.page(3).shadowed);
+        assert_eq!(m.counters.shadow_free_demotions, 1);
+        assert_eq!(m.counters.demoted_kswapd, kswapd_before, "free demotion is not a kswapd copy");
+        assert_eq!(m.slow_used(), slow_before, "the shadow frame simply becomes the page");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn take_counters_resets_shadow_and_txn_counters() {
+        let mut m = nonexclusive(4, 3, 1);
+        m.demote(0, false);
+        assert!(m.promote(3, 0));
+        m.advance_transactions();
+        m.note_access(3, 0, 1, 2); // shadow hit
+        m.demote(3, false); // free demotion
+        let c = m.take_counters();
+        assert!(c.shadow_hits > 0 && c.shadow_free_demotions == 1);
+        assert_eq!(m.counters, MigrationCounters::default());
+    }
+
+    #[test]
+    fn check_invariants_rejects_corrupted_shadow_state() {
+        let mut m = nonexclusive(4, 3, 1);
+        m.page_mut(2).shadowed = true; // fast page claims a shadow frame
+        assert!(m.check_invariants().is_err());
+        let mut m2 = nonexclusive(4, 3, 1);
+        m2.page_mut(3).shadowed = true; // slow page can never be shadowed
+        assert!(m2.check_invariants().is_err());
     }
 }

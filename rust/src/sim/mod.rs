@@ -24,4 +24,4 @@ pub mod mem;
 pub use engine::{Engine, RunResult, RunTrace};
 pub use interval::{IntervalInputs, IntervalModel, IntervalOutcome};
 pub use machine::MachineModel;
-pub use mem::{PageState, TieredMemory, Tier};
+pub use mem::{MigrationCounters, MigrationModel, PageState, TieredMemory, Tier};

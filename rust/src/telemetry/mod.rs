@@ -45,6 +45,17 @@ pub struct TelemetrySample {
     pub promote_failed: u64,
     pub demoted_kswapd: u64,
     pub demoted_direct: u64,
+    /// Accesses served by a shadowed page's fast copy while its slow-tier
+    /// source frame was still valid (non-exclusive migration only; always
+    /// 0 under exclusive semantics, as are the three counters below).
+    pub shadow_hits: u64,
+    /// Demotions satisfied by unmapping a clean shadow copy — no data
+    /// movement.
+    pub shadow_free_demotions: u64,
+    /// Transactional promotion copies aborted by a write to the page.
+    pub txn_aborts: u64,
+    /// Aborted copies restarted because the page was still hot.
+    pub txn_retried_copies: u64,
     /// Free fast-memory pages at the end of the interval (a gauge, not a
     /// counter).
     pub fast_free: u64,
@@ -65,6 +76,10 @@ impl TelemetrySample {
             promote_failed: t.promote_failed,
             demoted_kswapd: t.demoted_kswapd,
             demoted_direct: t.demoted_direct,
+            shadow_hits: t.shadow_hits,
+            shadow_free_demotions: t.shadow_free_demotions,
+            txn_aborts: t.txn_aborts,
+            txn_retried_copies: t.txn_retried_copies,
             fast_free: t.fast_free,
         }
     }
@@ -167,6 +182,13 @@ pub struct VmstatCounters {
     pub pgdemote_direct: u64,
     pub numa_hint_faults: u64,
     pub nr_free_pages_fast: u64,
+    /// Non-exclusive (transactional) migration counters; all zero for
+    /// exclusive runs. Not standard vmstat names — Nomad-style kernels
+    /// would export them similarly.
+    pub shadow_hits: u64,
+    pub shadow_free_demotions: u64,
+    pub txn_aborts: u64,
+    pub txn_retried_copies: u64,
 }
 
 impl VmstatCounters {
@@ -182,6 +204,10 @@ impl VmstatCounters {
         self.pgdemote_direct += s.demoted_direct;
         self.numa_hint_faults += s.promoted + s.promote_failed;
         self.nr_free_pages_fast = s.fast_free;
+        self.shadow_hits += s.shadow_hits;
+        self.shadow_free_demotions += s.shadow_free_demotions;
+        self.txn_aborts += s.txn_aborts;
+        self.txn_retried_copies += s.txn_retried_copies;
     }
 
     /// vmstat-style counter dump (name, value).
@@ -193,6 +219,10 @@ impl VmstatCounters {
             ("pgdemote_direct", self.pgdemote_direct),
             ("numa_hint_faults", self.numa_hint_faults),
             ("nr_free_pages_fast", self.nr_free_pages_fast),
+            ("shadow_hits", self.shadow_hits),
+            ("shadow_free_demotions", self.shadow_free_demotions),
+            ("txn_aborts", self.txn_aborts),
+            ("txn_retried_copies", self.txn_retried_copies),
         ]
     }
 }
@@ -218,6 +248,10 @@ mod tests {
             promote_failed: 1,
             demoted_kswapd: demoted,
             demoted_direct: 0,
+            shadow_hits: 3,
+            shadow_free_demotions: 2,
+            txn_aborts: 1,
+            txn_retried_copies: 1,
             fast_used: 10,
             fast_free: 5,
             usable_fm: 10,
@@ -238,6 +272,10 @@ mod tests {
             promote_failed: rng.below(20),
             demoted_kswapd: rng.below(150),
             demoted_direct: rng.below(50),
+            shadow_hits: rng.below(400),
+            shadow_free_demotions: rng.below(60),
+            txn_aborts: rng.below(30),
+            txn_retried_copies: rng.below(15),
             fast_free: rng.below(1_000),
         }
     }
@@ -276,8 +314,14 @@ mod tests {
         assert_eq!(c.pgdemote_kswapd, 7);
         assert_eq!(c.pgpromote_fail, 2);
         assert_eq!(c.numa_hint_faults, 14);
+        assert_eq!(c.shadow_hits, 6);
+        assert_eq!(c.shadow_free_demotions, 4);
+        assert_eq!(c.txn_aborts, 2);
+        assert_eq!(c.txn_retried_copies, 2);
         let vm = c.vmstat();
         assert!(vm.iter().any(|&(k, v)| k == "pgpromote_success" && v == 12));
+        assert!(vm.iter().any(|&(k, v)| k == "shadow_free_demotions" && v == 4));
+        assert!(vm.iter().any(|&(k, v)| k == "txn_aborts" && v == 2));
     }
 
     #[test]

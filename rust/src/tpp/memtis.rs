@@ -32,7 +32,7 @@ pub struct Memtis {
     /// interval from the per-page window counters).
     histogram: [u64; MAX_BUCKET + 1],
     scan_budget: u64,
-    victims: Vec<(u32, u32, PageId)>,
+    victims: Vec<(u32, u32, u32, PageId)>,
 }
 
 impl Memtis {
@@ -81,7 +81,10 @@ impl Memtis {
         &self.histogram
     }
 
-    /// Demote up to `want` coldest fast pages (same victim order as TPP).
+    /// Demote up to `want` coldest fast pages (same victim order as TPP:
+    /// clean shadowed pages first — free unmaps under non-exclusive
+    /// migration — then coldest; identical to the pre-refactor order in
+    /// exclusive runs where no page is shadowed).
     fn demote_coldest(&mut self, mem: &mut TieredMemory, want: u64) -> u64 {
         if want == 0 {
             return 0;
@@ -90,7 +93,7 @@ impl Memtis {
         for id in 0..mem.rss_pages() as u32 {
             let p = mem.page(id);
             if p.allocated && p.tier == Tier::Fast {
-                self.victims.push((p.window_count, p.last_touch, id));
+                self.victims.push((!p.shadowed as u32, p.window_count, p.last_touch, id));
             }
         }
         let n = (want as usize).min(self.victims.len());
@@ -98,10 +101,10 @@ impl Memtis {
             return 0;
         }
         if n < self.victims.len() {
-            self.victims.select_nth_unstable_by_key(n - 1, |&(w, t, _)| (w, t));
+            self.victims.select_nth_unstable_by_key(n - 1, |&(s, w, t, _)| (s, w, t));
         }
-        self.victims[..n].sort_unstable_by_key(|&(w, t, id)| (w, t, id));
-        let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, id)| id).collect();
+        self.victims[..n].sort_unstable_by_key(|&(s, w, t, id)| (s, w, t, id));
+        let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, _, id)| id).collect();
         for id in ids {
             mem.demote(id, false);
         }

@@ -25,13 +25,15 @@
 
 pub mod firsttouch;
 pub mod memtis;
+pub mod nomad;
 pub mod watermarks;
 
 pub use firsttouch::FirstTouch;
 pub use memtis::Memtis;
+pub use nomad::TppNomad;
 pub use watermarks::Watermarks;
 
-use crate::sim::mem::{TieredMemory, Tier};
+use crate::sim::mem::{MigrationModel, TieredMemory, Tier};
 use crate::workloads::PageAccess;
 use crate::PageId;
 
@@ -56,6 +58,13 @@ pub trait PagePolicy {
         now: u32,
         kswapd_budget: u64,
     );
+    /// Migration semantics this policy asks the engine for when the run
+    /// doesn't override them. Every stock policy is exclusive (the
+    /// pre-refactor behavior); [`TppNomad`] opts into the transactional
+    /// non-exclusive mode.
+    fn migration_model(&self) -> MigrationModel {
+        MigrationModel::Exclusive
+    }
 }
 
 /// The TPP policy.
@@ -67,8 +76,10 @@ pub struct Tpp {
     /// (see [`crate::sim::MachineModel::promote_scan_pages_per_interval`]).
     pub scan_budget: u64,
     /// Scratch buffer reused across intervals for victim selection
-    /// (hot-loop allocation hygiene; see EXPERIMENTS.md §Perf).
-    victims: Vec<(u32, u32, PageId)>,
+    /// (hot-loop allocation hygiene; see EXPERIMENTS.md §Perf). The
+    /// leading component is the shadow-preference flag (see
+    /// [`Tpp::demote_coldest`]).
+    victims: Vec<(u32, u32, u32, PageId)>,
 }
 
 impl Tpp {
@@ -83,8 +94,14 @@ impl Tpp {
     }
 
     /// Demote up to `want` of the coldest fast-tier pages. Victims are
-    /// ordered by (window_count, last_touch): cold-and-old first, which is
-    /// TPP's "inactive LRU first" reclaim order collapsed to one scan.
+    /// ordered by (shadow-preference, window_count, last_touch): under
+    /// watermark pressure, clean shadowed pages demote first (their
+    /// demotion is a free unmap — non-exclusive mode only), then
+    /// cold-and-old first, which is TPP's "inactive LRU first" reclaim
+    /// order collapsed to one scan. In exclusive runs no page is ever
+    /// shadowed, so the flag is a constant and the comparisons — and
+    /// therefore the selected victims — are identical to the pre-refactor
+    /// (window_count, last_touch) order.
     fn demote_coldest(&mut self, mem: &mut TieredMemory, want: u64, direct: bool) -> u64 {
         if want == 0 {
             return 0;
@@ -93,7 +110,7 @@ impl Tpp {
         for id in 0..mem.rss_pages() as u32 {
             let p = mem.page(id);
             if p.allocated && p.tier == Tier::Fast {
-                self.victims.push((p.window_count, p.last_touch, id));
+                self.victims.push((!p.shadowed as u32, p.window_count, p.last_touch, id));
             }
         }
         let n = (want as usize).min(self.victims.len());
@@ -102,11 +119,11 @@ impl Tpp {
         }
         if n < self.victims.len() {
             self.victims
-                .select_nth_unstable_by_key(n - 1, |&(w, t, _)| (w, t));
+                .select_nth_unstable_by_key(n - 1, |&(s, w, t, _)| (s, w, t));
         }
         // Deterministic demotion order within the selected cold set.
-        self.victims[..n].sort_unstable_by_key(|&(w, t, id)| (w, t, id));
-        let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, id)| id).collect();
+        self.victims[..n].sort_unstable_by_key(|&(s, w, t, id)| (s, w, t, id));
+        let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, _, id)| id).collect();
         for id in ids {
             mem.demote(id, direct);
         }

@@ -1,0 +1,124 @@
+//! `tpp-nomad`: TPP's control loop under Nomad-style non-exclusive
+//! tiering (PAPERS.md).
+//!
+//! The policy logic is exactly [`Tpp`]'s — same promotion threshold, scan
+//! budget, watermark handling and victim order — but the policy asks the
+//! engine for [`MigrationModel::NonExclusive`] semantics: promotions are
+//! transactional copies that abort on write, completed promotions keep
+//! their slow-tier source frame as a shadow copy, and the shared
+//! shadow-preferring victim order turns pressure demotions of clean pages
+//! into free unmaps. The registry name is `tpp-nomad`.
+
+use super::watermarks::Watermarks;
+use super::{PagePolicy, Tpp};
+use crate::sim::mem::{MigrationModel, TieredMemory};
+use crate::workloads::PageAccess;
+
+/// TPP + transactional non-exclusive migration (see module docs).
+#[derive(Clone, Debug)]
+pub struct TppNomad {
+    inner: Tpp,
+    migration: MigrationModel,
+}
+
+impl TppNomad {
+    /// Default two-touch threshold and the default transactional mode
+    /// (abort on write, two-interval copy window).
+    pub fn new(wm: Watermarks) -> Self {
+        Self::with_hot_thr(wm, 2)
+    }
+
+    pub fn with_hot_thr(wm: Watermarks, hot_thr: u32) -> Self {
+        TppNomad {
+            inner: Tpp::with_hot_thr(wm, hot_thr),
+            migration: MigrationModel::non_exclusive_default(),
+        }
+    }
+
+    /// Override the transactional knobs (an exclusive model is clamped to
+    /// the default non-exclusive one — `tpp-nomad` *is* the transactional
+    /// variant; run plain `tpp` for exclusive semantics).
+    pub fn with_migration(mut self, migration: MigrationModel) -> Self {
+        self.migration = match migration {
+            MigrationModel::Exclusive => MigrationModel::non_exclusive_default(),
+            m => m,
+        };
+        self
+    }
+
+    /// Promotion-scan budget passthrough (mirrors [`Tpp::scan_budget`]).
+    pub fn set_scan_budget(&mut self, budget: u64) {
+        self.inner.scan_budget = budget;
+    }
+}
+
+impl PagePolicy for TppNomad {
+    fn name(&self) -> &'static str {
+        "tpp-nomad"
+    }
+
+    fn hot_thr(&self) -> u32 {
+        self.inner.hot_thr()
+    }
+
+    fn watermarks(&self) -> Watermarks {
+        self.inner.watermarks()
+    }
+
+    fn set_watermarks(&mut self, wm: Watermarks) {
+        self.inner.set_watermarks(wm);
+    }
+
+    fn alloc_reserve(&self) -> u64 {
+        self.inner.alloc_reserve()
+    }
+
+    fn run_interval(
+        &mut self,
+        mem: &mut TieredMemory,
+        touched: &[PageAccess],
+        now: u32,
+        kswapd_budget: u64,
+    ) {
+        self.inner.run_interval(mem, touched, now, kswapd_budget);
+    }
+
+    fn migration_model(&self) -> MigrationModel {
+        self.migration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, IntervalModel, MachineModel};
+
+    #[test]
+    fn registry_name_and_migration_model() {
+        let p = TppNomad::new(Watermarks::default_for_capacity(100));
+        assert_eq!(p.name(), "tpp-nomad");
+        assert_eq!(p.migration_model(), MigrationModel::non_exclusive_default());
+        // exclusive override is clamped back to transactional
+        let p = p.with_migration(MigrationModel::Exclusive);
+        assert!(!p.migration_model().is_exclusive());
+        let custom = MigrationModel::NonExclusive { abort_on_write: false, copy_intervals: 4 };
+        let p = p.with_migration(custom);
+        assert_eq!(p.migration_model(), custom);
+    }
+
+    #[test]
+    fn engine_runs_tpp_nomad_with_transactional_semantics() {
+        let mut w = crate::workloads::by_name("Btree", 3, 40).unwrap();
+        let cap = Engine::fm_capacity(w.rss_pages(), 0.7);
+        let mut p = TppNomad::new(Watermarks::default_for_capacity(cap));
+        let engine = Engine::new(IntervalModel::new(MachineModel::default()));
+        let res = engine.run(w.as_mut(), &mut p, cap, |_| None);
+        assert_eq!(res.policy, "tpp-nomad");
+        assert!(res.total_promoted() > 0, "nomad must still migrate under pressure");
+        let c = res.total_migration_counters();
+        assert!(
+            c.shadow_hits + c.shadow_free_demotions + c.txn_aborts > 0,
+            "transactional mode must exercise shadow/txn accounting: {c:?}"
+        );
+    }
+}

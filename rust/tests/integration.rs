@@ -20,7 +20,7 @@ use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
 use tuna::perfdb::{normalize, store, PerfDb};
 use tuna::runtime::XlaNn;
 use tuna::service::{IngestOutput, Ingestor, TunerService};
-use tuna::sim::{Engine, IntervalModel, MachineModel};
+use tuna::sim::{Engine, IntervalModel, MachineModel, MigrationModel, RunResult};
 use tuna::tpp::{Tpp, Watermarks};
 use tuna::trace::{format as trace_format, gen as trace_gen};
 use tuna::util::proptest::{check, check_u64_range};
@@ -922,9 +922,12 @@ fn microbench_survives_degenerate_configs() {
 
 #[test]
 fn shipped_config_files_parse() {
-    for name in
-        ["configs/sssp_tune.toml", "configs/bfs_sweep.toml", "configs/kv_sweep.toml"]
-    {
+    for name in [
+        "configs/sssp_tune.toml",
+        "configs/bfs_sweep.toml",
+        "configs/kv_sweep.toml",
+        "configs/nomad_sweep.toml",
+    ] {
         let cfg = tuna::config::ExperimentConfig::from_file(Path::new(name))
             .unwrap_or_else(|e| panic!("{name}: {e:#}"));
         assert!(cfg.intervals > 0);
@@ -1082,6 +1085,206 @@ fn kv_trace_replay_reproduces_live_tuner_decisions() {
         assert_eq!(x.demoted_kswapd, y.demoted_kswapd);
         assert_eq!(x.usable_fm, y.usable_fm);
     }
+}
+
+// ---------------------------------------------------------------------------
+// non-exclusive (transactional) migration modeling
+// ---------------------------------------------------------------------------
+
+/// Serialize the complete observable result of a run — every interval,
+/// every counter, every f64 by exact bit pattern — so a fixture of it
+/// pins the simulation bit-for-bit.
+fn run_digest(run: &RunResult) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    writeln!(
+        s,
+        "workload {} policy {} fast_capacity {} total_ns {:016x}",
+        run.workload,
+        run.policy,
+        run.fast_capacity,
+        run.total_ns.to_bits()
+    )
+    .unwrap();
+    for t in &run.trace {
+        writeln!(
+            s,
+            "i {} clock {:016x} wall {:016x} acc {}/{} sacc {}/{} flops {} iops {} \
+             prom {}/{} dem {}/{} shadow {}/{} txn {}/{} fm {}/{}/{}",
+            t.interval,
+            t.clock_ns.to_bits(),
+            t.wall_ns.to_bits(),
+            t.acc_fast,
+            t.acc_slow,
+            t.sacc_fast,
+            t.sacc_slow,
+            t.flops,
+            t.iops,
+            t.promoted,
+            t.promote_failed,
+            t.demoted_kswapd,
+            t.demoted_direct,
+            t.shadow_hits,
+            t.shadow_free_demotions,
+            t.txn_aborts,
+            t.txn_retried_copies,
+            t.fast_used,
+            t.fast_free,
+            t.usable_fm
+        )
+        .unwrap();
+    }
+    s
+}
+
+/// Self-golden fixtures: recorded on first run (the files are committed),
+/// asserted byte-identical forever after. The exclusive Table-1 run pins
+/// the pre-migration-axis engine behaviour; the kv-drift tpp-nomad run
+/// pins the transactional semantics as first shipped. Delete a fixture
+/// file to re-record after an *intentional* simulation change.
+#[test]
+fn golden_run_results_stay_bit_identical() {
+    let excl = coordinator::run_tpp(
+        &RunSpec::new("BFS").with_intervals(60).with_fraction(0.8).with_seed(7),
+    )
+    .unwrap();
+    let nomad = coordinator::run_tpp_nomad(
+        &RunSpec::new("kv-drift").with_intervals(60).with_fraction(0.6).with_seed(7),
+    )
+    .unwrap();
+    let nomad_txn = nomad.total_shadow_hits()
+        + nomad.total_shadow_free_demotions()
+        + nomad.total_txn_aborts()
+        + nomad.total_txn_retried_copies();
+    assert!(nomad_txn > 0, "the golden nomad run must exercise the transactional model");
+
+    for (name, run) in
+        [("golden_run_bfs_tpp.txt", &excl), ("golden_run_kvdrift_nomad.txt", &nomad)]
+    {
+        let digest = run_digest(run);
+        let path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures"))
+            .join(name);
+        if !path.exists() {
+            std::fs::write(&path, &digest).unwrap();
+            eprintln!("recorded golden fixture {}", path.display());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            digest == want,
+            "{name}: simulation output drifted from the golden fixture \
+             (delete the file to re-record after an intentional change)"
+        );
+    }
+}
+
+/// Acceptance: replaying a recorded op stream under the non-exclusive
+/// model reproduces the live tuner run exactly — decisions, engine trace
+/// and the shadow/txn vmstat counters.
+#[test]
+fn nonexclusive_trace_replay_reproduces_live_tuner_decisions() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let nx = MigrationModel::non_exclusive_default();
+
+    let live_spec =
+        RunSpec::new("kv-drift").with_intervals(40).with_seed(11).with_migration(nx);
+    let live = coordinator::run_tuna_native(&live_spec, db.clone(), &cfg).unwrap();
+    assert!(!live.decisions.is_empty());
+    let c = live.result.total_migration_counters();
+    assert!(
+        c.shadow_hits + c.shadow_free_demotions + c.txn_aborts + c.txn_retried_copies > 0,
+        "the live tuned run must actually exercise the transactional model"
+    );
+
+    let path = std::env::temp_dir()
+        .join(format!("tuna_trcit_nx_{}.trc", std::process::id()));
+    let gspec = trace_gen::spec_by_name("kv-drift").unwrap();
+    trace_format::save(&path, &trace_gen::generate(&gspec, 11, 39)).unwrap();
+    let replay_spec = RunSpec::new(&format!("trace:{}", path.display()))
+        .with_intervals(40)
+        .with_migration(nx);
+    let replay = coordinator::run_tuna_native(&replay_spec, db, &cfg).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_decisions_bit_identical(&live.decisions, &replay.decisions, "non-exclusive replay");
+    assert_eq!(
+        live.result.total_ns.to_bits(),
+        replay.result.total_ns.to_bits(),
+        "non-exclusive replay run trace must be bit-identical to live"
+    );
+    assert_eq!(live.vmstat, replay.vmstat, "replayed shadow/txn vmstat counters");
+}
+
+/// Acceptance: adding the migration axis to a sweep leaves every
+/// exclusive cell byte-identical (same persisted rows, clean diff) while
+/// the non-exclusive cells measurably move the measured loss.
+#[test]
+fn migration_axis_sweep_keeps_exclusive_cells_and_shifts_losses() {
+    let grid = |migrations: Vec<MigrationModel>| {
+        run_sweep(
+            &SweepSpec::new(["kv-drift"])
+                .with_fractions([0.8, 0.6])
+                .with_intervals(40)
+                .with_threads(2)
+                .with_migrations(migrations),
+        )
+        .unwrap()
+    };
+    let excl = grid(vec![MigrationModel::Exclusive]);
+    let mixed = grid(vec![
+        MigrationModel::Exclusive,
+        MigrationModel::non_exclusive_default(),
+    ]);
+    assert_eq!(mixed.len(), 2 * excl.len());
+
+    // the exclusive half of the mixed table is byte-identical to the
+    // exclusive-only sweep's table (`tuna store diff --strict` clean)
+    let ta = SweepTable::from_sweep(&excl);
+    let tm = SweepTable::from_sweep(&mixed);
+    let tb = SweepTable {
+        rows: tm.rows.iter().filter(|r| r.migration.is_exclusive()).cloned().collect(),
+    };
+    assert_eq!(
+        ta.to_bytes(),
+        tb.to_bytes(),
+        "the migration axis must not perturb exclusive cells"
+    );
+    let d = diff(&ta, &tm, 1e-12);
+    assert_eq!(d.matched, excl.len());
+    assert!(d.regressions.is_empty() && d.improvements.is_empty());
+    assert!(d.only_in_a.is_empty());
+    assert_eq!(d.only_in_b.len(), excl.len(), "non-exclusive cells are new keys");
+
+    // under pressure the transactional model changes the measured loss
+    // and reports transactional activity
+    let nx: Vec<_> =
+        mixed.cells.iter().filter(|c| !c.spec.migration.is_exclusive()).collect();
+    assert_eq!(nx.len(), excl.len());
+    assert!(
+        nx.iter().any(|c| {
+            let e = mixed
+                .cells
+                .iter()
+                .find(|x| {
+                    x.spec.migration.is_exclusive()
+                        && x.spec.fm_fraction.to_bits() == c.spec.fm_fraction.to_bits()
+                })
+                .unwrap();
+            e.loss.to_bits() != c.loss.to_bits()
+        }),
+        "non-exclusive migration must move at least one measured loss"
+    );
+    let txn: u64 = nx
+        .iter()
+        .map(|c| {
+            c.result.total_shadow_hits()
+                + c.result.total_shadow_free_demotions()
+                + c.result.total_txn_aborts()
+                + c.result.total_txn_retried_copies()
+        })
+        .sum();
+    assert!(txn > 0, "non-exclusive cells must report transactional activity");
 }
 
 #[test]
