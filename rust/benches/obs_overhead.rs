@@ -1,0 +1,194 @@
+//! Observability overhead: the same tuned engine run and the same
+//! service ingest load, measured with the recorder disabled, with the
+//! metrics/ring hot path enabled, and with the journal + metrics
+//! additionally persisted to disk at the end.
+//!
+//! The disabled row is the PR 7 contract: `Recorder::default()` must
+//! cost nothing on the hot path (a branch on an `Option` that is
+//! `None`). The ring row prices the per-interval/per-decision metric
+//! and event recording; the journal row adds the one-shot `TUNAOBS1`
+//! encode + atomic write at shutdown.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tuna::config::experiment::TunaConfig;
+use tuna::coordinator::{self, RunSpec};
+use tuna::obs::{Recorder, DEFAULT_RING_CAPACITY};
+use tuna::perfdb::builder::{build_database, BuildParams};
+use tuna::perfdb::native::NativeNn;
+use tuna::perfdb::PerfDb;
+use tuna::report::{results_dir, Table};
+use tuna::service::{SessionReport, SessionSpec, TunerService};
+use tuna::sim::MachineModel;
+use tuna::telemetry::TelemetrySample;
+use tuna::util::human_ns;
+
+const ENGINE_INTERVALS: u32 = 400;
+const ENGINE_REPS: u32 = 3;
+const INGEST_SESSIONS: usize = 8;
+const SAMPLES_PER_SESSION: u32 = 5_000;
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Disabled,
+    Ring,
+    RingAndJournal,
+}
+
+impl Mode {
+    fn name(self) -> &'static str {
+        match self {
+            Mode::Disabled => "disabled",
+            Mode::Ring => "ring-only",
+            Mode::RingAndJournal => "ring+journal",
+        }
+    }
+
+    fn recorder(self) -> Recorder {
+        match self {
+            Mode::Disabled => Recorder::disabled(),
+            _ => Recorder::enabled(DEFAULT_RING_CAPACITY),
+        }
+    }
+}
+
+const MODES: [Mode; 3] = [Mode::Disabled, Mode::Ring, Mode::RingAndJournal];
+
+fn flush(mode: Mode, obs: &Recorder, tag: &str) -> tuna::Result<()> {
+    if let Mode::RingAndJournal = mode {
+        let dir = results_dir();
+        obs.write_journal(&dir.join(format!("obs_overhead_{tag}.journal.bin")))?;
+        obs.write_metrics(&dir.join(format!("obs_overhead_{tag}.prom")))?;
+    }
+    Ok(())
+}
+
+/// Full tuned runs (engine + in-loop service + tuner), intervals/sec.
+fn bench_engine(db: &Arc<PerfDb>, t: &mut Table) -> tuna::Result<()> {
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    for mode in MODES {
+        let obs = mode.recorder();
+        let t0 = Instant::now();
+        let mut decisions = 0usize;
+        for rep in 0..ENGINE_REPS {
+            let spec = RunSpec::new("Btree")
+                .with_intervals(ENGINE_INTERVALS)
+                .with_seed(7 + rep as u64)
+                .with_obs(obs.clone());
+            let run = coordinator::run_tuna_native(&spec, db.clone(), &cfg)?;
+            decisions += run.decisions.len();
+            std::hint::black_box(&run.result.total_ns);
+        }
+        flush(mode, &obs, "engine")?;
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        let intervals = (ENGINE_INTERVALS * ENGINE_REPS) as f64;
+        t.row(vec![
+            "tuned run".to_string(),
+            mode.name().to_string(),
+            format!("{intervals} intervals, {decisions} decisions"),
+            human_ns(wall_ns as u64),
+            format!("{:.0} intervals/s", intervals / (wall_ns / 1e9)),
+            human_ns((wall_ns / intervals) as u64),
+        ]);
+    }
+    Ok(())
+}
+
+fn session_spec(name: String) -> SessionSpec {
+    SessionSpec {
+        name,
+        capacity: 9_000,
+        rss_pages: 8_000,
+        hot_thr: 2,
+        threads: 16,
+        cfg: TunaConfig::default(),
+    }
+}
+
+fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
+    TelemetrySample {
+        interval,
+        acc_fast: 9_000 + salt % 512,
+        acc_slow: 700,
+        sacc_fast: 9_000 + salt % 512,
+        sacc_slow: 700,
+        flops: 500_000,
+        iops: 500_000,
+        promoted: 25,
+        promote_failed: 1,
+        demoted_kswapd: 22,
+        demoted_direct: 3,
+        shadow_hits: salt % 64,
+        shadow_free_demotions: 5,
+        txn_aborts: 2,
+        txn_retried_copies: 1,
+        fast_free: 180,
+    }
+}
+
+/// Concurrent telemetry publishers over the channel service, samples/sec.
+fn bench_ingest(db: &Arc<PerfDb>, t: &mut Table) -> tuna::Result<()> {
+    for mode in MODES {
+        let obs = mode.recorder();
+        let service = TunerService::spawn_with_obs(
+            db.clone(),
+            Box::new(NativeNn::new(db)),
+            obs.clone(),
+        );
+        let t0 = Instant::now();
+        let reports: Vec<SessionReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..INGEST_SESSIONS)
+                .map(|i| {
+                    let service = &service;
+                    s.spawn(move || {
+                        let mut h = service
+                            .register(session_spec(format!("obs-bench-{i}")))
+                            .expect("register session");
+                        for k in 1..=SAMPLES_PER_SESSION {
+                            std::hint::black_box(h.publish(synth_sample(k, i as u64)));
+                        }
+                        h.finish().expect("session report")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("publisher thread")).collect()
+        });
+        flush(mode, &obs, "ingest")?;
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        service.shutdown();
+        let samples: u64 = reports.iter().map(|r| r.samples).sum();
+        let decisions: usize = reports.iter().map(|r| r.decisions.len()).sum();
+        t.row(vec![
+            "service ingest".to_string(),
+            mode.name().to_string(),
+            format!("{samples} samples, {decisions} decisions"),
+            human_ns(wall_ns as u64),
+            format!("{:.0} samples/s", samples as f64 / (wall_ns / 1e9)),
+            human_ns((wall_ns / samples as f64) as u64),
+        ]);
+    }
+    Ok(())
+}
+
+fn main() -> tuna::Result<()> {
+    let db = Arc::new(build_database(&BuildParams {
+        n_configs: 64,
+        fractions: vec![1.0, 0.9, 0.8, 0.7, 0.6, 0.5],
+        intervals: 3,
+        warmup: 1,
+        seed: 17,
+        machine: MachineModel::default(),
+        threads: 4,
+    }));
+
+    let mut t = Table::new(
+        "observability overhead: identical load, recorder off / ring / ring+journal",
+        &["path", "obs", "work", "wall", "throughput", "per-unit"],
+    );
+    bench_engine(&db, &mut t)?;
+    bench_ingest(&db, &mut t)?;
+    t.print();
+    t.to_csv(&results_dir().join("obs_overhead.csv"))?;
+    Ok(())
+}

@@ -309,6 +309,18 @@ impl DiskBaselineCache {
     /// keyed differently (hash collision) — all of which degrade to a
     /// recompute, with a warning for the corrupt cases.
     pub fn load(&self, key: &BaselineKey) -> Option<RunResult> {
+        self.load_with_obs(key, &crate::obs::Recorder::default())
+    }
+
+    /// As [`Self::load`], reporting corrupt-artifact diagnostics through
+    /// the recorder (the stderr line is emitted either way; an enabled
+    /// recorder additionally counts `obs_warn_total` and journals the
+    /// site).
+    pub fn load_with_obs(
+        &self,
+        key: &BaselineKey,
+        obs: &crate::obs::Recorder,
+    ) -> Option<RunResult> {
         let path = self.path_for(key);
         let data = match std::fs::read(&path) {
             Ok(d) => d,
@@ -316,9 +328,9 @@ impl DiskBaselineCache {
             // deserves a diagnostic or the persistence feature fails mute
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
             Err(e) => {
-                eprintln!(
-                    "warning: baseline artifact {} unreadable ({e}); recomputing",
-                    path.display()
+                obs.warn(
+                    "baseline.load",
+                    &format!("baseline artifact {} unreadable ({e}); recomputing", path.display()),
                 );
                 return None;
             }
@@ -326,16 +338,19 @@ impl DiskBaselineCache {
         match baseline_from_bytes(&data) {
             Ok((stored_key, result)) if stored_key == *key => Some(result),
             Ok(_) => {
-                eprintln!(
-                    "warning: baseline artifact {} holds a different key (hash collision?); recomputing",
-                    path.display()
+                obs.warn(
+                    "baseline.load",
+                    &format!(
+                        "baseline artifact {} holds a different key (hash collision?); recomputing",
+                        path.display()
+                    ),
                 );
                 None
             }
             Err(e) => {
-                eprintln!(
-                    "warning: baseline artifact {} unreadable ({e:#}); recomputing",
-                    path.display()
+                obs.warn(
+                    "baseline.load",
+                    &format!("baseline artifact {} unreadable ({e:#}); recomputing", path.display()),
                 );
                 None
             }

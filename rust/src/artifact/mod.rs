@@ -117,7 +117,9 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 /// One artifact visible in the store (for `tuna store ls`).
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
-    /// `perfdb`, `sweep` or `baseline`.
+    /// `perfdb`, `sweep`, `baseline`, `trace` — or `(?)` for a file in a
+    /// store subdirectory that no artifact kind claims (foreign or
+    /// misnamed; listed rather than silently skipped).
     pub kind: &'static str,
     pub name: String,
     /// Total size on disk (all segment files for a sharded perf DB).
@@ -131,6 +133,7 @@ pub struct ArtifactInfo {
 #[derive(Clone, Debug)]
 pub struct ArtifactStore {
     root: PathBuf,
+    obs: crate::obs::Recorder,
 }
 
 impl ArtifactStore {
@@ -140,7 +143,14 @@ impl ArtifactStore {
             std::fs::create_dir_all(root.join(sub))
                 .with_context(|| format!("creating store directory {}", root.display()))?;
         }
-        Ok(ArtifactStore { root: root.to_path_buf() })
+        Ok(ArtifactStore { root: root.to_path_buf(), obs: crate::obs::Recorder::default() })
+    }
+
+    /// Attach an observability recorder (foreign store entries found by
+    /// [`Self::ls`] become structured warn-events).
+    pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
+        self.obs = obs;
+        self
     }
 
     /// Open a store that must already exist — for read-only commands
@@ -207,11 +217,41 @@ impl ArtifactStore {
         PathBuf::from(name_or_path)
     }
 
+    /// A store-subdirectory entry no artifact kind claims: listed with
+    /// kind `(?)` and warned about, instead of silently skipped — a
+    /// foreign or misnamed file in the store should be visible in
+    /// `tuna store ls` output. In-flight atomic-write temps (the
+    /// `.<name>.<pid>.<seq>.tmp` files of [`unique_tmp_path`]) are the
+    /// one legitimate transient and stay unlisted.
+    fn push_foreign(&self, out: &mut Vec<ArtifactInfo>, entry: PathBuf, expected: &str) {
+        let name = entry
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        if name.ends_with(".tmp") {
+            return;
+        }
+        self.obs.warn(
+            "store.ls",
+            &format!("unrecognized entry in artifact store (expected {expected}): {}",
+                entry.display()),
+        );
+        let bytes = if entry.is_file() { file_bytes(&entry).unwrap_or(0) } else { 0 };
+        out.push(ArtifactInfo {
+            kind: "(?)",
+            name,
+            bytes,
+            path: entry,
+            detail: format!("not a recognized artifact (expected {expected})"),
+        });
+    }
+
     /// Enumerate every artifact in the store, stable order (kind, name).
     pub fn ls(&self) -> Result<Vec<ArtifactInfo>> {
         let mut out = Vec::new();
         for entry in sorted_dir(&self.perfdb_dir())? {
             if !entry.is_dir() {
+                self.push_foreign(&mut out, entry, "a perf-DB directory");
                 continue;
             }
             let name = file_name(&entry);
@@ -236,6 +276,7 @@ impl ArtifactStore {
         }
         for entry in sorted_dir(&self.sweeps_dir())? {
             if entry.extension().map(|e| e != "cells").unwrap_or(true) {
+                self.push_foreign(&mut out, entry, "a `.cells` sweep table");
                 continue;
             }
             // framing walk only — listing must not parse or CRC payloads
@@ -253,6 +294,7 @@ impl ArtifactStore {
         }
         for entry in sorted_dir(&self.baselines_dir())? {
             if entry.extension().map(|e| e != "bl").unwrap_or(true) {
+                self.push_foreign(&mut out, entry, "a `.bl` baseline");
                 continue;
             }
             // header-only peek: listing must not scale with trace bytes
@@ -270,6 +312,7 @@ impl ArtifactStore {
         }
         for entry in sorted_dir(&self.traces_dir())? {
             if entry.extension().map(|e| e != "trc").unwrap_or(true) {
+                self.push_foreign(&mut out, entry, "a `.trc` trace");
                 continue;
             }
             // header-only peek: listing must not CRC megabytes of frames
@@ -365,6 +408,39 @@ mod tests {
             .filter(|n| n.ends_with(".tmp"))
             .collect();
         assert!(leftovers.is_empty(), "stray temps: {leftovers:?}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn ls_flags_foreign_entries_instead_of_hiding_them() {
+        let root = tmp_root("foreign");
+        std::fs::remove_dir_all(&root).ok();
+        let obs = crate::obs::Recorder::enabled(16);
+        let store = ArtifactStore::open(&root).unwrap().with_obs(obs.clone());
+        // a foreign file in each subdir, a stray file under perfdb/, and
+        // one legitimate in-flight temp that must stay invisible
+        std::fs::write(store.sweeps_dir().join("notes.txt"), b"hi").unwrap();
+        std::fs::write(store.baselines_dir().join("junk.bin"), b"junk").unwrap();
+        std::fs::write(store.traces_dir().join("trace.bak"), b"old").unwrap();
+        std::fs::write(store.perfdb_dir().join("loose-file"), b"x").unwrap();
+        std::fs::write(
+            store.sweeps_dir().join(".t.cells.123.0.tmp"),
+            b"partial",
+        )
+        .unwrap();
+        let listed = store.ls().unwrap();
+        let foreign: Vec<&ArtifactInfo> =
+            listed.iter().filter(|a| a.kind == "(?)").collect();
+        assert_eq!(foreign.len(), 4, "every foreign entry is listed: {listed:?}");
+        assert!(foreign.iter().any(|a| a.name == "notes.txt"));
+        assert!(foreign.iter().any(|a| a.name == "loose-file"));
+        assert!(
+            !listed.iter().any(|a| a.name.ends_with(".tmp")),
+            "in-flight temps stay unlisted: {listed:?}"
+        );
+        assert!(foreign.iter().all(|a| a.detail.contains("not a recognized artifact")));
+        // each foreign entry raised a structured warn-event
+        assert_eq!(obs.snapshot().counter("obs_warn_total"), 4);
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -590,6 +590,10 @@ pub struct LazyShardedPerfDb {
     /// segment is evicted) — what [`Self::admit`] blocks on when every
     /// unit of capacity is an in-flight load with nothing yet evictable.
     res_cv: std::sync::Condvar,
+    /// Observability handle: segment loads/evictions/CRC checks become
+    /// metrics and journal events. Disabled by default; answers are
+    /// bit-identical either way ([`Self::set_obs`]).
+    obs: crate::obs::Recorder,
 }
 
 impl std::fmt::Debug for LazyShardedPerfDb {
@@ -622,8 +626,15 @@ impl LazyShardedPerfDb {
             }),
             res: Mutex::new(Residency::new(n_shards)),
             res_cv: std::sync::Condvar::new(),
+            obs: crate::obs::Recorder::default(),
             manifest,
         })
+    }
+
+    /// Attach an observability recorder (call before sharing the DB
+    /// across threads — typically right after [`Self::open`]).
+    pub fn set_obs(&mut self, obs: crate::obs::Recorder) {
+        self.obs = obs;
     }
 
     pub fn len(&self) -> usize {
@@ -726,12 +737,23 @@ impl LazyShardedPerfDb {
                     // slot contents.
                     let mut slot = self.slots[victim].lock().unwrap();
                     if slot.take().is_some() {
-                        let mut r = self.res.lock().unwrap();
-                        r.resident[victim] = false;
-                        r.resident_segments -= 1;
-                        r.resident_bytes -= self.segment_payload_bytes(victim);
-                        r.evictions += 1;
-                        self.res_cv.notify_all();
+                        let resident_now;
+                        {
+                            let mut r = self.res.lock().unwrap();
+                            r.resident[victim] = false;
+                            r.resident_segments -= 1;
+                            r.resident_bytes -= self.segment_payload_bytes(victim);
+                            r.evictions += 1;
+                            resident_now = r.resident_segments;
+                            self.res_cv.notify_all();
+                        }
+                        if self.obs.is_enabled() {
+                            self.obs.count("perfdb_segment_evictions_total", 1);
+                            self.obs.gauge("perfdb_resident_segments", resident_now as f64);
+                            self.obs.record(crate::obs::EventKind::SegmentEvict {
+                                segment: victim as u32,
+                            });
+                        }
                     }
                     drop(slot);
                     res = self.res.lock().unwrap();
@@ -820,6 +842,8 @@ impl LazyShardedPerfDb {
         }
         let path = self.dir.join(segment_name(si));
         let first_touch = !self.crc_done[si].load(Ordering::Acquire);
+        // timed only when recording — the disabled path stays free
+        let load_t0 = self.obs.is_enabled().then(std::time::Instant::now);
         let loaded = read_segment_file(
             &path,
             &self.manifest.segments[si],
@@ -840,6 +864,7 @@ impl LazyShardedPerfDb {
         }
         let arc = Arc::new(shard);
         *slot = Some(arc.clone());
+        let resident_now;
         {
             let mut res = self.res.lock().unwrap();
             res.pending_segments -= 1;
@@ -855,7 +880,24 @@ impl LazyShardedPerfDb {
             res.peak_resident_bytes = res.peak_resident_bytes.max(res.resident_bytes);
             res.clock += 1;
             res.stamps[si] = res.clock;
+            resident_now = res.resident_segments;
             self.res_cv.notify_all();
+        }
+        if let Some(t0) = load_t0 {
+            use crate::obs::{EventKind, NS_BUCKETS};
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            self.obs.count("perfdb_segment_loads_total", 1);
+            if first_touch {
+                self.obs.count("perfdb_crc_verifies_total", 1);
+            }
+            self.obs.gauge("perfdb_resident_segments", resident_now as f64);
+            self.obs.observe("perfdb_segment_load_ns", NS_BUCKETS, wall_ns as f64);
+            self.obs.record(EventKind::SegmentLoad {
+                segment: si as u32,
+                records: arc.global.len() as u64,
+                crc_checked: first_touch,
+                wall_ns,
+            });
         }
         Ok(arc)
     }
@@ -886,6 +928,10 @@ impl LazyShardedPerfDb {
                 continue;
             }
             if let Err(e) = self.segment(si) {
+                if self.obs.is_enabled() {
+                    self.obs
+                        .warn("perfdb.locate", &format!("skipping unreadable segment {si}: {e:#}"));
+                }
                 first_err.get_or_insert(e);
                 continue;
             }

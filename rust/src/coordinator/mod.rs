@@ -43,6 +43,10 @@ pub struct RunSpec {
     /// policies behave exactly as pre-refactor and `tpp-nomad` gets its
     /// transactional mode; a non-exclusive value overrides any policy.
     pub migration: MigrationModel,
+    /// Observability handle, threaded into the engine (and, for Tuna
+    /// runs, the tuner) exactly like `migration`: disabled by default,
+    /// and proven not to perturb any run it observes.
+    pub obs: crate::obs::Recorder,
 }
 
 impl RunSpec {
@@ -55,6 +59,7 @@ impl RunSpec {
             hot_thr: 2,
             machine: MachineModel::default(),
             migration: MigrationModel::Exclusive,
+            obs: crate::obs::Recorder::default(),
         }
     }
 
@@ -78,6 +83,11 @@ impl RunSpec {
         self
     }
 
+    pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
+        self.obs = obs;
+        self
+    }
+
     fn make_workload(&self) -> Result<Box<dyn Workload>> {
         workloads::by_name(&self.workload, self.seed, self.intervals)
     }
@@ -88,6 +98,7 @@ impl RunSpec {
             MigrationModel::Exclusive => None, // defer to the policy
             m => Some(m),
         };
+        engine.obs = self.obs.clone();
         engine
     }
 }
@@ -210,7 +221,7 @@ pub fn run_tuna(
     query: Box<dyn NnQuery + Send>,
     tuna: &TunaConfig,
 ) -> Result<TunaRun> {
-    let service = TunerService::inline(db, query);
+    let service = TunerService::inline_with_obs(db, query, spec.obs.clone());
     run_tuna_service(spec, &service, tuna)
 }
 
@@ -320,6 +331,7 @@ pub fn run_tuna_inloop(
         spec.hot_thr,
         w.threads(),
     );
+    tuner.set_obs(spec.obs.clone());
     let result = spec.engine().run(w.as_mut(), &mut tpp, cap, |t| tuner.observe(t));
     Ok(TunaRun {
         result,

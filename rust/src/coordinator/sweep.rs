@@ -181,6 +181,10 @@ pub struct SweepSpec {
     /// Database + tuner config, required when `policies` contains
     /// [`SweepPolicy::Tuna`].
     pub tuna: Option<(TunaDb, TunaConfig)>,
+    /// Observability handle, cloned into every cell's [`RunSpec`] and
+    /// into the shared tuner service. Disabled by default; cell results
+    /// are bit-identical either way.
+    pub obs: crate::obs::Recorder,
 }
 
 impl Default for SweepSpec {
@@ -196,6 +200,7 @@ impl Default for SweepSpec {
             machine: MachineModel::default(),
             threads: 0,
             tuna: None,
+            obs: crate::obs::Recorder::default(),
         }
     }
 }
@@ -262,6 +267,11 @@ impl SweepSpec {
     /// bounded-resident lazy sharded DB from the artifact store.
     pub fn with_tuna_db(mut self, db: TunaDb, cfg: TunaConfig) -> Self {
         self.tuna = Some((db, cfg));
+        self
+    }
+
+    pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
+        self.obs = obs;
         self
     }
 
@@ -367,6 +377,7 @@ impl SweepCellSpec {
             hot_thr: self.hot_thr,
             machine: sweep.machine.clone(),
             migration: self.migration,
+            obs: sweep.obs.clone(),
         }
     }
 }
@@ -498,6 +509,7 @@ pub struct BaselineCache {
     misses: AtomicUsize,
     disk_hits: AtomicUsize,
     disk: Option<crate::artifact::cache::DiskBaselineCache>,
+    obs: crate::obs::Recorder,
 }
 
 impl BaselineCache {
@@ -515,6 +527,13 @@ impl BaselineCache {
         })
     }
 
+    /// Attach an observability recorder (persist failures become
+    /// structured warn-events instead of bare stderr lines).
+    pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
+        self.obs = obs;
+        self
+    }
+
     /// The baseline for `spec` (any fraction): in-memory memo first, then
     /// the disk tier (if persistent), then computed — and written through
     /// to disk so the *next* process skips the simulation.
@@ -525,7 +544,7 @@ impl BaselineCache {
             return Ok(hit);
         }
         if let Some(disk) = &self.disk {
-            if let Some(loaded) = disk.load(&key) {
+            if let Some(loaded) = disk.load_with_obs(&key, &self.obs) {
                 self.disk_hits.fetch_add(1, Ordering::Relaxed);
                 let loaded = Arc::new(loaded);
                 let mut map = self.entries.lock().unwrap();
@@ -540,7 +559,8 @@ impl BaselineCache {
         let computed = Arc::new(run_fm_only(spec)?);
         if let Some(disk) = &self.disk {
             if let Err(e) = disk.store(&key, &computed) {
-                eprintln!("warning: failed to persist baseline artifact: {e:#}");
+                self.obs
+                    .warn("sweep.baseline", &format!("failed to persist baseline artifact: {e:#}"));
             }
         }
         let mut map = self.entries.lock().unwrap();
@@ -650,7 +670,9 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
         bail!("SweepPolicy::Tuna requires SweepSpec::tuna (performance database + TunaConfig)");
     }
     let service = match &spec.tuna {
-        Some((db, _)) if has_tuna => Some(TunerService::spawn(db.source(), db.query())),
+        Some((db, _)) if has_tuna => {
+            Some(TunerService::spawn_with_obs(db.source(), db.query(), spec.obs.clone()))
+        }
         _ => None,
     };
     let threads = if spec.threads == 0 { default_threads() } else { spec.threads };
@@ -680,6 +702,8 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
         let c = &cells[i];
         let rs = c.run_spec(spec);
         let baseline = cache.get_or_compute(&rs)?;
+        // measured only when recording — the disabled path stays free
+        let cell_t0 = spec.obs.is_enabled().then(Instant::now);
         let (result, tuna) = match c.policy {
             SweepPolicy::Tpp => (run_tpp(&rs)?, None),
             SweepPolicy::FirstTouch => (run_first_touch(&rs)?, None),
@@ -703,6 +727,19 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
             Some(s) => 1.0 - s.mean_fraction,
             None => 1.0 - c.fm_fraction,
         };
+        if let Some(t0) = cell_t0 {
+            use crate::obs::{EventKind, NS_BUCKETS};
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            spec.obs.count("sweep_cells_total", 1);
+            spec.obs.observe("sweep_cell_wall_ns", NS_BUCKETS, wall_ns as f64);
+            spec.obs.record(EventKind::SweepCell {
+                workload: c.workload.clone(),
+                policy: c.policy.name().to_string(),
+                fraction: c.fm_fraction,
+                seed: c.seed,
+                wall_ns,
+            });
+        }
         Ok(SweepCell { spec: c.clone(), result, loss, saving, tuna })
     })
     .into_iter()

@@ -37,6 +37,11 @@
 //! * [`trace`] — the trace-driven KV workload subsystem: YCSB-style op
 //!   generators, the durable `TUNATRC1` trace format and the replay
 //!   engine behind the `kv-*` workload family and `tuna trace` verbs.
+//! * [`obs::Recorder`] — the observability layer: per-thread-sharded
+//!   metrics with Prometheus exposition, a bounded structured event
+//!   journal persisted as durable `TUNAOBS1` artifacts, and the
+//!   `tuna obs dump|summary|diff` introspection verbs — zero-cost when
+//!   disabled and proven bit-identical when enabled.
 //!
 //! See `DESIGN.md` for the hardware-substitution rationale and the
 //! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -46,6 +51,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod microbench;
+pub mod obs;
 pub mod perfdb;
 pub mod report;
 pub mod runtime;

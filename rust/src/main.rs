@@ -53,7 +53,7 @@
 //!                               opens the result lazily and reports the
 //!                               serving-memory budget at that cap
 //! tuna store ls   [--store DIR] list artifacts (perfdbs, sweeps, baselines,
-//!                               traces)
+//!                               traces; foreign files show as `(?)`)
 //! tuna store diff A B [--store DIR] [--tol T] [--strict]
 //!                               cell-by-cell sweep comparison (regressions)
 //! tuna trace record --workload kv-zipfian [--seed S] [--intervals N]
@@ -69,7 +69,17 @@
 //!                               trace:FILE`)
 //! tuna trace stats FILE [--store DIR]
 //!                               header + op-mix summary (full CRC check)
+//! tuna obs dump FILE            every journal event + the metric snapshot
+//! tuna obs summary FILE         per-phase breakdown, decision timeline,
+//!                               histograms, warnings
+//! tuna obs diff A B             metric deltas between two journals
 //! ```
+//!
+//! `run`, `tune`, `serve` and `sweep` additionally accept
+//! `--obs-journal FILE` (persist a `TUNAOBS1` event journal),
+//! `--metrics FILE` (Prometheus-style exposition) and `--obs-ring N`
+//! (journal ring capacity). Either sink flag enables the recorder;
+//! results are bit-identical with it on or off.
 //!
 //! Workload names everywhere: the five Table 1 applications, the KV
 //! family (`kv-uniform`, `kv-zipfian`, `kv-latest`, `kv-hotspot`,
@@ -122,17 +132,55 @@ fn run() -> Result<()> {
         Some("sweep") => cmd_sweep(&mut args),
         Some("store") => cmd_store(&mut args),
         Some("trace") => cmd_trace(&mut args),
+        Some("obs") => cmd_obs(&mut args),
         Some(other) => {
             bail!(
-                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store, trace)"
+                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store, trace, obs)"
             )
         }
         None => {
             println!(
-                "usage: tuna <info|build-db|run|tune|serve|sweep|store|trace> [flags]  (see README)"
+                "usage: tuna <info|build-db|run|tune|serve|sweep|store|trace|obs> [flags]  (see README)"
             );
             Ok(())
         }
+    }
+}
+
+/// Observability sinks resolved from `--obs-journal FILE`,
+/// `--metrics FILE` and `--obs-ring N`. Either sink flag enables the
+/// recorder; with neither, every command keeps its zero-cost disabled
+/// path.
+struct ObsSinks {
+    obs: tuna::obs::Recorder,
+    journal: Option<PathBuf>,
+    metrics: Option<PathBuf>,
+}
+
+impl ObsSinks {
+    fn from_args(args: &mut Args) -> Result<ObsSinks> {
+        let journal = args.get("obs-journal").map(PathBuf::from);
+        let metrics = args.get("metrics").map(PathBuf::from);
+        let ring: usize = args.get_parse("obs-ring", tuna::obs::DEFAULT_RING_CAPACITY)?;
+        let obs = if journal.is_some() || metrics.is_some() {
+            tuna::obs::Recorder::enabled(ring)
+        } else {
+            tuna::obs::Recorder::disabled()
+        };
+        Ok(ObsSinks { obs, journal, metrics })
+    }
+
+    /// Persist whichever sinks were requested, after the command's work.
+    fn flush(&self) -> Result<()> {
+        if let Some(path) = &self.journal {
+            self.obs.write_journal(path)?;
+            println!("obs journal written to {}", path.display());
+        }
+        if let Some(path) = &self.metrics {
+            self.obs.write_metrics(path)?;
+            println!("metrics written to {}", path.display());
+        }
+        Ok(())
     }
 }
 
@@ -270,10 +318,12 @@ fn cmd_build_db(args: &mut Args) -> Result<()> {
 
 fn cmd_run(args: &mut Args) -> Result<()> {
     let exp = load_exp(args)?;
-    let spec = spec_from(args, &exp)?;
+    let mut spec = spec_from(args, &exp)?;
     let first_touch = args.switch("first-touch");
     let memtis = args.switch("memtis");
+    let sinks = ObsSinks::from_args(args)?;
     args.finish()?;
+    spec.obs = sinks.obs.clone();
 
     let baseline = coordinator::run_fm_only(&spec)?;
     let run = if first_touch {
@@ -316,12 +366,13 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         ]);
     }
     t.print();
+    sinks.flush()?;
     Ok(())
 }
 
 fn cmd_tune(args: &mut Args) -> Result<()> {
     let exp = load_exp(args)?;
-    let spec = spec_from(args, &exp)?;
+    let mut spec = spec_from(args, &exp)?;
     let db_given = args.get("db").map(|s| s.to_string());
     let db_path = PathBuf::from(db_given.clone().unwrap_or_else(|| exp.perfdb_path.clone()));
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -336,7 +387,9 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
     let mut params = BuildParams::default();
     params.n_configs = args.get_parse("configs", params.n_configs)?;
+    let sinks = ObsSinks::from_args(args)?;
     args.finish()?;
+    spec.obs = sinks.obs.clone();
     if named.is_some() && store_dir.is_none() {
         bail!("--name requires --store DIR (it names the sharded perf DB inside the store)");
     }
@@ -357,10 +410,12 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
         Some(dir) => {
             let store = ArtifactStore::open_existing(dir)?;
             let name = named.unwrap_or_else(|| "perfdb".to_string());
-            let db = Arc::new(LazyShardedPerfDb::open(
+            let mut db = LazyShardedPerfDb::open(
                 &store.perfdb_dir().join(&name),
                 ResidencyLimit::segments(resident),
-            )?);
+            )?;
+            db.set_obs(sinks.obs.clone());
+            let db = Arc::new(db);
             lazy = Some(db.clone());
             (db.clone() as Arc<dyn PerfSource>, Box::new(LazyShardedNn::new(db, 0)))
         }
@@ -376,7 +431,7 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     };
 
     let baseline = coordinator::run_fm_only(&spec)?;
-    let service = TunerService::inline(source, query);
+    let service = TunerService::inline_with_obs(source, query, sinks.obs.clone());
     let run = match &record {
         Some(path) => {
             // Tap the session's stream events into a tuna-telemetry v1
@@ -426,6 +481,7 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     if let Some(db) = &lazy {
         print_residency(db);
     }
+    sinks.flush()?;
     Ok(())
 }
 
@@ -483,6 +539,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let mut params = BuildParams::default();
     params.n_configs = args.get_parse("configs", params.n_configs)?;
     let files = args.positional.clone();
+    let sinks = ObsSinks::from_args(args)?;
     args.finish()?;
     if resident_given && store_dir.is_none() {
         bail!("--resident-segments requires --store DIR (it caps the store's sharded perf DB)");
@@ -496,10 +553,12 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         match &store_dir {
             Some(dir) => {
                 let store = ArtifactStore::open_existing(dir)?;
-                let db = Arc::new(LazyShardedPerfDb::open(
+                let mut db = LazyShardedPerfDb::open(
                     &store.perfdb_dir().join(&db_name),
                     ResidencyLimit::segments(resident),
-                )?);
+                )?;
+                db.set_obs(sinks.obs.clone());
+                let db = Arc::new(db);
                 lazy = Some(db.clone());
                 let query: Box<dyn NnQuery + Send> = Box::new(LazyShardedNn::new(db.clone(), 0));
                 (db as Arc<dyn PerfSource>, query, "lazy-sharded")
@@ -518,8 +577,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         tuna_cfg.period_s
     );
 
-    let service = TunerService::spawn(source, query);
-    let mut ingestor = Ingestor::new(&service, tuna_cfg);
+    let service = TunerService::spawn_with_obs(source, query, sinks.obs.clone());
+    let mut ingestor = Ingestor::new_with_obs(&service, tuna_cfg, sinks.obs.clone());
     let print = |out: IngestOutput| match out {
         IngestOutput::Decision { session, interval, usable_fm, .. } => {
             println!("decision {session} interval={interval} usable_fm={usable_fm}");
@@ -580,6 +639,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     if let Some(db) = &lazy {
         print_residency(db);
     }
+    sinks.flush()?;
     Ok(())
 }
 
@@ -655,6 +715,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     let resident_given = args.get("resident-segments").is_some();
     let resident: usize = args.get_parse("resident-segments", 0usize)?;
     let tuna_db_name = args.get("db-name").map(|s| s.to_string());
+    let sinks = ObsSinks::from_args(args)?;
     args.finish()?;
     if store_dir.is_none() && sweep_name.is_some() {
         bail!("--name requires --store DIR (it names the persisted cell table)");
@@ -689,7 +750,8 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .with_migrations(migrations)
         .with_intervals(intervals)
         .with_threads(threads)
-        .with_machine(exp.machine.clone());
+        .with_machine(exp.machine.clone())
+        .with_obs(sinks.obs.clone());
     let mut lazy: Option<Arc<LazyShardedPerfDb>> = None;
     if policies.contains(&SweepPolicy::Tuna) {
         // With --resident-segments, Tuna cells query the store's sharded
@@ -699,10 +761,12 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             (Some(dir), true) => {
                 let name = tuna_db_name.unwrap_or_else(|| "perfdb".to_string());
                 let store = ArtifactStore::open_existing(dir)?;
-                let db = Arc::new(LazyShardedPerfDb::open(
+                let mut db = LazyShardedPerfDb::open(
                     &store.perfdb_dir().join(&name),
                     ResidencyLimit::segments(resident),
-                )?);
+                )?;
+                db.set_obs(sinks.obs.clone());
+                let db = Arc::new(db);
                 lazy = Some(db.clone());
                 TunaDb::Lazy(db)
             }
@@ -717,7 +781,8 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     let (store, cache) = match &store_dir {
         Some(dir) => {
             let store = ArtifactStore::open(dir)?;
-            let cache = BaselineCache::persistent(&store.baselines_dir())?;
+            let cache = BaselineCache::persistent(&store.baselines_dir())?
+                .with_obs(sinks.obs.clone());
             (Some(store), cache)
         }
         None => (None, BaselineCache::new()),
@@ -818,6 +883,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             println!("sweep cells persisted to {} ({} rows)", path.display(), table.len());
         }
     }
+    sinks.flush()?;
     Ok(())
 }
 
@@ -1103,4 +1169,50 @@ fn cmd_trace_stats(args: &mut Args) -> Result<()> {
     ]);
     t.print();
     Ok(())
+}
+
+/// `tuna obs`: introspect persisted `TUNAOBS1` observability journals —
+/// the artifacts `--obs-journal` writes.
+fn cmd_obs(args: &mut Args) -> Result<()> {
+    let action = args.positional.first().cloned();
+    let file_at = |args: &Args, i: usize, usage: &str| -> Result<PathBuf> {
+        args.positional
+            .get(i)
+            .map(PathBuf::from)
+            .ok_or_else(|| anyhow::anyhow!("usage: {usage}"))
+    };
+    match action.as_deref() {
+        Some("dump") => {
+            args.finish()?;
+            let path = file_at(args, 1, "tuna obs dump FILE")?;
+            let j = tuna::obs::Journal::load(&path)?;
+            print!("{}", tuna::obs::render::render_dump(&j));
+            Ok(())
+        }
+        Some("summary") => {
+            args.finish()?;
+            let path = file_at(args, 1, "tuna obs summary FILE")?;
+            let j = tuna::obs::Journal::load(&path)?;
+            print!("{}", tuna::obs::render::render_summary(&j));
+            Ok(())
+        }
+        Some("diff") => {
+            args.finish()?;
+            let a = file_at(args, 1, "tuna obs diff A B")?;
+            let b = file_at(args, 2, "tuna obs diff A B")?;
+            let ja = tuna::obs::Journal::load(&a)?;
+            let jb = tuna::obs::Journal::load(&b)?;
+            print!(
+                "{}",
+                tuna::obs::render::render_diff(
+                    &a.display().to_string(),
+                    &ja,
+                    &b.display().to_string(),
+                    &jb,
+                )
+            );
+            Ok(())
+        }
+        _ => bail!("usage: tuna obs <dump FILE|summary FILE|diff A B>"),
+    }
 }

@@ -1,0 +1,382 @@
+//! The durable `TUNAOBS1` journal artifact.
+//!
+//! Same framing discipline as the store's segments, cell tables and
+//! traces: an 8-byte magic, a little-endian wire body, and a trailing
+//! CRC32 of the body. The encoding is canonical — metric families are
+//! written in `BTreeMap` (sorted-name) order and events in ring order
+//! — so `load` → `save` of an existing journal is byte-identical.
+//!
+//! Body layout (all via [`crate::artifact::wire`]):
+//!
+//! ```text
+//! u64  dropped                     ring drops at capture time
+//! u32  n_counters  { str name, u64 value } ...
+//! u32  n_gauges    { str name, f64 value } ...
+//! u32  n_hists     { str name, u32 n_bounds, f64 bounds...,
+//!                    u64 counts[n_bounds+1]..., f64 sum, u64 count } ...
+//! u32  n_events    { u64 t_ns, u8 tag, payload } ...
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::{Event, EventKind, HistSnapshot, Journal, MetricsSnapshot};
+use crate::artifact::wire::{put_f32, put_f64, put_str, put_u32, put_u64, put_u8, Reader};
+use crate::perfdb::store::crc32;
+use crate::Result;
+
+/// Magic prefix of a journal artifact.
+pub const MAGIC: &[u8; 8] = b"TUNAOBS1";
+
+const TAG_WARN: u8 = 0;
+const TAG_INTERVAL: u8 = 1;
+const TAG_DECISION: u8 = 2;
+const TAG_INGEST: u8 = 3;
+const TAG_SEG_LOAD: u8 = 4;
+const TAG_SEG_EVICT: u8 = 5;
+const TAG_SWEEP_CELL: u8 = 6;
+
+fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
+    match kind {
+        EventKind::Warn { site, message } => {
+            put_u8(out, TAG_WARN);
+            put_str(out, site);
+            put_str(out, message);
+        }
+        EventKind::Interval {
+            workload,
+            policy,
+            interval,
+            wall_ns,
+            fast_used,
+            promoted,
+            demoted,
+            txn_aborts,
+            shadow_free_demotions,
+        } => {
+            put_u8(out, TAG_INTERVAL);
+            put_str(out, workload);
+            put_str(out, policy);
+            put_u32(out, *interval);
+            put_f64(out, *wall_ns);
+            put_u64(out, *fast_used);
+            put_u64(out, *promoted);
+            put_u64(out, *demoted);
+            put_u64(out, *txn_aborts);
+            put_u64(out, *shadow_free_demotions);
+        }
+        EventKind::Decision {
+            interval,
+            record,
+            dist,
+            fraction,
+            new_fm,
+            predicted_loss,
+            wm_low,
+            wm_high,
+        } => {
+            put_u8(out, TAG_DECISION);
+            put_u32(out, *interval);
+            put_u64(out, *record);
+            put_f32(out, *dist);
+            put_f64(out, *fraction);
+            put_u64(out, *new_fm);
+            put_f64(out, *predicted_loss);
+            put_u64(out, *wm_low);
+            put_u64(out, *wm_high);
+        }
+        EventKind::IngestBatch {
+            lines,
+            samples,
+            decisions,
+            sessions_opened,
+            sessions_closed,
+        } => {
+            put_u8(out, TAG_INGEST);
+            put_u64(out, *lines);
+            put_u64(out, *samples);
+            put_u64(out, *decisions);
+            put_u64(out, *sessions_opened);
+            put_u64(out, *sessions_closed);
+        }
+        EventKind::SegmentLoad {
+            segment,
+            records,
+            crc_checked,
+            wall_ns,
+        } => {
+            put_u8(out, TAG_SEG_LOAD);
+            put_u32(out, *segment);
+            put_u64(out, *records);
+            put_u8(out, u8::from(*crc_checked));
+            put_u64(out, *wall_ns);
+        }
+        EventKind::SegmentEvict { segment } => {
+            put_u8(out, TAG_SEG_EVICT);
+            put_u32(out, *segment);
+        }
+        EventKind::SweepCell {
+            workload,
+            policy,
+            fraction,
+            seed,
+            wall_ns,
+        } => {
+            put_u8(out, TAG_SWEEP_CELL);
+            put_str(out, workload);
+            put_str(out, policy);
+            put_f64(out, *fraction);
+            put_u64(out, *seed);
+            put_u64(out, *wall_ns);
+        }
+    }
+}
+
+fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
+    let tag = r.u8()?;
+    Ok(match tag {
+        TAG_WARN => EventKind::Warn {
+            site: r.str()?,
+            message: r.str()?,
+        },
+        TAG_INTERVAL => EventKind::Interval {
+            workload: r.str()?,
+            policy: r.str()?,
+            interval: r.u32()?,
+            wall_ns: r.f64()?,
+            fast_used: r.u64()?,
+            promoted: r.u64()?,
+            demoted: r.u64()?,
+            txn_aborts: r.u64()?,
+            shadow_free_demotions: r.u64()?,
+        },
+        TAG_DECISION => EventKind::Decision {
+            interval: r.u32()?,
+            record: r.u64()?,
+            dist: r.f32()?,
+            fraction: r.f64()?,
+            new_fm: r.u64()?,
+            predicted_loss: r.f64()?,
+            wm_low: r.u64()?,
+            wm_high: r.u64()?,
+        },
+        TAG_INGEST => EventKind::IngestBatch {
+            lines: r.u64()?,
+            samples: r.u64()?,
+            decisions: r.u64()?,
+            sessions_opened: r.u64()?,
+            sessions_closed: r.u64()?,
+        },
+        TAG_SEG_LOAD => EventKind::SegmentLoad {
+            segment: r.u32()?,
+            records: r.u64()?,
+            crc_checked: r.u8()? != 0,
+            wall_ns: r.u64()?,
+        },
+        TAG_SEG_EVICT => EventKind::SegmentEvict { segment: r.u32()? },
+        TAG_SWEEP_CELL => EventKind::SweepCell {
+            workload: r.str()?,
+            policy: r.str()?,
+            fraction: r.f64()?,
+            seed: r.u64()?,
+            wall_ns: r.u64()?,
+        },
+        other => bail!("unknown obs event tag {other} in journal"),
+    })
+}
+
+impl Journal {
+    /// Canonical `TUNAOBS1` byte encoding.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        put_u64(&mut body, self.dropped);
+        put_u32(&mut body, self.metrics.counters.len() as u32);
+        for (name, &v) in &self.metrics.counters {
+            put_str(&mut body, name);
+            put_u64(&mut body, v);
+        }
+        put_u32(&mut body, self.metrics.gauges.len() as u32);
+        for (name, &v) in &self.metrics.gauges {
+            put_str(&mut body, name);
+            put_f64(&mut body, v);
+        }
+        put_u32(&mut body, self.metrics.hists.len() as u32);
+        for (name, h) in &self.metrics.hists {
+            put_str(&mut body, name);
+            put_u32(&mut body, h.bounds.len() as u32);
+            for &b in &h.bounds {
+                put_f64(&mut body, b);
+            }
+            for &c in &h.counts {
+                put_u64(&mut body, c);
+            }
+            put_f64(&mut body, h.sum);
+            put_u64(&mut body, h.count);
+        }
+        put_u32(&mut body, self.events.len() as u32);
+        for ev in &self.events {
+            put_u64(&mut body, ev.t_ns);
+            encode_kind(&mut body, &ev.kind);
+        }
+        let mut out = Vec::with_capacity(MAGIC.len() + body.len() + 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out
+    }
+
+    /// Parse a `TUNAOBS1` byte stream (magic + CRC validated).
+    pub fn decode(data: &[u8]) -> Result<Journal> {
+        if data.len() < MAGIC.len() + 4 || &data[..MAGIC.len()] != MAGIC {
+            bail!("not a TUNAOBS1 journal (bad magic or truncated)");
+        }
+        let body = &data[MAGIC.len()..data.len() - 4];
+        let stored = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+        let actual = crc32(body);
+        if stored != actual {
+            bail!("obs journal CRC mismatch: stored {stored:#010x}, computed {actual:#010x}");
+        }
+        let mut r = Reader::new(body);
+        let dropped = r.u64()?;
+        let mut metrics = MetricsSnapshot::default();
+        for _ in 0..r.u32()? {
+            let name = r.str()?;
+            metrics.counters.insert(name, r.u64()?);
+        }
+        for _ in 0..r.u32()? {
+            let name = r.str()?;
+            metrics.gauges.insert(name, r.f64()?);
+        }
+        for _ in 0..r.u32()? {
+            let name = r.str()?;
+            let n_bounds = r.u32()? as usize;
+            if n_bounds > 1 << 16 {
+                bail!("implausible histogram bound count {n_bounds} in journal");
+            }
+            let mut h = HistSnapshot::default();
+            for _ in 0..n_bounds {
+                h.bounds.push(r.f64()?);
+            }
+            for _ in 0..n_bounds + 1 {
+                h.counts.push(r.u64()?);
+            }
+            h.sum = r.f64()?;
+            h.count = r.u64()?;
+            metrics.hists.insert(name, h);
+        }
+        let n_events = r.u32()? as usize;
+        let mut events = Vec::with_capacity(n_events.min(1 << 20));
+        for _ in 0..n_events {
+            let t_ns = r.u64()?;
+            events.push(Event {
+                t_ns,
+                kind: decode_kind(&mut r)?,
+            });
+        }
+        r.done()?;
+        Ok(Journal {
+            dropped,
+            metrics,
+            events,
+        })
+    }
+
+    /// Atomically persist the journal at `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::artifact::write_atomic(path, &self.encode())
+            .with_context(|| format!("writing obs journal {}", path.display()))
+    }
+
+    /// Load a journal artifact from `path`.
+    pub fn load(path: &Path) -> Result<Journal> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading obs journal {}", path.display()))?;
+        Self::decode(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Recorder;
+
+    fn sample_journal() -> Journal {
+        let r = Recorder::enabled(8);
+        r.count("engine_intervals_total", 4);
+        r.gauge("perfdb_resident_segments", 2.0);
+        r.observe("tuner_decision_fraction", super::super::FRACTION_BUCKETS, 0.8);
+        r.record(EventKind::Interval {
+            workload: "BFS".into(),
+            policy: "tpp".into(),
+            interval: 1,
+            wall_ns: 1.5e6,
+            fast_used: 1000,
+            promoted: 12,
+            demoted: 3,
+            txn_aborts: 1,
+            shadow_free_demotions: 2,
+        });
+        r.record(EventKind::Decision {
+            interval: 2,
+            record: 17,
+            dist: 0.25,
+            fraction: 0.8,
+            new_fm: 4096,
+            predicted_loss: 0.031,
+            wm_low: 64,
+            wm_high: 96,
+        });
+        r.record(EventKind::IngestBatch {
+            lines: 10,
+            samples: 8,
+            decisions: 1,
+            sessions_opened: 1,
+            sessions_closed: 1,
+        });
+        r.record(EventKind::SegmentLoad {
+            segment: 3,
+            records: 256,
+            crc_checked: true,
+            wall_ns: 42_000,
+        });
+        r.record(EventKind::SegmentEvict { segment: 3 });
+        r.record(EventKind::SweepCell {
+            workload: "kv-drift".into(),
+            policy: "tpp-nomad".into(),
+            fraction: 0.6,
+            seed: 7,
+            wall_ns: 9_000_000,
+        });
+        r.warn("fmt.test", "synthetic warning");
+        r.journal()
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let j = sample_journal();
+        let decoded = Journal::decode(&j.encode()).unwrap();
+        assert_eq!(decoded, j);
+    }
+
+    #[test]
+    fn reencode_is_byte_stable() {
+        let bytes = sample_journal().encode();
+        let reencoded = Journal::decode(&bytes).unwrap().encode();
+        assert_eq!(reencoded, bytes);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut bytes = sample_journal().encode();
+        assert!(Journal::decode(&bytes[..bytes.len() - 2]).is_err(), "truncation");
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let err = Journal::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "got: {err}");
+        assert!(
+            Journal::decode(b"NOTOBS00xxxxxxxx").is_err(),
+            "bad magic must fail"
+        );
+    }
+}

@@ -1,0 +1,563 @@
+//! First-class observability: a metrics registry, a structured event
+//! journal, and the `obs::Recorder` handle threaded through the engine,
+//! tuner, service, sweep executor and lazy perf-DB.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **The recorder observes, never perturbs.** With observability
+//!    enabled at any ring size, decisions, sweep cells and RunResult
+//!    digests are bit-identical to a run with it disabled. Nothing in
+//!    this module feeds back into simulation or tuning state.
+//! 2. **Zero cost when disabled.** A disabled [`Recorder`] is a `None`;
+//!    every hot-path hook is one pointer check. Event payloads that
+//!    would allocate are built behind [`Recorder::record_with`] so the
+//!    closure never runs when disabled.
+//! 3. **No cross-thread contention.** Counters and histograms live in
+//!    per-thread shards (registered once per thread, merged only at
+//!    snapshot time), so the sweep pool and the service aggregation
+//!    thread never serialize on a metrics lock.
+//!
+//! The journal is a bounded ring ([`Recorder::enabled`] picks the
+//! capacity): when full, the oldest event is dropped and the drop is
+//! counted, surfaced as the `obs_journal_dropped_total` metric and the
+//! `dropped` field of the persisted artifact. [`Journal`] round-trips
+//! through the durable CRC'd `TUNAOBS1` format (see [`format`]) with a
+//! canonical encoding, so dump → load → re-dump is byte-stable.
+
+pub mod format;
+pub mod render;
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::Result;
+
+/// Default journal ring capacity used by the CLI flags.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// Histogram bounds for wall-clock / modeled durations in nanoseconds.
+pub const NS_BUCKETS: &[f64] = &[1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10];
+
+/// Histogram bounds for per-interval page-migration volumes.
+pub const PAGES_BUCKETS: &[f64] = &[
+    0.0, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0,
+];
+
+/// Histogram bounds for fast-memory fractions and residency ratios.
+pub const FRACTION_BUCKETS: &[f64] = &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+
+/// Histogram bounds for predicted performance loss.
+pub const LOSS_BUCKETS: &[f64] = &[0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0];
+
+/// One journal entry: a monotonic timestamp (ns since the recorder was
+/// created) plus the structured payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Structured event payloads, one variant per instrumented site.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A diagnostic that was also emitted on stderr.
+    Warn { site: String, message: String },
+    /// One engine interval boundary, with the interval's migration
+    /// transaction outcomes (promotions, demotions, shadow-free
+    /// demotions and aborts from the non-exclusive model).
+    Interval {
+        workload: String,
+        policy: String,
+        interval: u32,
+        wall_ns: f64,
+        fast_used: u64,
+        promoted: u64,
+        demoted: u64,
+        txn_aborts: u64,
+        shadow_free_demotions: u64,
+    },
+    /// One tuner decision: the kNN inputs and the chosen watermarks.
+    Decision {
+        interval: u32,
+        record: u64,
+        dist: f32,
+        fraction: f64,
+        new_fm: u64,
+        predicted_loss: f64,
+        wm_low: u64,
+        wm_high: u64,
+    },
+    /// One `Ingestor::ingest` batch (a file or stdin stream).
+    IngestBatch {
+        lines: u64,
+        samples: u64,
+        decisions: u64,
+        sessions_opened: u64,
+        sessions_closed: u64,
+    },
+    /// A lazy perf-DB segment faulted in (CRC-checked on first touch).
+    SegmentLoad {
+        segment: u32,
+        records: u64,
+        crc_checked: bool,
+        wall_ns: u64,
+    },
+    /// A lazy perf-DB segment evicted to honor the residency limit.
+    SegmentEvict { segment: u32 },
+    /// One sweep cell finished (wall time measured around the cell run).
+    SweepCell {
+        workload: String,
+        policy: String,
+        fraction: f64,
+        seed: u64,
+        wall_ns: u64,
+    },
+}
+
+impl EventKind {
+    /// Short stable name used by `tuna obs dump|summary`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Warn { .. } => "warn",
+            EventKind::Interval { .. } => "interval",
+            EventKind::Decision { .. } => "decision",
+            EventKind::IngestBatch { .. } => "ingest-batch",
+            EventKind::SegmentLoad { .. } => "segment-load",
+            EventKind::SegmentEvict { .. } => "segment-evict",
+            EventKind::SweepCell { .. } => "sweep-cell",
+        }
+    }
+
+    /// The subsystem ("phase") the event belongs to.
+    pub fn phase(&self) -> &'static str {
+        match self {
+            EventKind::Warn { .. } => "warn",
+            EventKind::Interval { .. } => "engine",
+            EventKind::Decision { .. } => "tuner",
+            EventKind::IngestBatch { .. } => "service",
+            EventKind::SegmentLoad { .. } | EventKind::SegmentEvict { .. } => "perfdb",
+            EventKind::SweepCell { .. } => "sweep",
+        }
+    }
+
+    /// Busy time the event accounts for, where it carries one. Interval
+    /// events report *modeled* nanoseconds; segment loads and sweep
+    /// cells report measured wall time.
+    pub fn busy_ns(&self) -> u64 {
+        match self {
+            EventKind::Interval { wall_ns, .. } => *wall_ns as u64,
+            EventKind::SegmentLoad { wall_ns, .. } => *wall_ns,
+            EventKind::SweepCell { wall_ns, .. } => *wall_ns,
+            _ => 0,
+        }
+    }
+}
+
+/// A merged point-in-time view of the metrics registry. `BTreeMap`
+/// keys give the canonical (sorted) order that both the Prometheus
+/// exposition and the `TUNAOBS1` encoding rely on.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+/// A merged fixed-bucket histogram; `counts` has one slot per bound
+/// plus a final `+Inf` overflow slot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl MetricsSnapshot {
+    /// Counter value, zero when absent.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Prometheus text exposition. Deterministic: families sorted by
+    /// name, histogram buckets in bound order.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = match h.bounds.get(i) {
+                    Some(b) => format!("{b}"),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+/// The loadable/persistable journal: the ring contents at capture
+/// time, the drop count, and a metrics snapshot taken alongside.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Journal {
+    pub dropped: u64,
+    pub metrics: MetricsSnapshot,
+    pub events: Vec<Event>,
+}
+
+/// Per-thread metrics shard. Each thread that touches a registry gets
+/// its own shard; the mutexes below are uncontended in steady state
+/// (only the owning thread locks them, except during a snapshot merge).
+#[derive(Default)]
+struct Shard {
+    counters: Mutex<HashMap<&'static str, u64>>,
+    hists: Mutex<HashMap<&'static str, Hist>>,
+}
+
+#[derive(Clone)]
+struct Hist {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+struct Ring {
+    cap: usize,
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+struct Inner {
+    id: u64,
+    epoch: Instant,
+    shards: Mutex<Vec<Arc<Shard>>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    ring: Mutex<Ring>,
+}
+
+static NEXT_REGISTRY_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// This thread's shard per registry id. Entries outlive dropped
+    /// registries (bounded by recorders created on this thread), but
+    /// the registry holds the authoritative `Arc` list for merging.
+    static LOCAL_SHARDS: RefCell<HashMap<u64, Arc<Shard>>> = RefCell::new(HashMap::new());
+}
+
+/// The observability handle. Cheap to clone (an `Option<Arc>`); the
+/// default / [`Recorder::disabled`] form is a no-op on every hook.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<Inner>>,
+}
+
+impl fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Recorder")
+            .field("enabled", &self.is_enabled())
+            .finish()
+    }
+}
+
+impl Recorder {
+    /// A recorder on which every hook is a no-op (same as `default()`).
+    pub fn disabled() -> Self {
+        Recorder { inner: None }
+    }
+
+    /// An active recorder with a journal ring of `ring_capacity`
+    /// events (clamped to at least 1).
+    pub fn enabled(ring_capacity: usize) -> Self {
+        let cap = ring_capacity.max(1);
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                id: NEXT_REGISTRY_ID.fetch_add(1, Ordering::Relaxed),
+                epoch: Instant::now(),
+                shards: Mutex::new(Vec::new()),
+                gauges: Mutex::new(BTreeMap::new()),
+                ring: Mutex::new(Ring {
+                    cap,
+                    events: VecDeque::with_capacity(cap.min(1024)),
+                    dropped: 0,
+                }),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn with_shard<R>(&self, f: impl FnOnce(&Shard) -> R) -> Option<R> {
+        let inner = self.inner.as_ref()?;
+        let shard = LOCAL_SHARDS.with(|m| {
+            m.borrow_mut()
+                .entry(inner.id)
+                .or_insert_with(|| {
+                    let s = Arc::new(Shard::default());
+                    inner.shards.lock().unwrap().push(s.clone());
+                    s
+                })
+                .clone()
+        });
+        Some(f(&shard))
+    }
+
+    /// Add `delta` to the named counter.
+    pub fn count(&self, name: &'static str, delta: u64) {
+        self.with_shard(|s| {
+            *s.counters.lock().unwrap().entry(name).or_insert(0) += delta;
+        });
+    }
+
+    /// Set the named gauge to `value` (gauges are registry-central:
+    /// last writer wins, which is what "current resident segments"
+    /// style values want).
+    pub fn gauge(&self, name: &'static str, value: f64) {
+        if let Some(inner) = &self.inner {
+            inner.gauges.lock().unwrap().insert(name.to_string(), value);
+        }
+    }
+
+    /// Record `value` into the named fixed-bucket histogram. The first
+    /// observation on a thread fixes the bounds; all sites for one
+    /// name must pass the same `bounds` slice.
+    pub fn observe(&self, name: &'static str, bounds: &'static [f64], value: f64) {
+        self.with_shard(|s| {
+            let mut hists = s.hists.lock().unwrap();
+            let h = hists.entry(name).or_insert_with(|| Hist {
+                bounds,
+                counts: vec![0; bounds.len() + 1],
+                sum: 0.0,
+                count: 0,
+            });
+            let slot = h
+                .bounds
+                .iter()
+                .position(|&b| value <= b)
+                .unwrap_or(h.bounds.len());
+            h.counts[slot] += 1;
+            h.sum += value;
+            h.count += 1;
+        });
+    }
+
+    /// Append an event to the journal ring (oldest dropped when full).
+    pub fn record(&self, kind: EventKind) {
+        if let Some(inner) = &self.inner {
+            let t_ns = inner.epoch.elapsed().as_nanos() as u64;
+            let mut ring = inner.ring.lock().unwrap();
+            if ring.events.len() == ring.cap {
+                ring.events.pop_front();
+                ring.dropped += 1;
+            }
+            ring.events.push_back(Event { t_ns, kind });
+        }
+    }
+
+    /// Like [`Recorder::record`], but the payload closure only runs
+    /// when the recorder is enabled — use for events whose payload
+    /// allocates.
+    pub fn record_with(&self, kind: impl FnOnce() -> EventKind) {
+        if self.is_enabled() {
+            self.record(kind());
+        }
+    }
+
+    /// Structured warning: always emitted on stderr as
+    /// `warning: <message>` (so CLI diagnostics are unchanged whether
+    /// or not observability is on); when enabled, additionally counted
+    /// in `obs_warn_total` and journaled as a [`EventKind::Warn`].
+    pub fn warn(&self, site: &str, message: &str) {
+        eprintln!("warning: {message}");
+        if self.is_enabled() {
+            self.count("obs_warn_total", 1);
+            self.record(EventKind::Warn {
+                site: site.to_string(),
+                message: message.to_string(),
+            });
+        }
+    }
+
+    /// Merge all per-thread shards plus gauges into one snapshot.
+    /// Empty when disabled. The journal drop counter is surfaced here
+    /// as `obs_journal_dropped_total`.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        let Some(inner) = &self.inner else {
+            return snap;
+        };
+        for shard in inner.shards.lock().unwrap().iter() {
+            for (&name, &v) in shard.counters.lock().unwrap().iter() {
+                *snap.counters.entry(name.to_string()).or_insert(0) += v;
+            }
+            for (&name, h) in shard.hists.lock().unwrap().iter() {
+                let e = snap.hists.entry(name.to_string()).or_insert_with(|| HistSnapshot {
+                    bounds: h.bounds.to_vec(),
+                    counts: vec![0; h.bounds.len() + 1],
+                    sum: 0.0,
+                    count: 0,
+                });
+                for (acc, &c) in e.counts.iter_mut().zip(&h.counts) {
+                    *acc += c;
+                }
+                e.sum += h.sum;
+                e.count += h.count;
+            }
+        }
+        for (name, &v) in inner.gauges.lock().unwrap().iter() {
+            snap.gauges.insert(name.clone(), v);
+        }
+        let dropped = inner.ring.lock().unwrap().dropped;
+        *snap
+            .counters
+            .entry("obs_journal_dropped_total".to_string())
+            .or_insert(0) += dropped;
+        snap
+    }
+
+    /// Capture the journal: current ring contents (oldest first), the
+    /// drop count, and a metrics snapshot. Empty when disabled.
+    pub fn journal(&self) -> Journal {
+        let metrics = self.snapshot();
+        let Some(inner) = &self.inner else {
+            return Journal::default();
+        };
+        let ring = inner.ring.lock().unwrap();
+        Journal {
+            dropped: ring.dropped,
+            metrics,
+            events: ring.events.iter().cloned().collect(),
+        }
+    }
+
+    /// Write the Prometheus exposition of [`Recorder::snapshot`] to
+    /// `path` (atomically). No-op files are still written when the
+    /// recorder is disabled so callers don't have to special-case.
+    pub fn write_metrics(&self, path: &Path) -> Result<()> {
+        crate::artifact::write_atomic(path, self.snapshot().render_prometheus().as_bytes())
+    }
+
+    /// Persist the journal as a durable `TUNAOBS1` artifact at `path`.
+    pub fn write_journal(&self, path: &Path) -> Result<()> {
+        self.journal().save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::disabled();
+        r.count("x_total", 3);
+        r.gauge("g", 1.0);
+        r.observe("h", NS_BUCKETS, 5.0);
+        r.record(EventKind::SegmentEvict { segment: 1 });
+        let mut ran = false;
+        r.record_with(|| {
+            ran = true;
+            EventKind::SegmentEvict { segment: 2 }
+        });
+        assert!(!ran, "record_with closure must not run when disabled");
+        assert_eq!(r.snapshot(), MetricsSnapshot::default());
+        assert_eq!(r.journal(), Journal::default());
+    }
+
+    #[test]
+    fn counters_merge_across_threads() {
+        let r = Recorder::enabled(16);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        r.count("t_total", 1);
+                        r.observe("t_hist", PAGES_BUCKETS, 3.0);
+                    }
+                });
+            }
+        });
+        r.count("t_total", 5);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("t_total"), 405);
+        let h = &snap.hists["t_hist"];
+        assert_eq!(h.count, 400);
+        assert_eq!(h.sum, 1200.0);
+        // value 3.0 lands in the `le 4` bucket (index 2 of PAGES_BUCKETS)
+        assert_eq!(h.counts[2], 400);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let r = Recorder::enabled(3);
+        for i in 0..8u32 {
+            r.record(EventKind::SegmentEvict { segment: i });
+        }
+        let j = r.journal();
+        assert_eq!(j.dropped, 5);
+        let kept: Vec<u32> = j
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::SegmentEvict { segment } => segment,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(kept, vec![5, 6, 7], "oldest events must be dropped first");
+        assert_eq!(j.metrics.counter("obs_journal_dropped_total"), 5);
+    }
+
+    #[test]
+    fn warn_counts_and_journals() {
+        let r = Recorder::enabled(8);
+        r.warn("test.site", "something odd");
+        let j = r.journal();
+        assert_eq!(j.metrics.counter("obs_warn_total"), 1);
+        assert!(matches!(
+            &j.events[0].kind,
+            EventKind::Warn { site, message }
+                if site == "test.site" && message == "something odd"
+        ));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_sorted_and_cumulative() {
+        let r = Recorder::enabled(4);
+        r.count("b_total", 2);
+        r.count("a_total", 1);
+        r.gauge("g_now", 1.5);
+        r.observe("h_ns", &[1.0, 10.0], 0.5);
+        r.observe("h_ns", &[1.0, 10.0], 5.0);
+        r.observe("h_ns", &[1.0, 10.0], 50.0);
+        let text = r.snapshot().render_prometheus();
+        let a = text.find("a_total 1").unwrap();
+        let b = text.find("b_total 2").unwrap();
+        assert!(a < b, "families must be name-sorted");
+        assert!(text.contains("# TYPE g_now gauge\ng_now 1.5\n"));
+        assert!(text.contains("h_ns_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("h_ns_bucket{le=\"10\"} 2\n"));
+        assert!(text.contains("h_ns_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("h_ns_sum 55.5\n"));
+        assert!(text.contains("h_ns_count 3\n"));
+        assert!(text.contains("obs_journal_dropped_total 0\n"));
+    }
+}

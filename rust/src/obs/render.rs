@@ -1,0 +1,334 @@
+//! Human renderings of [`Journal`] artifacts for the `tuna obs`
+//! verbs: `dump` (every event + the full exposition), `summary`
+//! (per-phase time breakdown, decision timeline, histograms), and
+//! `diff` (metric families of two journals side by side).
+
+use std::collections::BTreeSet;
+
+use super::{Event, EventKind, HistSnapshot, Journal};
+use crate::report::{ascii_series, pct, Table};
+use crate::util::human_ns;
+
+fn event_line(ev: &Event) -> String {
+    let body = match &ev.kind {
+        EventKind::Warn { site, message } => format!("site={site} {message}"),
+        EventKind::Interval {
+            workload,
+            policy,
+            interval,
+            wall_ns,
+            fast_used,
+            promoted,
+            demoted,
+            txn_aborts,
+            shadow_free_demotions,
+        } => format!(
+            "{workload}/{policy} interval={interval} wall={} fast_used={fast_used} \
+             promoted={promoted} demoted={demoted} aborts={txn_aborts} \
+             shadow_free={shadow_free_demotions}",
+            human_ns(*wall_ns as u64)
+        ),
+        EventKind::Decision {
+            interval,
+            record,
+            dist,
+            fraction,
+            new_fm,
+            predicted_loss,
+            wm_low,
+            wm_high,
+        } => format!(
+            "interval={interval} record={record} dist={dist:.4} fraction={fraction:.3} \
+             new_fm={new_fm} predicted_loss={} wm_low={wm_low} wm_high={wm_high}",
+            pct(*predicted_loss)
+        ),
+        EventKind::IngestBatch {
+            lines,
+            samples,
+            decisions,
+            sessions_opened,
+            sessions_closed,
+        } => format!(
+            "lines={lines} samples={samples} decisions={decisions} \
+             opened={sessions_opened} closed={sessions_closed}"
+        ),
+        EventKind::SegmentLoad {
+            segment,
+            records,
+            crc_checked,
+            wall_ns,
+        } => format!(
+            "segment={segment} records={records} crc_checked={crc_checked} wall={}",
+            human_ns(*wall_ns)
+        ),
+        EventKind::SegmentEvict { segment } => format!("segment={segment}"),
+        EventKind::SweepCell {
+            workload,
+            policy,
+            fraction,
+            seed,
+            wall_ns,
+        } => format!(
+            "{workload}/{policy} fraction={fraction:.3} seed={seed} wall={}",
+            human_ns(*wall_ns)
+        ),
+    };
+    format!("[{:>10}] {:<13} {body}", human_ns(ev.t_ns), ev.kind.name())
+}
+
+fn span_line(j: &Journal) -> String {
+    let span = match (j.events.first(), j.events.last()) {
+        (Some(a), Some(b)) => human_ns(b.t_ns.saturating_sub(a.t_ns)),
+        _ => "0ns".to_string(),
+    };
+    format!(
+        "{} events ({} dropped from ring), span {span}",
+        j.events.len(),
+        j.dropped
+    )
+}
+
+/// Every event in ring order, followed by the metric exposition.
+pub fn render_dump(j: &Journal) -> String {
+    let mut out = String::new();
+    out.push_str(&span_line(j));
+    out.push('\n');
+    for ev in &j.events {
+        out.push_str(&event_line(ev));
+        out.push('\n');
+    }
+    out.push_str("\n== metrics ==\n");
+    out.push_str(&j.metrics.render_prometheus());
+    out
+}
+
+fn render_hist(name: &str, h: &HistSnapshot) -> String {
+    let max = h.counts.iter().copied().max().unwrap_or(0).max(1);
+    let mut out = format!("{name}  (count {}, sum {})\n", h.count, h.sum);
+    for (i, &c) in h.counts.iter().enumerate() {
+        let le = match h.bounds.get(i) {
+            Some(b) => format!("{b}"),
+            None => "+Inf".to_string(),
+        };
+        let bar = "#".repeat((c * 40 / max) as usize);
+        out.push_str(&format!("  le {le:>12}  {c:>10}  {bar}\n"));
+    }
+    out
+}
+
+/// Per-phase breakdown, decision timeline with predicted loss, and
+/// the journal's histograms.
+pub fn render_summary(j: &Journal) -> String {
+    let mut out = String::new();
+    out.push_str(&span_line(j));
+    out.push('\n');
+
+    let phases = ["engine", "tuner", "service", "perfdb", "sweep", "warn"];
+    let mut t = Table::new("per-phase breakdown", &["phase", "events", "busy time"]);
+    for phase in phases {
+        let evs: Vec<&Event> = j.events.iter().filter(|e| e.kind.phase() == phase).collect();
+        if evs.is_empty() {
+            continue;
+        }
+        let busy: u64 = evs.iter().map(|e| e.kind.busy_ns()).sum();
+        t.row(vec![
+            phase.to_string(),
+            evs.len().to_string(),
+            human_ns(busy),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let decisions: Vec<&Event> = j
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Decision { .. }))
+        .collect();
+    if !decisions.is_empty() {
+        let mut t = Table::new(
+            "decision timeline",
+            &["interval", "fraction", "new_fm", "predicted loss", "wm low", "wm high"],
+        );
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for ev in &decisions {
+            if let EventKind::Decision {
+                interval,
+                fraction,
+                new_fm,
+                predicted_loss,
+                wm_low,
+                wm_high,
+                ..
+            } = &ev.kind
+            {
+                t.row(vec![
+                    interval.to_string(),
+                    format!("{fraction:.3}"),
+                    new_fm.to_string(),
+                    pct(*predicted_loss),
+                    wm_low.to_string(),
+                    wm_high.to_string(),
+                ]);
+                xs.push(*interval as f64);
+                ys.push(*predicted_loss);
+            }
+        }
+        out.push_str(&t.render());
+        if xs.len() >= 2 {
+            out.push_str(&ascii_series("predicted loss", &xs, &ys, 6));
+        }
+    }
+
+    if !j.metrics.hists.is_empty() {
+        out.push_str("\n== histograms ==\n");
+        for (name, h) in &j.metrics.hists {
+            out.push_str(&render_hist(name, h));
+        }
+    }
+
+    let warns: Vec<&Event> = j
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Warn { .. }))
+        .collect();
+    if !warns.is_empty() {
+        out.push_str("\n== warnings ==\n");
+        for ev in warns {
+            out.push_str(&event_line(ev));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Metric families of two journals side by side with deltas (b - a).
+pub fn render_diff(label_a: &str, a: &Journal, label_b: &str, b: &Journal) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("a: {label_a} — {}\n", span_line(a)));
+    out.push_str(&format!("b: {label_b} — {}\n", span_line(b)));
+
+    let mut t = Table::new("metric diff (b - a)", &["metric", "a", "b", "delta"]);
+    let mut changed = 0usize;
+    let mut total = 0usize;
+
+    let counter_names: BTreeSet<&String> = a
+        .metrics
+        .counters
+        .keys()
+        .chain(b.metrics.counters.keys())
+        .collect();
+    for name in counter_names {
+        let va = a.metrics.counter(name);
+        let vb = b.metrics.counter(name);
+        let delta = vb as i128 - va as i128;
+        total += 1;
+        if delta != 0 {
+            changed += 1;
+        }
+        t.row(vec![
+            name.clone(),
+            va.to_string(),
+            vb.to_string(),
+            format!("{delta:+}"),
+        ]);
+    }
+
+    let gauge_names: BTreeSet<&String> = a
+        .metrics
+        .gauges
+        .keys()
+        .chain(b.metrics.gauges.keys())
+        .collect();
+    for name in gauge_names {
+        let va = a.metrics.gauges.get(name).copied();
+        let vb = b.metrics.gauges.get(name).copied();
+        let cell = |v: Option<f64>| v.map(|v| format!("{v}")).unwrap_or_else(|| "-".to_string());
+        let delta = vb.unwrap_or(0.0) - va.unwrap_or(0.0);
+        total += 1;
+        if delta != 0.0 || va.is_some() != vb.is_some() {
+            changed += 1;
+        }
+        t.row(vec![name.clone(), cell(va), cell(vb), format!("{delta:+}")]);
+    }
+
+    let hist_names: BTreeSet<&String> = a
+        .metrics
+        .hists
+        .keys()
+        .chain(b.metrics.hists.keys())
+        .collect();
+    for name in hist_names {
+        let ca = a.metrics.hists.get(name).map(|h| h.count).unwrap_or(0);
+        let cb = b.metrics.hists.get(name).map(|h| h.count).unwrap_or(0);
+        let delta = cb as i128 - ca as i128;
+        total += 1;
+        if delta != 0 {
+            changed += 1;
+        }
+        t.row(vec![
+            format!("{name}_count"),
+            ca.to_string(),
+            cb.to_string(),
+            format!("{delta:+}"),
+        ]);
+    }
+
+    out.push_str(&t.render());
+    out.push_str(&format!("{changed} of {total} metric families differ\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Recorder;
+
+    fn journal_with_decisions() -> Journal {
+        let r = Recorder::enabled(32);
+        r.count("tuner_decisions_total", 2);
+        r.observe("engine_promoted_per_interval", crate::obs::PAGES_BUCKETS, 12.0);
+        for i in 0..2u32 {
+            r.record(EventKind::Decision {
+                interval: 5 + i,
+                record: 3,
+                dist: 0.1,
+                fraction: 0.8 - 0.1 * i as f64,
+                new_fm: 1000 - 10 * i as u64,
+                predicted_loss: 0.02 + 0.01 * i as f64,
+                wm_low: 30,
+                wm_high: 45,
+            });
+        }
+        r.warn("render.test", "one warning");
+        r.journal()
+    }
+
+    #[test]
+    fn dump_and_summary_mention_key_content() {
+        let j = journal_with_decisions();
+        let dump = render_dump(&j);
+        assert!(dump.contains("decision"));
+        assert!(dump.contains("tuner_decisions_total 2"));
+        let summary = render_summary(&j);
+        assert!(summary.contains("per-phase breakdown"));
+        assert!(summary.contains("decision timeline"));
+        assert!(summary.contains("predicted loss"));
+        assert!(summary.contains("engine_promoted_per_interval"));
+        assert!(summary.contains("one warning"));
+    }
+
+    #[test]
+    fn diff_flags_changed_families() {
+        let ra = Recorder::enabled(4);
+        ra.count("x_total", 1);
+        let rb = Recorder::enabled(4);
+        rb.count("x_total", 3);
+        rb.count("y_total", 1);
+        let text = render_diff("a", &ra.journal(), "b", &rb.journal());
+        assert!(text.contains("x_total"));
+        assert!(text.contains("+2"));
+        assert!(text.contains("y_total"));
+        assert!(text.contains("metric families differ"));
+    }
+}

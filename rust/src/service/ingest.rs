@@ -187,11 +187,23 @@ pub struct Ingestor<'s> {
     service: &'s TunerService,
     cfg: TunaConfig,
     sessions: HashMap<String, SessionHandle<'s>>,
+    obs: crate::obs::Recorder,
 }
 
 impl<'s> Ingestor<'s> {
     pub fn new(service: &'s TunerService, cfg: TunaConfig) -> Self {
-        Ingestor { service, cfg, sessions: HashMap::new() }
+        Self::new_with_obs(service, cfg, crate::obs::Recorder::default())
+    }
+
+    /// As [`Self::new`], with an observability recorder: each
+    /// [`Self::ingest`] pass counts its lines/samples/decisions and
+    /// journals one `IngestBatch` event.
+    pub fn new_with_obs(
+        service: &'s TunerService,
+        cfg: TunaConfig,
+        obs: crate::obs::Recorder,
+    ) -> Self {
+        Ingestor { service, cfg, sessions: HashMap::new(), obs }
     }
 
     /// Sessions currently open.
@@ -270,6 +282,18 @@ impl<'s> Ingestor<'s> {
                 }
                 sink(out);
             }
+        }
+        if self.obs.is_enabled() {
+            self.obs.count("service_ingest_lines_total", stats.lines);
+            self.obs.count("service_ingest_samples_total", stats.samples);
+            self.obs.count("service_ingest_decisions_total", stats.decisions);
+            self.obs.record(crate::obs::EventKind::IngestBatch {
+                lines: stats.lines,
+                samples: stats.samples,
+                decisions: stats.decisions,
+                sessions_opened: stats.sessions_opened,
+                sessions_closed: stats.sessions_closed,
+            });
         }
         Ok(stats)
     }

@@ -116,6 +116,10 @@ struct Core {
     db: Arc<dyn PerfSource>,
     query: Box<dyn NnQuery + Send>,
     sessions: HashMap<u64, Session>,
+    /// Observability handle: cloned into every hosted session's tuner
+    /// state (so decisions journal through it) and counted for session
+    /// lifecycle. Disabled by default — the plain constructors.
+    obs: crate::obs::Recorder,
 }
 
 impl Core {
@@ -125,7 +129,7 @@ impl Core {
         spec: SessionSpec,
         mailbox: Option<SyncSender<Option<Watermarks>>>,
     ) {
-        let state = TunerState::new(
+        let mut state = TunerState::new(
             self.db.clone(),
             spec.cfg,
             spec.capacity,
@@ -133,6 +137,8 @@ impl Core {
             spec.hot_thr,
             spec.threads,
         );
+        state.set_obs(self.obs.clone());
+        self.obs.count("service_sessions_opened_total", 1);
         self.sessions.insert(id, Session { name: spec.name, state, mailbox, samples: 0 });
     }
 
@@ -153,6 +159,7 @@ impl Core {
 
     fn close(&mut self, id: u64) -> Option<SessionReport> {
         let sess = self.sessions.remove(&id)?;
+        self.obs.count("service_sessions_closed_total", 1);
         let mean_fraction = sess.state.mean_fraction();
         let min_fraction = sess.state.min_fraction();
         let vmstat = sess.state.vmstat();
@@ -215,9 +222,20 @@ impl TunerService {
     /// is proven equivalent to, and the right choice for single-run CLI
     /// commands.
     pub fn inline(db: Arc<dyn PerfSource>, query: Box<dyn NnQuery + Send>) -> Self {
+        Self::inline_with_obs(db, query, crate::obs::Recorder::default())
+    }
+
+    /// As [`Self::inline`], with an observability recorder cloned into
+    /// every hosted session. A disabled recorder makes this identical to
+    /// the plain constructor.
+    pub fn inline_with_obs(
+        db: Arc<dyn PerfSource>,
+        query: Box<dyn NnQuery + Send>,
+        obs: crate::obs::Recorder,
+    ) -> Self {
         let backend = query.backend();
         TunerService {
-            mode: Mode::Inline(Mutex::new(Core { db, query, sessions: HashMap::new() })),
+            mode: Mode::Inline(Mutex::new(Core { db, query, sessions: HashMap::new(), obs })),
             next_id: AtomicU64::new(1),
             backend,
         }
@@ -228,6 +246,16 @@ impl TunerService {
         Self::spawn_with_capacity(db, query, DEFAULT_CHANNEL_CAPACITY)
     }
 
+    /// As [`Self::spawn`], with an observability recorder for the hosted
+    /// sessions.
+    pub fn spawn_with_obs(
+        db: Arc<dyn PerfSource>,
+        query: Box<dyn NnQuery + Send>,
+        obs: crate::obs::Recorder,
+    ) -> Self {
+        Self::spawn_with_capacity_and_obs(db, query, DEFAULT_CHANNEL_CAPACITY, obs)
+    }
+
     /// Channel service: aggregation and decisions run on a dedicated
     /// background thread fed by a bounded mpsc channel of `capacity`
     /// messages.
@@ -236,9 +264,20 @@ impl TunerService {
         query: Box<dyn NnQuery + Send>,
         capacity: usize,
     ) -> Self {
+        Self::spawn_with_capacity_and_obs(db, query, capacity, crate::obs::Recorder::default())
+    }
+
+    /// The full-control channel constructor: explicit channel capacity
+    /// and observability recorder.
+    pub fn spawn_with_capacity_and_obs(
+        db: Arc<dyn PerfSource>,
+        query: Box<dyn NnQuery + Send>,
+        capacity: usize,
+        obs: crate::obs::Recorder,
+    ) -> Self {
         let backend = query.backend();
         let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(capacity.max(1));
-        let mut core = Core { db, query, sessions: HashMap::new() };
+        let mut core = Core { db, query, sessions: HashMap::new(), obs };
         let join = std::thread::Builder::new()
             .name("tuna-tuner-service".into())
             .spawn(move || {

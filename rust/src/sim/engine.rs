@@ -168,16 +168,27 @@ pub struct Engine {
     /// `tpp-nomad` — so existing callers are bit-identical to the
     /// pre-refactor engine.
     pub migration: Option<MigrationModel>,
+    /// Observability handle (disabled by default). The recorder only
+    /// *reads* trace records the run already produced — it never feeds
+    /// back into memory, policy or model state, so enabled runs are
+    /// bit-identical to disabled ones.
+    pub obs: crate::obs::Recorder,
 }
 
 impl Engine {
     pub fn new(model: IntervalModel) -> Self {
-        Engine { model, migration: None }
+        Engine { model, migration: None, obs: crate::obs::Recorder::default() }
     }
 
     /// Builder-style migration override (see [`Self::migration`]).
     pub fn with_migration(mut self, migration: MigrationModel) -> Self {
         self.migration = Some(migration);
+        self
+    }
+
+    /// Builder-style observability handle (see [`Self::obs`]).
+    pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
+        self.obs = obs;
         self
     }
 
@@ -330,6 +341,15 @@ impl Engine {
                 usable_fm: wm.usable(fast_capacity),
                 outcome,
             };
+            if self.obs.is_enabled() {
+                self.observe_interval(
+                    workload.name(),
+                    policy.name(),
+                    fast_capacity,
+                    &inputs.migrations,
+                    &rec,
+                );
+            }
             if let Some(new_wm) = observer(&rec) {
                 policy.set_watermarks(new_wm);
             }
@@ -350,6 +370,48 @@ impl Engine {
             total_ns: clock_ns,
             trace,
         }
+    }
+
+    /// Record one interval boundary: the exhaustive `mem_*` migration
+    /// transaction counter families, migration/residency histograms,
+    /// and a structured [`crate::obs::EventKind::Interval`] journal
+    /// event. Only called when the recorder is enabled.
+    fn observe_interval(
+        &self,
+        workload: &'static str,
+        policy: &'static str,
+        fast_capacity: u64,
+        counters: &MigrationCounters,
+        rec: &RunTrace,
+    ) {
+        use crate::obs::{EventKind, FRACTION_BUCKETS, NS_BUCKETS, PAGES_BUCKETS};
+        let demoted = rec.demoted_kswapd + rec.demoted_direct;
+        self.obs.count("engine_intervals_total", 1);
+        for (family, value) in counters.metric_families() {
+            self.obs.count(family, value);
+        }
+        self.obs
+            .observe("engine_interval_model_ns", NS_BUCKETS, rec.wall_ns);
+        self.obs
+            .observe("engine_promoted_per_interval", PAGES_BUCKETS, rec.promoted as f64);
+        self.obs
+            .observe("engine_demoted_per_interval", PAGES_BUCKETS, demoted as f64);
+        self.obs.observe(
+            "engine_fast_used_fraction",
+            FRACTION_BUCKETS,
+            rec.fast_used as f64 / fast_capacity.max(1) as f64,
+        );
+        self.obs.record(EventKind::Interval {
+            workload: workload.to_string(),
+            policy: policy.to_string(),
+            interval: rec.interval,
+            wall_ns: rec.wall_ns,
+            fast_used: rec.fast_used,
+            promoted: rec.promoted,
+            demoted,
+            txn_aborts: rec.txn_aborts,
+            shadow_free_demotions: rec.shadow_free_demotions,
+        });
     }
 }
 
@@ -730,6 +792,33 @@ mod tests {
             .run(&mut w, &mut tpp, cap, |_| None);
         assert!(res.total_txn_aborts() > 0, "random writes must race copies");
         assert!(res.total_txn_retried_copies() > 0, "hot pages retry the copy");
+    }
+
+    #[test]
+    fn obs_recording_does_not_perturb_and_counts_intervals() {
+        let run = |e: Engine| {
+            let mut w = Toy { rss: 2_000, hot: 400, left: 10, tick: 0 };
+            let cap = Engine::fm_capacity(2_000, 0.5);
+            let mut tpp = Tpp::new(Watermarks::default_for_capacity(cap));
+            e.run(&mut w, &mut tpp, cap, |_| None)
+        };
+        let a = run(engine());
+        let rec = crate::obs::Recorder::enabled(8);
+        let b = run(engine().with_obs(rec.clone()));
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits(), "obs must not perturb");
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.wall_ns.to_bits(), y.wall_ns.to_bits());
+            assert_eq!(x.promoted, y.promoted);
+            assert_eq!(x.fast_used, y.fast_used);
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.counter("engine_intervals_total"), 10);
+        assert!(snap.counter("mem_alloc_fast_total") > 0, "allocation epoch must count");
+        assert!(snap.hists.contains_key("engine_fast_used_fraction"));
+        assert!(snap.hists.contains_key("engine_promoted_per_interval"));
+        // a 10-interval run overflows the 8-slot ring: oldest dropped
+        assert!(rec.journal().dropped >= 2);
     }
 
     #[test]

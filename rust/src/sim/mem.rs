@@ -185,6 +185,38 @@ impl MigrationCounters {
     pub fn demoted_total(&self) -> u64 {
         self.demoted_kswapd + self.demoted_direct
     }
+
+    /// Metric-name/value view of every counter, consumed by the
+    /// observability layer's exposition. Exhaustive by construction
+    /// (the destructure has no `..`), so adding a counter field without
+    /// naming its metric family here is a compile error — transaction
+    /// outcomes can't silently drop out of the `mem_*` metrics.
+    pub fn metric_families(&self) -> [(&'static str, u64); 10] {
+        let MigrationCounters {
+            promoted,
+            promote_failed,
+            demoted_kswapd,
+            demoted_direct,
+            alloc_fast,
+            alloc_slow,
+            shadow_hits,
+            shadow_free_demotions,
+            txn_aborts,
+            txn_retried_copies,
+        } = *self;
+        [
+            ("mem_promoted_total", promoted),
+            ("mem_promote_failed_total", promote_failed),
+            ("mem_demoted_kswapd_total", demoted_kswapd),
+            ("mem_demoted_direct_total", demoted_direct),
+            ("mem_alloc_fast_total", alloc_fast),
+            ("mem_alloc_slow_total", alloc_slow),
+            ("mem_shadow_hits_total", shadow_hits),
+            ("mem_shadow_free_demotions_total", shadow_free_demotions),
+            ("mem_txn_aborts_total", txn_aborts),
+            ("mem_txn_retried_copies_total", txn_retried_copies),
+        ]
+    }
 }
 
 /// The two-tier physical memory state for one workload address space.
@@ -612,6 +644,30 @@ mod tests {
         assert_eq!(m.page(0).last_touch, 3);
         m.decay_windows();
         assert_eq!(m.page(0).window_count, 2);
+    }
+
+    #[test]
+    fn metric_families_cover_every_counter() {
+        let c = MigrationCounters {
+            promoted: 1,
+            promote_failed: 2,
+            demoted_kswapd: 3,
+            demoted_direct: 4,
+            alloc_fast: 5,
+            alloc_slow: 6,
+            shadow_hits: 7,
+            shadow_free_demotions: 8,
+            txn_aborts: 9,
+            txn_retried_copies: 10,
+        };
+        let fams = c.metric_families();
+        let total: u64 = fams.iter().map(|(_, v)| v).sum();
+        assert_eq!(total, 55, "every field must appear exactly once");
+        let mut names: Vec<&str> = fams.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 10, "metric family names must be unique");
+        assert!(names.iter().all(|n| n.starts_with("mem_") && n.ends_with("_total")));
     }
 
     #[test]

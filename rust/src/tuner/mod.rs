@@ -65,6 +65,10 @@ pub struct TunerState {
     pub decisions: Vec<Decision>,
     /// Total time spent in `decide` (query path), for the §Perf budget.
     pub decide_ns: u128,
+    /// Observability handle (disabled by default; see [`Self::set_obs`]).
+    /// Records decisions and skip diagnostics — never read back, so
+    /// decisions are bit-identical whether or not it is enabled.
+    obs: crate::obs::Recorder,
 }
 
 impl TunerState {
@@ -86,7 +90,14 @@ impl TunerState {
             current_fraction: 1.0,
             decisions: Vec::new(),
             decide_ns: 0,
+            obs: crate::obs::Recorder::default(),
         }
+    }
+
+    /// Attach an observability recorder (constructor signatures stay
+    /// unchanged; every existing call site keeps a disabled recorder).
+    pub fn set_obs(&mut self, obs: crate::obs::Recorder) {
+        self.obs = obs;
     }
 
     /// Profiling intervals per tuning period for this state's config.
@@ -139,8 +150,13 @@ impl TunerState {
                 // A lazy backend surfaces segment I/O or CRC failures
                 // here (first touch is at query time). One session's bad
                 // segment must not panic or wedge the shared service —
-                // skip the decision, name the cause.
-                eprintln!("warning: tuning decision skipped at interval {interval}: {e:#}");
+                // skip the decision, name the cause (counted in
+                // `obs_warn_total` when observability is on; the stderr
+                // line is emitted either way).
+                self.obs.warn(
+                    "tuner.decide",
+                    &format!("tuning decision skipped at interval {interval}: {e:#}"),
+                );
                 return None;
             }
         };
@@ -159,7 +175,10 @@ impl TunerState {
                 // fault). Skip the decision — the run continues at its
                 // current size — but say why, naming the segment: a
                 // silently undecided session is undebuggable.
-                eprintln!("warning: tuning decision skipped at interval {interval}: {e:#}");
+                self.obs.warn(
+                    "tuner.decide",
+                    &format!("tuning decision skipped at interval {interval}: {e:#}"),
+                );
                 return None;
             }
         };
@@ -182,7 +201,26 @@ impl TunerState {
             new_fm,
             predicted_loss,
         });
-        Some(Watermarks::for_target_fm(self.capacity, new_fm))
+        let wm = Watermarks::for_target_fm(self.capacity, new_fm);
+        if self.obs.is_enabled() {
+            use crate::obs::{EventKind, FRACTION_BUCKETS, LOSS_BUCKETS};
+            self.obs.count("tuner_decisions_total", 1);
+            self.obs
+                .observe("tuner_decision_fraction", FRACTION_BUCKETS, fraction);
+            self.obs
+                .observe("tuner_predicted_loss", LOSS_BUCKETS, predicted_loss);
+            self.obs.record(EventKind::Decision {
+                interval,
+                record: record as u64,
+                dist,
+                fraction,
+                new_fm,
+                predicted_loss,
+                wm_low: wm.low,
+                wm_high: wm.high,
+            });
+        }
+        Some(wm)
     }
 
     /// Mean fast-memory fraction across all decisions (the "saving" is
@@ -231,6 +269,11 @@ impl Tuner {
             since_decision: 0,
             state: TunerState::new(db, cfg, capacity, rss_pages, hot_thr, threads),
         }
+    }
+
+    /// Attach an observability recorder to the underlying state.
+    pub fn set_obs(&mut self, obs: crate::obs::Recorder) {
+        self.state.set_obs(obs);
     }
 
     /// Engine observer: accumulate telemetry; on period boundaries take a
@@ -460,6 +503,38 @@ mod tests {
         assert!(tuner.mean_fraction() < 1.0);
         assert!(tuner.min_fraction() <= tuner.mean_fraction());
         assert!(tuner.decide_ns() > 0);
+    }
+
+    #[test]
+    fn obs_records_decisions_without_perturbing_them() {
+        let db = db();
+        let mut plain = mk_tuner(db.clone(), 0.5);
+        let mut observed = mk_tuner(db, 0.5);
+        let rec = crate::obs::Recorder::enabled(64);
+        observed.set_obs(rec.clone());
+        for i in 1..=20u32 {
+            let t = trace_like(i, 10_000, 500, 10_500 * 64 * 4);
+            plain.observe(&t);
+            observed.observe(&t);
+        }
+        assert_eq!(plain.decisions().len(), observed.decisions().len());
+        for (a, b) in plain.decisions().iter().zip(observed.decisions()) {
+            assert_eq!(a.fraction.to_bits(), b.fraction.to_bits());
+            assert_eq!(a.new_fm, b.new_fm);
+            assert_eq!(a.predicted_loss.to_bits(), b.predicted_loss.to_bits());
+        }
+        let j = rec.journal();
+        assert_eq!(j.metrics.counter("tuner_decisions_total"), 4);
+        let events: Vec<&crate::obs::Event> = j
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, crate::obs::EventKind::Decision { .. }))
+            .collect();
+        assert_eq!(events.len(), 4, "every decision must be journaled");
+        if let crate::obs::EventKind::Decision { new_fm, wm_low, wm_high, .. } = events[0].kind {
+            let wm = Watermarks::for_target_fm(8_200, new_fm);
+            assert_eq!((wm.low, wm.high), (wm_low, wm_high), "event carries chosen watermarks");
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ use tuna::coordinator::sweep::{
     run_sweep, run_sweep_with_cache, BaselineCache, SweepPolicy, SweepSpec,
 };
 use tuna::coordinator::{self, RunSpec};
+use tuna::obs::{EventKind, Journal, Recorder, DEFAULT_RING_CAPACITY};
 use tuna::perfdb::builder::{build_database, sample_config, BuildParams};
 use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
 use tuna::perfdb::{normalize, store, PerfDb};
@@ -452,8 +453,15 @@ fn corrupt_lazy_segment_skips_decisions_without_poisoning_sessions() {
 
     // open succeeds (CRC is deferred); sessions run to completion with
     // zero decisions rather than erroring out or hanging
-    let lazy = Arc::new(LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap());
-    let service = TunerService::spawn(lazy.clone(), Box::new(LazyShardedNn::new(lazy.clone(), 1)));
+    let obs = Recorder::enabled(256);
+    let mut lazy = LazyShardedPerfDb::open(&dir, ResidencyLimit::segments(1)).unwrap();
+    lazy.set_obs(obs.clone());
+    let lazy = Arc::new(lazy);
+    let service = TunerService::spawn_with_obs(
+        lazy.clone(),
+        Box::new(LazyShardedNn::new(lazy.clone(), 1)),
+        obs.clone(),
+    );
     let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
     for seed in [1u64, 2] {
         let spec = RunSpec::new("Btree").with_intervals(30).with_seed(seed);
@@ -461,6 +469,21 @@ fn corrupt_lazy_segment_skips_decisions_without_poisoning_sessions() {
         assert!(run.decisions.is_empty(), "seed {seed}: decisions over a corrupt database");
         assert_eq!(run.result.trace.len(), 30, "the run itself must complete");
     }
+    // every skipped decision is observable, not just an stderr line: the
+    // tuner warned once per skip and the journal carries the site
+    let snap = obs.snapshot();
+    assert!(
+        snap.counter("obs_warn_total") > 0,
+        "corruption must surface in obs_warn_total: {:?}",
+        snap.counters
+    );
+    assert!(
+        obs.journal()
+            .events
+            .iter()
+            .any(|e| matches!(&e.kind, EventKind::Warn { site, .. } if site == "tuner.decide")),
+        "the skip diagnostic must be journaled as a structured warn event"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -1312,4 +1335,169 @@ fn kv_workloads_flow_through_sweeps_unchanged() {
     let l90 = res.cell("kv-zipfian", SweepPolicy::Tpp, 0.9).unwrap().loss;
     let l70 = res.cell("kv-zipfian", SweepPolicy::Tpp, 0.7).unwrap().loss;
     assert!(l70 >= l90 - 0.01, "l70={l70} l90={l90}");
+}
+
+// ---------------------------------------------------------------------------
+// observability: bit-identity, journal durability, ring accounting
+// ---------------------------------------------------------------------------
+
+/// Acceptance (PR 7 hard invariant): enabling observability at ANY ring
+/// size changes nothing observable about a run. Decisions, the complete
+/// engine trace (via `run_digest`, every f64 by bit pattern) and the
+/// vmstat counters must be bit-identical to the obs-off run — for a
+/// Table-1 workload and a kv-* workload, under both migration models.
+#[test]
+fn obs_on_runs_are_bit_identical_to_obs_off() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    for (name, migration) in [
+        ("BFS", MigrationModel::Exclusive),
+        ("BFS", MigrationModel::non_exclusive_default()),
+        ("kv-drift", MigrationModel::Exclusive),
+        ("kv-drift", MigrationModel::non_exclusive_default()),
+    ] {
+        let spec = |obs: Recorder| {
+            RunSpec::new(name)
+                .with_intervals(40)
+                .with_seed(11)
+                .with_migration(migration)
+                .with_obs(obs)
+        };
+        let off =
+            coordinator::run_tuna_native(&spec(Recorder::disabled()), db.clone(), &cfg).unwrap();
+        assert!(!off.decisions.is_empty(), "{name}: reference run must decide");
+        for ring in [4usize, DEFAULT_RING_CAPACITY] {
+            let obs = Recorder::enabled(ring);
+            let on = coordinator::run_tuna_native(&spec(obs.clone()), db.clone(), &cfg).unwrap();
+            let ctx = format!("{name}/{migration:?}/ring {ring}");
+            assert_decisions_bit_identical(&off.decisions, &on.decisions, &ctx);
+            assert_eq!(
+                run_digest(&off.result),
+                run_digest(&on.result),
+                "{ctx}: engine trace must be bit-identical with obs on"
+            );
+            assert_eq!(off.vmstat, on.vmstat, "{ctx}: vmstat");
+            // ... while the recorder actually saw the run
+            let snap = obs.snapshot();
+            assert_eq!(
+                snap.counter("engine_intervals_total"),
+                on.result.trace.len() as u64,
+                "{ctx}: every interval must be counted"
+            );
+            assert_eq!(
+                snap.counter("tuner_decisions_total"),
+                on.decisions.len() as u64,
+                "{ctx}: every decision must be counted"
+            );
+        }
+    }
+}
+
+/// Observability must not perturb sweeps either: the persisted table of
+/// an instrumented sweep is byte-identical to the uninstrumented one,
+/// and every cell shows up as a counted, journaled sweep-cell event.
+#[test]
+fn obs_sweep_table_bytes_identical_on_and_off() {
+    let grid = |obs: Recorder| {
+        let spec = SweepSpec::new(["BFS", "kv-drift"])
+            .with_fractions([0.8, 0.6])
+            .with_policies([SweepPolicy::Tpp])
+            .with_intervals(20)
+            .with_threads(2)
+            .with_obs(obs);
+        run_sweep(&spec).unwrap()
+    };
+    let off = grid(Recorder::disabled());
+    let obs = Recorder::enabled(1024);
+    let on = grid(obs.clone());
+    assert_eq!(
+        SweepTable::from_sweep(&off).to_bytes(),
+        SweepTable::from_sweep(&on).to_bytes(),
+        "observability must not perturb sweep results"
+    );
+    let snap = obs.snapshot();
+    assert_eq!(snap.counter("sweep_cells_total"), on.len() as u64);
+    let journaled = obs
+        .journal()
+        .events
+        .iter()
+        .filter(|e| e.kind.name() == "sweep-cell")
+        .count();
+    assert_eq!(journaled, on.len(), "one journal event per sweep cell");
+}
+
+/// The `TUNAOBS1` journal artifact is durable and canonical: encode →
+/// decode → re-encode is byte-identical (so re-dumps are byte-stable),
+/// the file round-trips through the store, and corruption is detected.
+#[test]
+fn obs_journal_roundtrip_is_byte_stable() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+    let obs = Recorder::enabled(DEFAULT_RING_CAPACITY);
+    let spec = RunSpec::new("Btree").with_intervals(40).with_obs(obs.clone());
+    let run = coordinator::run_tuna_native(&spec, db, &cfg).unwrap();
+    assert!(!run.decisions.is_empty());
+    obs.warn("it.roundtrip", "synthetic warning for codec coverage");
+
+    let journal = obs.journal();
+    for phase in ["engine", "tuner", "warn"] {
+        assert!(
+            journal.events.iter().any(|e| e.kind.phase() == phase),
+            "a tuned run must journal {phase} events"
+        );
+    }
+
+    let bytes = journal.encode();
+    let back = Journal::decode(&bytes).unwrap();
+    assert_eq!(back, journal, "decode must reproduce the journal exactly");
+    assert_eq!(back.encode(), bytes, "re-encode must be byte-identical");
+
+    // ... and through the filesystem, as `--obs-journal` writes it
+    let dir = std::env::temp_dir().join(format!("tuna_it_obs_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("j.bin");
+    journal.save(&path).unwrap();
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        bytes,
+        "the file IS the canonical encoding"
+    );
+    let loaded = Journal::load(&path).unwrap();
+    assert_eq!(loaded, journal);
+
+    // flip one payload byte: the trailing CRC must reject the file
+    let mut bad = bytes.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0xFF;
+    let bad_path = dir.join("bad.bin");
+    std::fs::write(&bad_path, &bad).unwrap();
+    assert!(Journal::load(&bad_path).is_err(), "corrupt journal must be rejected");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A tiny ring keeps the newest events and accounts for every drop —
+/// in the journal's `dropped` field, in `obs_journal_dropped_total`,
+/// and across the `TUNAOBS1` round-trip.
+#[test]
+fn obs_ring_overflow_keeps_newest_and_counts_drops() {
+    let obs = Recorder::enabled(4);
+    for segment in 0..10u32 {
+        obs.record(EventKind::SegmentEvict { segment });
+    }
+    let j = obs.journal();
+    assert_eq!(j.events.len(), 4, "ring capacity bounds the journal");
+    assert_eq!(j.dropped, 6);
+    assert_eq!(j.metrics.counter("obs_journal_dropped_total"), 6);
+    let kept: Vec<u32> = j
+        .events
+        .iter()
+        .map(|e| match e.kind {
+            EventKind::SegmentEvict { segment } => segment,
+            _ => unreachable!("only evict events were recorded"),
+        })
+        .collect();
+    assert_eq!(kept, [6, 7, 8, 9], "the oldest events are dropped first");
+    let back = Journal::decode(&j.encode()).unwrap();
+    assert_eq!(back.dropped, 6, "the drop count survives the round-trip");
 }
