@@ -10,7 +10,11 @@
 //! (f) migration model: the engine-side cost of the Nomad-style
 //!     transactional machinery (shadow tracking, in-flight copies) —
 //!     exclusive and non-exclusive runs should stay within a few
-//!     percent of each other in simulation throughput.
+//!     percent of each other in simulation throughput;
+//! (g) migration admission control: gated vs ungated TPP on the
+//!     drifting-hot-set workload — the gate's budget/payoff/cool-down
+//!     filters should cut migration traffic (and its loss) where
+//!     ping-pong promotion is the failure mode.
 
 use std::path::Path;
 use std::time::Instant;
@@ -172,5 +176,30 @@ fn main() -> tuna::Result<()> {
         (walls[1] as f64 / walls[0] as f64 - 1.0) * 100.0
     );
     t_f.to_csv(&results_dir().join("ablation_migration.csv"))?;
+
+    // --- (g) migration admission control: gated vs ungated drift ---
+    let mut t_g = Table::new(
+        "(g) admission control (kv-drift @ 60% FM): gated vs ungated promotion",
+        &["policy", "loss", "promotions", "failures", "accepted", "rej budget", "rej payoff", "rej cooldown"],
+    );
+    let spec = RunSpec::new("kv-drift").with_intervals(200).with_fraction(0.6);
+    let base = coordinator::run_fm_only(&spec)?;
+    for (name, run) in [
+        ("tpp (ungated)", coordinator::run_tpp(&spec)?),
+        ("tpp-gated", coordinator::run_tpp_gated(&spec)?),
+    ] {
+        t_g.row(vec![
+            name.to_string(),
+            pct(coordinator::overall_loss(&run, &base)),
+            run.total_promoted().to_string(),
+            run.total_promote_failed().to_string(),
+            run.total_admission_accepted().to_string(),
+            run.total_admission_rejected_budget().to_string(),
+            run.total_admission_rejected_payoff().to_string(),
+            run.total_admission_rejected_cooldown().to_string(),
+        ]);
+    }
+    t_g.print();
+    t_g.to_csv(&results_dir().join("ablation_admission.csv"))?;
     Ok(())
 }

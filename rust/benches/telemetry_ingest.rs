@@ -51,6 +51,10 @@ fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
         shadow_free_demotions: 5,
         txn_aborts: 2,
         txn_retried_copies: 1,
+        admission_accepted: 20,
+        admission_rejected_budget: 2,
+        admission_rejected_payoff: 3,
+        admission_rejected_cooldown: salt % 8,
         fast_free: 180,
     }
 }

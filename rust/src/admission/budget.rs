@@ -1,0 +1,114 @@
+//! The per-interval migration bandwidth ledger.
+//!
+//! Budget is denominated in *pages of copy traffic per interval* — the
+//! unit every charge site shares: a promotion copy is one page, a
+//! copying (non-shadow) demotion is one page, and each retried
+//! transactional copy in the non-exclusive model re-moves one page.
+//! Free shadow demotions move no bytes and are never charged.
+
+/// Tracks copy-traffic pages charged against a per-interval budget.
+///
+/// `budget_pages == 0` means unlimited: nothing is ever refused and the
+/// ledger resets every interval. Otherwise spending above the budget —
+/// possible because some traffic cannot be refused (kswapd demotions
+/// under watermark pressure, forced transactional retries) — carries
+/// over as *debt*: the next interval starts with
+/// `spent - budget_pages` already consumed, so sustained overspend
+/// throttles future admissions instead of being forgotten.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BudgetLedger {
+    budget_pages: u64,
+    spent: u64,
+}
+
+impl BudgetLedger {
+    pub fn new(budget_pages: u64) -> Self {
+        BudgetLedger { budget_pages, spent: 0 }
+    }
+
+    /// Per-interval budget in pages (0 = unlimited).
+    pub fn budget_pages(&self) -> u64 {
+        self.budget_pages
+    }
+
+    /// Copy-traffic pages charged so far this interval (plus any debt
+    /// carried from previous intervals).
+    pub fn spent(&self) -> u64 {
+        self.spent
+    }
+
+    /// Pages still admissible this interval (`u64::MAX` when unlimited).
+    pub fn remaining(&self) -> u64 {
+        if self.budget_pages == 0 {
+            return u64::MAX;
+        }
+        self.budget_pages.saturating_sub(self.spent)
+    }
+
+    /// Start a new interval: grant one budget's worth of allowance,
+    /// keeping any overspend beyond it as carried debt.
+    pub fn begin_interval(&mut self) {
+        if self.budget_pages == 0 {
+            self.spent = 0;
+        } else {
+            self.spent = self.spent.saturating_sub(self.budget_pages);
+        }
+    }
+
+    /// Would charging `pages` more exceed the budget?
+    pub fn would_exceed(&self, pages: u64) -> bool {
+        self.budget_pages != 0 && self.spent.saturating_add(pages) > self.budget_pages
+    }
+
+    /// Charge `pages` of copy traffic (unconditionally — callers that
+    /// can refuse the traffic check [`Self::would_exceed`] first;
+    /// traffic that cannot be refused is charged regardless and becomes
+    /// carried debt).
+    pub fn charge(&mut self, pages: u64) {
+        self.spent = self.spent.saturating_add(pages);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_budget_is_unlimited() {
+        let mut l = BudgetLedger::new(0);
+        l.charge(1_000_000);
+        assert!(!l.would_exceed(u64::MAX / 2));
+        assert_eq!(l.remaining(), u64::MAX);
+        l.begin_interval();
+        assert_eq!(l.spent(), 0, "unlimited ledger resets each interval");
+    }
+
+    #[test]
+    fn budget_refuses_at_the_boundary() {
+        let mut l = BudgetLedger::new(4);
+        assert!(!l.would_exceed(4), "exactly the budget is admissible");
+        assert!(l.would_exceed(5));
+        l.charge(3);
+        assert_eq!(l.remaining(), 1);
+        assert!(!l.would_exceed(1));
+        assert!(l.would_exceed(2));
+        l.charge(1);
+        assert!(l.would_exceed(1), "budget exactly exhausted");
+        assert_eq!(l.remaining(), 0);
+    }
+
+    #[test]
+    fn overspend_carries_over_as_debt() {
+        let mut l = BudgetLedger::new(4);
+        l.charge(10); // unrefusable traffic: 6 pages over budget
+        l.begin_interval();
+        assert_eq!(l.spent(), 6, "debt carries into the next interval");
+        assert_eq!(l.remaining(), 0);
+        assert!(l.would_exceed(1));
+        l.begin_interval();
+        assert_eq!(l.spent(), 2);
+        assert_eq!(l.remaining(), 2);
+        l.begin_interval();
+        assert_eq!(l.spent(), 0, "debt fully amortized");
+    }
+}

@@ -1,0 +1,44 @@
+//! Migration admission control: budgeted, payoff-gated promotion with
+//! thrashing resistance (TierBPF's admission control for page migration
+//! and Jenga's responsive-tiering-without-thrashing, both in PAPERS.md).
+//!
+//! The paper's core claim is that fast-memory sizing is governed by the
+//! *overhead* of page migration — yet a stock TPP loop promotes anything
+//! that crosses `hot_thr` with no notion of migration bandwidth or
+//! payoff, so under drifting hot sets the model overstates achievable
+//! savings. This subsystem puts three independent filters in front of
+//! every promotion the policy would otherwise issue:
+//!
+//! 1. **Bandwidth budget** ([`BudgetLedger`]): a per-interval allowance
+//!    of migration copy traffic in pages, charged for promotion copies,
+//!    copying demotions, and the non-exclusive model's retried
+//!    transactional copies. Overspend (traffic the gate could not
+//!    refuse, e.g. forced retries) carries over as debt into the next
+//!    interval's allowance.
+//! 2. **Payoff predicate**: a candidate is admitted only when its
+//!    predicted fast-tier hits over a residency horizon — estimated
+//!    from the page's decayed window access count — exceed the copy
+//!    cost of moving it, measured in access-equivalents
+//!    ([`policy::COPY_COST_ACCESSES`]).
+//! 3. **Cool-down filter**: a per-page last-demoted stamp; candidates
+//!    demoted less than `cooldown_intervals` ago are rejected outright
+//!    as ping-pong traffic, before payoff or budget are even consulted.
+//!
+//! The gate **observes and vetoes, never initiates**: victim selection,
+//! watermarks and reclaim order stay exactly TPP's ([`crate::tpp::Tpp`]
+//! carries an optional [`AdmissionGate`]; `None` is bit-identical to the
+//! pre-admission policy). The `tpp-gated` policy
+//! ([`crate::tpp::TppGated`]) is TPP with the gate always installed.
+//!
+//! Every verdict is counted in
+//! [`crate::sim::mem::MigrationCounters`]'s four
+//! `admission_{accepted,rejected_budget,rejected_payoff,
+//! rejected_cooldown}` counters, which flow end-to-end through
+//! telemetry vmstat, service ingest, the obs metric families/journal
+//! events and the artifact cell tables.
+
+pub mod budget;
+pub mod policy;
+
+pub use budget::BudgetLedger;
+pub use policy::{AdmissionConfig, AdmissionGate, Verdict};

@@ -1,0 +1,352 @@
+//! The admission predicate: configuration, per-candidate verdicts, and
+//! the [`AdmissionGate`] state machine the TPP promotion pass consults.
+
+use super::budget::BudgetLedger;
+use crate::PageId;
+
+/// Copy cost of migrating one page, in access-equivalents: the number
+/// of fast-tier line accesses a page copy is worth
+/// (`PAGE_BYTES / LINE_BYTES`). A candidate must predict strictly more
+/// fast-tier hits than this over its residency horizon to be worth
+/// moving.
+pub const COPY_COST_ACCESSES: u64 = crate::PAGE_BYTES / crate::LINE_BYTES;
+
+/// Admission-control configuration (the `[admission]` config table and
+/// the `--admission/--mig-budget/--cooldown/--horizon` CLI flags).
+///
+/// All-integer so the config can be hashed into artifact keys and sweep
+/// fingerprints exactly, like [`crate::sim::mem::MigrationModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AdmissionConfig {
+    /// Master switch. Disabled (the default) is a true no-op: no gate
+    /// is installed and every run is bit-identical to the
+    /// pre-admission engine.
+    pub enabled: bool,
+    /// Per-interval migration budget in pages of copy traffic
+    /// (0 = unlimited). Sized against the machine model's migration
+    /// throughput knobs (`kswapd_pages_per_interval` 32,
+    /// `promote_scan_pages_per_interval` 384): 128 admits a healthy
+    /// promotion stream but caps mass re-promotion after a hot-set
+    /// shift.
+    pub budget_pages: u64,
+    /// Intervals a demoted page stays rejected as a ping-pong
+    /// candidate.
+    pub cooldown_intervals: u32,
+    /// Residency horizon (intervals) over which predicted fast-tier
+    /// hits are credited against the copy cost (clamped to ≥ 1).
+    pub horizon_intervals: u32,
+}
+
+impl Default for AdmissionConfig {
+    /// Admission control *off* — the configuration every pre-admission
+    /// code path implicitly ran with.
+    fn default() -> Self {
+        AdmissionConfig {
+            enabled: false,
+            budget_pages: Self::DEFAULT_BUDGET_PAGES,
+            cooldown_intervals: Self::DEFAULT_COOLDOWN_INTERVALS,
+            horizon_intervals: Self::DEFAULT_HORIZON_INTERVALS,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub const DEFAULT_BUDGET_PAGES: u64 = 128;
+    pub const DEFAULT_COOLDOWN_INTERVALS: u32 = 16;
+    pub const DEFAULT_HORIZON_INTERVALS: u32 = 32;
+
+    /// The `tpp-gated` policy's built-in configuration: defaults, on.
+    pub fn enabled_default() -> Self {
+        AdmissionConfig { enabled: true, ..AdmissionConfig::default() }
+    }
+
+    /// Parse a CLI/config mode string; the numeric knobs apply in
+    /// either mode (so a later `--admission on` layer can enable a
+    /// fully-specified config).
+    pub fn parse(
+        mode: &str,
+        budget_pages: u64,
+        cooldown_intervals: u32,
+        horizon_intervals: u32,
+    ) -> Result<Self, String> {
+        let enabled = match mode.trim().to_ascii_lowercase().as_str() {
+            "on" | "enabled" | "gated" | "true" => true,
+            "off" | "disabled" | "false" => false,
+            other => {
+                return Err(format!("unknown admission mode `{other}` (valid: on, off)"));
+            }
+        };
+        Ok(AdmissionConfig {
+            enabled,
+            budget_pages,
+            cooldown_intervals,
+            horizon_intervals: horizon_intervals.max(1),
+        })
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        if self.enabled {
+            "on"
+        } else {
+            "off"
+        }
+    }
+
+    /// Stable (enabled, budget, cooldown, horizon) tuple for artifact
+    /// keys and fingerprints (extend, never renumber).
+    pub fn key(&self) -> (u8, u64, u32, u32) {
+        (
+            self.enabled as u8,
+            self.budget_pages,
+            self.cooldown_intervals,
+            self.horizon_intervals,
+        )
+    }
+
+    /// Inverse of [`Self::key`].
+    pub fn from_key(enabled: u8, budget: u64, cooldown: u32, horizon: u32) -> Self {
+        AdmissionConfig {
+            enabled: enabled != 0,
+            budget_pages: budget,
+            cooldown_intervals: cooldown,
+            horizon_intervals: horizon.max(1),
+        }
+    }
+
+    /// Predicted fast-tier hits over the residency horizon for a page
+    /// with decayed window count `window_count`.
+    ///
+    /// The window counter halves every interval
+    /// ([`crate::sim::mem::TieredMemory::decay_windows`]), so a page
+    /// sustaining `r` accesses/interval settles at a decayed count of
+    /// `≈ 2r`; `window_count / 2` is therefore the maximum-likelihood
+    /// per-interval rate, and hits over the horizon are
+    /// `window_count × horizon / 2`.
+    pub fn predicted_hits(&self, window_count: u32) -> u64 {
+        (window_count as u64).saturating_mul(self.horizon_intervals as u64) / 2
+    }
+}
+
+/// One candidate's admission verdict. The rejection order is fixed:
+/// cool-down first (ping-pong traffic is refused before it can consume
+/// payoff analysis or budget), then payoff, then budget — so a budget
+/// rejection always means "worth moving, bandwidth exhausted".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Accept,
+    RejectBudget,
+    RejectPayoff,
+    RejectCooldown,
+}
+
+/// The per-run admission state: the configured predicate, the budget
+/// ledger, and the per-page last-demoted stamps the cool-down filter
+/// reads. Owned by the policy ([`crate::tpp::Tpp`]) so sweeps' parallel
+/// cells never share gate state.
+#[derive(Clone, Debug)]
+pub struct AdmissionGate {
+    cfg: AdmissionConfig,
+    ledger: BudgetLedger,
+    /// Per-page stamp: interval of the last demotion **plus one**
+    /// (0 = never demoted). Grown lazily to the highest demoted page id.
+    last_demoted: Vec<u32>,
+}
+
+impl AdmissionGate {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionGate {
+            ledger: BudgetLedger::new(cfg.budget_pages),
+            cfg,
+            last_demoted: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.cfg
+    }
+
+    /// Copy-traffic pages charged so far this interval (incl. debt).
+    pub fn spent(&self) -> u64 {
+        self.ledger.spent()
+    }
+
+    /// Open a new interval: refresh the budget allowance (carrying any
+    /// overspend as debt) and charge `carried_copy_pages` of traffic
+    /// the gate never saw at admit time — the non-exclusive model's
+    /// retried transactional copies.
+    pub fn begin_interval(&mut self, carried_copy_pages: u64) {
+        self.ledger.begin_interval();
+        self.ledger.charge(carried_copy_pages);
+    }
+
+    /// Judge one promotion candidate. An [`Verdict::Accept`] charges
+    /// one page of copy traffic to the budget; rejections charge
+    /// nothing and deliberately leave the page's window history intact
+    /// (the benefit signal must survive for the next interval's
+    /// attempt).
+    pub fn admit(&mut self, id: PageId, window_count: u32, now: u32) -> Verdict {
+        let stamp = self.last_demoted.get(id as usize).copied().unwrap_or(0);
+        if stamp != 0 {
+            let demoted_at = stamp - 1;
+            if now.saturating_sub(demoted_at) < self.cfg.cooldown_intervals {
+                return Verdict::RejectCooldown;
+            }
+        }
+        if self.cfg.predicted_hits(window_count) <= COPY_COST_ACCESSES {
+            return Verdict::RejectPayoff;
+        }
+        if self.ledger.would_exceed(1) {
+            return Verdict::RejectBudget;
+        }
+        self.ledger.charge(1);
+        Verdict::Accept
+    }
+
+    /// Record a demotion: stamp the page for the cool-down filter and,
+    /// when the demotion actually copied data (`copied` — false for
+    /// free shadow unmaps), charge one page of copy traffic.
+    pub fn note_demotion(&mut self, id: PageId, now: u32, copied: bool) {
+        let idx = id as usize;
+        if self.last_demoted.len() <= idx {
+            self.last_demoted.resize(idx + 1, 0);
+        }
+        self.last_demoted[idx] = now + 1;
+        if copied {
+            self.ledger.charge(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(cfg: AdmissionConfig) -> AdmissionGate {
+        let mut g = AdmissionGate::new(cfg);
+        g.begin_interval(0);
+        g
+    }
+
+    #[test]
+    fn parse_modes_and_key_roundtrip() {
+        for mode in ["on", "enabled", "gated", "true", " ON "] {
+            assert!(AdmissionConfig::parse(mode, 1, 2, 3).unwrap().enabled, "{mode}");
+        }
+        for mode in ["off", "disabled", "false"] {
+            assert!(!AdmissionConfig::parse(mode, 1, 2, 3).unwrap().enabled, "{mode}");
+        }
+        assert!(AdmissionConfig::parse("bogus", 1, 2, 3).is_err());
+        assert_eq!(
+            AdmissionConfig::parse("on", 1, 2, 0).unwrap().horizon_intervals,
+            1,
+            "horizon must clamp to >= 1"
+        );
+        for cfg in [
+            AdmissionConfig::default(),
+            AdmissionConfig::enabled_default(),
+            AdmissionConfig { enabled: true, budget_pages: 0, cooldown_intervals: 7, horizon_intervals: 9 },
+        ] {
+            let (e, b, c, h) = cfg.key();
+            assert_eq!(AdmissionConfig::from_key(e, b, c, h), cfg);
+        }
+    }
+
+    #[test]
+    fn default_is_disabled_and_enabled_default_differs_only_in_the_switch() {
+        let off = AdmissionConfig::default();
+        let on = AdmissionConfig::enabled_default();
+        assert!(!off.enabled && on.enabled);
+        assert_eq!(off.budget_pages, on.budget_pages);
+        assert_eq!(off.cooldown_intervals, on.cooldown_intervals);
+        assert_eq!(off.horizon_intervals, on.horizon_intervals);
+    }
+
+    #[test]
+    fn payoff_boundary_is_strict() {
+        // horizon 32: predicted hits = w * 16; copy cost = 64.
+        assert_eq!(COPY_COST_ACCESSES, 64);
+        let mut g = gate(AdmissionConfig::enabled_default());
+        // w = 4 ⇒ 64 hits = cost exactly: not strictly more, rejected
+        assert_eq!(g.admit(0, 4, 100), Verdict::RejectPayoff);
+        // w = 5 ⇒ 80 hits > 64: admitted
+        assert_eq!(g.admit(0, 5, 100), Verdict::Accept);
+        // marginal TPP candidates (hot_thr 2) are exactly what the
+        // payoff filter exists to refuse
+        assert_eq!(g.admit(1, 2, 100), Verdict::RejectPayoff);
+    }
+
+    #[test]
+    fn budget_exhaustion_rejects_then_recovers_next_interval() {
+        let cfg = AdmissionConfig {
+            enabled: true,
+            budget_pages: 2,
+            cooldown_intervals: 4,
+            horizon_intervals: 32,
+        };
+        let mut g = gate(cfg);
+        assert_eq!(g.admit(0, 16, 10), Verdict::Accept);
+        assert_eq!(g.admit(1, 16, 10), Verdict::Accept);
+        assert_eq!(g.admit(2, 16, 10), Verdict::RejectBudget);
+        assert_eq!(g.spent(), 2, "rejections charge nothing");
+        g.begin_interval(0);
+        assert_eq!(g.admit(2, 16, 11), Verdict::Accept);
+    }
+
+    #[test]
+    fn carried_copies_and_copying_demotions_consume_the_budget() {
+        let cfg = AdmissionConfig {
+            enabled: true,
+            budget_pages: 3,
+            cooldown_intervals: 4,
+            horizon_intervals: 32,
+        };
+        let mut g = AdmissionGate::new(cfg);
+        // two retried transactional copies charged up front
+        g.begin_interval(2);
+        assert_eq!(g.spent(), 2);
+        // a copying demotion spends the last page...
+        g.note_demotion(9, 5, true);
+        assert_eq!(g.admit(0, 16, 5), Verdict::RejectBudget);
+        // ...while a free shadow unmap costs nothing
+        let mut g2 = AdmissionGate::new(cfg);
+        g2.begin_interval(2);
+        g2.note_demotion(9, 5, false);
+        assert_eq!(g2.admit(0, 16, 5), Verdict::Accept);
+    }
+
+    #[test]
+    fn cooldown_rejects_until_exactly_the_configured_age() {
+        let cfg = AdmissionConfig {
+            enabled: true,
+            budget_pages: 0,
+            cooldown_intervals: 16,
+            horizon_intervals: 32,
+        };
+        let mut g = gate(cfg);
+        g.note_demotion(7, 10, true);
+        assert_eq!(g.admit(7, 32, 10), Verdict::RejectCooldown, "same interval");
+        assert_eq!(g.admit(7, 32, 25), Verdict::RejectCooldown, "15 < 16 intervals");
+        assert_eq!(g.admit(7, 32, 26), Verdict::Accept, "cool-down served");
+        // pages never demoted are unaffected, including id 0 (the stamp
+        // encoding reserves 0 for "never")
+        assert_eq!(g.admit(0, 32, 10), Verdict::Accept);
+    }
+
+    #[test]
+    fn cooldown_outranks_payoff_and_budget() {
+        let cfg = AdmissionConfig {
+            enabled: true,
+            budget_pages: 1,
+            cooldown_intervals: 8,
+            horizon_intervals: 32,
+        };
+        let mut g = gate(cfg);
+        g.note_demotion(3, 4, true); // also exhausts the 1-page budget
+        // cold AND over budget AND cooling down ⇒ the cool-down verdict
+        // wins (ping-pong is refused before anything else is consulted)
+        assert_eq!(g.admit(3, 1, 5), Verdict::RejectCooldown);
+        // payoff outranks budget for non-cooling candidates
+        assert_eq!(g.admit(4, 1, 5), Verdict::RejectPayoff);
+        assert_eq!(g.admit(5, 32, 5), Verdict::RejectBudget);
+    }
+}

@@ -128,6 +128,10 @@ fn put_trace(out: &mut Vec<u8>, t: &RunTrace) {
     wire::put_u64(out, t.shadow_free_demotions);
     wire::put_u64(out, t.txn_aborts);
     wire::put_u64(out, t.txn_retried_copies);
+    wire::put_u64(out, t.admission_accepted);
+    wire::put_u64(out, t.admission_rejected_budget);
+    wire::put_u64(out, t.admission_rejected_payoff);
+    wire::put_u64(out, t.admission_rejected_cooldown);
     wire::put_u64(out, t.fast_used);
     wire::put_u64(out, t.fast_free);
     wire::put_u64(out, t.usable_fm);
@@ -159,6 +163,10 @@ fn take_trace(r: &mut Reader<'_>) -> Result<RunTrace> {
         shadow_free_demotions: r.u64()?,
         txn_aborts: r.u64()?,
         txn_retried_copies: r.u64()?,
+        admission_accepted: r.u64()?,
+        admission_rejected_budget: r.u64()?,
+        admission_rejected_payoff: r.u64()?,
+        admission_rejected_cooldown: r.u64()?,
         fast_used: r.u64()?,
         fast_free: r.u64()?,
         usable_fm: r.u64()?,
@@ -395,6 +403,10 @@ mod tests {
             shadow_free_demotions: 4,
             txn_aborts: 2,
             txn_retried_copies: 1,
+            admission_accepted: 6 + i as u64,
+            admission_rejected_budget: 3,
+            admission_rejected_payoff: 8,
+            admission_rejected_cooldown: 2,
             fast_used: 800,
             fast_free: 200,
             usable_fm: 950,
@@ -433,6 +445,10 @@ mod tests {
             assert_eq!(x.shadow_free_demotions, y.shadow_free_demotions);
             assert_eq!(x.txn_aborts, y.txn_aborts);
             assert_eq!(x.txn_retried_copies, y.txn_retried_copies);
+            assert_eq!(x.admission_accepted, y.admission_accepted);
+            assert_eq!(x.admission_rejected_budget, y.admission_rejected_budget);
+            assert_eq!(x.admission_rejected_payoff, y.admission_rejected_payoff);
+            assert_eq!(x.admission_rejected_cooldown, y.admission_rejected_cooldown);
             assert_eq!(x.usable_fm, y.usable_fm);
             assert_eq!(x.outcome.bound, y.outcome.bound);
             assert_eq!(x.outcome.wall_ns.to_bits(), y.outcome.wall_ns.to_bits());

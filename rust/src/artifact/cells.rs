@@ -25,6 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use super::wire::{self, Reader};
 use super::write_atomic;
+use crate::admission::AdmissionConfig;
 use crate::coordinator::sweep::{SweepPolicy, SweepResult};
 use crate::perfdb::store::crc32;
 use crate::sim::MigrationModel;
@@ -64,6 +65,17 @@ pub struct CellRow {
     pub shadow_free_demotions: u64,
     pub txn_aborts: u64,
     pub txn_retried_copies: u64,
+    /// Admission-control knobs the cell ran under. Serialized as a second
+    /// trailing block *only* when enabled (or when a verdict counter is
+    /// nonzero), so tables of ungated cells keep their existing byte
+    /// layout exactly (and old tables load with admission disabled + zero
+    /// counters). Writing this block forces the migration block too —
+    /// the trailing blocks are positional.
+    pub admission: AdmissionConfig,
+    pub admission_accepted: u64,
+    pub admission_rejected_budget: u64,
+    pub admission_rejected_payoff: u64,
+    pub admission_rejected_cooldown: u64,
     pub tuna: Option<TunaRowStats>,
 }
 
@@ -74,7 +86,7 @@ impl CellRow {
 
     /// Identity of the grid cell this row measures (everything except the
     /// measured outputs), used to match rows across tables.
-    pub fn key(&self) -> (String, u8, u64, u32, u64, (u8, u8, u32)) {
+    pub fn key(&self) -> (String, u8, u64, u32, u64, (u8, u8, u32), (u8, u64, u32, u32)) {
         (
             self.workload.to_ascii_lowercase(),
             self.policy.code(),
@@ -82,6 +94,7 @@ impl CellRow {
             self.hot_thr,
             self.fm_fraction.to_bits(),
             self.migration.key(),
+            self.admission.key(),
         )
     }
 
@@ -116,7 +129,14 @@ impl CellRow {
             + self.shadow_free_demotions
             + self.txn_aborts
             + self.txn_retried_copies;
-        if !self.migration.is_exclusive() || counters > 0 {
+        let adm_counters = self.admission_accepted
+            + self.admission_rejected_budget
+            + self.admission_rejected_payoff
+            + self.admission_rejected_cooldown;
+        // the admission block is positional (it follows the migration
+        // block), so writing it forces the migration block too
+        let write_admission = self.admission.enabled || adm_counters > 0;
+        if !self.migration.is_exclusive() || counters > 0 || write_admission {
             let (mode, abort, copy) = self.migration.key();
             wire::put_u8(&mut out, mode);
             wire::put_u8(&mut out, abort);
@@ -125,6 +145,17 @@ impl CellRow {
             wire::put_u64(&mut out, self.shadow_free_demotions);
             wire::put_u64(&mut out, self.txn_aborts);
             wire::put_u64(&mut out, self.txn_retried_copies);
+        }
+        if write_admission {
+            let (enabled, budget, cooldown, horizon) = self.admission.key();
+            wire::put_u8(&mut out, enabled);
+            wire::put_u64(&mut out, budget);
+            wire::put_u32(&mut out, cooldown);
+            wire::put_u32(&mut out, horizon);
+            wire::put_u64(&mut out, self.admission_accepted);
+            wire::put_u64(&mut out, self.admission_rejected_budget);
+            wire::put_u64(&mut out, self.admission_rejected_payoff);
+            wire::put_u64(&mut out, self.admission_rejected_cooldown);
         }
         out
     }
@@ -163,6 +194,19 @@ impl CellRow {
         } else {
             (MigrationModel::Exclusive, (0, 0, 0, 0))
         };
+        // absent second trailing block (old tables, ungated rows) →
+        // admission disabled with zero verdict counters
+        let (admission, adm) = if r.remaining() > 0 {
+            let enabled = r.u8()?;
+            let budget = r.u64()?;
+            let cooldown = r.u32()?;
+            let horizon = r.u32()?;
+            let a = AdmissionConfig::from_key(enabled, budget, cooldown, horizon)
+                .map_err(|e| anyhow::anyhow!("{e} in cell row"))?;
+            (a, (r.u64()?, r.u64()?, r.u64()?, r.u64()?))
+        } else {
+            (AdmissionConfig::default(), (0, 0, 0, 0))
+        };
         r.done()?;
         Ok(CellRow {
             workload,
@@ -181,6 +225,11 @@ impl CellRow {
             shadow_free_demotions: shadow.1,
             txn_aborts: shadow.2,
             txn_retried_copies: shadow.3,
+            admission,
+            admission_accepted: adm.0,
+            admission_rejected_budget: adm.1,
+            admission_rejected_payoff: adm.2,
+            admission_rejected_cooldown: adm.3,
             tuna,
         })
     }
@@ -216,6 +265,11 @@ impl SweepTable {
                 shadow_free_demotions: c.result.total_shadow_free_demotions(),
                 txn_aborts: c.result.total_txn_aborts(),
                 txn_retried_copies: c.result.total_txn_retried_copies(),
+                admission: c.spec.admission,
+                admission_accepted: c.result.total_admission_accepted(),
+                admission_rejected_budget: c.result.total_admission_rejected_budget(),
+                admission_rejected_payoff: c.result.total_admission_rejected_payoff(),
+                admission_rejected_cooldown: c.result.total_admission_rejected_cooldown(),
                 tuna: c.tuna.as_ref().map(|t| TunaRowStats {
                     decisions: t.decisions as u64,
                     mean_fraction: t.mean_fraction,
@@ -463,6 +517,11 @@ mod tests {
             shadow_free_demotions: 0,
             txn_aborts: 0,
             txn_retried_copies: 0,
+            admission: AdmissionConfig::default(),
+            admission_accepted: 0,
+            admission_rejected_budget: 0,
+            admission_rejected_payoff: 0,
+            admission_rejected_cooldown: 0,
             tuna: None,
         }
     }
@@ -508,6 +567,29 @@ mod tests {
         // under different semantics are different cells
         assert_ne!(back.rows[0].key(), back.rows[1].key());
         assert_eq!(back.rows[1].shadow_free_demotions, 678);
+    }
+
+    #[test]
+    fn gated_rows_roundtrip_and_key_on_admission() {
+        let mut gated = row("kv-drift", 0.6, 0.05);
+        gated.policy = SweepPolicy::TppGated;
+        gated.admission = AdmissionConfig::enabled_default();
+        gated.admission_accepted = 1_234;
+        gated.admission_rejected_budget = 56;
+        gated.admission_rejected_payoff = 789;
+        gated.admission_rejected_cooldown = 321;
+        let plain = row("kv-drift", 0.6, 0.07);
+        let t = SweepTable { rows: vec![plain, gated.clone()] };
+        let back = SweepTable::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(back, t);
+        // admission knobs are part of the cell identity
+        assert_ne!(back.rows[0].key(), back.rows[1].key());
+        assert_eq!(back.rows[1].admission_rejected_cooldown, 321);
+        // an exclusive-but-gated row still writes the (all-exclusive)
+        // migration block, because the admission block is positional
+        let solo = CellRow::from_payload(&gated.to_payload()).unwrap();
+        assert_eq!(solo, gated);
+        assert_eq!(solo.migration, MigrationModel::Exclusive);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use super::parse::ConfigDoc;
+use crate::admission::AdmissionConfig;
 use crate::sim::machine::MachineModel;
 use crate::sim::mem::MigrationModel;
 
@@ -66,6 +67,10 @@ pub struct ExperimentConfig {
     /// `abort_on_write`, `copy_intervals`). Default exclusive — defers
     /// to each policy's own model.
     pub migration: MigrationModel,
+    /// Migration admission control (`[admission]` table: `mode`,
+    /// `budget_pages`, `cooldown_intervals`, `horizon_intervals`).
+    /// Default disabled — no gate, pre-admission behaviour bit-for-bit.
+    pub admission: AdmissionConfig,
     pub tuna: TunaConfig,
     /// Path to the performance database (binary, built offline).
     pub perfdb_path: String,
@@ -83,6 +88,7 @@ impl Default for ExperimentConfig {
             hot_thr: 2,
             seed: 42,
             migration: MigrationModel::Exclusive,
+            admission: AdmissionConfig::default(),
             tuna: TunaConfig::default(),
             perfdb_path: "artifacts/perfdb.bin".to_string(),
             hlo_path: "artifacts/perfdb_query.hlo.txt".to_string(),
@@ -137,6 +143,26 @@ impl ExperimentConfig {
         )
         .map_err(|e| anyhow::anyhow!("[migration] {e}"))?;
 
+        let admission = AdmissionConfig::parse(
+            doc.str_or("admission", "mode", "off"),
+            doc.i64_or(
+                "admission",
+                "budget_pages",
+                AdmissionConfig::DEFAULT_BUDGET_PAGES as i64,
+            ) as u64,
+            doc.i64_or(
+                "admission",
+                "cooldown_intervals",
+                AdmissionConfig::DEFAULT_COOLDOWN_INTERVALS as i64,
+            ) as u32,
+            doc.i64_or(
+                "admission",
+                "horizon_intervals",
+                AdmissionConfig::DEFAULT_HORIZON_INTERVALS as i64,
+            ) as u32,
+        )
+        .map_err(|e| anyhow::anyhow!("[admission] {e}"))?;
+
         Ok(ExperimentConfig {
             machine,
             workload: doc.str_or("workload", "name", &d.workload).to_string(),
@@ -145,6 +171,7 @@ impl ExperimentConfig {
             hot_thr: doc.i64_or("tpp", "hot_thr", d.hot_thr as i64) as u32,
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
             migration,
+            admission,
             tuna,
             perfdb_path: doc.str_or("paths", "perfdb", &d.perfdb_path).to_string(),
             hlo_path: doc.str_or("paths", "hlo", &d.hlo_path).to_string(),
@@ -208,6 +235,7 @@ mod tests {
         assert!(ExperimentConfig::from_str("[tuna]\nperiod_s = -1.0\n").is_err());
         assert!(ExperimentConfig::from_str("[machine]\ncores = 0\n").is_err());
         assert!(ExperimentConfig::from_str("[migration]\nmode = \"bogus\"\n").is_err());
+        assert!(ExperimentConfig::from_str("[admission]\nmode = \"bogus\"\n").is_err());
     }
 
     #[test]
@@ -237,5 +265,47 @@ mod tests {
             c.migration,
             MigrationModel::NonExclusive { abort_on_write: false, copy_intervals: 3 }
         );
+    }
+
+    #[test]
+    fn admission_table_parses_and_defaults_to_disabled() {
+        let c = ExperimentConfig::from_str("").unwrap();
+        assert_eq!(c.admission, AdmissionConfig::default());
+        assert!(!c.admission.enabled);
+
+        let c = ExperimentConfig::from_str(
+            r#"
+            [admission]
+            mode = "on"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.admission, AdmissionConfig::enabled_default());
+
+        let c = ExperimentConfig::from_str(
+            r#"
+            [admission]
+            mode = "gated"
+            budget_pages = 64
+            cooldown_intervals = 8
+            horizon_intervals = 16
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.admission,
+            AdmissionConfig {
+                enabled: true,
+                budget_pages: 64,
+                cooldown_intervals: 8,
+                horizon_intervals: 16,
+            }
+        );
+
+        // numeric knobs survive even in off mode, ready for a CLI
+        // `--admission on` layered on top of the config file
+        let c = ExperimentConfig::from_str("[admission]\nbudget_pages = 9\n").unwrap();
+        assert!(!c.admission.enabled);
+        assert_eq!(c.admission.budget_pages, 9);
     }
 }

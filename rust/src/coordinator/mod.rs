@@ -18,12 +18,13 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::admission::AdmissionConfig;
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::{NativeNn, NnQuery};
 use crate::perfdb::{PerfDb, PerfSource};
 use crate::service::{Event, SessionSpec, TunerService};
 use crate::sim::{Engine, IntervalModel, MachineModel, MigrationModel, RunResult};
-use crate::tpp::{FirstTouch, Tpp, TppNomad, Watermarks};
+use crate::tpp::{FirstTouch, Tpp, TppGated, TppNomad, Watermarks};
 use crate::tuner::{Decision, Tuner};
 use crate::workloads::{self, Workload};
 
@@ -43,6 +44,12 @@ pub struct RunSpec {
     /// policies behave exactly as pre-refactor and `tpp-nomad` gets its
     /// transactional mode; a non-exclusive value overrides any policy.
     pub migration: MigrationModel,
+    /// Migration admission-control knob. Disabled (the default) installs
+    /// no gate anywhere, reproducing pre-admission runs bit-for-bit; an
+    /// enabled config gates every Tpp-based run of this spec ([`run_tpp`],
+    /// [`run_tpp_gated`], the Tuna paths). Gate-less policies
+    /// ([`run_first_touch`], [`run_memtis`], [`run_tpp_nomad`]) ignore it.
+    pub admission: AdmissionConfig,
     /// Observability handle, threaded into the engine (and, for Tuna
     /// runs, the tuner) exactly like `migration`: disabled by default,
     /// and proven not to perturb any run it observes.
@@ -59,6 +66,7 @@ impl RunSpec {
             hot_thr: 2,
             machine: MachineModel::default(),
             migration: MigrationModel::Exclusive,
+            admission: AdmissionConfig::default(),
             obs: crate::obs::Recorder::default(),
         }
     }
@@ -83,6 +91,11 @@ impl RunSpec {
         self
     }
 
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = admission;
+        self
+    }
+
     pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
         self.obs = obs;
         self
@@ -103,11 +116,14 @@ impl RunSpec {
     }
 }
 
-/// Run under TPP at the spec's fast-memory fraction (no Tuna).
+/// Run under TPP at the spec's fast-memory fraction (no Tuna). An
+/// enabled [`RunSpec::admission`] gates promotions; the disabled default
+/// installs no gate and is bit-identical to the pre-admission run.
 pub fn run_tpp(spec: &RunSpec) -> Result<RunResult> {
     let mut w = spec.make_workload()?;
     let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
-    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr)
+        .with_admission(spec.admission);
     tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
     Ok(spec.engine().run(w.as_mut(), &mut tpp, cap, |_| None))
 }
@@ -143,12 +159,32 @@ pub fn run_tpp_nomad(spec: &RunSpec) -> Result<RunResult> {
     Ok(spec.engine().run(w.as_mut(), &mut p, cap, |_| None))
 }
 
+/// Run under `tpp-gated`: TPP's control loop behind the migration
+/// admission gate. A spec whose [`RunSpec::admission`] is disabled runs
+/// the enabled default gate (gating is the policy's identity — run
+/// [`run_tpp`] for ungated TPP); an enabled spec's knobs are used as-is.
+pub fn run_tpp_gated(spec: &RunSpec) -> Result<RunResult> {
+    let mut w = spec.make_workload()?;
+    let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
+    let mut p = TppGated::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr)
+        .with_admission(spec.admission);
+    p.set_scan_budget(spec.machine.promote_scan_pages_per_interval);
+    Ok(spec.engine().run(w.as_mut(), &mut p, cap, |_| None))
+}
+
 /// The fast-memory-only baseline: 100% of RSS in fast memory. Always
-/// exclusive — at 100% fast there is nothing to migrate, and forcing the
-/// mode keeps one cached baseline valid for every migration-mode cell
-/// (the baseline cache is keyed without the migration axis).
+/// exclusive and ungated — at 100% fast there is nothing to migrate (or
+/// to admit), and forcing both modes off keeps one cached baseline valid
+/// for every migration-mode and admission cell (the baseline cache is
+/// keyed without either axis).
 pub fn run_fm_only(spec: &RunSpec) -> Result<RunResult> {
-    run_tpp(&spec.clone().with_fraction(1.0).with_migration(MigrationModel::Exclusive))
+    run_tpp(
+        &spec
+            .clone()
+            .with_fraction(1.0)
+            .with_migration(MigrationModel::Exclusive)
+            .with_admission(AdmissionConfig::default()),
+    )
 }
 
 /// Run under TPP while profiling: returns the run plus the telemetry
@@ -159,7 +195,8 @@ pub fn profile_tpp(
 ) -> Result<(RunResult, crate::microbench::MicrobenchConfig)> {
     let mut w = spec.make_workload()?;
     let cap = Engine::fm_capacity(w.rss_pages(), spec.fm_fraction);
-    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr)
+        .with_admission(spec.admission);
     tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
     let mut window = crate::telemetry::WindowAggregator::new(
         spec.hot_thr,
@@ -269,7 +306,8 @@ fn run_tuna_session(
     let mut w = spec.make_workload()?;
     let rss = w.rss_pages() as u64;
     let cap = Engine::fm_capacity(w.rss_pages(), 1.0);
-    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr)
+        .with_admission(spec.admission);
     tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
     let session_spec = SessionSpec {
         name: format!("{}@{}", spec.workload.to_ascii_lowercase(), spec.seed),
@@ -319,7 +357,8 @@ pub fn run_tuna_inloop(
     let mut w = spec.make_workload()?;
     let rss = w.rss_pages() as u64;
     let cap = Engine::fm_capacity(w.rss_pages(), 1.0);
-    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr);
+    let mut tpp = Tpp::with_hot_thr(Watermarks::default_for_capacity(cap), spec.hot_thr)
+        .with_admission(spec.admission);
     tpp.scan_budget = spec.machine.promote_scan_pages_per_interval;
     let backend = query.backend();
     let mut tuner = Tuner::new(
@@ -522,6 +561,49 @@ mod tests {
         let spec = small_spec("Btree");
         let a = run_fm_only(&spec).unwrap();
         let b = run_fm_only(&spec.clone().with_migration(MigrationModel::non_exclusive_default()))
+            .unwrap();
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
+    }
+
+    #[test]
+    fn admission_spec_threads_through_run_tpp() {
+        // disabled spec: no gate, zero verdicts, bit-identical to a spec
+        // that never heard of admission (the constructor default)
+        let spec = small_spec("kv-drift").with_fraction(0.6);
+        let plain = run_tpp(&spec).unwrap();
+        assert_eq!(plain.total_admission_verdicts(), 0, "disabled spec must install no gate");
+
+        // enabled spec: the gate reaches the policy and records verdicts
+        let gated = run_tpp(
+            &spec.clone().with_admission(AdmissionConfig::enabled_default()),
+        )
+        .unwrap();
+        assert!(
+            gated.total_admission_verdicts() > 0,
+            "spec-level admission must reach the policy"
+        );
+        assert_eq!(
+            gated.total_admission_accepted(),
+            gated.total_promoted() + gated.total_promote_failed(),
+            "every accepted candidate must reach the promotion path"
+        );
+    }
+
+    #[test]
+    fn run_tpp_gated_defaults_to_the_enabled_gate() {
+        // a spec with the admission default (disabled) still runs gated —
+        // gating is tpp-gated's identity, mirroring run_tpp_nomad's
+        // non-exclusive clamp
+        let res = run_tpp_gated(&small_spec("kv-drift").with_fraction(0.6)).unwrap();
+        assert_eq!(res.policy, "tpp-gated");
+        assert!(res.total_admission_verdicts() > 0, "gated run must record verdicts");
+    }
+
+    #[test]
+    fn fm_only_baseline_is_identical_across_admission_settings() {
+        let spec = small_spec("Btree");
+        let a = run_fm_only(&spec).unwrap();
+        let b = run_fm_only(&spec.clone().with_admission(AdmissionConfig::enabled_default()))
             .unwrap();
         assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
     }

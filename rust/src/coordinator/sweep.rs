@@ -28,9 +28,10 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::{
-    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tpp_nomad,
-    run_tuna_service, RunSpec,
+    overall_loss, run_first_touch, run_fm_only, run_memtis, run_tpp, run_tpp_gated,
+    run_tpp_nomad, run_tuna_service, RunSpec,
 };
+use crate::admission::AdmissionConfig;
 use crate::artifact::shard::{LazyShardedNn, LazyShardedPerfDb};
 use crate::config::experiment::TunaConfig;
 use crate::perfdb::native::{NativeNn, NnQuery};
@@ -58,17 +59,25 @@ pub enum SweepPolicy {
     /// mode is forced non-exclusive even when the sweep's migration axis
     /// says `exclusive` (run plain [`SweepPolicy::Tpp`] for that).
     TppNomad,
+    /// TPP behind the migration admission-control gate: every promotion
+    /// candidate must clear a per-interval bandwidth budget, a
+    /// benefit-vs-copy-cost payoff test and a recency-of-demotion
+    /// cool-down before it may copy. A cell whose sweep leaves
+    /// [`SweepSpec::admission`] disabled is normalized to the enabled
+    /// default gate (run plain [`SweepPolicy::Tpp`] for ungated TPP).
+    TppGated,
 }
 
 impl SweepPolicy {
     /// Every policy, in canonical (on-disk code) order — the single
     /// source of truth for [`Self::parse`]'s error message.
-    pub const ALL: [SweepPolicy; 5] = [
+    pub const ALL: [SweepPolicy; 6] = [
         SweepPolicy::Tpp,
         SweepPolicy::FirstTouch,
         SweepPolicy::Memtis,
         SweepPolicy::Tuna,
         SweepPolicy::TppNomad,
+        SweepPolicy::TppGated,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -78,12 +87,52 @@ impl SweepPolicy {
             SweepPolicy::Memtis => "memtis",
             SweepPolicy::Tuna => "tuna",
             SweepPolicy::TppNomad => "tpp-nomad",
+            SweepPolicy::TppGated => "tpp-gated",
         }
     }
 
+    /// One-line description of what the policy does, for discovery from
+    /// CLI error messages and help text.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            SweepPolicy::Tpp => {
+                "Linux TPP: hint-fault promotion + watermark demotion at a fixed fast-tier size"
+            }
+            SweepPolicy::FirstTouch => {
+                "NUMA first-touch placement, no migration — the static-placement bound"
+            }
+            SweepPolicy::Memtis => {
+                "MEMTIS-style dynamic hotness threshold targeting fast-tier occupancy"
+            }
+            SweepPolicy::Tuna => {
+                "TPP plus the Tuna tuner shrinking fast memory along the modeled loss curve"
+            }
+            SweepPolicy::TppNomad => {
+                "TPP under Nomad-style non-exclusive transactional page migration"
+            }
+            SweepPolicy::TppGated => {
+                "TPP behind admission control: budgeted, payoff-gated, thrash-resistant promotion"
+            }
+        }
+    }
+
+    /// The policy roster as a `name — description` line per policy,
+    /// for multi-line CLI error messages ([`Self::parse`] and the
+    /// empty-`policies` branch of [`SweepSpec::expand`] both print it,
+    /// so new policies are discoverable at exactly the places a user
+    /// types policy names).
+    pub fn catalogue() -> String {
+        Self::ALL
+            .iter()
+            .map(|p| format!("  {:<12} {}", p.name(), p.describe()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
     /// Parse a CLI-style policy name, case-insensitively. The error
-    /// message enumerates every valid name (derived from [`Self::ALL`],
-    /// so it can never drift from the actual policy set).
+    /// message enumerates every valid name with its one-line description
+    /// (derived from [`Self::ALL`], so it can never drift from the
+    /// actual policy set).
     pub fn parse(s: &str) -> Result<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "tpp" => Ok(SweepPolicy::Tpp),
@@ -91,9 +140,9 @@ impl SweepPolicy {
             "memtis" => Ok(SweepPolicy::Memtis),
             "tuna" => Ok(SweepPolicy::Tuna),
             "tpp-nomad" | "tppnomad" | "tpp_nomad" | "nomad" => Ok(SweepPolicy::TppNomad),
+            "tpp-gated" | "tppgated" | "tpp_gated" | "gated" => Ok(SweepPolicy::TppGated),
             other => {
-                let valid: Vec<&str> = Self::ALL.iter().map(|p| p.name()).collect();
-                bail!("unknown policy `{other}`; valid policies: {}", valid.join(", "))
+                bail!("unknown policy `{other}`; valid policies:\n{}", Self::catalogue())
             }
         }
     }
@@ -107,6 +156,7 @@ impl SweepPolicy {
             SweepPolicy::Memtis => 2,
             SweepPolicy::Tuna => 3,
             SweepPolicy::TppNomad => 4,
+            SweepPolicy::TppGated => 5,
         }
     }
 
@@ -118,6 +168,7 @@ impl SweepPolicy {
             2 => SweepPolicy::Memtis,
             3 => SweepPolicy::Tuna,
             4 => SweepPolicy::TppNomad,
+            5 => SweepPolicy::TppGated,
             other => bail!("unknown policy code {other} in artifact"),
         })
     }
@@ -173,6 +224,14 @@ pub struct SweepSpec {
     /// cells, same results — because an `Exclusive` cell defers to the
     /// policy's own model (see [`RunSpec::migration`]).
     pub migrations: Vec<MigrationModel>,
+    /// Migration admission-control knob shared by every cell. The
+    /// disabled default reproduces the pre-admission grid exactly;
+    /// [`SweepPolicy::TppGated`] cells are normalized to the enabled
+    /// default gate when this is left disabled (gating is what that
+    /// policy *is*), and policies without a gate ([`SweepPolicy::FirstTouch`],
+    /// [`SweepPolicy::Memtis`], [`SweepPolicy::TppNomad`]) are normalized
+    /// to disabled so their cell specs describe the run truthfully.
+    pub admission: AdmissionConfig,
     /// Run length in profiling intervals (shared by every cell).
     pub intervals: u32,
     pub machine: MachineModel,
@@ -196,6 +255,7 @@ impl Default for SweepSpec {
             hot_thrs: vec![2],
             policies: vec![SweepPolicy::Tpp],
             migrations: vec![MigrationModel::Exclusive],
+            admission: AdmissionConfig::default(),
             intervals: 300,
             machine: MachineModel::default(),
             threads: 0,
@@ -240,6 +300,14 @@ impl SweepSpec {
         migrations: I,
     ) -> Self {
         self.migrations = migrations.into_iter().collect();
+        self
+    }
+
+    /// Set the migration admission-control knob for every cell of the
+    /// sweep (see [`SweepSpec::admission`] for how it is normalized per
+    /// policy).
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = admission;
         self
     }
 
@@ -297,6 +365,13 @@ impl SweepSpec {
         ];
         for (axis, empty) in empties {
             if empty {
+                if axis == "policies" {
+                    bail!(
+                        "sweep grid dimension `policies` is empty: the cross product \
+                         would yield zero cells (give `policies` at least one of):\n{}",
+                        SweepPolicy::catalogue()
+                    );
+                }
                 bail!(
                     "sweep grid dimension `{axis}` is empty: the cross product would \
                      yield zero cells (give `{axis}` at least one value)"
@@ -335,6 +410,22 @@ impl SweepSpec {
                                     }
                                     (_, m) => m,
                                 };
+                                // the same truthfulness rule for the
+                                // admission knob: tpp-gated *is* the gated
+                                // variant, so a disabled sweep-level knob
+                                // becomes the enabled default gate; policies
+                                // that never install a gate record disabled
+                                let admission = match policy {
+                                    SweepPolicy::TppGated if !self.admission.enabled => {
+                                        AdmissionConfig::enabled_default()
+                                    }
+                                    SweepPolicy::TppGated
+                                    | SweepPolicy::Tpp
+                                    | SweepPolicy::Tuna => self.admission,
+                                    SweepPolicy::FirstTouch
+                                    | SweepPolicy::Memtis
+                                    | SweepPolicy::TppNomad => AdmissionConfig::default(),
+                                };
                                 cells.push(SweepCellSpec {
                                     workload: workload.clone(),
                                     seed,
@@ -342,6 +433,7 @@ impl SweepSpec {
                                     fm_fraction,
                                     policy,
                                     migration,
+                                    admission,
                                 });
                             }
                         }
@@ -364,6 +456,11 @@ pub struct SweepCellSpec {
     /// Page-migration semantics this cell runs under.
     /// [`MigrationModel::Exclusive`] defers to the policy's own model.
     pub migration: MigrationModel,
+    /// Migration admission-control knob this cell runs under, already
+    /// normalized per policy by [`SweepSpec::expand`] (enabled default
+    /// for [`SweepPolicy::TppGated`] under a disabled sweep knob;
+    /// disabled for policies that never install a gate).
+    pub admission: AdmissionConfig,
 }
 
 impl SweepCellSpec {
@@ -377,6 +474,7 @@ impl SweepCellSpec {
             hot_thr: self.hot_thr,
             machine: sweep.machine.clone(),
             migration: self.migration,
+            admission: self.admission,
             obs: sweep.obs.clone(),
         }
     }
@@ -709,6 +807,7 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
             SweepPolicy::FirstTouch => (run_first_touch(&rs)?, None),
             SweepPolicy::Memtis => (run_memtis(&rs)?, None),
             SweepPolicy::TppNomad => (run_tpp_nomad(&rs)?, None),
+            SweepPolicy::TppGated => (run_tpp_gated(&rs)?, None),
             SweepPolicy::Tuna => {
                 let (_, cfg) = spec.tuna.as_ref().expect("checked above");
                 let svc = service.as_ref().expect("created above");
@@ -818,12 +917,20 @@ mod tests {
             ("TPP-Nomad", SweepPolicy::TppNomad),
             ("nomad", SweepPolicy::TppNomad),
             ("tpp_nomad", SweepPolicy::TppNomad),
+            ("TPP-Gated", SweepPolicy::TppGated),
+            ("gated", SweepPolicy::TppGated),
+            ("tpp_gated", SweepPolicy::TppGated),
         ] {
             assert_eq!(SweepPolicy::parse(alias).unwrap(), want, "alias `{alias}`");
         }
         let msg = format!("{:#}", SweepPolicy::parse("bogus").unwrap_err());
         for p in SweepPolicy::ALL {
             assert!(msg.contains(p.name()), "error must list `{}`: {msg}", p.name());
+            assert!(
+                msg.contains(p.describe()),
+                "error must describe `{}`: {msg}",
+                p.name()
+            );
         }
     }
 
@@ -839,6 +946,17 @@ mod tests {
         for (axis, spec) in cases {
             let msg = format!("{:#}", spec.expand().unwrap_err());
             assert!(msg.contains(axis), "error for empty `{axis}` must name it: {msg}");
+        }
+        // the policies axis additionally prints the policy roster, so
+        // `tpp-gated` and friends are discoverable from the error itself
+        let msg = format!("{:#}", tiny(&["BFS"]).with_policies([]).expand().unwrap_err());
+        for p in SweepPolicy::ALL {
+            assert!(msg.contains(p.name()), "empty-policies error must list `{}`: {msg}", p.name());
+            assert!(
+                msg.contains(p.describe()),
+                "empty-policies error must describe `{}`: {msg}",
+                p.name()
+            );
         }
     }
 
@@ -899,6 +1017,7 @@ mod tests {
             assert_eq!(SweepPolicy::from_code(p.code()).unwrap(), p);
         }
         assert_eq!(SweepPolicy::TppNomad.code(), 4, "on-disk codes are frozen");
+        assert_eq!(SweepPolicy::TppGated.code(), 5, "on-disk codes are frozen");
         assert!(SweepPolicy::from_code(200).is_err());
     }
 
@@ -924,6 +1043,66 @@ mod tests {
         let msg =
             format!("{:#}", tiny(&["BFS"]).with_migrations([]).expand().unwrap_err());
         assert!(msg.contains("migrations"), "{msg}");
+    }
+
+    #[test]
+    fn expand_normalizes_the_admission_knob_per_policy() {
+        // disabled sweep knob: gated cells get the enabled default, every
+        // other policy records disabled — the pre-admission grid exactly
+        let spec = tiny(&["BFS"]).with_policies([
+            SweepPolicy::Tpp,
+            SweepPolicy::Memtis,
+            SweepPolicy::TppNomad,
+            SweepPolicy::TppGated,
+        ]);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].admission, AdmissionConfig::default());
+        assert_eq!(cells[1].admission, AdmissionConfig::default());
+        assert_eq!(cells[2].admission, AdmissionConfig::default());
+        assert_eq!(cells[3].policy, SweepPolicy::TppGated);
+        assert_eq!(cells[3].admission, AdmissionConfig::enabled_default());
+
+        // enabled sweep knob: gate-capable policies carry it verbatim,
+        // gate-less policies still record disabled (their runs ignore it)
+        let custom = AdmissionConfig {
+            enabled: true,
+            budget_pages: 64,
+            cooldown_intervals: 8,
+            horizon_intervals: 16,
+        };
+        let cells = spec.with_admission(custom).expand().unwrap();
+        assert_eq!(cells[0].admission, custom, "tpp carries the enabled knob");
+        assert_eq!(cells[1].admission, AdmissionConfig::default(), "memtis has no gate");
+        assert_eq!(cells[2].admission, AdmissionConfig::default(), "nomad has no gate");
+        assert_eq!(cells[3].admission, custom, "tpp-gated keeps the custom gate");
+    }
+
+    #[test]
+    fn exclusive_cells_are_bit_identical_when_gated_rides_along() {
+        let plain = run_sweep(&tiny(&["Btree"]).with_fractions([0.8])).unwrap();
+        let mixed = run_sweep(
+            &tiny(&["Btree"])
+                .with_fractions([0.8])
+                .with_policies([SweepPolicy::Tpp, SweepPolicy::TppGated])
+                .with_threads(2),
+        )
+        .unwrap();
+        assert_eq!(mixed.len(), 2);
+        let tpp = mixed.cell("Btree", SweepPolicy::Tpp, 0.8).unwrap();
+        let base = plain.cell("Btree", SweepPolicy::Tpp, 0.8).unwrap();
+        assert_eq!(tpp.result.total_ns.to_bits(), base.result.total_ns.to_bits());
+        assert_eq!(tpp.loss.to_bits(), base.loss.to_bits());
+        assert_eq!(tpp.result.total_admission_verdicts(), 0, "ungated tpp installs no gate");
+
+        let gated = mixed.cell("Btree", SweepPolicy::TppGated, 0.8).unwrap();
+        assert_eq!(gated.result.policy, "tpp-gated");
+        assert!(
+            gated.result.total_admission_verdicts() > 0,
+            "gated sweep cell must exercise the admission gate"
+        );
+        // one workload instance → one shared baseline across both cells
+        assert_eq!(mixed.baselines_computed, 1);
     }
 
     #[test]

@@ -37,6 +37,10 @@
 //! * [`trace`] — the trace-driven KV workload subsystem: YCSB-style op
 //!   generators, the durable `TUNATRC1` trace format and the replay
 //!   engine behind the `kv-*` workload family and `tuna trace` verbs.
+//! * [`admission`] — migration admission control: a per-interval
+//!   bandwidth budget, a payoff predicate (predicted fast-tier hits vs
+//!   copy cost) and a demotion cool-down filter, exposed as the
+//!   `tpp-gated` policy and the `[admission]` config table / sweep axis.
 //! * [`obs::Recorder`] — the observability layer: per-thread-sharded
 //!   metrics with Prometheus exposition, a bounded structured event
 //!   journal persisted as durable `TUNAOBS1` artifacts, and the
@@ -46,6 +50,7 @@
 //! See `DESIGN.md` for the hardware-substitution rationale and the
 //! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod admission;
 pub mod artifact;
 pub mod cli;
 pub mod config;

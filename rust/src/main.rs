@@ -9,10 +9,17 @@
 //!           [--intervals N] [--seed S] [--config FILE]
 //!           [--migration exclusive|non-exclusive [--abort-on-write BOOL]
 //!            [--copy-intervals N]]
+//!           [--admission on|off [--mig-budget PAGES] [--cooldown N]
+//!            [--horizon N]]
 //!                               --migration non-exclusive runs the
 //!                               Nomad-style transactional model (shadow
 //!                               copies, abort-on-write) and reports the
-//!                               shadow/txn counters
+//!                               shadow/txn counters; --admission on gates
+//!                               promotions behind the migration admission
+//!                               control (per-interval page budget,
+//!                               benefit-vs-copy-cost payoff test,
+//!                               post-demotion cool-down) and reports the
+//!                               admission verdict counters
 //! tuna tune --workload BFS [--target 0.05] [--period 2.5] [--xla]
 //!           [--db artifacts/perfdb.bin | --store DIR [--name perfdb]
 //!            [--resident-segments N]] [--artifacts artifacts]
@@ -32,10 +39,13 @@
 //!                               stdin) and print watermark decisions as
 //!                               sessions hit their tuning periods
 //! tuna sweep [--workloads BFS,SSSP] [--fractions 1.0,0.9,0.8,...]
-//!           [--policy tpp,first-touch,memtis,tuna,tpp-nomad] [--seeds 1,2,3]
+//!           [--policy tpp,first-touch,memtis,tuna,tpp-nomad,tpp-gated]
+//!           [--seeds 1,2,3]
 //!           [--hot-thrs 2,4] [--threads N] [--intervals N]
 //!           [--migrations exclusive,non-exclusive
 //!            [--abort-on-write BOOL] [--copy-intervals N]]
+//!           [--admission on|off [--mig-budget PAGES] [--cooldown N]
+//!            [--horizon N]]
 //!           [--memtis | --first-touch] [--db artifacts/perfdb.bin]
 //!           [--store DIR] [--name NAME] [--append]
 //!           [--resident-segments N [--db-name perfdb]]
@@ -62,8 +72,10 @@
 //!                               artifact (with --from FILE: re-encode an
 //!                               existing trace, byte-identically)
 //! tuna trace replay FILE [--fraction F]
-//!                  [--policy tpp|first-touch|memtis|tpp-nomad]
+//!                  [--policy tpp|first-touch|memtis|tpp-nomad|tpp-gated]
 //!                  [--intervals N] [--hot-thr T] [--store DIR]
+//!                  [--admission on|off [--mig-budget PAGES] [--cooldown N]
+//!                   [--horizon N]]
 //!                               drive the recorded op stream through a
 //!                               policy run (Tuna: `tuna tune --workload
 //!                               trace:FILE`)
@@ -104,6 +116,7 @@ use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::perfdb::PerfSource;
 use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
+use tuna::admission::AdmissionConfig;
 use tuna::service::{IngestOutput, Ingestor, TunerService};
 use tuna::sim::{MachineModel, MigrationModel};
 use tuna::trace::{format as trace_format, gen as trace_gen};
@@ -198,6 +211,7 @@ fn spec_from(args: &mut Args, exp: &ExperimentConfig) -> Result<RunSpec> {
     spec.fm_fraction = args.get_parse("fraction", exp.fm_fraction)?;
     spec.hot_thr = args.get_parse("hot-thr", exp.hot_thr)?;
     spec.migration = migration_from(args, exp.migration)?;
+    spec.admission = admission_from(args, exp.admission)?;
     spec.machine = exp.machine.clone();
     Ok(spec)
 }
@@ -219,6 +233,18 @@ fn migration_from(args: &mut Args, default: MigrationModel) -> Result<MigrationM
     let abort: bool = args.get_parse("abort-on-write", dabort)?;
     let copy: u32 = args.get_parse("copy-intervals", dcopy)?;
     MigrationModel::parse(&mode, abort, copy).map_err(anyhow::Error::msg)
+}
+
+/// Resolve the admission-control config from `--admission MODE`,
+/// `--mig-budget PAGES`, `--cooldown N` and `--horizon N`, layered over
+/// the `[admission]` table of `--config` (flags win; with neither, no
+/// gate is installed).
+fn admission_from(args: &mut Args, default: AdmissionConfig) -> Result<AdmissionConfig> {
+    let mode = args.get_or("admission", default.mode_name());
+    let budget: u64 = args.get_parse("mig-budget", default.budget_pages)?;
+    let cooldown: u32 = args.get_parse("cooldown", default.cooldown_intervals)?;
+    let horizon: u32 = args.get_parse("horizon", default.horizon_intervals)?;
+    AdmissionConfig::parse(&mode, budget, cooldown, horizon).map_err(anyhow::Error::msg)
 }
 
 fn cmd_info(args: &mut Args) -> Result<()> {
@@ -363,6 +389,28 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         t.row(vec![
             "txn_retried_copies".into(),
             run.total_txn_retried_copies().to_string(),
+        ]);
+    }
+    // Same contract for the admission-verdict counters: the rows appear
+    // whenever the run was gated (even if some are zero, so scripts can
+    // grep for them); ungated runs keep the pre-admission output.
+    if spec.admission.enabled || run.total_admission_verdicts() > 0 {
+        t.row(vec!["admission".into(), spec.admission.mode_name().to_string()]);
+        t.row(vec![
+            "admission_accepted".into(),
+            run.total_admission_accepted().to_string(),
+        ]);
+        t.row(vec![
+            "admission_rejected_budget".into(),
+            run.total_admission_rejected_budget().to_string(),
+        ]);
+        t.row(vec![
+            "admission_rejected_payoff".into(),
+            run.total_admission_rejected_payoff().to_string(),
+        ]);
+        t.row(vec![
+            "admission_rejected_cooldown".into(),
+            run.total_admission_rejected_cooldown().to_string(),
         ]);
     }
     t.print();
@@ -707,6 +755,9 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .filter(|s| !s.is_empty())
         .map(|s| MigrationModel::parse(s, abort, copy).map_err(anyhow::Error::msg))
         .collect::<Result<_>>()?;
+    // Admission knob: shared by every cell; tpp-gated cells force the
+    // enabled default when left off (see SweepSpec::expand).
+    let admission = admission_from(args, exp.admission)?;
     let db_given = args.get("db").map(|s| s.to_string());
     let db_path = PathBuf::from(db_given.clone().unwrap_or_else(|| exp.perfdb_path.clone()));
     let store_dir = args.get("store").map(PathBuf::from);
@@ -748,6 +799,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .with_hot_thrs(hot_thrs)
         .with_policies(policies.clone())
         .with_migrations(migrations)
+        .with_admission(admission)
         .with_intervals(intervals)
         .with_threads(threads)
         .with_machine(exp.machine.clone())
@@ -864,6 +916,16 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
                     fp.push(abort);
                     fp.extend_from_slice(&copy.to_le_bytes());
                 }
+            }
+            // Same guard for the admission knob: it only contributes when
+            // it departs from the disabled default, so pre-admission
+            // sweeps keep their auto-names.
+            if spec.admission != AdmissionConfig::default() {
+                let (enabled, budget, cooldown, horizon) = spec.admission.key();
+                fp.push(enabled);
+                fp.extend_from_slice(&budget.to_le_bytes());
+                fp.extend_from_slice(&cooldown.to_le_bytes());
+                fp.extend_from_slice(&horizon.to_le_bytes());
             }
             fp.extend_from_slice(&spec.intervals.to_le_bytes());
             fp.extend_from_slice(format!("{:?}", spec.machine).as_bytes());
@@ -1095,6 +1157,7 @@ fn cmd_trace_replay(args: &mut Args) -> Result<()> {
     spec.fm_fraction = args.get_parse("fraction", 0.9)?;
     spec.hot_thr = args.get_parse("hot-thr", spec.hot_thr)?;
     spec.migration = migration_from(args, MigrationModel::Exclusive)?;
+    spec.admission = admission_from(args, AdmissionConfig::default())?;
     let policy = SweepPolicy::parse(&args.get_or("policy", "tpp"))?;
     args.finish()?;
 
@@ -1104,6 +1167,7 @@ fn cmd_trace_replay(args: &mut Args) -> Result<()> {
         SweepPolicy::FirstTouch => coordinator::run_first_touch(&spec)?,
         SweepPolicy::Memtis => coordinator::run_memtis(&spec)?,
         SweepPolicy::TppNomad => coordinator::run_tpp_nomad(&spec)?,
+        SweepPolicy::TppGated => coordinator::run_tpp_gated(&spec)?,
         SweepPolicy::Tuna => bail!(
             "trace replay under Tuna needs the perf DB: use `tuna tune --workload trace:{}`",
             path.display()
@@ -1125,6 +1189,24 @@ fn cmd_trace_replay(args: &mut Args) -> Result<()> {
     t.row(vec!["perf loss vs fast-only".into(), pct(loss)]);
     t.row(vec!["promotions".into(), run.total_promoted().to_string()]);
     t.row(vec!["demotions".into(), run.total_demoted().to_string()]);
+    if run.total_admission_verdicts() > 0 {
+        t.row(vec![
+            "admission_accepted".into(),
+            run.total_admission_accepted().to_string(),
+        ]);
+        t.row(vec![
+            "admission_rejected_budget".into(),
+            run.total_admission_rejected_budget().to_string(),
+        ]);
+        t.row(vec![
+            "admission_rejected_payoff".into(),
+            run.total_admission_rejected_payoff().to_string(),
+        ]);
+        t.row(vec![
+            "admission_rejected_cooldown".into(),
+            run.total_admission_rejected_cooldown().to_string(),
+        ]);
+    }
     t.print();
     Ok(())
 }

@@ -36,6 +36,12 @@ const TAG_INGEST: u8 = 3;
 const TAG_SEG_LOAD: u8 = 4;
 const TAG_SEG_EVICT: u8 = 5;
 const TAG_SWEEP_CELL: u8 = 6;
+/// Interval event carrying the four admission-gate verdict counters.
+/// Written only when at least one of them is nonzero; an all-zero
+/// interval still encodes as the legacy [`TAG_INTERVAL`], so journals
+/// from ungated runs are byte-identical to the pre-admission format
+/// (and old journals decode unchanged, with the counters zeroed).
+const TAG_INTERVAL_V2: u8 = 7;
 
 fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
     match kind {
@@ -54,8 +60,17 @@ fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
             demoted,
             txn_aborts,
             shadow_free_demotions,
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
         } => {
-            put_u8(out, TAG_INTERVAL);
+            let gated = admission_accepted
+                + admission_rejected_budget
+                + admission_rejected_payoff
+                + admission_rejected_cooldown
+                > 0;
+            put_u8(out, if gated { TAG_INTERVAL_V2 } else { TAG_INTERVAL });
             put_str(out, workload);
             put_str(out, policy);
             put_u32(out, *interval);
@@ -65,6 +80,12 @@ fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
             put_u64(out, *demoted);
             put_u64(out, *txn_aborts);
             put_u64(out, *shadow_free_demotions);
+            if gated {
+                put_u64(out, *admission_accepted);
+                put_u64(out, *admission_rejected_budget);
+                put_u64(out, *admission_rejected_payoff);
+                put_u64(out, *admission_rejected_cooldown);
+            }
         }
         EventKind::Decision {
             interval,
@@ -140,7 +161,7 @@ fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
             site: r.str()?,
             message: r.str()?,
         },
-        TAG_INTERVAL => EventKind::Interval {
+        TAG_INTERVAL | TAG_INTERVAL_V2 => EventKind::Interval {
             workload: r.str()?,
             policy: r.str()?,
             interval: r.u32()?,
@@ -150,6 +171,10 @@ fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
             demoted: r.u64()?,
             txn_aborts: r.u64()?,
             shadow_free_demotions: r.u64()?,
+            admission_accepted: if tag == TAG_INTERVAL_V2 { r.u64()? } else { 0 },
+            admission_rejected_budget: if tag == TAG_INTERVAL_V2 { r.u64()? } else { 0 },
+            admission_rejected_payoff: if tag == TAG_INTERVAL_V2 { r.u64()? } else { 0 },
+            admission_rejected_cooldown: if tag == TAG_INTERVAL_V2 { r.u64()? } else { 0 },
         },
         TAG_DECISION => EventKind::Decision {
             interval: r.u32()?,
@@ -316,6 +341,12 @@ mod tests {
             demoted: 3,
             txn_aborts: 1,
             shadow_free_demotions: 2,
+            // all-zero verdicts: this event must take the legacy
+            // TAG_INTERVAL encoding (byte-stability below depends on it)
+            admission_accepted: 0,
+            admission_rejected_budget: 0,
+            admission_rejected_payoff: 0,
+            admission_rejected_cooldown: 0,
         });
         r.record(EventKind::Decision {
             interval: 2,
@@ -364,6 +395,36 @@ mod tests {
         let bytes = sample_journal().encode();
         let reencoded = Journal::decode(&bytes).unwrap().encode();
         assert_eq!(reencoded, bytes);
+    }
+
+    /// A gated interval (nonzero admission verdicts) takes the V2 tag
+    /// and round-trips every counter; the legacy-tag event in the sample
+    /// journal proves all-zero intervals stay on the old encoding.
+    #[test]
+    fn gated_intervals_roundtrip_via_the_v2_tag() {
+        let r = Recorder::enabled(4);
+        let ev = EventKind::Interval {
+            workload: "kv-drift".into(),
+            policy: "tpp-gated".into(),
+            interval: 7,
+            wall_ns: 2.5e6,
+            fast_used: 512,
+            promoted: 9,
+            demoted: 4,
+            txn_aborts: 0,
+            shadow_free_demotions: 0,
+            admission_accepted: 9,
+            admission_rejected_budget: 3,
+            admission_rejected_payoff: 11,
+            admission_rejected_cooldown: 5,
+        };
+        r.record(ev.clone());
+        let j = r.journal();
+        let decoded = Journal::decode(&j.encode()).unwrap();
+        assert_eq!(decoded.events.len(), 1);
+        assert_eq!(decoded.events[0].kind, ev);
+        // and re-encoding the decoded journal is still byte-stable
+        assert_eq!(decoded.encode(), j.encode());
     }
 
     #[test]

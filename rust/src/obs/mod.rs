@@ -69,7 +69,8 @@ pub enum EventKind {
     Warn { site: String, message: String },
     /// One engine interval boundary, with the interval's migration
     /// transaction outcomes (promotions, demotions, shadow-free
-    /// demotions and aborts from the non-exclusive model).
+    /// demotions and aborts from the non-exclusive model) and the
+    /// admission-gate verdicts (all zero for ungated runs).
     Interval {
         workload: String,
         policy: String,
@@ -80,6 +81,10 @@ pub enum EventKind {
         demoted: u64,
         txn_aborts: u64,
         shadow_free_demotions: u64,
+        admission_accepted: u64,
+        admission_rejected_budget: u64,
+        admission_rejected_payoff: u64,
+        admission_rejected_cooldown: u64,
     },
     /// One tuner decision: the kNN inputs and the chosen watermarks.
     Decision {

@@ -22,12 +22,32 @@ fn event_line(ev: &Event) -> String {
             demoted,
             txn_aborts,
             shadow_free_demotions,
-        } => format!(
-            "{workload}/{policy} interval={interval} wall={} fast_used={fast_used} \
-             promoted={promoted} demoted={demoted} aborts={txn_aborts} \
-             shadow_free={shadow_free_demotions}",
-            human_ns(*wall_ns as u64)
-        ),
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
+        } => {
+            let mut line = format!(
+                "{workload}/{policy} interval={interval} wall={} fast_used={fast_used} \
+                 promoted={promoted} demoted={demoted} aborts={txn_aborts} \
+                 shadow_free={shadow_free_demotions}",
+                human_ns(*wall_ns as u64)
+            );
+            // ungated intervals keep their pre-admission rendering
+            if admission_accepted
+                + admission_rejected_budget
+                + admission_rejected_payoff
+                + admission_rejected_cooldown
+                > 0
+            {
+                line.push_str(&format!(
+                    " adm_ok={admission_accepted} adm_budget={admission_rejected_budget} \
+                     adm_payoff={admission_rejected_payoff} \
+                     adm_cooldown={admission_rejected_cooldown}"
+                ));
+            }
+            line
+        }
         EventKind::Decision {
             interval,
             record,
@@ -316,6 +336,34 @@ mod tests {
         assert!(summary.contains("predicted loss"));
         assert!(summary.contains("engine_promoted_per_interval"));
         assert!(summary.contains("one warning"));
+    }
+
+    #[test]
+    fn interval_lines_mention_admission_only_when_gated() {
+        let interval = |adm: u64| EventKind::Interval {
+            workload: "kv-drift".into(),
+            policy: "tpp-gated".into(),
+            interval: 1,
+            wall_ns: 1.0e6,
+            fast_used: 10,
+            promoted: 2,
+            demoted: 1,
+            txn_aborts: 0,
+            shadow_free_demotions: 0,
+            admission_accepted: adm,
+            admission_rejected_budget: 0,
+            admission_rejected_payoff: 0,
+            admission_rejected_cooldown: adm,
+        };
+        let r = Recorder::enabled(4);
+        r.record(interval(0));
+        let dump = render_dump(&r.journal());
+        assert!(!dump.contains("adm_ok"), "ungated line must keep the old rendering");
+        let r = Recorder::enabled(4);
+        r.record(interval(3));
+        let dump = render_dump(&r.journal());
+        assert!(dump.contains("adm_ok=3"));
+        assert!(dump.contains("adm_cooldown=3"));
     }
 
     #[test]

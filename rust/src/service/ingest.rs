@@ -10,20 +10,23 @@
 //! sample <session> <interval> <acc_fast> <acc_slow> <sacc_fast> <sacc_slow> \
 //!        <flops> <iops> <promoted> <promote_failed> <demoted_kswapd> \
 //!        <demoted_direct> <fast_free> [<shadow_hits> <shadow_free_demotions> \
-//!        <txn_aborts> <txn_retried_copies>]
+//!        <txn_aborts> <txn_retried_copies> [<admission_accepted> \
+//!        <admission_rejected_budget> <admission_rejected_payoff> \
+//!        <admission_rejected_cooldown>]]
 //! close <session>
 //! ```
 //!
 //! (`sample` is one line; it is wrapped here for readability.) Blank
 //! lines and `#` comments are skipped. Session names are free-form
 //! tokens without whitespace; any number of sessions may be interleaved
-//! in one stream. The bracketed non-exclusive-migration counters are
-//! optional: streams recorded before the migration-model axis existed
-//! carry 12 sample fields and parse with those counters as 0, so
-//! replaying an old recording still produces bit-identical decisions.
-//! Writers always emit all 16 fields. Replaying a recorded stream
-//! through [`Ingestor`] produces decisions bit-identical to the run that
-//! recorded it — the determinism tests in the integration suite prove it.
+//! in one stream. The bracketed counters are optional, newest-last:
+//! streams recorded before the migration-model axis existed carry 12
+//! sample fields, streams recorded before admission control carry 16,
+//! and both parse with the missing counters as 0, so replaying an old
+//! recording still produces bit-identical decisions. Writers always
+//! emit all 20 fields. Replaying a recorded stream through [`Ingestor`]
+//! produces decisions bit-identical to the run that recorded it — the
+//! determinism tests in the integration suite prove it.
 
 use std::collections::HashMap;
 use std::io::BufRead;
@@ -100,11 +103,16 @@ impl Event {
                     demoted_direct: field(&mut it, "demoted_direct")?,
                     fast_free: field(&mut it, "fast_free")?,
                     // optional trailing counters (v1 streams recorded
-                    // before the migration-model axis omit them)
+                    // before the migration-model axis omit all of them;
+                    // pre-admission streams omit the last four)
                     shadow_hits: opt_field(&mut it, "shadow_hits")?,
                     shadow_free_demotions: opt_field(&mut it, "shadow_free_demotions")?,
                     txn_aborts: opt_field(&mut it, "txn_aborts")?,
                     txn_retried_copies: opt_field(&mut it, "txn_retried_copies")?,
+                    admission_accepted: opt_field(&mut it, "admission_accepted")?,
+                    admission_rejected_budget: opt_field(&mut it, "admission_rejected_budget")?,
+                    admission_rejected_payoff: opt_field(&mut it, "admission_rejected_payoff")?,
+                    admission_rejected_cooldown: opt_field(&mut it, "admission_rejected_cooldown")?,
                 },
             },
             "close" => Event::Close { name: field(&mut it, "session name")? },
@@ -123,7 +131,7 @@ impl Event {
                 format!("open {name} {capacity} {rss_pages} {hot_thr} {threads}")
             }
             Event::Sample { name, sample: s } => format!(
-                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
+                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
                 s.interval,
                 s.acc_fast,
                 s.acc_slow,
@@ -139,7 +147,11 @@ impl Event {
                 s.shadow_hits,
                 s.shadow_free_demotions,
                 s.txn_aborts,
-                s.txn_retried_copies
+                s.txn_retried_copies,
+                s.admission_accepted,
+                s.admission_rejected_budget,
+                s.admission_rejected_payoff,
+                s.admission_rejected_cooldown
             ),
             Event::Close { name } => format!("close {name}"),
         }
@@ -345,6 +357,10 @@ mod tests {
                     shadow_free_demotions: 13,
                     txn_aborts: 14,
                     txn_retried_copies: 15,
+                    admission_accepted: 16,
+                    admission_rejected_budget: 17,
+                    admission_rejected_payoff: 18,
+                    admission_rejected_cooldown: 19,
                     fast_free: 11,
                 },
             },
@@ -375,8 +391,24 @@ mod tests {
             ),
             (0, 0, 0, 0)
         );
-        // 17th field is still a trailing-token error
-        let long = format!("{} 0 0 0 0 99", old);
+        // a 16-field line from a pre-admission stream: the four admission
+        // counters read as 0
+        let pre_adm = format!("{} 12 13 14 15", old);
+        let Some(Event::Sample { sample, .. }) = Event::parse(&pre_adm).unwrap() else {
+            panic!("pre-admission sample line must parse");
+        };
+        assert_eq!(sample.txn_retried_copies, 15);
+        assert_eq!(
+            (
+                sample.admission_accepted,
+                sample.admission_rejected_budget,
+                sample.admission_rejected_payoff,
+                sample.admission_rejected_cooldown
+            ),
+            (0, 0, 0, 0)
+        );
+        // 21st field is still a trailing-token error
+        let long = format!("{} 0 0 0 0 0 0 0 0 99", old);
         assert!(Event::parse(&long).is_err(), "overlong sample must be rejected");
         // a present-but-malformed optional field is an error, not a 0
         let bad = format!("{} nope", old);

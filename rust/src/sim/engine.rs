@@ -40,6 +40,18 @@ pub struct RunTrace {
     pub txn_aborts: u64,
     /// Aborted copies restarted because the page was still hot.
     pub txn_retried_copies: u64,
+    /// Promotion candidates the admission gate accepted (always 0 when no
+    /// gate is installed, like the three rejection counters below).
+    pub admission_accepted: u64,
+    /// Candidates rejected because the interval's migration budget was
+    /// exhausted.
+    pub admission_rejected_budget: u64,
+    /// Candidates rejected because predicted fast-tier hits over the
+    /// residency horizon did not exceed the copy cost.
+    pub admission_rejected_payoff: u64,
+    /// Candidates rejected because the page was demoted too recently
+    /// (ping-pong suppression).
+    pub admission_rejected_cooldown: u64,
     pub fast_used: u64,
     pub fast_free: u64,
     /// Usable fast-memory size implied by the watermarks at this interval.
@@ -94,6 +106,10 @@ impl RunResult {
             shadow_free_demotions,
             txn_aborts,
             txn_retried_copies,
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
         } = &mut total;
         for t in &self.trace {
             *promoted += t.promoted;
@@ -104,6 +120,10 @@ impl RunResult {
             *shadow_free_demotions += t.shadow_free_demotions;
             *txn_aborts += t.txn_aborts;
             *txn_retried_copies += t.txn_retried_copies;
+            *admission_accepted += t.admission_accepted;
+            *admission_rejected_budget += t.admission_rejected_budget;
+            *admission_rejected_payoff += t.admission_rejected_payoff;
+            *admission_rejected_cooldown += t.admission_rejected_cooldown;
         }
         total
     }
@@ -143,6 +163,31 @@ impl RunResult {
 
     pub fn total_txn_retried_copies(&self) -> u64 {
         self.trace.iter().map(|t| t.txn_retried_copies).sum()
+    }
+
+    pub fn total_admission_accepted(&self) -> u64 {
+        self.trace.iter().map(|t| t.admission_accepted).sum()
+    }
+
+    pub fn total_admission_rejected_budget(&self) -> u64 {
+        self.trace.iter().map(|t| t.admission_rejected_budget).sum()
+    }
+
+    pub fn total_admission_rejected_payoff(&self) -> u64 {
+        self.trace.iter().map(|t| t.admission_rejected_payoff).sum()
+    }
+
+    pub fn total_admission_rejected_cooldown(&self) -> u64 {
+        self.trace.iter().map(|t| t.admission_rejected_cooldown).sum()
+    }
+
+    /// All admission verdicts (accept + the three rejection classes);
+    /// 0 exactly when no gate was installed.
+    pub fn total_admission_verdicts(&self) -> u64 {
+        self.total_admission_accepted()
+            + self.total_admission_rejected_budget()
+            + self.total_admission_rejected_payoff()
+            + self.total_admission_rejected_cooldown()
     }
 
     /// Relative slowdown vs a baseline run of the same work:
@@ -317,6 +362,10 @@ impl Engine {
                 shadow_free_demotions,
                 txn_aborts,
                 txn_retried_copies,
+                admission_accepted,
+                admission_rejected_budget,
+                admission_rejected_payoff,
+                admission_rejected_cooldown,
             } = inputs.migrations;
             let rec = RunTrace {
                 interval,
@@ -336,6 +385,10 @@ impl Engine {
                 shadow_free_demotions,
                 txn_aborts,
                 txn_retried_copies,
+                admission_accepted,
+                admission_rejected_budget,
+                admission_rejected_payoff,
+                admission_rejected_cooldown,
                 fast_used: mem.fast_used(),
                 fast_free: mem.fast_free(),
                 usable_fm: wm.usable(fast_capacity),
@@ -411,6 +464,10 @@ impl Engine {
             demoted,
             txn_aborts: rec.txn_aborts,
             shadow_free_demotions: rec.shadow_free_demotions,
+            admission_accepted: rec.admission_accepted,
+            admission_rejected_budget: rec.admission_rejected_budget,
+            admission_rejected_payoff: rec.admission_rejected_payoff,
+            admission_rejected_cooldown: rec.admission_rejected_cooldown,
         });
     }
 }
@@ -761,6 +818,7 @@ mod tests {
         assert_eq!(res.total_shadow_free_demotions(), 0);
         assert_eq!(res.total_txn_aborts(), 0);
         assert_eq!(res.total_txn_retried_copies(), 0);
+        assert_eq!(res.total_admission_verdicts(), 0, "ungated tpp never consults a gate");
     }
 
     /// Read-mostly hot set under pressure: transactional promotions

@@ -316,12 +316,18 @@ mod tests {
         assert!(out.t_bw_fast_ns > base.t_bw_fast_ns, "wasted copy writes hit fast bw");
         assert!(out.t_bw_slow_ns > base.t_bw_slow_ns, "wasted copy reads hit slow bw");
         assert!(out.wall_ns > base.wall_ns);
-        // free shadow demotions, shadow hits and retry bookkeeping move no
-        // bytes and block nothing: the outcome is bit-identical
+        // free shadow demotions, shadow hits, retry bookkeeping and the
+        // admission verdict counters move no bytes and block nothing:
+        // the outcome is bit-identical. (Admission changes *which*
+        // migrations happen; its counters must never re-cost them.)
         let mut y = base_inputs();
         y.migrations.shadow_free_demotions = 1_000_000;
         y.migrations.shadow_hits = 123;
         y.migrations.txn_retried_copies = 55;
+        y.migrations.admission_accepted = 7_777;
+        y.migrations.admission_rejected_budget = 1_000_000;
+        y.migrations.admission_rejected_payoff = 42;
+        y.migrations.admission_rejected_cooldown = 9_001;
         let free = m.evaluate(&y);
         assert_eq!(free.wall_ns.to_bits(), base.wall_ns.to_bits());
         assert_eq!(free.t_block_ns.to_bits(), base.t_block_ns.to_bits());

@@ -177,6 +177,19 @@ pub struct MigrationCounters {
     pub txn_aborts: u64,
     /// Aborted copies immediately restarted because the page is still hot.
     pub txn_retried_copies: u64,
+    /// Promotion candidates admitted by the admission gate (gated
+    /// policies only; all four admission counters stay 0 when no gate is
+    /// installed — the pre-admission behavior).
+    pub admission_accepted: u64,
+    /// Candidates refused because the interval's migration budget was
+    /// exhausted.
+    pub admission_rejected_budget: u64,
+    /// Candidates whose predicted fast-tier hits over the residency
+    /// horizon did not exceed the page-copy cost.
+    pub admission_rejected_payoff: u64,
+    /// Candidates demoted within the cool-down window (ping-pong
+    /// traffic), rejected outright.
+    pub admission_rejected_cooldown: u64,
 }
 
 impl MigrationCounters {
@@ -191,7 +204,7 @@ impl MigrationCounters {
     /// (the destructure has no `..`), so adding a counter field without
     /// naming its metric family here is a compile error — transaction
     /// outcomes can't silently drop out of the `mem_*` metrics.
-    pub fn metric_families(&self) -> [(&'static str, u64); 10] {
+    pub fn metric_families(&self) -> [(&'static str, u64); 14] {
         let MigrationCounters {
             promoted,
             promote_failed,
@@ -203,6 +216,10 @@ impl MigrationCounters {
             shadow_free_demotions,
             txn_aborts,
             txn_retried_copies,
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
         } = *self;
         [
             ("mem_promoted_total", promoted),
@@ -215,6 +232,10 @@ impl MigrationCounters {
             ("mem_shadow_free_demotions_total", shadow_free_demotions),
             ("mem_txn_aborts_total", txn_aborts),
             ("mem_txn_retried_copies_total", txn_retried_copies),
+            ("mem_admission_accepted_total", admission_accepted),
+            ("mem_admission_rejected_budget_total", admission_rejected_budget),
+            ("mem_admission_rejected_payoff_total", admission_rejected_payoff),
+            ("mem_admission_rejected_cooldown_total", admission_rejected_cooldown),
         ]
     }
 }
@@ -494,6 +515,10 @@ impl TieredMemory {
             shadow_free_demotions,
             txn_aborts,
             txn_retried_copies,
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
         } = std::mem::take(&mut self.counters);
         MigrationCounters {
             promoted,
@@ -506,6 +531,10 @@ impl TieredMemory {
             shadow_free_demotions,
             txn_aborts,
             txn_retried_copies,
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
         }
     }
 
@@ -659,14 +688,18 @@ mod tests {
             shadow_free_demotions: 8,
             txn_aborts: 9,
             txn_retried_copies: 10,
+            admission_accepted: 11,
+            admission_rejected_budget: 12,
+            admission_rejected_payoff: 13,
+            admission_rejected_cooldown: 14,
         };
         let fams = c.metric_families();
         let total: u64 = fams.iter().map(|(_, v)| v).sum();
-        assert_eq!(total, 55, "every field must appear exactly once");
+        assert_eq!(total, 105, "every field must appear exactly once");
         let mut names: Vec<&str> = fams.iter().map(|(n, _)| *n).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 10, "metric family names must be unique");
+        assert_eq!(names.len(), 14, "metric family names must be unique");
         assert!(names.iter().all(|n| n.starts_with("mem_") && n.ends_with("_total")));
     }
 

@@ -56,6 +56,12 @@ pub struct TelemetrySample {
     pub txn_aborts: u64,
     /// Aborted copies restarted because the page was still hot.
     pub txn_retried_copies: u64,
+    /// Admission-gate verdicts (see [`crate::admission`]); all zero when
+    /// the run installs no gate.
+    pub admission_accepted: u64,
+    pub admission_rejected_budget: u64,
+    pub admission_rejected_payoff: u64,
+    pub admission_rejected_cooldown: u64,
     /// Free fast-memory pages at the end of the interval (a gauge, not a
     /// counter).
     pub fast_free: u64,
@@ -80,6 +86,10 @@ impl TelemetrySample {
             shadow_free_demotions: t.shadow_free_demotions,
             txn_aborts: t.txn_aborts,
             txn_retried_copies: t.txn_retried_copies,
+            admission_accepted: t.admission_accepted,
+            admission_rejected_budget: t.admission_rejected_budget,
+            admission_rejected_payoff: t.admission_rejected_payoff,
+            admission_rejected_cooldown: t.admission_rejected_cooldown,
             fast_free: t.fast_free,
         }
     }
@@ -189,6 +199,12 @@ pub struct VmstatCounters {
     pub shadow_free_demotions: u64,
     pub txn_aborts: u64,
     pub txn_retried_copies: u64,
+    /// Admission-gate verdict counters (see [`crate::admission`]); all
+    /// zero for ungated runs. Also not standard vmstat names.
+    pub admission_accepted: u64,
+    pub admission_rejected_budget: u64,
+    pub admission_rejected_payoff: u64,
+    pub admission_rejected_cooldown: u64,
 }
 
 impl VmstatCounters {
@@ -208,6 +224,10 @@ impl VmstatCounters {
         self.shadow_free_demotions += s.shadow_free_demotions;
         self.txn_aborts += s.txn_aborts;
         self.txn_retried_copies += s.txn_retried_copies;
+        self.admission_accepted += s.admission_accepted;
+        self.admission_rejected_budget += s.admission_rejected_budget;
+        self.admission_rejected_payoff += s.admission_rejected_payoff;
+        self.admission_rejected_cooldown += s.admission_rejected_cooldown;
     }
 
     /// vmstat-style counter dump (name, value).
@@ -223,6 +243,10 @@ impl VmstatCounters {
             ("shadow_free_demotions", self.shadow_free_demotions),
             ("txn_aborts", self.txn_aborts),
             ("txn_retried_copies", self.txn_retried_copies),
+            ("admission_accepted", self.admission_accepted),
+            ("admission_rejected_budget", self.admission_rejected_budget),
+            ("admission_rejected_payoff", self.admission_rejected_payoff),
+            ("admission_rejected_cooldown", self.admission_rejected_cooldown),
         ]
     }
 }
@@ -252,6 +276,10 @@ mod tests {
             shadow_free_demotions: 2,
             txn_aborts: 1,
             txn_retried_copies: 1,
+            admission_accepted: 4,
+            admission_rejected_budget: 2,
+            admission_rejected_payoff: 3,
+            admission_rejected_cooldown: 1,
             fast_used: 10,
             fast_free: 5,
             usable_fm: 10,
@@ -276,6 +304,10 @@ mod tests {
             shadow_free_demotions: rng.below(60),
             txn_aborts: rng.below(30),
             txn_retried_copies: rng.below(15),
+            admission_accepted: rng.below(100),
+            admission_rejected_budget: rng.below(40),
+            admission_rejected_payoff: rng.below(40),
+            admission_rejected_cooldown: rng.below(40),
             fast_free: rng.below(1_000),
         }
     }
@@ -318,10 +350,16 @@ mod tests {
         assert_eq!(c.shadow_free_demotions, 4);
         assert_eq!(c.txn_aborts, 2);
         assert_eq!(c.txn_retried_copies, 2);
+        assert_eq!(c.admission_accepted, 8);
+        assert_eq!(c.admission_rejected_budget, 4);
+        assert_eq!(c.admission_rejected_payoff, 6);
+        assert_eq!(c.admission_rejected_cooldown, 2);
         let vm = c.vmstat();
         assert!(vm.iter().any(|&(k, v)| k == "pgpromote_success" && v == 12));
         assert!(vm.iter().any(|&(k, v)| k == "shadow_free_demotions" && v == 4));
         assert!(vm.iter().any(|&(k, v)| k == "txn_aborts" && v == 2));
+        assert!(vm.iter().any(|&(k, v)| k == "admission_accepted" && v == 8));
+        assert!(vm.iter().any(|&(k, v)| k == "admission_rejected_cooldown" && v == 2));
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! `tpp-gated`: TPP's control loop behind the migration admission gate
+//! (see [`crate::admission`]).
+//!
+//! The policy logic is exactly [`Tpp`]'s — same promotion threshold, scan
+//! budget, watermark handling and victim order — but every promotion
+//! candidate that crosses `hot_thr` must additionally clear the three
+//! admission filters before the copy is issued: the demotion cool-down
+//! (ping-pong suppression), the payoff predicate (predicted fast-tier
+//! hits over the residency horizon must exceed the copy cost) and the
+//! per-interval bandwidth budget. Rejected candidates keep their window
+//! history and are re-considered in later intervals. The registry name
+//! is `tpp-gated`.
+
+use super::watermarks::Watermarks;
+use super::{PagePolicy, Tpp};
+use crate::admission::AdmissionConfig;
+use crate::sim::mem::TieredMemory;
+use crate::workloads::PageAccess;
+
+/// TPP + admission-controlled promotion (see module docs).
+#[derive(Clone, Debug)]
+pub struct TppGated {
+    inner: Tpp,
+}
+
+impl TppGated {
+    /// Default two-touch threshold and the default admission knobs
+    /// (budget 128 pages/interval, cool-down 16 intervals, horizon 32).
+    pub fn new(wm: Watermarks) -> Self {
+        Self::with_hot_thr(wm, 2)
+    }
+
+    pub fn with_hot_thr(wm: Watermarks, hot_thr: u32) -> Self {
+        TppGated {
+            inner: Tpp::with_hot_thr(wm, hot_thr)
+                .with_admission(AdmissionConfig::enabled_default()),
+        }
+    }
+
+    /// Override the admission knobs (a disabled config is clamped to the
+    /// enabled defaults — `tpp-gated` *is* the admission-controlled
+    /// variant; run plain `tpp` for ungated promotion).
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> Self {
+        let cfg = if cfg.enabled { cfg } else { AdmissionConfig::enabled_default() };
+        self.inner = self.inner.with_admission(cfg);
+        self
+    }
+
+    /// The installed gate's configuration (always present: the gate is
+    /// what distinguishes this policy from plain `tpp`).
+    pub fn admission(&self) -> AdmissionConfig {
+        self.inner.admission().expect("tpp-gated always carries a gate")
+    }
+
+    /// Promotion-scan budget passthrough (mirrors [`Tpp::scan_budget`]).
+    pub fn set_scan_budget(&mut self, budget: u64) {
+        self.inner.scan_budget = budget;
+    }
+}
+
+impl PagePolicy for TppGated {
+    fn name(&self) -> &'static str {
+        "tpp-gated"
+    }
+
+    fn hot_thr(&self) -> u32 {
+        self.inner.hot_thr()
+    }
+
+    fn watermarks(&self) -> Watermarks {
+        self.inner.watermarks()
+    }
+
+    fn set_watermarks(&mut self, wm: Watermarks) {
+        self.inner.set_watermarks(wm);
+    }
+
+    fn alloc_reserve(&self) -> u64 {
+        self.inner.alloc_reserve()
+    }
+
+    fn run_interval(
+        &mut self,
+        mem: &mut TieredMemory,
+        touched: &[PageAccess],
+        now: u32,
+        kswapd_budget: u64,
+    ) {
+        self.inner.run_interval(mem, touched, now, kswapd_budget);
+    }
+    // migration_model stays the trait default (Exclusive): admission is
+    // orthogonal to migration semantics, and run specs may still override
+    // the model per run exactly as they do for plain `tpp`.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mem::MigrationModel;
+    use crate::sim::{Engine, IntervalModel, MachineModel};
+
+    #[test]
+    fn registry_name_and_admission_config() {
+        let p = TppGated::new(Watermarks::default_for_capacity(100));
+        assert_eq!(p.name(), "tpp-gated");
+        assert_eq!(p.migration_model(), MigrationModel::Exclusive);
+        assert_eq!(p.admission(), AdmissionConfig::enabled_default());
+        // a disabled override is clamped back to the enabled defaults
+        let p = p.with_admission(AdmissionConfig::default());
+        assert_eq!(p.admission(), AdmissionConfig::enabled_default());
+        let custom = AdmissionConfig {
+            enabled: true,
+            budget_pages: 7,
+            cooldown_intervals: 3,
+            horizon_intervals: 9,
+        };
+        let p = p.with_admission(custom);
+        assert_eq!(p.admission(), custom);
+    }
+
+    #[test]
+    fn engine_runs_tpp_gated_and_counts_admission_verdicts() {
+        let mut w = crate::workloads::by_name("Btree", 3, 40).unwrap();
+        let cap = Engine::fm_capacity(w.rss_pages(), 0.7);
+        let mut p = TppGated::new(Watermarks::default_for_capacity(cap));
+        let engine = Engine::new(IntervalModel::new(MachineModel::default()));
+        let res = engine.run(w.as_mut(), &mut p, cap, |_| None);
+        assert_eq!(res.policy, "tpp-gated");
+        let c = res.total_migration_counters();
+        assert_eq!(
+            c.admission_accepted, c.promoted + c.promote_failed,
+            "every copy the engine saw must have been admitted first: {c:?}"
+        );
+        assert!(
+            c.admission_accepted
+                + c.admission_rejected_budget
+                + c.admission_rejected_payoff
+                + c.admission_rejected_cooldown
+                > 0,
+            "gated run must exercise the gate: {c:?}"
+        );
+    }
+}

@@ -24,15 +24,18 @@
 //! query as a vector dimension (§3.2).
 
 pub mod firsttouch;
+pub mod gated;
 pub mod memtis;
 pub mod nomad;
 pub mod watermarks;
 
 pub use firsttouch::FirstTouch;
+pub use gated::TppGated;
 pub use memtis::Memtis;
 pub use nomad::TppNomad;
 pub use watermarks::Watermarks;
 
+use crate::admission::{AdmissionConfig, AdmissionGate, Verdict};
 use crate::sim::mem::{MigrationModel, TieredMemory, Tier};
 use crate::workloads::PageAccess;
 use crate::PageId;
@@ -80,6 +83,10 @@ pub struct Tpp {
     /// leading component is the shadow-preference flag (see
     /// [`Tpp::demote_coldest`]).
     victims: Vec<(u32, u32, u32, PageId)>,
+    /// Optional admission gate (see [`crate::admission`]). `None` — the
+    /// default — is bit-identical to the pre-admission policy: every
+    /// candidate that crosses `hot_thr` is promoted unconditionally.
+    gate: Option<AdmissionGate>,
 }
 
 impl Tpp {
@@ -90,7 +97,20 @@ impl Tpp {
 
     pub fn with_hot_thr(wm: Watermarks, hot_thr: u32) -> Self {
         assert!(hot_thr >= 1);
-        Tpp { wm, hot_thr, scan_budget: 384, victims: Vec::new() }
+        Tpp { wm, hot_thr, scan_budget: 384, victims: Vec::new(), gate: None }
+    }
+
+    /// Install (or, when `cfg.enabled` is false, remove) the admission
+    /// gate. A disabled config installs nothing, keeping the no-gate
+    /// path bit-identical to the pre-admission policy.
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> Self {
+        self.gate = cfg.enabled.then(|| AdmissionGate::new(cfg));
+        self
+    }
+
+    /// The installed gate's configuration, if any.
+    pub fn admission(&self) -> Option<AdmissionConfig> {
+        self.gate.as_ref().map(|g| g.config())
     }
 
     /// Demote up to `want` of the coldest fast-tier pages. Victims are
@@ -102,7 +122,7 @@ impl Tpp {
     /// shadowed, so the flag is a constant and the comparisons — and
     /// therefore the selected victims — are identical to the pre-refactor
     /// (window_count, last_touch) order.
-    fn demote_coldest(&mut self, mem: &mut TieredMemory, want: u64, direct: bool) -> u64 {
+    fn demote_coldest(&mut self, mem: &mut TieredMemory, want: u64, direct: bool, now: u32) -> u64 {
         if want == 0 {
             return 0;
         }
@@ -125,7 +145,14 @@ impl Tpp {
         self.victims[..n].sort_unstable_by_key(|&(s, w, t, id)| (s, w, t, id));
         let ids: Vec<PageId> = self.victims[..n].iter().map(|&(_, _, _, id)| id).collect();
         for id in ids {
+            // A clean shadowed victim demotes by a free unmap — no copy
+            // traffic for the admission budget; the cool-down stamp
+            // applies either way (the page left fast memory).
+            let copied = !mem.page(id).shadowed;
             mem.demote(id, direct);
+            if let Some(gate) = &mut self.gate {
+                gate.note_demotion(id, now, copied);
+            }
         }
         n as u64
     }
@@ -159,27 +186,63 @@ impl PagePolicy for Tpp {
         now: u32,
         kswapd_budget: u64,
     ) {
-        let _ = now;
+        // --- admission bookkeeping (gated runs only) ---
+        // The engine runs note_access before the policy and resets the
+        // counters after it, so `txn_retried_copies` here is exactly this
+        // interval's forced re-copies: traffic the gate never saw at
+        // admit time, charged against the budget as carried debt.
+        if let Some(gate) = &mut self.gate {
+            gate.begin_interval(mem.counters.txn_retried_copies);
+        }
+
         // --- promotion pass (NUMA hint faults on hot slow pages) ---
         // Attempts are bounded by the AutoNUMA scan budget: pages beyond
-        // it simply don't take a hint fault this interval.
+        // it simply don't take a hint fault this interval. Only true
+        // promotion candidates (hot slow-tier pages) consume an attempt;
+        // everything else never takes a hint fault at all.
         let mut attempts = 0u64;
         for a in touched {
-            let id = a.page;
             if attempts >= self.scan_budget {
                 break;
             }
-            let p = mem.page(id);
-            if p.tier == Tier::Slow && p.window_count >= self.hot_thr {
-                attempts += 1;
-                // Denied below the min watermark → migration failure.
-                // On failure the hint fault is consumed without a retry
-                // until the page re-heats (fault-sampling backoff) — TPP
-                // never direct-reclaims on the promotion path; that
-                // decoupling is its headline design point.
-                if !mem.promote(id, self.wm.min) {
-                    mem.page_mut(id).window_count = 0;
+            let id = a.page;
+            let (tier, window_count) = {
+                let p = mem.page(id);
+                (p.tier, p.window_count)
+            };
+            let candidate = tier == Tier::Slow && window_count >= self.hot_thr;
+            if !candidate {
+                continue;
+            }
+            attempts += 1;
+            if let Some(gate) = &mut self.gate {
+                // An admission rejection consumes the hint fault (the
+                // fault fired; the gate refused the migration) but keeps
+                // the page's window history — the benefit signal must
+                // survive for later intervals.
+                match gate.admit(id, window_count, now) {
+                    Verdict::Accept => mem.counters.admission_accepted += 1,
+                    Verdict::RejectBudget => {
+                        mem.counters.admission_rejected_budget += 1;
+                        continue;
+                    }
+                    Verdict::RejectPayoff => {
+                        mem.counters.admission_rejected_payoff += 1;
+                        continue;
+                    }
+                    Verdict::RejectCooldown => {
+                        mem.counters.admission_rejected_cooldown += 1;
+                        continue;
+                    }
                 }
+            }
+            // Denied below the min watermark → migration failure.
+            // On failure the hint fault is consumed without a retry
+            // until the page re-heats (fault-sampling backoff) — TPP
+            // never direct-reclaims on the promotion path; that
+            // decoupling is its headline design point.
+            if !mem.promote(id, self.wm.min) {
+                mem.page_mut(id).window_count = 0;
             }
         }
 
@@ -187,7 +250,7 @@ impl PagePolicy for Tpp {
         let free = mem.fast_free();
         if free < self.wm.low {
             let want = (self.wm.high - free).min(kswapd_budget);
-            self.demote_coldest(mem, want, false);
+            self.demote_coldest(mem, want, false, now);
         }
         // NOTE: no spontaneous direct reclaim here. Direct (blocking)
         // reclaim happens only on allocation pressure below `min`, which
@@ -299,6 +362,152 @@ mod tests {
         // second interval without re-heating: no second failure
         tpp.run_interval(&mut mem, &[PageAccess { page: hot, random: 0, streamed: 0 }], 2, 0);
         assert_eq!(mem.counters.promote_failed, 1);
+    }
+
+    /// Satellite fix pin: the scan budget counts *hint-fault attempts*,
+    /// and only true promotion candidates (hot slow-tier pages) take a
+    /// hint fault — cold or fast-tier entries in the histogram must not
+    /// consume budget, and the boundary lands exactly on the last
+    /// admitted candidate.
+    #[test]
+    fn scan_budget_attempts_count_only_true_candidates() {
+        let (mut mem, mut tpp) = setup(1000, 800);
+        tpp.scan_budget = 3;
+        // 5 cold slow pages lead the interval's histogram, then 4 hot
+        // candidates; budget 3 must skip the cold pages without charge
+        // and exhaust exactly on the third candidate.
+        let cold: Vec<u32> = (990..995).collect();
+        let hot: Vec<u32> = (995..999).collect();
+        let mut touched = Vec::new();
+        for &id in &cold {
+            assert_eq!(mem.page(id).tier, Tier::Slow);
+            mem.touch(id, 1, 1); // below hot_thr=2: not a candidate
+            touched.push(PageAccess { page: id, random: 1, streamed: 0 });
+        }
+        for &id in &hot {
+            assert_eq!(mem.page(id).tier, Tier::Slow);
+            mem.touch(id, 5, 1);
+            touched.push(PageAccess { page: id, random: 5, streamed: 0 });
+        }
+        tpp.run_interval(&mut mem, &touched, 1, 100);
+        assert_eq!(mem.counters.promoted, 3, "budget must exhaust on the 3rd candidate");
+        for &id in &hot[..3] {
+            assert_eq!(mem.page(id).tier, Tier::Fast, "candidate {id} within budget");
+        }
+        // the 4th candidate never took a hint fault: not promoted, not
+        // failure-counted, and its window history is intact (no backoff)
+        assert_eq!(mem.page(998).tier, Tier::Slow);
+        assert_eq!(mem.page(998).window_count, 5);
+        assert_eq!(mem.counters.promote_failed, 0);
+        // cold pages were skipped entirely, not budget-charged
+        for &id in &cold {
+            assert_eq!(mem.page(id).tier, Tier::Slow);
+            assert_eq!(mem.page(id).window_count, 1);
+        }
+        mem.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disabled_admission_installs_no_gate() {
+        let wm = Watermarks::default_for_capacity(100);
+        let tpp = Tpp::new(wm).with_admission(crate::admission::AdmissionConfig::default());
+        assert!(tpp.admission().is_none());
+        let tpp = Tpp::new(wm).with_admission(crate::admission::AdmissionConfig::enabled_default());
+        assert_eq!(tpp.admission(), Some(crate::admission::AdmissionConfig::enabled_default()));
+    }
+
+    #[test]
+    fn gate_vetoes_marginal_candidates_and_counts_verdicts() {
+        use crate::admission::AdmissionConfig;
+        let (mut mem, tpp) = setup(1000, 800);
+        let mut tpp = tpp.with_admission(AdmissionConfig {
+            enabled: true,
+            budget_pages: 0, // unlimited: isolate the payoff predicate
+            cooldown_intervals: 4,
+            horizon_intervals: 32,
+        });
+        let (marginal, hot) = (998u32, 999u32);
+        mem.touch(marginal, 3, 1); // candidate, but 3·16 = 48 ≤ 64 cost
+        mem.touch(hot, 8, 1); // 8·16 = 128 > 64: worth the copy
+        tpp.run_interval(
+            &mut mem,
+            &[
+                PageAccess { page: marginal, random: 3, streamed: 0 },
+                PageAccess { page: hot, random: 8, streamed: 0 },
+            ],
+            1,
+            100,
+        );
+        assert_eq!(mem.page(marginal).tier, Tier::Slow, "payoff-rejected");
+        assert_eq!(mem.page(marginal).window_count, 3, "rejection keeps the benefit signal");
+        assert_eq!(mem.page(hot).tier, Tier::Fast);
+        assert_eq!(mem.counters.admission_accepted, 1);
+        assert_eq!(mem.counters.admission_rejected_payoff, 1);
+        assert_eq!(mem.counters.admission_rejected_budget, 0);
+        assert_eq!(mem.counters.admission_rejected_cooldown, 0);
+        assert_eq!(mem.counters.promoted, 1);
+        mem.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn gate_budget_admits_up_to_the_interval_allowance() {
+        use crate::admission::AdmissionConfig;
+        let (mut mem, tpp) = setup(1000, 800);
+        let mut tpp = tpp.with_admission(AdmissionConfig {
+            enabled: true,
+            budget_pages: 1,
+            cooldown_intervals: 4,
+            horizon_intervals: 32,
+        });
+        let mut touched = Vec::new();
+        for id in [997u32, 998, 999] {
+            mem.touch(id, 8, 1);
+            touched.push(PageAccess { page: id, random: 8, streamed: 0 });
+        }
+        tpp.run_interval(&mut mem, &touched, 1, 0);
+        assert_eq!(mem.counters.admission_accepted, 1);
+        assert_eq!(mem.counters.admission_rejected_budget, 2);
+        assert_eq!(mem.counters.promoted, 1);
+        // next interval the allowance refreshes
+        mem.counters = Default::default();
+        tpp.run_interval(&mut mem, &touched, 2, 0);
+        assert_eq!(mem.counters.admission_accepted, 1);
+        mem.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn gate_cooldown_rejects_repromotion_of_fresh_demotions() {
+        use crate::admission::AdmissionConfig;
+        let cap = 100u64;
+        let wm = Watermarks { min: 5, low: 10, high: 15 };
+        let mut mem = TieredMemory::new(200, cap);
+        let mut tpp = Tpp::with_hot_thr(wm, 2).with_admission(AdmissionConfig {
+            enabled: true,
+            budget_pages: 0,
+            cooldown_intervals: 16,
+            horizon_intervals: 32,
+        });
+        for id in 0..200u32 {
+            mem.allocate(id, 0, 0); // fill fast completely
+        }
+        // interval 1: watermark pressure demotes the coldest pages
+        // (ids 0..high by the deterministic victim order), stamping them
+        tpp.run_interval(&mut mem, &[], 1, 1000);
+        assert_eq!(mem.counters.demoted_kswapd, wm.high);
+        assert_eq!(mem.page(0).tier, Tier::Slow);
+        // interval 2: the freshly demoted page is hot again — a classic
+        // ping-pong candidate the cool-down filter must refuse outright
+        mem.touch(0, 32, 2);
+        tpp.run_interval(&mut mem, &[PageAccess { page: 0, random: 32, streamed: 0 }], 2, 1000);
+        assert_eq!(mem.counters.admission_rejected_cooldown, 1);
+        assert_eq!(mem.page(0).tier, Tier::Slow, "ping-pong promotion vetoed");
+        assert_eq!(mem.page(0).window_count, 32, "window history preserved");
+        // interval 18 (16 intervals after the demotion): cool-down served
+        mem.touch(0, 32, 18);
+        tpp.run_interval(&mut mem, &[PageAccess { page: 0, random: 32, streamed: 0 }], 18, 1000);
+        assert_eq!(mem.counters.admission_accepted, 1);
+        assert_eq!(mem.page(0).tier, Tier::Fast);
+        mem.check_invariants().unwrap();
     }
 
     #[test]

@@ -361,6 +361,10 @@ mod tests {
             shadow_free_demotions: 0,
             txn_aborts: 0,
             txn_retried_copies: 0,
+            admission_accepted: 0,
+            admission_rejected_budget: 0,
+            admission_rejected_payoff: 0,
+            admission_rejected_cooldown: 0,
             fast_used: 7_000,
             fast_free: 100,
             usable_fm: 7_900,

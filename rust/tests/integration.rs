@@ -1130,7 +1130,7 @@ fn run_digest(run: &RunResult) -> String {
     )
     .unwrap();
     for t in &run.trace {
-        writeln!(
+        write!(
             s,
             "i {} clock {:016x} wall {:016x} acc {}/{} sacc {}/{} flops {} iops {} \
              prom {}/{} dem {}/{} shadow {}/{} txn {}/{} fm {}/{}/{}",
@@ -1156,6 +1156,25 @@ fn run_digest(run: &RunResult) -> String {
             t.usable_fm
         )
         .unwrap();
+        // The admission segment appears only on gated intervals, so every
+        // pre-admission golden fixture (all-zero verdicts) keeps its exact
+        // bytes — the digest itself proves "admission off" is a no-op.
+        let adm = t.admission_accepted
+            + t.admission_rejected_budget
+            + t.admission_rejected_payoff
+            + t.admission_rejected_cooldown;
+        if adm > 0 {
+            write!(
+                s,
+                " adm {}/{}/{}/{}",
+                t.admission_accepted,
+                t.admission_rejected_budget,
+                t.admission_rejected_payoff,
+                t.admission_rejected_cooldown
+            )
+            .unwrap();
+        }
+        s.push('\n');
     }
     s
 }
@@ -1180,10 +1199,20 @@ fn golden_run_results_stay_bit_identical() {
         + nomad.total_txn_aborts()
         + nomad.total_txn_retried_copies();
     assert!(nomad_txn > 0, "the golden nomad run must exercise the transactional model");
+    let gated = coordinator::run_tpp_gated(
+        &RunSpec::new("kv-drift").with_intervals(60).with_fraction(0.6).with_seed(7),
+    )
+    .unwrap();
+    assert!(
+        gated.total_admission_verdicts() > 0,
+        "the golden gated run must exercise the admission gate"
+    );
 
-    for (name, run) in
-        [("golden_run_bfs_tpp.txt", &excl), ("golden_run_kvdrift_nomad.txt", &nomad)]
-    {
+    for (name, run) in [
+        ("golden_run_bfs_tpp.txt", &excl),
+        ("golden_run_kvdrift_nomad.txt", &nomad),
+        ("golden_run_kvdrift_gated.txt", &gated),
+    ] {
         let digest = run_digest(run);
         let path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures"))
             .join(name);
@@ -1308,6 +1337,145 @@ fn migration_axis_sweep_keeps_exclusive_cells_and_shifts_losses() {
         })
         .sum();
     assert!(txn > 0, "non-exclusive cells must report transactional activity");
+}
+
+// ---------------------------------------------------------------------------
+// migration admission control
+// ---------------------------------------------------------------------------
+
+/// Acceptance: adding `tpp-gated` to a sweep leaves every ungated cell
+/// byte-identical (same persisted rows, `tuna store diff --strict`
+/// clean), while the gated cells reject ping-pong candidates on the
+/// drifting hot set and beat plain TPP's loss at one or more of the
+/// swept fractions — the subsystem's headline artifact.
+#[test]
+fn admission_sweep_keeps_ungated_cells_and_beats_tpp_on_drift() {
+    let grid = |policies: Vec<SweepPolicy>| {
+        run_sweep(
+            &SweepSpec::new(["kv-drift"])
+                .with_fractions([0.8, 0.6])
+                .with_intervals(80)
+                .with_threads(2)
+                .with_policies(policies),
+        )
+        .unwrap()
+    };
+    let plain = grid(vec![SweepPolicy::Tpp]);
+    let mixed = grid(vec![SweepPolicy::Tpp, SweepPolicy::TppGated]);
+    assert_eq!(mixed.len(), 2 * plain.len());
+
+    // the ungated half of the mixed table is byte-identical to the
+    // tpp-only sweep's table (`tuna store diff --strict` clean)
+    let ta = SweepTable::from_sweep(&plain);
+    let tm = SweepTable::from_sweep(&mixed);
+    let tb = SweepTable {
+        rows: tm.rows.iter().filter(|r| !r.admission.enabled).cloned().collect(),
+    };
+    assert_eq!(
+        ta.to_bytes(),
+        tb.to_bytes(),
+        "the admission subsystem must not perturb ungated cells"
+    );
+    let d = diff(&ta, &tm, 1e-12);
+    assert_eq!(d.matched, plain.len());
+    assert!(d.regressions.is_empty() && d.improvements.is_empty());
+    assert!(d.only_in_a.is_empty());
+    assert_eq!(d.only_in_b.len(), plain.len(), "gated cells are new keys");
+
+    // gated cells: the drifting hot set re-heats freshly demoted pages,
+    // so the cool-down filter must actually fire
+    let gated: Vec<_> =
+        mixed.cells.iter().filter(|c| c.spec.policy == SweepPolicy::TppGated).collect();
+    assert_eq!(gated.len(), plain.len());
+    for g in &gated {
+        assert!(
+            g.result.total_admission_verdicts() > 0,
+            "gated cell must record verdicts: {:?}",
+            g.spec
+        );
+    }
+    let cooldown: u64 =
+        gated.iter().map(|c| c.result.total_admission_rejected_cooldown()).sum();
+    assert!(
+        cooldown > 0,
+        "kv-drift under tpp-gated must reject recently-demoted (ping-pong) candidates"
+    );
+
+    // headline: payoff-gated promotion beats ungated TPP at >= 1 fraction
+    let better = gated.iter().any(|g| {
+        let u = mixed
+            .cells
+            .iter()
+            .find(|x| {
+                x.spec.policy == SweepPolicy::Tpp
+                    && x.spec.fm_fraction.to_bits() == g.spec.fm_fraction.to_bits()
+            })
+            .unwrap();
+        g.loss < u.loss
+    });
+    assert!(
+        better,
+        "tpp-gated must show lower loss than plain tpp at >= 1 swept kv-drift fraction: {:?}",
+        mixed
+            .cells
+            .iter()
+            .map(|c| (c.spec.policy.name(), c.spec.fm_fraction, c.loss))
+            .collect::<Vec<_>>()
+    );
+}
+
+/// The admission counters must tell one consistent story end-to-end:
+/// the per-interval journal events sum to the metric counters, which
+/// equal the engine trace's own totals.
+#[test]
+fn journaled_admission_verdicts_sum_to_the_metric_counters() {
+    let obs = Recorder::enabled(DEFAULT_RING_CAPACITY);
+    let spec = RunSpec::new("kv-drift")
+        .with_intervals(40)
+        .with_fraction(0.6)
+        .with_seed(7)
+        .with_obs(obs.clone());
+    let run = coordinator::run_tpp_gated(&spec).unwrap();
+    assert!(run.total_admission_verdicts() > 0);
+
+    let mut sums = [0u64; 4];
+    for e in &obs.journal().events {
+        if let EventKind::Interval {
+            admission_accepted,
+            admission_rejected_budget,
+            admission_rejected_payoff,
+            admission_rejected_cooldown,
+            ..
+        } = e.kind
+        {
+            sums[0] += admission_accepted;
+            sums[1] += admission_rejected_budget;
+            sums[2] += admission_rejected_payoff;
+            sums[3] += admission_rejected_cooldown;
+        }
+    }
+    let snap = obs.snapshot();
+    for (name, journaled, total) in [
+        ("mem_admission_accepted_total", sums[0], run.total_admission_accepted()),
+        (
+            "mem_admission_rejected_budget_total",
+            sums[1],
+            run.total_admission_rejected_budget(),
+        ),
+        (
+            "mem_admission_rejected_payoff_total",
+            sums[2],
+            run.total_admission_rejected_payoff(),
+        ),
+        (
+            "mem_admission_rejected_cooldown_total",
+            sums[3],
+            run.total_admission_rejected_cooldown(),
+        ),
+    ] {
+        assert_eq!(snap.counter(name), total, "{name} must equal the trace total");
+        assert_eq!(journaled, total, "journaled {name} events must sum to the trace total");
+    }
 }
 
 #[test]
