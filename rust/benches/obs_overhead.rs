@@ -15,6 +15,7 @@ use std::time::Instant;
 use tuna::config::experiment::TunaConfig;
 use tuna::coordinator::{self, RunSpec};
 use tuna::obs::{Recorder, DEFAULT_RING_CAPACITY};
+use tuna::outcome::{RetuneConfig, RetuneMode};
 use tuna::perfdb::builder::{build_database, BuildParams};
 use tuna::perfdb::native::NativeNn;
 use tuna::perfdb::PerfDb;
@@ -95,6 +96,48 @@ fn bench_engine(db: &Arc<PerfDb>, t: &mut Table) -> tuna::Result<()> {
     Ok(())
 }
 
+/// The same tuned engine load as `bench_engine`, with the ring recorder
+/// on throughout, sweeping the outcome tracker's retune mode: `off`
+/// (the tracker is never constructed work), `observe` (per-sample
+/// accumulation + outcome joins + drift EWMA, never acting) and `on`
+/// (the full loop including forced early re-decides). The off row is
+/// the PR 9 contract: an off-mode tracker must be free on the ingest
+/// hot path.
+fn bench_outcome(db: &Arc<PerfDb>, t: &mut Table) -> tuna::Result<()> {
+    for mode in [RetuneMode::Off, RetuneMode::Observe, RetuneMode::On] {
+        let cfg = TunaConfig {
+            period_s: 1.0,
+            retune: RetuneConfig { mode, ..RetuneConfig::default() },
+            ..TunaConfig::default()
+        };
+        let obs = Recorder::enabled(DEFAULT_RING_CAPACITY);
+        let t0 = Instant::now();
+        let mut decisions = 0usize;
+        let mut outcomes = 0usize;
+        for rep in 0..ENGINE_REPS {
+            let spec = RunSpec::new("Btree")
+                .with_intervals(ENGINE_INTERVALS)
+                .with_seed(7 + rep as u64)
+                .with_obs(obs.clone());
+            let run = coordinator::run_tuna_native(&spec, db.clone(), &cfg)?;
+            decisions += run.decisions.len();
+            outcomes += run.outcomes.len();
+            std::hint::black_box(&run.result.total_ns);
+        }
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        let intervals = (ENGINE_INTERVALS * ENGINE_REPS) as f64;
+        t.row(vec![
+            "outcome tracker".to_string(),
+            format!("retune {}", mode.name()),
+            format!("{intervals} intervals, {decisions} decisions, {outcomes} outcomes"),
+            human_ns(wall_ns as u64),
+            format!("{:.0} intervals/s", intervals / (wall_ns / 1e9)),
+            human_ns((wall_ns / intervals) as u64),
+        ]);
+    }
+    Ok(())
+}
+
 fn session_spec(name: String) -> SessionSpec {
     SessionSpec {
         name,
@@ -128,6 +171,7 @@ fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
         admission_rejected_payoff: 3,
         admission_rejected_cooldown: salt % 8,
         fast_free: 180,
+        wall_ns: 1_000_000 + salt % 4_096,
     }
 }
 
@@ -191,6 +235,7 @@ fn main() -> tuna::Result<()> {
         &["path", "obs", "work", "wall", "throughput", "per-unit"],
     );
     bench_engine(&db, &mut t)?;
+    bench_outcome(&db, &mut t)?;
     bench_ingest(&db, &mut t)?;
     t.print();
     t.to_csv(&results_dir().join("obs_overhead.csv"))?;

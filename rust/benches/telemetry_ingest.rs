@@ -56,6 +56,7 @@ fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
         admission_rejected_payoff: 3,
         admission_rejected_cooldown: salt % 8,
         fast_free: 180,
+        wall_ns: 1_000_000 + salt % 4_096,
     }
 }
 

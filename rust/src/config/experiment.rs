@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use super::parse::ConfigDoc;
 use crate::admission::AdmissionConfig;
+use crate::outcome::RetuneConfig;
 use crate::sim::machine::MachineModel;
 use crate::sim::mem::MigrationModel;
 
@@ -28,6 +29,11 @@ pub struct TunaConfig {
     /// Use the AOT XLA (PJRT) query path; falls back to the native
     /// brute-force oracle when artifacts are unavailable.
     pub use_xla: bool,
+    /// Decision-outcome accountability and online re-tuning
+    /// (`[retune]` table: `mode`, `ewma_alpha`, `trigger`,
+    /// `early_intervals`, `cooldown_periods`). Default off — the
+    /// tracker is inert and the legacy decision cadence is untouched.
+    pub retune: RetuneConfig,
 }
 
 impl Default for TunaConfig {
@@ -38,6 +44,7 @@ impl Default for TunaConfig {
             min_fm_fraction: 0.25,
             max_step_down: 0.02,
             use_xla: false,
+            retune: RetuneConfig::default(),
         }
     }
 }
@@ -119,12 +126,23 @@ impl ExperimentConfig {
         ) as u64;
         machine.validate()?;
 
+        let retune = RetuneConfig::parse(
+            doc.str_or("retune", "mode", d.tuna.retune.mode_name()),
+            doc.f64_or("retune", "ewma_alpha", d.tuna.retune.ewma_alpha),
+            doc.f64_or("retune", "trigger", d.tuna.retune.trigger),
+            doc.i64_or("retune", "early_intervals", d.tuna.retune.early_intervals as i64) as u32,
+            doc.i64_or("retune", "cooldown_periods", d.tuna.retune.cooldown_periods as i64)
+                as u32,
+        )
+        .map_err(|e| anyhow::anyhow!("[retune] {e}"))?;
+
         let tuna = TunaConfig {
             loss_target: doc.f64_or("tuna", "loss_target", d.tuna.loss_target),
             period_s: doc.f64_or("tuna", "period_s", d.tuna.period_s),
             min_fm_fraction: doc.f64_or("tuna", "min_fm_fraction", d.tuna.min_fm_fraction),
             max_step_down: doc.f64_or("tuna", "max_step_down", d.tuna.max_step_down),
             use_xla: doc.bool_or("tuna", "use_xla", d.tuna.use_xla),
+            retune,
         };
         anyhow::ensure!(
             tuna.loss_target > 0.0 && tuna.loss_target < 1.0,
@@ -236,6 +254,8 @@ mod tests {
         assert!(ExperimentConfig::from_str("[machine]\ncores = 0\n").is_err());
         assert!(ExperimentConfig::from_str("[migration]\nmode = \"bogus\"\n").is_err());
         assert!(ExperimentConfig::from_str("[admission]\nmode = \"bogus\"\n").is_err());
+        assert!(ExperimentConfig::from_str("[retune]\nmode = \"sideways\"\n").is_err());
+        assert!(ExperimentConfig::from_str("[retune]\newma_alpha = 2.0\n").is_err());
     }
 
     #[test]
@@ -307,5 +327,50 @@ mod tests {
         let c = ExperimentConfig::from_str("[admission]\nbudget_pages = 9\n").unwrap();
         assert!(!c.admission.enabled);
         assert_eq!(c.admission.budget_pages, 9);
+    }
+
+    #[test]
+    fn retune_table_parses_and_defaults_to_off() {
+        use crate::outcome::RetuneMode;
+        let c = ExperimentConfig::from_str("").unwrap();
+        assert_eq!(c.tuna.retune, RetuneConfig::default());
+        assert!(!c.tuna.retune.enabled());
+
+        let c = ExperimentConfig::from_str(
+            r#"
+            [retune]
+            mode = "observe"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.tuna.retune.mode, RetuneMode::Observe);
+
+        let c = ExperimentConfig::from_str(
+            r#"
+            [retune]
+            mode = "on"
+            ewma_alpha = 0.5
+            trigger = 0.08
+            early_intervals = 3
+            cooldown_periods = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.tuna.retune,
+            RetuneConfig {
+                mode: RetuneMode::On,
+                ewma_alpha: 0.5,
+                trigger: 0.08,
+                early_intervals: 3,
+                cooldown_periods: 4,
+            }
+        );
+
+        // numeric knobs survive even in off mode, ready for a CLI
+        // `--retune on` layered on top of the config file
+        let c = ExperimentConfig::from_str("[retune]\ntrigger = 0.2\n").unwrap();
+        assert!(!c.tuna.retune.enabled());
+        assert_eq!(c.tuna.retune.trigger, 0.2);
     }
 }

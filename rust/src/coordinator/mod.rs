@@ -20,6 +20,7 @@ use anyhow::{anyhow, Result};
 
 use crate::admission::AdmissionConfig;
 use crate::config::experiment::TunaConfig;
+use crate::outcome::OutcomeRecord;
 use crate::perfdb::native::{NativeNn, NnQuery};
 use crate::perfdb::{PerfDb, PerfSource};
 use crate::service::{Event, SessionSpec, TunerService};
@@ -229,6 +230,11 @@ pub struct TunaRun {
     pub decide_ns: u128,
     /// Query backend used ("native" or "xla").
     pub backend: &'static str,
+    /// Predicted-vs-realized outcomes (empty unless the run's
+    /// `cfg.retune` mode is `observe` or `on`).
+    pub outcomes: Vec<OutcomeRecord>,
+    /// Drift-forced early re-decides taken (0 unless `retune = on`).
+    pub retunes: u64,
 }
 
 impl TunaRun {
@@ -341,6 +347,8 @@ fn run_tuna_session(
         vmstat: report.vmstat,
         decide_ns: report.decide_ns,
         backend: service.backend(),
+        outcomes: report.outcomes,
+        retunes: report.retunes,
     })
 }
 
@@ -371,13 +379,22 @@ pub fn run_tuna_inloop(
         w.threads(),
     );
     tuner.set_obs(spec.obs.clone());
+    tuner
+        .state
+        .set_session_label(&format!("{}@{}", spec.workload.to_ascii_lowercase(), spec.seed));
     let result = spec.engine().run(w.as_mut(), &mut tpp, cap, |t| tuner.observe(t));
+    // settle the last decision's outcome window (same close semantics
+    // as the service path)
+    let end_interval = result.trace.last().map(|t| t.interval).unwrap_or(0);
+    tuner.finish_outcome(end_interval);
     Ok(TunaRun {
         result,
         mean_fraction: tuner.mean_fraction(),
         min_fraction: tuner.min_fraction(),
         vmstat: tuner.vmstat(),
         decide_ns: tuner.decide_ns(),
+        outcomes: tuner.state.outcomes().to_vec(),
+        retunes: tuner.state.retunes(),
         decisions: std::mem::take(&mut tuner.state.decisions),
         backend,
     })
@@ -422,6 +439,18 @@ pub fn overall_loss(run: &RunResult, baseline: &RunResult) -> f64 {
         return 0.0;
     }
     (t - b) / b
+}
+
+/// `tuna whatif` measured mode: the overall loss of running the spec's
+/// workload under TPP at [`RunSpec::fm_fraction`], against its own
+/// fast-memory-only baseline. This is exactly the composition a sweep
+/// cell records for the same (workload, fraction) — same runs, same
+/// [`overall_loss`] — so the answer agrees bit-for-bit with the
+/// offline sweep table (proven in the integration suite).
+pub fn whatif_measured(spec: &RunSpec) -> Result<f64> {
+    let run = run_tpp(spec)?;
+    let baseline = run_fm_only(spec)?;
+    Ok(overall_loss(&run, &baseline))
 }
 
 #[cfg(test)]
@@ -485,6 +514,41 @@ mod tests {
             "decisions={} expected≈{expected}",
             run.decisions.len()
         );
+    }
+
+    #[test]
+    fn tuna_observe_mode_matches_off_and_reports_outcomes() {
+        use crate::outcome::{RetuneConfig, RetuneMode};
+        let db = small_db();
+        let spec = small_spec("Btree");
+        let tuna_off = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+        let mut tuna_observe = tuna_off.clone();
+        tuna_observe.retune =
+            RetuneConfig { mode: RetuneMode::Observe, ..RetuneConfig::default() };
+        let off = run_tuna_native(&spec, db.clone(), &tuna_off).unwrap();
+        let observed = run_tuna_native(&spec, db, &tuna_observe).unwrap();
+        assert_eq!(
+            off.result.total_ns.to_bits(),
+            observed.result.total_ns.to_bits(),
+            "observe mode must not perturb the run"
+        );
+        assert_eq!(off.decisions.len(), observed.decisions.len());
+        for (a, b) in off.decisions.iter().zip(&observed.decisions) {
+            assert_eq!(a.interval, b.interval);
+            assert_eq!(a.fraction.to_bits(), b.fraction.to_bits());
+        }
+        assert!(off.outcomes.is_empty(), "off mode reports no outcomes");
+        assert_eq!(off.retunes, 0);
+        // every decision is accounted except (at most) a trailing one
+        // whose window saw no further samples
+        assert!(
+            observed.outcomes.len() + 1 >= observed.decisions.len()
+                && !observed.outcomes.is_empty(),
+            "outcomes {} for {} decisions",
+            observed.outcomes.len(),
+            observed.decisions.len()
+        );
+        assert_eq!(observed.retunes, 0, "observe mode never acts");
     }
 
     #[test]

@@ -44,8 +44,13 @@
 //! * [`obs::Recorder`] — the observability layer: per-thread-sharded
 //!   metrics with Prometheus exposition, a bounded structured event
 //!   journal persisted as durable `TUNAOBS1` artifacts, and the
-//!   `tuna obs dump|summary|diff` introspection verbs — zero-cost when
-//!   disabled and proven bit-identical when enabled.
+//!   `tuna obs dump|summary|diff|outcomes` introspection verbs —
+//!   zero-cost when disabled and proven bit-identical when enabled.
+//! * [`outcome::OutcomeTracker`] — decision-outcome accountability:
+//!   per-session predicted-vs-realized loss tracking, a signed-EWMA
+//!   drift detector with hysteresis, and the `[retune]` / `--retune
+//!   on|observe|off` re-tuning actuator behind `tuna obs outcomes`
+//!   and `tuna whatif`.
 //!
 //! See `DESIGN.md` for the hardware-substitution rationale and the
 //! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -57,6 +62,7 @@ pub mod config;
 pub mod coordinator;
 pub mod microbench;
 pub mod obs;
+pub mod outcome;
 pub mod perfdb;
 pub mod report;
 pub mod runtime;

@@ -85,6 +85,21 @@
 //! tuna obs summary FILE         per-phase breakdown, decision timeline,
 //!                               histograms, warnings
 //! tuna obs diff A B             metric deltas between two journals
+//! tuna obs outcomes FILE        per-session predicted-vs-realized decision
+//!                               timeline, prediction-error quantiles,
+//!                               worst decisions ranked, drift transitions
+//! tuna whatif --workload BFS --fraction 0.8 [run flags] [--config FILE]
+//!                               measured what-if: the loss the offline
+//!                               sweep would report for that exact
+//!                               (workload, fraction) cell, bit-for-bit
+//! tuna whatif --stream FILE --fraction F [--sessions N]
+//!            [--db artifacts/perfdb.bin] [--configs N]
+//!                               predicted what-if: the tuner's own query
+//!                               path (kNN + weighted loss curve) over a
+//!                               recorded tuna-telemetry v1 stream,
+//!                               evaluated at fraction F; with N more
+//!                               co-located sessions the fast memory is
+//!                               split, so F becomes F/(1+N)
 //! ```
 //!
 //! `run`, `tune`, `serve` and `sweep` additionally accept
@@ -92,6 +107,19 @@
 //! `--metrics FILE` (Prometheus-style exposition) and `--obs-ring N`
 //! (journal ring capacity). Either sink flag enables the recorder;
 //! results are bit-identical with it on or off.
+//!
+//! `run`, `tune`, `serve` and `sweep` also accept the decision-outcome
+//! accountability knobs `--retune on|observe|off`, `--retune-alpha A`,
+//! `--retune-trigger T`, `--retune-early N` and `--retune-cooldown N`
+//! (layered over the `[retune]` config table). `observe` tracks
+//! predicted-vs-realized loss per decision — journal `Outcome`/`Drift`
+//! events, `tuner_realized_loss` / `tuner_prediction_error` /
+//! `tuner_drift_state` / `tuner_retunes_total` metric families —
+//! without altering any decision (bit-identical to `off`); `on`
+//! additionally re-decides early when the EWMA prediction error drifts
+//! past the trigger, with a cool-down so adaptation cannot thrash.
+//! `tuna run` drives fixed watermarks (no tuner in the loop), so there
+//! the knobs are validated and reported but change nothing.
 //!
 //! Workload names everywhere: the five Table 1 applications, the KV
 //! family (`kv-uniform`, `kv-zipfian`, `kv-latest`, `kv-hotspot`,
@@ -114,6 +142,7 @@ use tuna::coordinator::{self, RunSpec, SweepPolicy, SweepSpec};
 use tuna::perfdb::builder::{build_database_sharded, ensure_db, BuildParams};
 use tuna::perfdb::native::{NativeNn, NnQuery};
 use tuna::perfdb::PerfSource;
+use tuna::outcome::RetuneConfig;
 use tuna::report::{pct, Table};
 use tuna::runtime::XlaNn;
 use tuna::admission::AdmissionConfig;
@@ -146,14 +175,15 @@ fn run() -> Result<()> {
         Some("store") => cmd_store(&mut args),
         Some("trace") => cmd_trace(&mut args),
         Some("obs") => cmd_obs(&mut args),
+        Some("whatif") => cmd_whatif(&mut args),
         Some(other) => {
             bail!(
-                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store, trace, obs)"
+                "unknown subcommand `{other}` (try: info, build-db, run, tune, serve, sweep, store, trace, obs, whatif)"
             )
         }
         None => {
             println!(
-                "usage: tuna <info|build-db|run|tune|serve|sweep|store|trace|obs> [flags]  (see README)"
+                "usage: tuna <info|build-db|run|tune|serve|sweep|store|trace|obs|whatif> [flags]  (see README)"
             );
             Ok(())
         }
@@ -245,6 +275,20 @@ fn admission_from(args: &mut Args, default: AdmissionConfig) -> Result<Admission
     let cooldown: u32 = args.get_parse("cooldown", default.cooldown_intervals)?;
     let horizon: u32 = args.get_parse("horizon", default.horizon_intervals)?;
     AdmissionConfig::parse(&mode, budget, cooldown, horizon).map_err(anyhow::Error::msg)
+}
+
+/// Resolve the decision-outcome accountability config from `--retune
+/// MODE`, `--retune-alpha A`, `--retune-trigger T`, `--retune-early N`
+/// and `--retune-cooldown N`, layered over the `[retune]` table of
+/// `--config` (flags win; with neither, the tracker stays off and the
+/// legacy decision path is bit-identical).
+fn retune_from(args: &mut Args, default: RetuneConfig) -> Result<RetuneConfig> {
+    let mode = args.get_or("retune", default.mode_name());
+    let alpha: f64 = args.get_parse("retune-alpha", default.ewma_alpha)?;
+    let trigger: f64 = args.get_parse("retune-trigger", default.trigger)?;
+    let early: u32 = args.get_parse("retune-early", default.early_intervals)?;
+    let cooldown: u32 = args.get_parse("retune-cooldown", default.cooldown_periods)?;
+    RetuneConfig::parse(&mode, alpha, trigger, early, cooldown).map_err(anyhow::Error::msg)
 }
 
 fn cmd_info(args: &mut Args) -> Result<()> {
@@ -347,9 +391,20 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let mut spec = spec_from(args, &exp)?;
     let first_touch = args.switch("first-touch");
     let memtis = args.switch("memtis");
+    let retune = retune_from(args, exp.tuna.retune)?;
     let sinks = ObsSinks::from_args(args)?;
     args.finish()?;
     spec.obs = sinks.obs.clone();
+    // Fixed-watermark runs have no tuner, so there is nothing for the
+    // accountability layer to hold accountable; the knobs are still
+    // validated (shared config files parse everywhere) and announced so
+    // a stray `--retune on` is never silently swallowed.
+    if retune.enabled() {
+        println!(
+            "note: `tuna run` has no tuner in the loop; --retune {} is validated but drives nothing here",
+            retune.mode_name()
+        );
+    }
 
     let baseline = coordinator::run_fm_only(&spec)?;
     let run = if first_touch {
@@ -433,6 +488,7 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
     let mut tuna_cfg = exp.tuna.clone();
     tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
     tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
+    tuna_cfg.retune = retune_from(args, tuna_cfg.retune)?;
     let mut params = BuildParams::default();
     params.n_configs = args.get_parse("configs", params.n_configs)?;
     let sinks = ObsSinks::from_args(args)?;
@@ -522,6 +578,19 @@ fn cmd_tune(args: &mut Args) -> Result<()> {
             tuna::util::human_ns((run.decide_ns / run.decisions.len() as u128) as u64),
         ]);
     }
+    // Accountability rows appear whenever the tracker was active (even
+    // if all zero, so scripts can grep for them); `--retune off` runs
+    // keep the pre-outcome output byte-for-byte.
+    if tuna_cfg.retune.enabled() {
+        t.row(vec!["retune mode".into(), tuna_cfg.retune.mode_name().to_string()]);
+        t.row(vec!["outcomes tracked".into(), run.outcomes.len().to_string()]);
+        if !run.outcomes.is_empty() {
+            let mean_abs: f64 = run.outcomes.iter().map(|o| o.abs_err).sum::<f64>()
+                / run.outcomes.len() as f64;
+            t.row(vec!["mean |prediction error|".into(), pct(mean_abs)]);
+        }
+        t.row(vec!["retunes".into(), run.retunes.to_string()]);
+    }
     for (name, v) in &run.vmstat {
         t.row(vec![format!("vmstat {name}"), v.to_string()]);
     }
@@ -584,6 +653,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let mut tuna_cfg = exp.tuna.clone();
     tuna_cfg.loss_target = args.get_parse("target", tuna_cfg.loss_target)?;
     tuna_cfg.period_s = args.get_parse("period", tuna_cfg.period_s)?;
+    tuna_cfg.retune = retune_from(args, tuna_cfg.retune)?;
     let mut params = BuildParams::default();
     params.n_configs = args.get_parse("configs", params.n_configs)?;
     let files = args.positional.clone();
@@ -659,6 +729,24 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                     vm("shadow_free_demotions"),
                     vm("txn_aborts"),
                     vm("txn_retried_copies")
+                );
+            }
+            // Same contract as the migration line: sessions whose tuner
+            // tracked decision outcomes get one extra line; `--retune
+            // off` streams print exactly as before.
+            if !report.outcomes.is_empty() || report.retunes > 0 {
+                let mean_abs: f64 = if report.outcomes.is_empty() {
+                    0.0
+                } else {
+                    report.outcomes.iter().map(|o| o.abs_err).sum::<f64>()
+                        / report.outcomes.len() as f64
+                };
+                println!(
+                    "  outcomes {}: {} tracked, mean |prediction error| {}, retunes {}",
+                    report.name,
+                    report.outcomes.len(),
+                    pct(mean_abs),
+                    report.retunes
                 );
             }
         }
@@ -758,6 +846,9 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     // Admission knob: shared by every cell; tpp-gated cells force the
     // enabled default when left off (see SweepSpec::expand).
     let admission = admission_from(args, exp.admission)?;
+    // Retune knob: shared by every Tuna cell (the only policy with a
+    // tuner in the loop; other cells ignore it).
+    let retune = retune_from(args, exp.tuna.retune)?;
     let db_given = args.get("db").map(|s| s.to_string());
     let db_path = PathBuf::from(db_given.clone().unwrap_or_else(|| exp.perfdb_path.clone()));
     let store_dir = args.get("store").map(PathBuf::from);
@@ -824,7 +915,9 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             }
             _ => TunaDb::Flat(Arc::new(ensure_db(&db_path, &BuildParams::default())?)),
         };
-        spec = spec.with_tuna_db(tuna_db, exp.tuna.clone());
+        let mut tuna_cfg = exp.tuna.clone();
+        tuna_cfg.retune = retune;
+        spec = spec.with_tuna_db(tuna_db, tuna_cfg);
     }
 
     // With --store, fast-memory-only baselines are served from (and
@@ -926,6 +1019,15 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
                 fp.extend_from_slice(&budget.to_le_bytes());
                 fp.extend_from_slice(&cooldown.to_le_bytes());
                 fp.extend_from_slice(&horizon.to_le_bytes());
+            }
+            // And for the retune knob, so pre-outcome sweeps keep their
+            // auto-names too.
+            if retune != RetuneConfig::default() {
+                fp.extend_from_slice(retune.mode_name().as_bytes());
+                fp.extend_from_slice(&retune.ewma_alpha.to_le_bytes());
+                fp.extend_from_slice(&retune.trigger.to_le_bytes());
+                fp.extend_from_slice(&retune.early_intervals.to_le_bytes());
+                fp.extend_from_slice(&retune.cooldown_periods.to_le_bytes());
             }
             fp.extend_from_slice(&spec.intervals.to_le_bytes());
             fp.extend_from_slice(format!("{:?}", spec.machine).as_bytes());
@@ -1295,6 +1397,141 @@ fn cmd_obs(args: &mut Args) -> Result<()> {
             );
             Ok(())
         }
-        _ => bail!("usage: tuna obs <dump FILE|summary FILE|diff A B>"),
+        Some("outcomes") => {
+            args.finish()?;
+            let path = file_at(args, 1, "tuna obs outcomes FILE")?;
+            let j = tuna::obs::Journal::load(&path)?;
+            print!("{}", tuna::obs::render::render_outcomes(&j));
+            Ok(())
+        }
+        _ => bail!("usage: tuna obs <dump FILE|summary FILE|diff A B|outcomes FILE>"),
+    }
+}
+
+/// `tuna whatif`: the capacity-planning question — "what would the
+/// loss be at fraction f / with N more sessions?" — as a first-class
+/// verb instead of an offline sweep.
+///
+/// Two modes:
+///
+/// * **measured** (`--workload W --fraction F`): actually runs the
+///   cell — TPP policy against the fast-memory-only baseline, the
+///   exact composition of one sweep cell — so the answer agrees
+///   bit-for-bit with the offline sweep's loss for the same
+///   (workload, fraction) cell.
+/// * **predicted** (`--stream FILE --fraction F [--sessions N]`): no
+///   simulation at all — replays a recorded tuna-telemetry v1 stream
+///   into per-session aggregation windows and evaluates the tuner's
+///   own decision query path (`tuner::predict_loss_at`: kNN +
+///   distance-weighted loss curve + grid interpolation) at the
+///   requested fraction. With `--sessions N`, fast memory would be
+///   split across N more co-located sessions, so each session is
+///   evaluated at F/(1+N).
+fn cmd_whatif(args: &mut Args) -> Result<()> {
+    let exp = load_exp(args)?;
+    let stream = args.get("stream").map(PathBuf::from);
+    let sessions: u32 = args.get_parse("sessions", 0u32)?;
+    match stream {
+        Some(path) => {
+            let fraction: f64 = args.get_parse("fraction", exp.fm_fraction)?;
+            let db_path = PathBuf::from(args.get_or("db", &exp.perfdb_path));
+            let mut params = BuildParams::default();
+            params.n_configs = args.get_parse("configs", params.n_configs)?;
+            args.finish()?;
+            if !(fraction > 0.0 && fraction <= 1.0) {
+                bail!("--fraction must be in (0, 1], got {fraction}");
+            }
+
+            let db = Arc::new(ensure_db(&db_path, &params)?);
+            let mut query = NativeNn::new(&db);
+            let source: Arc<dyn PerfSource> = db.clone();
+
+            use tuna::service::ingest::Event;
+            use tuna::telemetry::WindowAggregator;
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading stream {}: {e}", path.display()))?;
+            // Per-session aggregation windows, exactly as the live
+            // ingest path would build them (open lines size the
+            // window; samples accumulate into it).
+            let mut windows: std::collections::BTreeMap<String, (WindowAggregator, u64)> =
+                std::collections::BTreeMap::new();
+            for line in text.lines() {
+                match Event::parse(line)? {
+                    Some(Event::Open { name, rss_pages, hot_thr, threads, .. }) => {
+                        windows.insert(
+                            name,
+                            (WindowAggregator::new(hot_thr, threads, rss_pages), 0),
+                        );
+                    }
+                    Some(Event::Sample { name, sample }) => match windows.get_mut(&name) {
+                        Some((w, n)) => {
+                            w.observe(&sample);
+                            *n += 1;
+                        }
+                        None => bail!("sample for session `{name}` before its open line"),
+                    },
+                    Some(Event::Close { .. }) | None => {}
+                }
+            }
+            if windows.is_empty() {
+                bail!("stream {} holds no sessions (no open lines)", path.display());
+            }
+
+            let eff = fraction / (1.0 + sessions as f64);
+            let mut t = Table::new(
+                &format!(
+                    "what-if (predicted): loss at {} fast memory{}",
+                    pct(fraction),
+                    if sessions > 0 {
+                        format!(
+                            ", split with {sessions} more session(s) -> {} each",
+                            pct(eff)
+                        )
+                    } else {
+                        String::new()
+                    }
+                ),
+                &["session", "samples", "predicted loss"],
+            );
+            for (name, (mut w, n)) in windows {
+                let predicted =
+                    tuna::tuner::predict_loss_at(&source, &mut query, &mut w, eff)?;
+                t.row(vec![
+                    name,
+                    n.to_string(),
+                    match predicted {
+                        Some(loss) => pct(loss),
+                        None => "(empty window)".into(),
+                    },
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        None => {
+            let spec = spec_from(args, &exp)?;
+            args.finish()?;
+            if sessions > 0 {
+                bail!(
+                    "--sessions needs --stream FILE (the predicted mode); the measured \
+                     mode runs exactly one (workload, fraction) cell"
+                );
+            }
+            let loss = coordinator::whatif_measured(&spec)?;
+            let mut t = Table::new(
+                &format!(
+                    "what-if (measured): {} at {} fast memory",
+                    spec.workload,
+                    pct(spec.fm_fraction)
+                ),
+                &["metric", "value"],
+            );
+            t.row(vec!["policy".into(), "tpp".into()]);
+            t.row(vec!["seed".into(), spec.seed.to_string()]);
+            t.row(vec!["intervals".into(), spec.intervals.to_string()]);
+            t.row(vec!["perf loss vs fast-only".into(), pct(loss)]);
+            t.print();
+            Ok(())
+        }
     }
 }

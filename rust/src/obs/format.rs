@@ -42,6 +42,12 @@ const TAG_SWEEP_CELL: u8 = 6;
 /// from ungated runs are byte-identical to the pre-admission format
 /// (and old journals decode unchanged, with the counters zeroed).
 const TAG_INTERVAL_V2: u8 = 7;
+/// Decision-outcome record (PR 9): predicted vs realized loss for one
+/// decision. Fresh tag — journals written before it exist never carry
+/// it, so pre-PR9 artifacts decode unchanged (golden-fixture tested).
+const TAG_OUTCOME: u8 = 8;
+/// Drift-detector transition (PR 9): armed / retune / cooldown.
+const TAG_DRIFT: u8 = 9;
 
 fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
     match kind {
@@ -151,6 +157,32 @@ fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
             put_u64(out, *seed);
             put_u64(out, *wall_ns);
         }
+        EventKind::Outcome {
+            session,
+            decision_interval,
+            predicted,
+            realized,
+            abs_err,
+        } => {
+            put_u8(out, TAG_OUTCOME);
+            put_str(out, session);
+            put_u32(out, *decision_interval);
+            put_f64(out, *predicted);
+            put_f64(out, *realized);
+            put_f64(out, *abs_err);
+        }
+        EventKind::Drift {
+            session,
+            interval,
+            ewma_err,
+            action,
+        } => {
+            put_u8(out, TAG_DRIFT);
+            put_str(out, session);
+            put_u32(out, *interval);
+            put_f64(out, *ewma_err);
+            put_str(out, action);
+        }
     }
 }
 
@@ -206,6 +238,19 @@ fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
             fraction: r.f64()?,
             seed: r.u64()?,
             wall_ns: r.u64()?,
+        },
+        TAG_OUTCOME => EventKind::Outcome {
+            session: r.str()?,
+            decision_interval: r.u32()?,
+            predicted: r.f64()?,
+            realized: r.f64()?,
+            abs_err: r.f64()?,
+        },
+        TAG_DRIFT => EventKind::Drift {
+            session: r.str()?,
+            interval: r.u32()?,
+            ewma_err: r.f64()?,
+            action: r.str()?,
         },
         other => bail!("unknown obs event tag {other} in journal"),
     })
@@ -327,7 +372,7 @@ mod tests {
     use crate::obs::Recorder;
 
     fn sample_journal() -> Journal {
-        let r = Recorder::enabled(8);
+        let r = Recorder::enabled(16);
         r.count("engine_intervals_total", 4);
         r.gauge("perfdb_resident_segments", 2.0);
         r.observe("tuner_decision_fraction", super::super::FRACTION_BUCKETS, 0.8);
@@ -378,6 +423,19 @@ mod tests {
             fraction: 0.6,
             seed: 7,
             wall_ns: 9_000_000,
+        });
+        r.record(EventKind::Outcome {
+            session: "kv-drift@7".into(),
+            decision_interval: 25,
+            predicted: 0.031,
+            realized: 0.044,
+            abs_err: 0.013,
+        });
+        r.record(EventKind::Drift {
+            session: "kv-drift@7".into(),
+            interval: 50,
+            ewma_err: 0.013,
+            action: "armed".into(),
         });
         r.warn("fmt.test", "synthetic warning");
         r.journal()

@@ -54,6 +54,13 @@ pub const FRACTION_BUCKETS: &[f64] = &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0
 /// Histogram bounds for predicted performance loss.
 pub const LOSS_BUCKETS: &[f64] = &[0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0];
 
+/// Histogram bounds for *signed* prediction error
+/// (realized − predicted loss): negative buckets catch
+/// over-predictions, positive ones under-predictions.
+pub const ERR_BUCKETS: &[f64] = &[
+    -0.5, -0.2, -0.1, -0.05, -0.02, 0.0, 0.02, 0.05, 0.1, 0.2, 0.5,
+];
+
 /// One journal entry: a monotonic timestamp (ns since the recorder was
 /// created) plus the structured payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -122,6 +129,24 @@ pub enum EventKind {
         seed: u64,
         wall_ns: u64,
     },
+    /// One decision's outcome closed: the predicted loss joined to the
+    /// loss the session then actually realized over the decision
+    /// period (see `outcome::OutcomeTracker`).
+    Outcome {
+        session: String,
+        decision_interval: u32,
+        predicted: f64,
+        realized: f64,
+        abs_err: f64,
+    },
+    /// The drift detector left the stable state at a decision boundary
+    /// (`action` is `armed`, `retune` or `cooldown`).
+    Drift {
+        session: String,
+        interval: u32,
+        ewma_err: f64,
+        action: String,
+    },
 }
 
 impl EventKind {
@@ -135,6 +160,8 @@ impl EventKind {
             EventKind::SegmentLoad { .. } => "segment-load",
             EventKind::SegmentEvict { .. } => "segment-evict",
             EventKind::SweepCell { .. } => "sweep-cell",
+            EventKind::Outcome { .. } => "outcome",
+            EventKind::Drift { .. } => "drift",
         }
     }
 
@@ -147,6 +174,7 @@ impl EventKind {
             EventKind::IngestBatch { .. } => "service",
             EventKind::SegmentLoad { .. } | EventKind::SegmentEvict { .. } => "perfdb",
             EventKind::SweepCell { .. } => "sweep",
+            EventKind::Outcome { .. } | EventKind::Drift { .. } => "outcome",
         }
     }
 
@@ -392,6 +420,14 @@ impl Recorder {
     /// in `obs_warn_total` and journaled as a [`EventKind::Warn`].
     pub fn warn(&self, site: &str, message: &str) {
         eprintln!("warning: {message}");
+        self.warn_event(site, message);
+    }
+
+    /// The structured half of [`Recorder::warn`], without the stderr
+    /// line — for call sites that print their own diagnostic verbatim
+    /// (the runtime tests' `skipping: …` lines keep their historical
+    /// format) but still want the counter + journal event.
+    pub fn warn_event(&self, site: &str, message: &str) {
         if self.is_enabled() {
             self.count("obs_warn_total", 1);
             self.record(EventKind::Warn {
@@ -404,11 +440,19 @@ impl Recorder {
     /// Merge all per-thread shards plus gauges into one snapshot.
     /// Empty when disabled. The journal drop counter is surfaced here
     /// as `obs_journal_dropped_total`.
+    ///
+    /// Deterministic by construction: counters and bucket counts are
+    /// integer sums (commutative in any order), and each histogram's
+    /// floating-point `sum` is folded over its per-shard partial sums
+    /// in `total_cmp` order — so the rendered exposition is
+    /// byte-identical no matter which order threads registered their
+    /// shards in.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = MetricsSnapshot::default();
         let Some(inner) = &self.inner else {
             return snap;
         };
+        let mut hist_sums: BTreeMap<String, Vec<f64>> = BTreeMap::new();
         for shard in inner.shards.lock().unwrap().iter() {
             for (&name, &v) in shard.counters.lock().unwrap().iter() {
                 *snap.counters.entry(name.to_string()).or_insert(0) += v;
@@ -423,8 +467,14 @@ impl Recorder {
                 for (acc, &c) in e.counts.iter_mut().zip(&h.counts) {
                     *acc += c;
                 }
-                e.sum += h.sum;
+                hist_sums.entry(name.to_string()).or_default().push(h.sum);
                 e.count += h.count;
+            }
+        }
+        for (name, mut sums) in hist_sums {
+            sums.sort_by(|a, b| a.total_cmp(b));
+            if let Some(e) = snap.hists.get_mut(&name) {
+                e.sum = sums.iter().sum();
             }
         }
         for (name, &v) in inner.gauges.lock().unwrap().iter() {
@@ -541,6 +591,54 @@ mod tests {
             &j.events[0].kind,
             EventKind::Warn { site, message }
                 if site == "test.site" && message == "something odd"
+        ));
+    }
+
+    #[test]
+    fn snapshot_bytes_are_identical_across_shard_registration_order() {
+        // Three shards whose histogram partial sums are chosen so a
+        // naive registration-order fold gives different f64 results:
+        // (1e16 + 1) + (-1e16) == 0 but (1e16 + (-1e16)) + 1 == 1.
+        // Threads are joined one at a time so each ordering's shard
+        // registration sequence is exactly the value sequence.
+        let build = |values: &[f64]| {
+            let r = Recorder::enabled(4);
+            for &v in values {
+                let r2 = r.clone();
+                std::thread::spawn(move || {
+                    r2.observe("order_hist", NS_BUCKETS, v);
+                    r2.count("order_total", 1);
+                })
+                .join()
+                .unwrap();
+            }
+            r
+        };
+        let a = build(&[1e16, 1.0, -1e16]);
+        let b = build(&[1e16, -1e16, 1.0]);
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(
+            a.snapshot().render_prometheus(),
+            b.snapshot().render_prometheus(),
+            "exposition must be byte-identical regardless of shard registration order"
+        );
+        // And two snapshots of one unchanged registry render the same
+        // bytes (determinism within a process, not just across runs).
+        assert_eq!(
+            a.snapshot().render_prometheus(),
+            a.snapshot().render_prometheus()
+        );
+    }
+
+    #[test]
+    fn warn_event_counts_without_duplicating_stderr_state() {
+        let r = Recorder::enabled(8);
+        r.warn_event("runtime.artifacts", "skipping: run `make artifacts` first");
+        let j = r.journal();
+        assert_eq!(j.metrics.counter("obs_warn_total"), 1);
+        assert!(matches!(
+            &j.events[0].kind,
+            EventKind::Warn { site, .. } if site == "runtime.artifacts"
         ));
     }
 

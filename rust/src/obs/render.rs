@@ -92,6 +92,27 @@ fn event_line(ev: &Event) -> String {
             "{workload}/{policy} fraction={fraction:.3} seed={seed} wall={}",
             human_ns(*wall_ns)
         ),
+        EventKind::Outcome {
+            session,
+            decision_interval,
+            predicted,
+            realized,
+            abs_err,
+        } => format!(
+            "session={session} decision_interval={decision_interval} predicted={} \
+             realized={} abs_err={}",
+            pct(*predicted),
+            pct(*realized),
+            pct(*abs_err)
+        ),
+        EventKind::Drift {
+            session,
+            interval,
+            ewma_err,
+            action,
+        } => format!(
+            "session={session} interval={interval} ewma_err={ewma_err:+.4} action={action}"
+        ),
     };
     format!("[{:>10}] {:<13} {body}", human_ns(ev.t_ns), ev.kind.name())
 }
@@ -143,7 +164,7 @@ pub fn render_summary(j: &Journal) -> String {
     out.push_str(&span_line(j));
     out.push('\n');
 
-    let phases = ["engine", "tuner", "service", "perfdb", "sweep", "warn"];
+    let phases = ["engine", "tuner", "service", "perfdb", "sweep", "outcome", "warn"];
     let mut t = Table::new("per-phase breakdown", &["phase", "events", "busy time"]);
     for phase in phases {
         let evs: Vec<&Event> = j.events.iter().filter(|e| e.kind.phase() == phase).collect();
@@ -219,6 +240,119 @@ pub fn render_summary(j: &Journal) -> String {
             out.push('\n');
         }
     }
+    out
+}
+
+/// The `tuna obs outcomes` view: per-session predicted-vs-realized
+/// decision timelines, absolute-error quantiles, the worst decisions
+/// ranked by |error|, and the drift/re-tune transitions.
+pub fn render_outcomes(j: &Journal) -> String {
+    use std::collections::BTreeMap;
+
+    let mut out = String::new();
+    out.push_str(&span_line(j));
+    out.push('\n');
+
+    // (session, decision_interval, predicted, realized, abs_err),
+    // grouped per session in ring (= decision) order.
+    let mut by_session: BTreeMap<&str, Vec<(u32, f64, f64, f64)>> = BTreeMap::new();
+    for ev in &j.events {
+        if let EventKind::Outcome {
+            session,
+            decision_interval,
+            predicted,
+            realized,
+            abs_err,
+        } = &ev.kind
+        {
+            by_session
+                .entry(session.as_str())
+                .or_default()
+                .push((*decision_interval, *predicted, *realized, *abs_err));
+        }
+    }
+    if by_session.is_empty() {
+        out.push_str(
+            "no outcome events in this journal (record one with --retune observe|on)\n",
+        );
+        return out;
+    }
+
+    for (session, rows) in &by_session {
+        let mut t = Table::new(
+            &format!("session {session}: predicted vs realized"),
+            &["decision interval", "predicted", "realized", "error"],
+        );
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &(di, p, r, _) in rows {
+            t.row(vec![
+                di.to_string(),
+                pct(p),
+                pct(r),
+                format!("{:+.4}", r - p),
+            ]);
+            xs.push(di as f64);
+            ys.push(r);
+        }
+        out.push_str(&t.render());
+        if xs.len() >= 2 {
+            out.push_str(&ascii_series("realized loss", &xs, &ys, 6));
+        }
+    }
+
+    let mut errs: Vec<f64> = by_session
+        .values()
+        .flat_map(|rows| rows.iter().map(|&(_, _, _, e)| e))
+        .collect();
+    errs.sort_by(|a, b| a.total_cmp(b));
+    let quantile = |f: f64| errs[((errs.len() - 1) as f64 * f).round() as usize];
+    let mut t = Table::new("absolute prediction error quantiles", &["quantile", "abs err"]);
+    for (name, f) in [("p50", 0.5), ("p90", 0.9), ("p99", 0.99), ("max", 1.0)] {
+        t.row(vec![name.to_string(), format!("{:.4}", quantile(f))]);
+    }
+    out.push_str(&t.render());
+
+    let mut worst: Vec<(&str, u32, f64, f64, f64)> = by_session
+        .iter()
+        .flat_map(|(s, rows)| rows.iter().map(move |&(di, p, r, e)| (*s, di, p, r, e)))
+        .collect();
+    worst.sort_by(|a, b| b.4.total_cmp(&a.4).then(a.1.cmp(&b.1)));
+    worst.truncate(10);
+    let mut t = Table::new(
+        "worst decisions (by |realized - predicted|)",
+        &["session", "decision interval", "predicted", "realized", "abs err"],
+    );
+    for (s, di, p, r, e) in &worst {
+        t.row(vec![
+            s.to_string(),
+            di.to_string(),
+            pct(*p),
+            pct(*r),
+            format!("{e:.4}"),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let drifts: Vec<&Event> = j
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Drift { .. }))
+        .collect();
+    if !drifts.is_empty() {
+        out.push_str("\n== drift transitions ==\n");
+        for ev in &drifts {
+            out.push_str(&event_line(ev));
+            out.push('\n');
+        }
+    }
+    out.push_str(&format!(
+        "{} outcome(s) across {} session(s), {} drift transition(s), {} retune(s)\n",
+        errs.len(),
+        by_session.len(),
+        drifts.len(),
+        j.metrics.counter("tuner_retunes_total")
+    ));
     out
 }
 
@@ -364,6 +498,42 @@ mod tests {
         let dump = render_dump(&r.journal());
         assert!(dump.contains("adm_ok=3"));
         assert!(dump.contains("adm_cooldown=3"));
+    }
+
+    #[test]
+    fn outcomes_view_ranks_sessions_quantiles_and_drift() {
+        let r = Recorder::enabled(32);
+        r.count("tuner_retunes_total", 1);
+        for (i, err) in [0.01, 0.08, 0.02].iter().enumerate() {
+            r.record(EventKind::Outcome {
+                session: "kv-drift@7".into(),
+                decision_interval: 25 * (i as u32 + 1),
+                predicted: 0.05,
+                realized: 0.05 + err,
+                abs_err: *err,
+            });
+        }
+        r.record(EventKind::Drift {
+            session: "kv-drift@7".into(),
+            interval: 50,
+            ewma_err: 0.05,
+            action: "retune".into(),
+        });
+        let text = render_outcomes(&r.journal());
+        assert!(text.contains("session kv-drift@7: predicted vs realized"));
+        assert!(text.contains("absolute prediction error quantiles"));
+        assert!(text.contains("worst decisions"));
+        assert!(text.contains("action=retune"));
+        assert!(text.contains("3 outcome(s) across 1 session(s), 1 drift transition(s), 1 retune(s)"));
+        // the worst decision (abs_err 0.08, interval 50) ranks first
+        let worst_at = text.find("worst decisions").unwrap();
+        let after = &text[worst_at..];
+        let i50 = after.find("50").unwrap();
+        let i25 = after.find("25").unwrap();
+        assert!(i50 < i25, "worst decision must rank first");
+
+        let empty = render_outcomes(&Recorder::enabled(4).journal());
+        assert!(empty.contains("no outcome events"));
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Decision-outcome accountability: predicted-vs-realized loss
+//! tracking, drift detection and re-tune scheduling.
+//!
+//! Tuna's value proposition is a *predicted* loss at a chosen
+//! fast-memory fraction. This module closes the loop: an
+//! [`OutcomeTracker`], owned per session by the tuner state,
+//! accumulates the realized loss over each decision period directly
+//! from the telemetry samples (same loss definition as
+//! `perf_loss_vs` — relative slowdown against the session's own
+//! pre-decision full-fast-memory baseline, allocation epoch excluded —
+//! computed incrementally, never with a second pass over the trace),
+//! joins it to the decision's `predicted_loss`, and feeds a signed
+//! EWMA drift detector with hysteresis.
+//!
+//! Three modes, selected by [`RetuneMode`]:
+//!
+//! * `off` — the tracker is inert: no state accumulates, no events or
+//!   metrics are emitted, and the legacy decision path is untouched.
+//! * `observe` — outcomes and drift are tracked and journaled, but the
+//!   decision cadence is never altered: decisions are bit-identical to
+//!   `off` (proven by integration tests and the CI smoke).
+//! * `on` — `observe`, plus: when the detector arms, the next decision
+//!   is scheduled early ([`RetuneConfig::early_intervals`] instead of
+//!   the full tuning period). That early decision is a *re-tune*; a
+//!   cool-down of [`RetuneConfig::cooldown_periods`] decision periods
+//!   then suppresses re-arming so adaptation cannot thrash.
+//!
+//! The tracker is deliberately decoupled from the telemetry and obs
+//! types: it consumes `(interval, wall_ns)` pairs and decision
+//! boundaries, and returns plain records/feedback structs that the
+//! tuner turns into `Outcome`/`Drift` journal events and
+//! `tuner_realized_loss` / `tuner_prediction_error` /
+//! `tuner_drift_state` / `tuner_retunes_total` metric families.
+
+/// How the accountability layer is allowed to act.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RetuneMode {
+    /// Tracker inert; legacy behavior bit-identical.
+    #[default]
+    Off,
+    /// Track + journal outcomes and drift, never alter cadence.
+    Observe,
+    /// Observe, plus early re-decides when the detector arms.
+    On,
+}
+
+impl RetuneMode {
+    /// Canonical flag/config spelling (`--retune MODE`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RetuneMode::Off => "off",
+            RetuneMode::Observe => "observe",
+            RetuneMode::On => "on",
+        }
+    }
+}
+
+/// The `[retune]` config table / `--retune*` flag set.
+///
+/// The numeric knobs are kept (and layered by the CLI) even in `off`
+/// mode, so `--retune on` can be flipped on top of a config file that
+/// tuned the detector but left it disabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetuneConfig {
+    pub mode: RetuneMode,
+    /// EWMA smoothing factor over the signed prediction error, in
+    /// (0, 1]. Higher = reacts faster, damps less.
+    pub ewma_alpha: f64,
+    /// |EWMA error| above this arms the detector.
+    pub trigger: f64,
+    /// Intervals until the re-decide once armed (must be ≥ 1 and is
+    /// clamped to the normal tuning period).
+    pub early_intervals: u32,
+    /// Decision periods after a re-tune during which the detector
+    /// cannot re-arm (the hysteresis that prevents thrashing).
+    pub cooldown_periods: u32,
+}
+
+impl Default for RetuneConfig {
+    fn default() -> Self {
+        RetuneConfig {
+            mode: RetuneMode::Off,
+            ewma_alpha: 0.4,
+            trigger: 0.04,
+            early_intervals: 2,
+            cooldown_periods: 2,
+        }
+    }
+}
+
+impl RetuneConfig {
+    /// Parse and validate the flag/config surface. Mirrors
+    /// `AdmissionConfig::parse`: the mode string picks the behavior,
+    /// the numeric knobs always survive validation so they can be
+    /// layered before the mode is flipped on.
+    pub fn parse(
+        mode: &str,
+        ewma_alpha: f64,
+        trigger: f64,
+        early_intervals: u32,
+        cooldown_periods: u32,
+    ) -> Result<RetuneConfig, String> {
+        let mode = match mode {
+            "off" | "false" | "0" => RetuneMode::Off,
+            "observe" => RetuneMode::Observe,
+            "on" | "true" | "1" => RetuneMode::On,
+            other => {
+                return Err(format!(
+                    "bad retune mode `{other}` (expected on, observe or off)"
+                ))
+            }
+        };
+        if !(ewma_alpha > 0.0 && ewma_alpha <= 1.0) {
+            return Err(format!("retune ewma_alpha must be in (0, 1], got {ewma_alpha}"));
+        }
+        if !(trigger > 0.0) || !trigger.is_finite() {
+            return Err(format!("retune trigger must be a positive number, got {trigger}"));
+        }
+        if early_intervals == 0 {
+            return Err("retune early_intervals must be >= 1".to_string());
+        }
+        Ok(RetuneConfig { mode, ewma_alpha, trigger, early_intervals, cooldown_periods })
+    }
+
+    /// Canonical mode spelling for CLI layering / report rows.
+    pub fn mode_name(&self) -> &'static str {
+        self.mode.name()
+    }
+
+    /// Is the tracker doing anything at all?
+    pub fn enabled(&self) -> bool {
+        self.mode != RetuneMode::Off
+    }
+}
+
+/// One joined predicted-vs-realized record: the outcome of a single
+/// decision, finalized at the next decision boundary (or at session
+/// close).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutcomeRecord {
+    /// Interval the decision was taken at.
+    pub decision_interval: u32,
+    /// Interval the outcome window closed at.
+    pub end_interval: u32,
+    /// The decision's `predicted_loss`.
+    pub predicted: f64,
+    /// Realized loss over the decision period: (mean interval wall
+    /// time − baseline mean) / baseline mean, with the `perf_loss_vs`
+    /// guard (0.0 when the baseline is unusable).
+    pub realized: f64,
+    /// |realized − predicted|.
+    pub abs_err: f64,
+}
+
+/// What the drift detector concluded at a decision boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftAction {
+    /// No previous outcome to judge (first decision).
+    None,
+    /// Prediction error within the trigger band.
+    Stable,
+    /// |EWMA error| crossed the trigger; in `on` mode the next
+    /// decision will be scheduled early.
+    Armed,
+    /// This decision *was* the early re-decide.
+    Retune,
+    /// Detector suppressed by post-re-tune hysteresis.
+    Cooldown,
+}
+
+impl DriftAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftAction::None => "none",
+            DriftAction::Stable => "stable",
+            DriftAction::Armed => "armed",
+            DriftAction::Retune => "retune",
+            DriftAction::Cooldown => "cooldown",
+        }
+    }
+
+    /// Numeric encoding for the `tuner_drift_state` gauge.
+    pub fn gauge(&self) -> f64 {
+        match self {
+            DriftAction::None | DriftAction::Stable => 0.0,
+            DriftAction::Armed => 1.0,
+            DriftAction::Retune => 2.0,
+            DriftAction::Cooldown => 3.0,
+        }
+    }
+}
+
+/// Everything the tuner needs to journal after a decision boundary.
+#[derive(Clone, Debug)]
+pub struct DecisionFeedback {
+    /// The previous decision's outcome, if one closed at this boundary.
+    pub outcome: Option<OutcomeRecord>,
+    /// Detector state after ingesting that outcome's error.
+    pub ewma_err: f64,
+    pub action: DriftAction,
+    /// This decision happened on a shortened (re-tune) schedule.
+    pub was_retune: bool,
+}
+
+/// Signed-EWMA drift detector with arm/cool-down hysteresis.
+#[derive(Clone, Debug)]
+struct DriftDetector {
+    alpha: f64,
+    trigger: f64,
+    ewma: f64,
+    cooldown_left: u32,
+    seen: u64,
+}
+
+impl DriftDetector {
+    fn new(cfg: &RetuneConfig) -> DriftDetector {
+        DriftDetector {
+            alpha: cfg.ewma_alpha,
+            trigger: cfg.trigger,
+            ewma: 0.0,
+            cooldown_left: 0,
+            seen: 0,
+        }
+    }
+
+    /// Fold one signed prediction error in and classify the boundary.
+    fn update(&mut self, err: f64) -> DriftAction {
+        // Seed the EWMA with the first observation instead of decaying
+        // up from zero — one decision period is already a whole window
+        // of samples, not a noisy point.
+        self.ewma = if self.seen == 0 {
+            err
+        } else {
+            self.alpha * err + (1.0 - self.alpha) * self.ewma
+        };
+        self.seen += 1;
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return DriftAction::Cooldown;
+        }
+        if self.ewma.abs() > self.trigger {
+            return DriftAction::Armed;
+        }
+        DriftAction::Stable
+    }
+
+    fn start_cooldown(&mut self, periods: u32) {
+        self.cooldown_left = periods;
+    }
+}
+
+/// Incremental wall-time accumulator for one decision period.
+#[derive(Clone, Debug)]
+struct Pending {
+    decision_interval: u32,
+    predicted: f64,
+    sum_ns: f64,
+    n: u64,
+}
+
+/// Per-session predicted-vs-realized loss tracker (see module docs).
+///
+/// Lifecycle: [`observe`](OutcomeTracker::observe) on every telemetry
+/// sample, [`on_decision`](OutcomeTracker::on_decision) at every
+/// decision boundary, [`finish`](OutcomeTracker::finish) at close.
+#[derive(Clone, Debug)]
+pub struct OutcomeTracker {
+    cfg: RetuneConfig,
+    // Baseline: the session's own pre-first-decision samples at full
+    // fast memory. Two accumulators so the allocation epoch
+    // (interval 1) is excluded exactly like `overall_loss`'s skip(1),
+    // with an everything-seen fallback for degenerate one-sample runs.
+    base_sum_skip1: f64,
+    base_n_skip1: u64,
+    base_sum_all: f64,
+    base_n_all: u64,
+    pending: Option<Pending>,
+    drift: DriftDetector,
+    /// A re-decide is scheduled for `early_intervals` from now.
+    early_pending: bool,
+    /// Finalized outcomes, in decision order.
+    pub outcomes: Vec<OutcomeRecord>,
+    /// Early re-decides actually taken.
+    pub retunes: u64,
+}
+
+impl OutcomeTracker {
+    pub fn new(cfg: RetuneConfig) -> OutcomeTracker {
+        OutcomeTracker {
+            drift: DriftDetector::new(&cfg),
+            cfg,
+            base_sum_skip1: 0.0,
+            base_n_skip1: 0,
+            base_sum_all: 0.0,
+            base_n_all: 0,
+            pending: None,
+            early_pending: false,
+            outcomes: Vec::new(),
+            retunes: 0,
+        }
+    }
+
+    pub fn config(&self) -> &RetuneConfig {
+        &self.cfg
+    }
+
+    /// Anything to do at all? `off` mode keeps every call site a
+    /// branch-and-return.
+    pub fn active(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Detector state (for gauges / reports).
+    pub fn ewma_err(&self) -> f64 {
+        self.drift.ewma
+    }
+
+    /// Feed one telemetry sample's interval wall time.
+    pub fn observe(&mut self, interval: u32, wall_ns: u64) {
+        if !self.active() {
+            return;
+        }
+        let w = wall_ns as f64;
+        match &mut self.pending {
+            Some(p) => {
+                p.sum_ns += w;
+                p.n += 1;
+            }
+            None => {
+                // Pre-first-decision: this is the baseline window.
+                self.base_sum_all += w;
+                self.base_n_all += 1;
+                if interval >= 2 {
+                    self.base_sum_skip1 += w;
+                    self.base_n_skip1 += 1;
+                }
+            }
+        }
+    }
+
+    /// Mean baseline interval wall time (allocation epoch excluded when
+    /// possible), or 0.0 when no baseline sample was ever seen.
+    fn baseline_mean(&self) -> f64 {
+        if self.base_n_skip1 > 0 {
+            self.base_sum_skip1 / self.base_n_skip1 as f64
+        } else if self.base_n_all > 0 {
+            self.base_sum_all / self.base_n_all as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Close the pending window (if it saw any samples) into an
+    /// [`OutcomeRecord`].
+    fn finalize(&mut self, end_interval: u32) -> Option<OutcomeRecord> {
+        let p = self.pending.take()?;
+        if p.n == 0 {
+            return None;
+        }
+        let mean = p.sum_ns / p.n as f64;
+        let base = self.baseline_mean();
+        // Same guard as `perf_loss_vs` / `overall_loss`: an unusable
+        // baseline reports zero loss rather than a NaN/inf.
+        let realized = if !(base > 0.0) || !base.is_finite() {
+            0.0
+        } else {
+            (mean - base) / base
+        };
+        let rec = OutcomeRecord {
+            decision_interval: p.decision_interval,
+            end_interval,
+            predicted: p.predicted,
+            realized,
+            abs_err: (realized - p.predicted).abs(),
+        };
+        self.outcomes.push(rec.clone());
+        Some(rec)
+    }
+
+    /// A decision was just taken at `interval` predicting `predicted`
+    /// loss: finalize the previous decision's outcome, run the drift
+    /// detector, account a re-tune if this decision was the early
+    /// re-decide, and start tracking the new decision.
+    pub fn on_decision(&mut self, interval: u32, predicted: f64) -> DecisionFeedback {
+        if !self.active() {
+            return DecisionFeedback {
+                outcome: None,
+                ewma_err: 0.0,
+                action: DriftAction::None,
+                was_retune: false,
+            };
+        }
+        let was_retune = self.early_pending;
+        self.early_pending = false;
+        let outcome = self.finalize(interval);
+        let mut action = DriftAction::None;
+        if let Some(o) = &outcome {
+            action = self.drift.update(o.realized - o.predicted);
+        }
+        if was_retune {
+            self.retunes += 1;
+            self.drift.start_cooldown(self.cfg.cooldown_periods);
+            action = DriftAction::Retune;
+        } else if action == DriftAction::Armed && self.cfg.mode == RetuneMode::On {
+            self.early_pending = true;
+        }
+        self.pending = Some(Pending {
+            decision_interval: interval,
+            predicted,
+            sum_ns: 0.0,
+            n: 0,
+        });
+        DecisionFeedback { outcome, ewma_err: self.drift.ewma, action, was_retune }
+    }
+
+    /// Intervals until the next decision, given the normal tuning
+    /// period. Only `on` mode with an armed detector shortens it;
+    /// `off`/`observe` return `normal` untouched (the cadence
+    /// bit-identity guarantee).
+    pub fn next_period(&self, normal: u32) -> u32 {
+        if self.cfg.mode == RetuneMode::On && self.early_pending {
+            self.cfg.early_intervals.min(normal).max(1)
+        } else {
+            normal
+        }
+    }
+
+    /// Session is closing: finalize the last decision's outcome (the
+    /// window that never reached another boundary).
+    pub fn finish(&mut self, end_interval: u32) -> Option<OutcomeRecord> {
+        if !self.active() {
+            return None;
+        }
+        self.finalize(end_interval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: RetuneMode) -> RetuneConfig {
+        RetuneConfig { mode, ..RetuneConfig::default() }
+    }
+
+    /// Drive `n` samples of constant wall time through the tracker.
+    fn feed(t: &mut OutcomeTracker, from: u32, n: u32, wall: u64) -> u32 {
+        for i in 0..n {
+            t.observe(from + i, wall);
+        }
+        from + n
+    }
+
+    #[test]
+    fn off_mode_is_inert() {
+        let mut t = OutcomeTracker::new(cfg(RetuneMode::Off));
+        feed(&mut t, 1, 10, 100);
+        let fb = t.on_decision(10, 0.05);
+        assert!(fb.outcome.is_none());
+        assert_eq!(fb.action, DriftAction::None);
+        assert_eq!(t.next_period(25), 25);
+        assert!(t.finish(20).is_none());
+        assert!(t.outcomes.is_empty());
+        assert_eq!(t.retunes, 0);
+    }
+
+    #[test]
+    fn realized_loss_is_relative_to_own_baseline_excluding_epoch() {
+        let mut t = OutcomeTracker::new(cfg(RetuneMode::Observe));
+        // Allocation epoch is huge and must be excluded from the
+        // baseline; the real baseline is 100ns/interval.
+        t.observe(1, 10_000);
+        feed(&mut t, 2, 4, 100);
+        t.on_decision(5, 0.05);
+        // The decision period runs 20% slower than the baseline.
+        feed(&mut t, 6, 5, 120);
+        let fb = t.on_decision(10, 0.05);
+        let o = fb.outcome.expect("outcome closes at the next boundary");
+        assert_eq!(o.decision_interval, 5);
+        assert_eq!(o.end_interval, 10);
+        assert!((o.realized - 0.2).abs() < 1e-12, "realized {}", o.realized);
+        assert!((o.abs_err - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observe_mode_never_shortens_the_period() {
+        let mut t = OutcomeTracker::new(RetuneConfig {
+            mode: RetuneMode::Observe,
+            trigger: 0.01,
+            ..RetuneConfig::default()
+        });
+        feed(&mut t, 1, 5, 100);
+        t.on_decision(5, 0.0);
+        feed(&mut t, 6, 5, 200); // huge error, detector arms
+        let fb = t.on_decision(10, 0.0);
+        assert_eq!(fb.action, DriftAction::Armed);
+        assert_eq!(t.next_period(25), 25, "observe mode must not act");
+        assert_eq!(t.retunes, 0);
+    }
+
+    #[test]
+    fn on_mode_retunes_once_then_cools_down() {
+        let mut t = OutcomeTracker::new(RetuneConfig {
+            mode: RetuneMode::On,
+            trigger: 0.01,
+            early_intervals: 2,
+            cooldown_periods: 2,
+            ..RetuneConfig::default()
+        });
+        feed(&mut t, 1, 5, 100);
+        t.on_decision(5, 0.0);
+        feed(&mut t, 6, 5, 200);
+        let fb = t.on_decision(10, 0.0);
+        assert_eq!(fb.action, DriftAction::Armed);
+        assert_eq!(t.next_period(5), 2, "armed + on => early re-decide");
+        feed(&mut t, 11, 2, 200);
+        let fb = t.on_decision(12, 0.0);
+        assert_eq!(fb.action, DriftAction::Retune);
+        assert!(fb.was_retune);
+        assert_eq!(t.retunes, 1);
+        assert_eq!(t.next_period(5), 5, "cadence restored after the re-tune");
+        // Error stays large, but the cool-down suppresses re-arming for
+        // two decision periods.
+        feed(&mut t, 13, 5, 200);
+        assert_eq!(t.on_decision(17, 0.0).action, DriftAction::Cooldown);
+        feed(&mut t, 18, 5, 200);
+        assert_eq!(t.on_decision(22, 0.0).action, DriftAction::Cooldown);
+        feed(&mut t, 23, 5, 200);
+        assert_eq!(t.on_decision(27, 0.0).action, DriftAction::Armed);
+    }
+
+    #[test]
+    fn accurate_predictions_stay_stable() {
+        let mut t = OutcomeTracker::new(cfg(RetuneMode::On));
+        feed(&mut t, 1, 5, 100);
+        t.on_decision(5, 0.2);
+        feed(&mut t, 6, 5, 120); // realized 0.2 == predicted
+        let fb = t.on_decision(10, 0.2);
+        assert_eq!(fb.action, DriftAction::Stable);
+        assert_eq!(t.next_period(25), 25);
+    }
+
+    #[test]
+    fn finish_closes_the_last_window() {
+        let mut t = OutcomeTracker::new(cfg(RetuneMode::Observe));
+        feed(&mut t, 1, 5, 100);
+        t.on_decision(5, 0.1);
+        feed(&mut t, 6, 3, 110);
+        let o = t.finish(8).expect("trailing window closes at finish");
+        assert_eq!(o.end_interval, 8);
+        assert!((o.realized - 0.1).abs() < 1e-9);
+        assert_eq!(t.outcomes.len(), 1);
+        assert!(t.finish(9).is_none(), "finish is idempotent");
+    }
+
+    #[test]
+    fn empty_decision_window_produces_no_record() {
+        let mut t = OutcomeTracker::new(cfg(RetuneMode::Observe));
+        feed(&mut t, 1, 5, 100);
+        t.on_decision(5, 0.1);
+        // No samples before the next boundary (back-to-back decisions).
+        let fb = t.on_decision(5, 0.1);
+        assert!(fb.outcome.is_none());
+        assert!(t.outcomes.is_empty());
+    }
+
+    #[test]
+    fn parse_validates_and_roundtrips_mode_names() {
+        for mode in [RetuneMode::Off, RetuneMode::Observe, RetuneMode::On] {
+            let c = RetuneConfig { mode, ..RetuneConfig::default() };
+            let back = RetuneConfig::parse(
+                c.mode_name(),
+                c.ewma_alpha,
+                c.trigger,
+                c.early_intervals,
+                c.cooldown_periods,
+            )
+            .unwrap();
+            assert_eq!(back, c);
+        }
+        assert!(RetuneConfig::parse("sideways", 0.4, 0.04, 2, 2).is_err());
+        assert!(RetuneConfig::parse("on", 0.0, 0.04, 2, 2).is_err());
+        assert!(RetuneConfig::parse("on", 1.5, 0.04, 2, 2).is_err());
+        assert!(RetuneConfig::parse("on", 0.4, 0.0, 2, 2).is_err());
+        assert!(RetuneConfig::parse("on", 0.4, 0.04, 0, 2).is_err());
+        assert!(RetuneConfig::parse("on", 0.4, 0.04, 2, 0).is_ok());
+    }
+
+    #[test]
+    fn default_is_off_and_disabled() {
+        let c = RetuneConfig::default();
+        assert_eq!(c.mode, RetuneMode::Off);
+        assert!(!c.enabled());
+        assert_eq!(c.mode_name(), "off");
+    }
+}

@@ -264,6 +264,21 @@ pub fn service_backend(
     }
 }
 
+/// Shared "AOT artifacts missing" gate: `true` when `dir` lacks the
+/// manifest, in which case the caller should skip whatever needed the
+/// XLA executables. The historical stderr line is preserved verbatim
+/// (CI and humans grep for it) and the skip also lands as a structured
+/// warn event on `obs` when a recorder is enabled, so skipped coverage
+/// shows up in journals, not just scrolled-past terminal output.
+pub fn skip_without_artifacts(dir: &Path, obs: &crate::obs::Recorder) -> bool {
+    if dir.join("manifest.txt").exists() {
+        return false;
+    }
+    eprintln!("skipping: run `make artifacts` first");
+    obs.warn_event("runtime::artifacts", "skipping: run `make artifacts` first");
+    true
+}
+
 impl NnQuery for XlaNn {
     fn nearest(&mut self, q: &[f32; DIMS]) -> Result<(usize, f32)> {
         self.exec.query(q)
@@ -300,8 +315,12 @@ mod tests {
         PathBuf::from("artifacts")
     }
 
-    fn have_artifacts() -> bool {
-        artifacts_dir().join("manifest.txt").exists()
+    /// Every artifact-dependent test shares one gate (the module-level
+    /// [`super::skip_without_artifacts`]); tests carry no recorder, so
+    /// the structured half is a no-op here and only the verbatim stderr
+    /// line survives — exactly the historical behavior.
+    fn skip_without_artifacts() -> bool {
+        super::skip_without_artifacts(&artifacts_dir(), &crate::obs::Recorder::disabled())
     }
 
     fn random_db(n: usize, seed: u64) -> PerfDb {
@@ -326,8 +345,7 @@ mod tests {
 
     #[test]
     fn manifest_parses() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if skip_without_artifacts() {
             return;
         }
         let m = Manifest::load(&artifacts_dir()).unwrap();
@@ -339,8 +357,7 @@ mod tests {
 
     #[test]
     fn xla_query_matches_native_oracle() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if skip_without_artifacts() {
             return;
         }
         let db = random_db(1000, 7);
@@ -374,8 +391,7 @@ mod tests {
 
     #[test]
     fn exact_record_match_roundtrip() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if skip_without_artifacts() {
             return;
         }
         let db = random_db(500, 3);
@@ -387,8 +403,7 @@ mod tests {
 
     #[test]
     fn literal_mode_matches_cached_mode() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if skip_without_artifacts() {
             return;
         }
         let db = random_db(700, 11);
@@ -404,8 +419,7 @@ mod tests {
 
     #[test]
     fn xla_topk_matches_native_topk() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if skip_without_artifacts() {
             return;
         }
         let db = random_db(900, 21);
@@ -435,8 +449,7 @@ mod tests {
 
     #[test]
     fn oversized_db_is_rejected() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        if skip_without_artifacts() {
             return;
         }
         let m = Manifest::load(&artifacts_dir()).unwrap();

@@ -12,7 +12,7 @@
 //!        <demoted_direct> <fast_free> [<shadow_hits> <shadow_free_demotions> \
 //!        <txn_aborts> <txn_retried_copies> [<admission_accepted> \
 //!        <admission_rejected_budget> <admission_rejected_payoff> \
-//!        <admission_rejected_cooldown>]]
+//!        <admission_rejected_cooldown> [<wall_ns>]]]
 //! close <session>
 //! ```
 //!
@@ -22,11 +22,13 @@
 //! in one stream. The bracketed counters are optional, newest-last:
 //! streams recorded before the migration-model axis existed carry 12
 //! sample fields, streams recorded before admission control carry 16,
-//! and both parse with the missing counters as 0, so replaying an old
-//! recording still produces bit-identical decisions. Writers always
-//! emit all 20 fields. Replaying a recorded stream through [`Ingestor`]
-//! produces decisions bit-identical to the run that recorded it — the
-//! determinism tests in the integration suite prove it.
+//! streams recorded before the outcome tracker carry 20 (no interval
+//! wall time), and all parse with the missing fields as 0, so replaying
+//! an old recording still produces bit-identical decisions. Writers
+//! always emit all 21 fields. Replaying a recorded stream through
+//! [`Ingestor`] produces decisions bit-identical to the run that
+//! recorded it — the determinism tests in the integration suite prove
+//! it.
 
 use std::collections::HashMap;
 use std::io::BufRead;
@@ -113,6 +115,7 @@ impl Event {
                     admission_rejected_budget: opt_field(&mut it, "admission_rejected_budget")?,
                     admission_rejected_payoff: opt_field(&mut it, "admission_rejected_payoff")?,
                     admission_rejected_cooldown: opt_field(&mut it, "admission_rejected_cooldown")?,
+                    wall_ns: opt_field(&mut it, "wall_ns")?,
                 },
             },
             "close" => Event::Close { name: field(&mut it, "session name")? },
@@ -131,7 +134,7 @@ impl Event {
                 format!("open {name} {capacity} {rss_pages} {hot_thr} {threads}")
             }
             Event::Sample { name, sample: s } => format!(
-                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
+                "sample {name} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
                 s.interval,
                 s.acc_fast,
                 s.acc_slow,
@@ -151,7 +154,8 @@ impl Event {
                 s.admission_accepted,
                 s.admission_rejected_budget,
                 s.admission_rejected_payoff,
-                s.admission_rejected_cooldown
+                s.admission_rejected_cooldown,
+                s.wall_ns
             ),
             Event::Close { name } => format!("close {name}"),
         }
@@ -362,6 +366,7 @@ mod tests {
                     admission_rejected_payoff: 18,
                     admission_rejected_cooldown: 19,
                     fast_free: 11,
+                    wall_ns: 1_234_567,
                 },
             },
             Event::Close { name: "bfs#1".into() },
@@ -407,8 +412,16 @@ mod tests {
             ),
             (0, 0, 0, 0)
         );
-        // 21st field is still a trailing-token error
-        let long = format!("{} 0 0 0 0 0 0 0 0 99", old);
+        // a 20-field line from a pre-outcome-tracker stream: wall_ns
+        // reads as 0 (the tracker reports no realized loss for it)
+        let pre_outcome = format!("{} 12 13 14 15 16 17 18 19", old);
+        let Some(Event::Sample { sample, .. }) = Event::parse(&pre_outcome).unwrap() else {
+            panic!("pre-outcome sample line must parse");
+        };
+        assert_eq!(sample.admission_rejected_cooldown, 19);
+        assert_eq!(sample.wall_ns, 0);
+        // a 22nd field is still a trailing-token error
+        let long = format!("{} 0 0 0 0 0 0 0 0 0 99", old);
         assert!(Event::parse(&long).is_err(), "overlong sample must be rejected");
         // a present-but-malformed optional field is an error, not a 0
         let bad = format!("{} nope", old);

@@ -38,6 +38,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::config::experiment::TunaConfig;
+use crate::outcome::OutcomeRecord;
 use crate::perfdb::native::NnQuery;
 use crate::perfdb::PerfSource;
 use crate::telemetry::TelemetrySample;
@@ -83,13 +84,32 @@ pub struct SessionReport {
     pub vmstat: Vec<(&'static str, u64)>,
     /// Total decision-path time (ns) across the session.
     pub decide_ns: u128,
+    /// Predicted-vs-realized outcomes (empty unless the session's
+    /// `cfg.retune` mode is `observe` or `on`). The trailing decision's
+    /// window is settled at close, so every decision with at least one
+    /// subsequent sample is accounted for.
+    pub outcomes: Vec<OutcomeRecord>,
+    /// Drift-forced early re-decides taken (0 unless `retune = on`).
+    pub retunes: u64,
+}
+
+/// A decision boundary's answer: the watermarks (when a decision was
+/// taken) plus how many intervals the session should wait before the
+/// next boundary. Computing the wait server-side — in
+/// [`TunerState::next_period`], right after the decision — is what
+/// keeps drift-forced early re-decides bit-identical between the
+/// inline and channel wirings: both learn the shortened period from
+/// the same state transition, in the same message order.
+struct DecisionReply {
+    wm: Option<Watermarks>,
+    next_wait: u32,
 }
 
 /// Messages on the service channel. Per-sender FIFO ordering of the mpsc
 /// channel is what makes the protocol deterministic: a session's
 /// `Decide` always arrives after every sample it should cover.
 enum Msg {
-    Open(u64, SessionSpec, SyncSender<Option<Watermarks>>),
+    Open(u64, SessionSpec, SyncSender<DecisionReply>),
     Sample(u64, TelemetrySample),
     Decide(u64, u32),
     Close(u64, SyncSender<SessionReport>),
@@ -100,8 +120,11 @@ enum Msg {
 struct Session {
     name: String,
     state: TunerState,
-    mailbox: Option<SyncSender<Option<Watermarks>>>,
+    mailbox: Option<SyncSender<DecisionReply>>,
     samples: u64,
+    /// Interval of the last sample seen (the end marker for settling
+    /// the trailing outcome window at close).
+    last_interval: u32,
 }
 
 /// The service state proper: shared query backend + per-session states.
@@ -123,12 +146,7 @@ struct Core {
 }
 
 impl Core {
-    fn open(
-        &mut self,
-        id: u64,
-        spec: SessionSpec,
-        mailbox: Option<SyncSender<Option<Watermarks>>>,
-    ) {
+    fn open(&mut self, id: u64, spec: SessionSpec, mailbox: Option<SyncSender<DecisionReply>>) {
         let mut state = TunerState::new(
             self.db.clone(),
             spec.cfg,
@@ -138,31 +156,41 @@ impl Core {
             spec.threads,
         );
         state.set_obs(self.obs.clone());
+        state.set_session_label(&spec.name);
         self.obs.count("service_sessions_opened_total", 1);
-        self.sessions.insert(id, Session { name: spec.name, state, mailbox, samples: 0 });
+        self.sessions.insert(
+            id,
+            Session { name: spec.name, state, mailbox, samples: 0, last_interval: 0 },
+        );
     }
 
     fn sample(&mut self, id: u64, s: &TelemetrySample) {
         if let Some(sess) = self.sessions.get_mut(&id) {
             sess.state.ingest(s);
             sess.samples += 1;
+            sess.last_interval = s.interval;
         }
     }
 
-    fn decide(&mut self, id: u64, interval: u32) -> Option<Watermarks> {
+    fn decide(&mut self, id: u64, interval: u32) -> Option<(Option<Watermarks>, u32)> {
         // split borrows: the session state and the shared backend are
         // disjoint fields of the core
         let Core { sessions, query, .. } = self;
         let sess = sessions.get_mut(&id)?;
-        sess.state.decide(interval, query.as_mut())
+        let wm = sess.state.decide(interval, query.as_mut());
+        Some((wm, sess.state.next_period()))
     }
 
     fn close(&mut self, id: u64) -> Option<SessionReport> {
-        let sess = self.sessions.remove(&id)?;
+        let mut sess = self.sessions.remove(&id)?;
         self.obs.count("service_sessions_closed_total", 1);
+        // settle the last decision's outcome window before reporting
+        sess.state.finish_outcome(sess.last_interval);
         let mean_fraction = sess.state.mean_fraction();
         let min_fraction = sess.state.min_fraction();
         let vmstat = sess.state.vmstat();
+        let outcomes = sess.state.outcomes().to_vec();
+        let retunes = sess.state.retunes();
         Some(SessionReport {
             name: sess.name,
             samples: sess.samples,
@@ -171,6 +199,8 @@ impl Core {
             vmstat,
             decide_ns: sess.state.decide_ns,
             decisions: sess.state.decisions,
+            outcomes,
+            retunes,
         })
     }
 
@@ -179,9 +209,10 @@ impl Core {
             Msg::Open(id, spec, mailbox) => self.open(id, spec, Some(mailbox)),
             Msg::Sample(id, s) => self.sample(id, &s),
             Msg::Decide(id, interval) => {
-                let wm = self.decide(id, interval);
-                if let Some(mb) = self.sessions.get(&id).and_then(|s| s.mailbox.as_ref()) {
-                    mb.send(wm).ok();
+                if let Some((wm, next_wait)) = self.decide(id, interval) {
+                    if let Some(mb) = self.sessions.get(&id).and_then(|s| s.mailbox.as_ref()) {
+                        mb.send(DecisionReply { wm, next_wait }).ok();
+                    }
                 }
             }
             Msg::Close(id, reply) => {
@@ -347,7 +378,7 @@ impl TunerService {
             id,
             name,
             capacity,
-            period_intervals,
+            next_wait: period_intervals,
             since_decision: 0,
             published: 0,
             dead: false,
@@ -375,7 +406,7 @@ impl Drop for TunerService {
 
 enum HandleConn {
     Inline,
-    Channel { tx: SyncSender<Msg>, mailbox: Receiver<Option<Watermarks>> },
+    Channel { tx: SyncSender<Msg>, mailbox: Receiver<DecisionReply> },
 }
 
 /// One run's connection to a [`TunerService`]: publish a sample per
@@ -389,7 +420,10 @@ pub struct SessionHandle<'s> {
     id: u64,
     name: String,
     capacity: u64,
-    period_intervals: u32,
+    /// Intervals until the next decision boundary. Starts at the
+    /// configured tuning period; every decision reply refreshes it
+    /// (shortened only by an armed drift detector under `retune = on`).
+    next_wait: u32,
     since_decision: u32,
     published: u64,
     dead: bool,
@@ -436,7 +470,7 @@ impl SessionHandle<'_> {
         }
         self.published += 1;
         self.since_decision += 1;
-        if self.since_decision < self.period_intervals {
+        if self.since_decision < self.next_wait {
             return None;
         }
         self.since_decision = 0;
@@ -444,14 +478,23 @@ impl SessionHandle<'_> {
     }
 
     /// Ask the service for a decision over the current telemetry window
-    /// (normally driven by [`Self::publish`]'s period counting).
+    /// (normally driven by [`Self::publish`]'s period counting). The
+    /// reply also refreshes [`Self::next_wait`] — the service, not the
+    /// handle, owns the cadence, so a drift-armed session re-decides
+    /// early in both wirings identically.
     pub fn request_decision(&mut self, interval: u32) -> Option<Watermarks> {
         if self.dead {
             return None;
         }
         match &mut self.conn {
             HandleConn::Inline => {
-                self.svc.with_core(|core| core.decide(self.id, interval)).flatten()
+                match self.svc.with_core(|core| core.decide(self.id, interval)).flatten() {
+                    Some((wm, next_wait)) => {
+                        self.next_wait = next_wait.max(1);
+                        wm
+                    }
+                    None => None,
+                }
             }
             HandleConn::Channel { tx, mailbox } => {
                 if tx.send(Msg::Decide(self.id, interval)).is_err() {
@@ -459,7 +502,10 @@ impl SessionHandle<'_> {
                     return None;
                 }
                 match mailbox.recv() {
-                    Ok(wm) => wm,
+                    Ok(reply) => {
+                        self.next_wait = reply.next_wait.max(1);
+                        reply.wm
+                    }
                     Err(_) => {
                         self.dead = true;
                         None
@@ -549,6 +595,7 @@ mod tests {
             admission_rejected_payoff: 0,
             admission_rejected_cooldown: 0,
             fast_free: 100,
+            wall_ns: 1_000_000,
         }
     }
 
@@ -650,6 +697,81 @@ mod tests {
         assert!(service.register(spec("late")).is_err());
         // double shutdown is a no-op
         service.shutdown();
+    }
+
+    #[test]
+    fn observe_mode_reports_outcomes_without_changing_decisions() {
+        use crate::outcome::{RetuneConfig, RetuneMode};
+        let db = db();
+        let off_svc = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let off = drive(&off_svc, "off", 22, 0);
+        assert!(off.outcomes.is_empty(), "off mode must report no outcomes");
+        assert_eq!(off.retunes, 0);
+
+        let obs_svc = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let mut sp = spec("observing");
+        sp.cfg.retune = RetuneConfig { mode: RetuneMode::Observe, ..RetuneConfig::default() };
+        let mut h = obs_svc.register(sp).unwrap();
+        for i in 1..=22u32 {
+            h.publish(sample(i, 0));
+        }
+        let observed = h.finish().unwrap();
+        assert_eq!(off.decisions.len(), observed.decisions.len());
+        for (x, y) in off.decisions.iter().zip(&observed.decisions) {
+            assert_eq!(x.interval, y.interval);
+            assert_eq!(x.fraction.to_bits(), y.fraction.to_bits());
+            assert_eq!(x.new_fm, y.new_fm);
+        }
+        // three settled at boundaries + the trailing window at close
+        assert_eq!(observed.outcomes.len(), observed.decisions.len());
+        assert_eq!(observed.retunes, 0, "observe mode never acts");
+        for o in &observed.outcomes {
+            assert_eq!(o.realized, 0.0, "flat wall time realizes zero loss");
+        }
+    }
+
+    #[test]
+    fn retune_on_is_bit_identical_across_inline_and_channel_modes() {
+        use crate::outcome::{RetuneConfig, RetuneMode};
+        fn drive_retune(service: &TunerService, name: &str) -> SessionReport {
+            let mut sp = spec(name);
+            sp.cfg.retune = RetuneConfig {
+                mode: RetuneMode::On,
+                ewma_alpha: 1.0,
+                trigger: 0.5,
+                early_intervals: 2,
+                cooldown_periods: 2,
+            };
+            let mut h = service.register(sp).unwrap();
+            for i in 1..=30u32 {
+                let mut s = sample(i, 0);
+                // wall time jumps 10× after the first decision period:
+                // realized loss drifts far above the prediction
+                s.wall_ns = if i <= 5 { 1_000_000 } else { 10_000_000 };
+                h.publish(s);
+            }
+            h.finish().unwrap()
+        }
+        let db = db();
+        let inline = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let channel = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        let a = drive_retune(&inline, "a");
+        let b = drive_retune(&channel, "b");
+        assert!(a.retunes >= 1, "drifting wall time must force a re-tune");
+        assert_eq!(a.retunes, b.retunes);
+        assert_eq!(a.decisions.len(), b.decisions.len());
+        for (x, y) in a.decisions.iter().zip(&b.decisions) {
+            assert_eq!(x.interval, y.interval, "early re-decides must land on the same interval");
+            assert_eq!(x.fraction.to_bits(), y.fraction.to_bits());
+            assert_eq!(x.new_fm, y.new_fm);
+        }
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.decision_interval, y.decision_interval);
+            assert_eq!(x.end_interval, y.end_interval);
+            assert_eq!(x.realized.to_bits(), y.realized.to_bits());
+            assert_eq!(x.predicted.to_bits(), y.predicted.to_bits());
+        }
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub struct TelemetrySample {
     /// Free fast-memory pages at the end of the interval (a gauge, not a
     /// counter).
     pub fast_free: u64,
+    /// Modeled wall time of the interval in nanoseconds (rounded). The
+    /// outcome tracker turns these into realized loss; 0 in telemetry
+    /// streams recorded before the field existed (the tracker then
+    /// reports zero realized loss rather than inventing one).
+    pub wall_ns: u64,
 }
 
 impl TelemetrySample {
@@ -91,6 +96,7 @@ impl TelemetrySample {
             admission_rejected_payoff: t.admission_rejected_payoff,
             admission_rejected_cooldown: t.admission_rejected_cooldown,
             fast_free: t.fast_free,
+            wall_ns: t.wall_ns.round() as u64,
         }
     }
 }
@@ -309,6 +315,7 @@ mod tests {
             admission_rejected_payoff: rng.below(40),
             admission_rejected_cooldown: rng.below(40),
             fast_free: rng.below(1_000),
+            wall_ns: 1_000_000 + rng.below(1_000_000),
         }
     }
 

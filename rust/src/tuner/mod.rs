@@ -17,6 +17,7 @@
 use std::sync::Arc;
 
 use crate::config::experiment::TunaConfig;
+use crate::outcome::{DriftAction, OutcomeRecord, OutcomeTracker};
 use crate::perfdb::native::NnQuery;
 use crate::perfdb::{normalize, PerfSource};
 use crate::sim::RunTrace;
@@ -69,6 +70,15 @@ pub struct TunerState {
     /// Records decisions and skip diagnostics — never read back, so
     /// decisions are bit-identical whether or not it is enabled.
     obs: crate::obs::Recorder,
+    /// Predicted-vs-realized outcome accounting and drift detection
+    /// (inert unless `cfg.retune` enables it). In `observe` mode the
+    /// tracker only records; in `on` mode a sustained prediction error
+    /// shortens the next tuning period via [`Self::next_period`] —
+    /// never the decision itself, so decisions taken at the same
+    /// interval stay bit-identical across modes.
+    tracker: OutcomeTracker,
+    /// Session label stamped on outcome/drift journal events.
+    session: String,
 }
 
 impl TunerState {
@@ -80,6 +90,7 @@ impl TunerState {
         hot_thr: u32,
         threads: u32,
     ) -> Self {
+        let tracker = OutcomeTracker::new(cfg.retune);
         TunerState {
             db,
             cfg,
@@ -91,6 +102,8 @@ impl TunerState {
             decisions: Vec::new(),
             decide_ns: 0,
             obs: crate::obs::Recorder::default(),
+            tracker,
+            session: String::new(),
         }
     }
 
@@ -98,6 +111,12 @@ impl TunerState {
     /// unchanged; every existing call site keeps a disabled recorder).
     pub fn set_obs(&mut self, obs: crate::obs::Recorder) {
         self.obs = obs;
+    }
+
+    /// Name this session on outcome/drift journal events (constructor
+    /// signatures stay unchanged; unset sessions journal as `""`).
+    pub fn set_session_label(&mut self, name: &str) {
+        self.session = name.to_string();
     }
 
     /// Profiling intervals per tuning period for this state's config.
@@ -109,6 +128,7 @@ impl TunerState {
     pub fn ingest(&mut self, s: &TelemetrySample) {
         self.window.observe(s);
         self.counters.observe(s);
+        self.tracker.observe(s.interval, s.wall_ns);
     }
 
     pub fn window(&self) -> &WindowAggregator {
@@ -202,8 +222,13 @@ impl TunerState {
             predicted_loss,
         });
         let wm = Watermarks::for_target_fm(self.capacity, new_fm);
+        // Settle the previous decision's outcome *after* this decision
+        // is fully formed: the tracker never feeds back into the
+        // fraction walk, only (in `on` mode) into the next period
+        // length, so decisions stay bit-identical across retune modes.
+        let feedback = self.tracker.on_decision(interval, predicted_loss);
         if self.obs.is_enabled() {
-            use crate::obs::{EventKind, FRACTION_BUCKETS, LOSS_BUCKETS};
+            use crate::obs::{EventKind, ERR_BUCKETS, FRACTION_BUCKETS, LOSS_BUCKETS};
             self.obs.count("tuner_decisions_total", 1);
             self.obs
                 .observe("tuner_decision_fraction", FRACTION_BUCKETS, fraction);
@@ -219,8 +244,77 @@ impl TunerState {
                 wm_low: wm.low,
                 wm_high: wm.high,
             });
+            if let Some(o) = &feedback.outcome {
+                self.obs.observe("tuner_realized_loss", LOSS_BUCKETS, o.realized);
+                self.obs
+                    .observe("tuner_prediction_error", ERR_BUCKETS, o.realized - o.predicted);
+                self.obs.record(EventKind::Outcome {
+                    session: self.session.clone(),
+                    decision_interval: o.decision_interval,
+                    predicted: o.predicted,
+                    realized: o.realized,
+                    abs_err: o.abs_err,
+                });
+            }
+            if self.tracker.active() {
+                self.obs.gauge("tuner_drift_state", feedback.action.gauge());
+                // A zero delta still registers the family, so a scrape
+                // can tell "tracking, 0 retunes" from "tracker off".
+                self.obs.count("tuner_retunes_total", feedback.was_retune as u64);
+                if matches!(
+                    feedback.action,
+                    DriftAction::Armed | DriftAction::Retune | DriftAction::Cooldown
+                ) {
+                    self.obs.record(EventKind::Drift {
+                        session: self.session.clone(),
+                        interval,
+                        ewma_err: self.tracker.ewma_err(),
+                        action: feedback.action.name().to_string(),
+                    });
+                }
+            }
         }
         Some(wm)
+    }
+
+    /// Intervals until the *next* decision: the configured period,
+    /// shortened when `retune = on` and the drift detector is armed.
+    /// `off`/`observe` always return the configured period, which is
+    /// what makes those modes bit-identical to the legacy cadence.
+    pub fn next_period(&self) -> u32 {
+        self.tracker.next_period(self.cfg.period_intervals())
+    }
+
+    /// Settle the in-flight outcome at end of run (there is no later
+    /// decision to close it): journals the final predicted-vs-realized
+    /// pair so the last decision of a session is accounted for too.
+    pub fn finish_outcome(&mut self, end_interval: u32) -> Option<OutcomeRecord> {
+        let o = self.tracker.finish(end_interval)?;
+        if self.obs.is_enabled() {
+            use crate::obs::{EventKind, ERR_BUCKETS, LOSS_BUCKETS};
+            self.obs.observe("tuner_realized_loss", LOSS_BUCKETS, o.realized);
+            self.obs
+                .observe("tuner_prediction_error", ERR_BUCKETS, o.realized - o.predicted);
+            self.obs.record(EventKind::Outcome {
+                session: self.session.clone(),
+                decision_interval: o.decision_interval,
+                predicted: o.predicted,
+                realized: o.realized,
+                abs_err: o.abs_err,
+            });
+        }
+        Some(o)
+    }
+
+    /// Settled predicted-vs-realized outcomes, decision order.
+    pub fn outcomes(&self) -> &[OutcomeRecord] {
+        &self.tracker.outcomes
+    }
+
+    /// Early re-decides forced by the drift detector (0 unless
+    /// `retune = on`).
+    pub fn retunes(&self) -> u64 {
+        self.tracker.retunes
     }
 
     /// Mean fast-memory fraction across all decisions (the "saving" is
@@ -247,8 +341,11 @@ impl TunerState {
 /// service path is proven bit-identical against.
 pub struct Tuner {
     query: Box<dyn NnQuery>,
-    period_intervals: u32,
     since_decision: u32,
+    /// Intervals to wait before the next decision. Equals the
+    /// configured period except right after the drift detector arms
+    /// under `retune = on`, when the state shortens it.
+    next_wait: u32,
     pub state: TunerState,
 }
 
@@ -262,11 +359,11 @@ impl Tuner {
         hot_thr: u32,
         threads: u32,
     ) -> Self {
-        let period_intervals = cfg.period_intervals();
+        let next_wait = cfg.period_intervals();
         Tuner {
             query,
-            period_intervals,
             since_decision: 0,
+            next_wait,
             state: TunerState::new(db, cfg, capacity, rss_pages, hot_thr, threads),
         }
     }
@@ -277,15 +374,20 @@ impl Tuner {
     }
 
     /// Engine observer: accumulate telemetry; on period boundaries take a
-    /// decision and return the watermarks to program.
+    /// decision and return the watermarks to program. The boundary is
+    /// `next_wait`, not the fixed period: under `retune = on` an armed
+    /// drift detector shortens the wait once, forcing an early
+    /// re-decide (identical to the configured cadence otherwise).
     pub fn observe(&mut self, t: &RunTrace) -> Option<Watermarks> {
         self.state.ingest(&t.sample());
         self.since_decision += 1;
-        if self.since_decision < self.period_intervals {
+        if self.since_decision < self.next_wait {
             return None;
         }
         self.since_decision = 0;
-        self.decide(t.interval)
+        let out = self.decide(t.interval);
+        self.next_wait = self.state.next_period();
+        out
     }
 
     /// Take one tuning decision now (see [`TunerState::decide`]).
@@ -313,6 +415,41 @@ impl Tuner {
     pub fn vmstat(&self) -> Vec<(&'static str, u64)> {
         self.state.vmstat()
     }
+
+    /// Settle the in-flight outcome at end of run (see
+    /// [`TunerState::finish_outcome`]).
+    pub fn finish_outcome(&mut self, end_interval: u32) -> Option<OutcomeRecord> {
+        self.state.finish_outcome(end_interval)
+    }
+}
+
+/// What-if loss prediction: the exact query path of one live decision
+/// ([`TunerState::decide`]) — normalize the window vector, k-NN
+/// ([`KNN`] neighbours), distance-weighted loss curve, descending-grid
+/// interpolation — but evaluated at a caller-chosen `fraction` instead
+/// of scanning for the loss target. `tuna whatif` builds on this;
+/// keeping it here (not in the CLI) pins it to the decision code so
+/// the two can never drift apart.
+///
+/// Returns `Ok(None)` when the window is empty or the database has no
+/// neighbours (the same conditions under which a live decision skips).
+pub fn predict_loss_at(
+    db: &Arc<dyn PerfSource>,
+    query: &mut dyn NnQuery,
+    window: &mut WindowAggregator,
+    fraction: f64,
+) -> anyhow::Result<Option<f64>> {
+    let cfg = match window.take_window_config() {
+        Some(c) => c,
+        None => return Ok(None),
+    };
+    let q = normalize(&cfg.as_array());
+    let neighbors = query.top_k(&q, KNN)?;
+    if neighbors.is_empty() {
+        return Ok(None);
+    }
+    let curve = db.weighted_loss_curve_of(&neighbors)?;
+    Ok(Some(crate::perfdb::interp_desc(&curve, fraction)))
 }
 
 #[cfg(test)]
@@ -577,5 +714,86 @@ mod tests {
             assert_eq!(a.new_fm, b.new_fm);
             assert_eq!(a.predicted_loss.to_bits(), b.predicted_loss.to_bits());
         }
+    }
+
+    #[test]
+    fn observe_mode_is_bit_identical_to_off_and_still_tracks_outcomes() {
+        use crate::outcome::{RetuneConfig, RetuneMode};
+        let db = db();
+        let mut off = mk_tuner(db.clone(), 0.5);
+        let cfg = TunaConfig {
+            period_s: 0.5,
+            max_step_down: 0.04,
+            retune: RetuneConfig { mode: RetuneMode::Observe, ..RetuneConfig::default() },
+            ..TunaConfig::default()
+        };
+        let query = Box::new(NativeNn::new(&db));
+        let mut observing = Tuner::new(db, query, cfg, 8_200, 8_000, 2, 16);
+        // 22 intervals: decisions at 5/10/15/20, then two trailing
+        // samples so the last decision's window has content to settle.
+        for i in 1..=22u32 {
+            let t = trace_like(i, 10_000, 500, 10_500 * 64 * 4);
+            let a = off.observe(&t);
+            let b = observing.observe(&t);
+            assert_eq!(
+                a.map(|w| w.usable(8_200)),
+                b.map(|w| w.usable(8_200)),
+                "interval {i}: observe mode must not change the cadence or the choice"
+            );
+        }
+        assert_eq!(off.decisions().len(), observing.decisions().len());
+        for (a, b) in off.decisions().iter().zip(observing.decisions()) {
+            assert_eq!(a.interval, b.interval);
+            assert_eq!(a.fraction.to_bits(), b.fraction.to_bits());
+            assert_eq!(a.predicted_loss.to_bits(), b.predicted_loss.to_bits());
+        }
+        // ... but only observe mode settles outcomes: one per decision
+        // after the first (the last stays pending until finish).
+        assert!(off.state.outcomes().is_empty(), "off mode must track nothing");
+        assert_eq!(observing.state.outcomes().len(), off.decisions().len() - 1);
+        // constant wall time ⇒ realized loss 0 against its own baseline
+        for o in observing.state.outcomes() {
+            assert_eq!(o.realized, 0.0, "flat wall time must realize zero loss");
+        }
+        let last = observing.finish_outcome(22).expect("pending outcome at end");
+        assert_eq!(last.decision_interval, 20);
+        assert_eq!(off.finish_outcome(22), None, "off mode has nothing to settle");
+    }
+
+    #[test]
+    fn retune_on_forces_an_early_decision_when_realized_loss_drifts() {
+        use crate::outcome::{RetuneConfig, RetuneMode};
+        let db = db();
+        let cfg = TunaConfig {
+            period_s: 0.5, // 5 intervals per period
+            max_step_down: 0.04,
+            retune: RetuneConfig {
+                mode: RetuneMode::On,
+                ewma_alpha: 1.0,
+                trigger: 0.5,
+                early_intervals: 2,
+                cooldown_periods: 2,
+            },
+            ..TunaConfig::default()
+        };
+        let query = Box::new(NativeNn::new(&db));
+        let mut tuner = Tuner::new(db, query, cfg, 8_200, 8_000, 2, 16);
+        for i in 1..=20u32 {
+            let mut t = trace_like(i, 10_000, 500, 10_500 * 64 * 4);
+            // wall time jumps 10× after the first decision: realized loss
+            // lands far above the prediction, arming the drift detector.
+            t.wall_ns = if i <= 5 { 1.0e6 } else { 1.0e7 };
+            tuner.observe(&t);
+        }
+        let intervals: Vec<u32> = tuner.decisions().iter().map(|d| d.interval).collect();
+        assert!(
+            intervals.windows(2).any(|w| w[1] - w[0] == 2),
+            "an armed detector must shorten one wait to early_intervals ({intervals:?})"
+        );
+        assert!(tuner.state.retunes() >= 1, "the early decision counts as a retune");
+        assert!(
+            tuner.state.outcomes().iter().any(|o| o.realized > 5.0),
+            "the 10× wall-time jump must be realized as a large loss"
+        );
     }
 }

@@ -16,6 +16,7 @@ use tuna::coordinator::sweep::{
 };
 use tuna::coordinator::{self, RunSpec};
 use tuna::obs::{EventKind, Journal, Recorder, DEFAULT_RING_CAPACITY};
+use tuna::outcome::{RetuneConfig, RetuneMode};
 use tuna::perfdb::builder::{build_database, sample_config, BuildParams};
 use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
 use tuna::perfdb::{normalize, store, PerfDb};
@@ -1668,4 +1669,323 @@ fn obs_ring_overflow_keeps_newest_and_counts_drops() {
     assert_eq!(kept, [6, 7, 8, 9], "the oldest events are dropped first");
     let back = Journal::decode(&j.encode()).unwrap();
     assert_eq!(back.dropped, 6, "the drop count survives the round-trip");
+}
+
+// ---------------------------------------------------------------------------
+// decision-outcome accountability: observe ≡ off, retune-on acceptance,
+// what-if agreement, journal-tag compatibility
+// ---------------------------------------------------------------------------
+
+/// Acceptance (ISSUE 9 hard invariant): `--retune observe` records
+/// predicted-vs-realized outcomes but never acts — decisions, the
+/// complete engine trace (via `run_digest`, every f64 by bit pattern)
+/// and the vmstat counters are bit-identical to `--retune off`, for a
+/// Table-1 workload and a kv-* workload under both migration models.
+#[test]
+fn retune_observe_runs_are_bit_identical_to_off() {
+    let db = Arc::new(tiny_db());
+    let cfg_with = |mode: RetuneMode| TunaConfig {
+        period_s: 1.0,
+        retune: RetuneConfig { mode, ..RetuneConfig::default() },
+        ..TunaConfig::default()
+    };
+    for (name, migration) in [
+        ("BFS", MigrationModel::Exclusive),
+        ("BFS", MigrationModel::non_exclusive_default()),
+        ("kv-drift", MigrationModel::Exclusive),
+        ("kv-drift", MigrationModel::non_exclusive_default()),
+    ] {
+        let spec = RunSpec::new(name)
+            .with_intervals(40)
+            .with_seed(11)
+            .with_migration(migration);
+        let off =
+            coordinator::run_tuna_native(&spec, db.clone(), &cfg_with(RetuneMode::Off)).unwrap();
+        let observed =
+            coordinator::run_tuna_native(&spec, db.clone(), &cfg_with(RetuneMode::Observe))
+                .unwrap();
+        let ctx = format!("{name}/{migration:?}");
+        assert!(!off.decisions.is_empty(), "{ctx}: reference run must decide");
+        assert_decisions_bit_identical(&off.decisions, &observed.decisions, &ctx);
+        assert_eq!(
+            run_digest(&off.result),
+            run_digest(&observed.result),
+            "{ctx}: engine trace must be bit-identical under observe"
+        );
+        assert_eq!(off.vmstat, observed.vmstat, "{ctx}: vmstat");
+        // off is fully inert; observe actually joined outcomes without
+        // ever acting on them
+        assert!(off.outcomes.is_empty(), "{ctx}: off must not track outcomes");
+        assert_eq!(off.retunes, 0, "{ctx}: off must not retune");
+        assert!(!observed.outcomes.is_empty(), "{ctx}: observe must join outcomes");
+        assert_eq!(observed.retunes, 0, "{ctx}: observe must never act");
+    }
+}
+
+/// The sweep half of the same invariant: the persisted cell table of an
+/// observe-mode sweep (Tuna cells included) is byte-identical to the
+/// off-mode one.
+#[test]
+fn retune_observe_sweep_table_bytes_identical_to_off() {
+    let db = Arc::new(tiny_db());
+    let grid = |mode: RetuneMode| {
+        let cfg = TunaConfig {
+            period_s: 1.0,
+            retune: RetuneConfig { mode, ..RetuneConfig::default() },
+            ..TunaConfig::default()
+        };
+        let spec = SweepSpec::new(["BFS", "kv-drift"])
+            .with_fractions([0.8, 0.6])
+            .with_policies([SweepPolicy::Tpp, SweepPolicy::Tuna])
+            .with_intervals(30)
+            .with_threads(2)
+            .with_tuna(db.clone(), cfg);
+        run_sweep(&spec).unwrap()
+    };
+    let off = grid(RetuneMode::Off);
+    let observed = grid(RetuneMode::Observe);
+    assert_eq!(
+        SweepTable::from_sweep(&off).to_bytes(),
+        SweepTable::from_sweep(&observed).to_bytes(),
+        "observe mode must not perturb persisted sweep tables"
+    );
+}
+
+/// Acceptance (ISSUE 9): `--retune on` over kv-drift — whose phase
+/// change guarantees a realized-vs-predicted gap — must (a) actually
+/// act (the hair trigger forces re-tunes), (b) stay damped by the
+/// cool-down hysteresis (no retune on ≥ half of all decision periods),
+/// and (c) realize a loss no worse than the static-decision run at
+/// ≥ 1 swept loss target (zero-retune targets are bit-identical runs,
+/// so equality also satisfies this).
+#[test]
+fn retune_on_kvdrift_improves_somewhere_and_hysteresis_damps() {
+    let db = Arc::new(tiny_db());
+    let spec = RunSpec::new("kv-drift").with_intervals(60).with_seed(7);
+    let baseline = coordinator::run_fm_only(&spec).unwrap();
+    let run_mode = |mode: RetuneMode, target: f64| {
+        let cfg = TunaConfig {
+            period_s: 1.0,
+            loss_target: target,
+            retune: RetuneConfig {
+                mode,
+                ewma_alpha: 1.0,
+                trigger: 1e-6,
+                early_intervals: 2,
+                cooldown_periods: 2,
+            },
+            ..TunaConfig::default()
+        };
+        coordinator::run_tuna_native(&spec, db.clone(), &cfg).unwrap()
+    };
+    let mut not_worse = 0usize;
+    let mut acted = false;
+    for target in [0.02, 0.05, 0.1] {
+        let off = run_mode(RetuneMode::Off, target);
+        let on = run_mode(RetuneMode::On, target);
+        assert!(off.decisions.len() >= 2, "target {target}: static run must decide repeatedly");
+        assert!(
+            (on.retunes as usize) * 2 < on.decisions.len().max(1),
+            "target {target}: {} retunes over {} decisions — hysteresis failed to damp",
+            on.retunes,
+            on.decisions.len()
+        );
+        if on.retunes > 0 {
+            acted = true;
+        }
+        let l_off = coordinator::overall_loss(&off.result, &baseline);
+        let l_on = coordinator::overall_loss(&on.result, &baseline);
+        if l_on <= l_off + 1e-12 {
+            not_worse += 1;
+        }
+    }
+    assert!(acted, "the hair trigger must force at least one re-tune somewhere");
+    assert!(
+        not_worse >= 1,
+        "adaptive re-tuning must be no worse than static at >= 1 swept target"
+    );
+}
+
+/// Acceptance (ISSUE 9): `tuna whatif` (measured mode) answers with the
+/// offline sweep's loss for the same (workload, fraction) cell,
+/// bit-for-bit — both are `overall_loss(run_tpp, run_fm_only)` over
+/// identical specs.
+#[test]
+fn whatif_measured_agrees_bit_for_bit_with_sweep_cells() {
+    let spec = SweepSpec::new(["kv-drift"])
+        .with_fractions([0.8, 0.6])
+        .with_policies([SweepPolicy::Tpp])
+        .with_intervals(30);
+    let res = run_sweep(&spec).unwrap();
+    for fraction in [0.8, 0.6] {
+        let cell = res.cell("kv-drift", SweepPolicy::Tpp, fraction).unwrap();
+        let rs = RunSpec::new("kv-drift").with_intervals(30).with_fraction(fraction);
+        let what = coordinator::whatif_measured(&rs).unwrap();
+        assert_eq!(
+            what.to_bits(),
+            cell.loss.to_bits(),
+            "whatif at {fraction} disagrees with the sweep cell"
+        );
+    }
+}
+
+/// Satellite (ISSUE 9): pre-PR9 `TUNAOBS1` journals — V1/V2 interval
+/// tags, decision/ingest/segment/sweep-cell/warn tags, no
+/// `Outcome`/`Drift` — must keep decoding byte-stably after the new
+/// tags land. The fixture journal is hand-built with pinned timestamps
+/// (its bytes are fully deterministic), recorded on first run and
+/// asserted byte-identical — encode AND decode → re-encode — forever
+/// after. Delete the file to re-record after an *intentional* format
+/// change.
+#[test]
+fn golden_pre_pr9_obs_journal_still_decodes_byte_stably() {
+    use tuna::obs::{Event, HistSnapshot, MetricsSnapshot};
+    let mut metrics = MetricsSnapshot::default();
+    metrics.counters.insert("engine_intervals_total".into(), 40);
+    metrics.counters.insert("tuner_decisions_total".into(), 4);
+    metrics.gauges.insert("perfdb_resident_segments".into(), 2.0);
+    metrics.hists.insert(
+        "tuner_decision_fraction".into(),
+        HistSnapshot {
+            bounds: vec![0.25, 0.5, 0.75, 1.0],
+            counts: vec![0, 1, 2, 1, 0],
+            sum: 2.9,
+            count: 4,
+        },
+    );
+    let kinds = vec![
+        EventKind::Warn { site: "it.golden".into(), message: "pre-pr9 fixture".into() },
+        // all-zero admission verdicts → the legacy V1 interval tag
+        EventKind::Interval {
+            workload: "BFS".into(),
+            policy: "tpp".into(),
+            interval: 3,
+            wall_ns: 1.5e6,
+            fast_used: 1000,
+            promoted: 12,
+            demoted: 3,
+            txn_aborts: 1,
+            shadow_free_demotions: 2,
+            admission_accepted: 0,
+            admission_rejected_budget: 0,
+            admission_rejected_payoff: 0,
+            admission_rejected_cooldown: 0,
+        },
+        // nonzero verdicts → the V2 interval tag
+        EventKind::Interval {
+            workload: "kv-drift".into(),
+            policy: "tpp-gated".into(),
+            interval: 4,
+            wall_ns: 2.5e6,
+            fast_used: 512,
+            promoted: 9,
+            demoted: 4,
+            txn_aborts: 0,
+            shadow_free_demotions: 0,
+            admission_accepted: 9,
+            admission_rejected_budget: 3,
+            admission_rejected_payoff: 11,
+            admission_rejected_cooldown: 5,
+        },
+        EventKind::Decision {
+            interval: 5,
+            record: 17,
+            dist: 0.25,
+            fraction: 0.8,
+            new_fm: 4096,
+            predicted_loss: 0.031,
+            wm_low: 64,
+            wm_high: 96,
+        },
+        EventKind::IngestBatch {
+            lines: 10,
+            samples: 8,
+            decisions: 1,
+            sessions_opened: 1,
+            sessions_closed: 1,
+        },
+        EventKind::SegmentLoad { segment: 3, records: 256, crc_checked: true, wall_ns: 42_000 },
+        EventKind::SegmentEvict { segment: 3 },
+        EventKind::SweepCell {
+            workload: "kv-drift".into(),
+            policy: "tpp-nomad".into(),
+            fraction: 0.6,
+            seed: 7,
+            wall_ns: 9_000_000,
+        },
+    ];
+    let journal = Journal {
+        dropped: 2,
+        metrics,
+        events: kinds
+            .into_iter()
+            .enumerate()
+            .map(|(i, kind)| Event { t_ns: 1_000 * (i as u64 + 1), kind })
+            .collect(),
+    };
+    let bytes = journal.encode();
+
+    let path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures"))
+        .join("golden_obs_pre_pr9.bin");
+    if !path.exists() {
+        std::fs::write(&path, &bytes).unwrap();
+        eprintln!("recorded golden fixture {}", path.display());
+    }
+    let want = std::fs::read(&path).unwrap();
+    assert!(
+        bytes == want,
+        "pre-PR9 journal encoding drifted from the golden fixture \
+         (delete the file to re-record after an intentional format change)"
+    );
+    let decoded = Journal::decode(&want).unwrap();
+    assert_eq!(decoded, journal, "decode must reproduce the pre-PR9 journal exactly");
+    assert_eq!(decoded.encode(), want, "decode -> re-encode must be byte-identical");
+}
+
+/// Observe-mode runs journal one `Outcome` event per joined record, and
+/// the realized/error histograms and retune counter agree with the
+/// run's own records; `tuna obs outcomes` renders the session.
+#[test]
+fn journaled_outcomes_match_run_records_and_render() {
+    let db = Arc::new(tiny_db());
+    let obs = Recorder::enabled(DEFAULT_RING_CAPACITY);
+    let cfg = TunaConfig {
+        period_s: 1.0,
+        retune: RetuneConfig { mode: RetuneMode::Observe, ..RetuneConfig::default() },
+        ..TunaConfig::default()
+    };
+    let spec = RunSpec::new("kv-drift")
+        .with_intervals(40)
+        .with_seed(11)
+        .with_obs(obs.clone());
+    let run = coordinator::run_tuna_native(&spec, db, &cfg).unwrap();
+    assert!(!run.outcomes.is_empty(), "observe must join outcomes");
+
+    let j = obs.journal();
+    let journaled: Vec<(u32, f64, f64)> = j
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::Outcome { decision_interval, predicted, realized, .. } => {
+                Some((*decision_interval, *predicted, *realized))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(journaled.len(), run.outcomes.len(), "one journal event per outcome");
+    for (ev, rec) in journaled.iter().zip(&run.outcomes) {
+        assert_eq!(ev.0, rec.decision_interval);
+        assert_eq!(ev.1.to_bits(), rec.predicted.to_bits());
+        assert_eq!(ev.2.to_bits(), rec.realized.to_bits());
+    }
+    let n = run.outcomes.len() as u64;
+    assert_eq!(j.metrics.hists.get("tuner_realized_loss").map(|h| h.count), Some(n));
+    assert_eq!(j.metrics.hists.get("tuner_prediction_error").map(|h| h.count), Some(n));
+    assert_eq!(j.metrics.counter("tuner_retunes_total"), run.retunes);
+
+    let rendered = tuna::obs::render::render_outcomes(&j);
+    assert!(
+        rendered.contains("kv-drift@11"),
+        "outcomes render must name the session:\n{rendered}"
+    );
 }
