@@ -1,13 +1,17 @@
 //! Tuner-service ingestion throughput: samples/sec through the bounded
-//! channel into the background aggregation thread, at 1, 8 and 64
-//! concurrent sessions.
+//! channel into the background aggregation workers, at 1, 8 and 64
+//! concurrent sessions (thread-per-session) and at fleet scale — 1K and
+//! 8K concurrent sessions driven by a publisher pool — across worker
+//! counts 1, 2, 4 and 8.
 //!
 //! Each session publishes a fixed number of synthetic samples (period
 //! 2.5 s → a decision every 25th sample, so the decision path — NN query
 //! + curve scan + mailbox round-trip — is exercised at its realistic
-//! duty cycle, not avoided). The aggregation thread is the intended
-//! serialization point; this bench measures how much telemetry it
-//! absorbs as publishers scale.
+//! duty cycle, not avoided). The aggregation workers are the intended
+//! serialization points; this bench measures how much telemetry they
+//! absorb as publishers scale, and how samples/sec scales with the
+//! worker count (sessions hash-route to workers, so decisions are
+//! bit-identical at any count — only throughput moves).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -15,6 +19,7 @@ use std::time::Instant;
 use tuna::config::experiment::TunaConfig;
 use tuna::perfdb::builder::{build_database, BuildParams};
 use tuna::perfdb::native::NativeNn;
+use tuna::perfdb::PerfDb;
 use tuna::report::{results_dir, Table};
 use tuna::service::{SessionReport, SessionSpec, TunerService};
 use tuna::sim::MachineModel;
@@ -22,6 +27,10 @@ use tuna::telemetry::TelemetrySample;
 use tuna::util::human_ns;
 
 const SAMPLES_PER_SESSION: u32 = 10_000;
+
+/// Publisher-pool threads for the fleet-scale section (an OS thread per
+/// session stops scaling long before 8K sessions do).
+const PUBLISHER_POOL: usize = 16;
 
 fn session_spec(name: String) -> SessionSpec {
     SessionSpec {
@@ -60,6 +69,91 @@ fn synth_sample(interval: u32, salt: u64) -> TelemetrySample {
     }
 }
 
+fn sharded(db: &Arc<PerfDb>, workers: usize) -> TunerService {
+    let db2 = db.clone();
+    TunerService::spawn_sharded(db.clone(), move |_| Box::new(NativeNn::new(&db2)), workers)
+}
+
+/// Thread-per-session: every session gets its own publisher thread, all
+/// sessions concurrently open for the whole run.
+fn bench_thread_per_session(
+    db: &Arc<PerfDb>,
+    n_sessions: usize,
+    workers: usize,
+) -> (Vec<SessionReport>, f64) {
+    let service = sharded(db, workers);
+    let t0 = Instant::now();
+    let reports: Vec<SessionReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_sessions)
+            .map(|i| {
+                let service = &service;
+                s.spawn(move || {
+                    let mut h = service
+                        .register(session_spec(format!("bench-{i}")))
+                        .expect("register session");
+                    for k in 1..=SAMPLES_PER_SESSION {
+                        std::hint::black_box(h.publish(synth_sample(k, i as u64)));
+                    }
+                    h.finish().expect("session report")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("publisher thread")).collect()
+    });
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    service.shutdown();
+    (reports, wall_ns)
+}
+
+/// Fleet scale: a fixed publisher pool drives `n_sessions` concurrently
+/// open sessions round-robin — every session is registered up front and
+/// samples interleave across the whole fleet, so the per-worker session
+/// maps hold their full shard throughout the run.
+fn bench_fleet(
+    db: &Arc<PerfDb>,
+    n_sessions: usize,
+    samples_per_session: u32,
+    workers: usize,
+) -> (Vec<SessionReport>, f64) {
+    let service = sharded(db, workers);
+    let t0 = Instant::now();
+    let reports: Vec<SessionReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..PUBLISHER_POOL)
+            .map(|p| {
+                let service = &service;
+                s.spawn(move || {
+                    // this publisher's slice of the fleet, all open at once
+                    let mut sessions: Vec<_> = (p..n_sessions)
+                        .step_by(PUBLISHER_POOL)
+                        .map(|i| {
+                            let h = service
+                                .register(session_spec(format!("fleet-{i}")))
+                                .expect("register session");
+                            (i as u64, h)
+                        })
+                        .collect();
+                    for k in 1..=samples_per_session {
+                        for (salt, h) in sessions.iter_mut() {
+                            std::hint::black_box(h.publish(synth_sample(k, *salt)));
+                        }
+                    }
+                    sessions
+                        .into_iter()
+                        .map(|(_, h)| h.finish().expect("session report"))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("publisher thread"))
+            .collect()
+    });
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    service.shutdown();
+    (reports, wall_ns)
+}
+
 fn main() -> tuna::Result<()> {
     let db = Arc::new(build_database(&BuildParams {
         n_configs: 64,
@@ -72,51 +166,48 @@ fn main() -> tuna::Result<()> {
     }));
 
     let mut t = Table::new(
-        "telemetry ingestion: samples/sec through the service channel",
-        &["sessions", "samples", "decisions", "wall", "samples/sec", "per-sample"],
+        "telemetry ingestion: samples/sec through the service channel(s)",
+        &["sessions", "workers", "samples", "decisions", "wall", "samples/sec", "per-sample"],
     );
-
-    for &n_sessions in &[1usize, 8, 64] {
-        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
-        let t0 = Instant::now();
-        let reports: Vec<SessionReport> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..n_sessions)
-                .map(|i| {
-                    let service = &service;
-                    s.spawn(move || {
-                        let mut h = service
-                            .register(session_spec(format!("bench-{i}")))
-                            .expect("register session");
-                        for k in 1..=SAMPLES_PER_SESSION {
-                            std::hint::black_box(h.publish(synth_sample(k, i as u64)));
-                        }
-                        h.finish().expect("session report")
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("publisher thread")).collect()
-        });
-        let wall_ns = t0.elapsed().as_nanos() as f64;
-        service.shutdown();
-
+    let mut row = |n_sessions: usize,
+                   workers: usize,
+                   expected_samples: u64,
+                   reports: Vec<SessionReport>,
+                   wall_ns: f64| {
         let total_samples: u64 = reports.iter().map(|r| r.samples).sum();
         let decisions: usize = reports.iter().map(|r| r.decisions.len()).sum();
+        assert_eq!(reports.len(), n_sessions, "every session must report");
         assert_eq!(
-            total_samples,
-            SAMPLES_PER_SESSION as u64 * n_sessions as u64,
-            "every published sample must reach the aggregation thread"
+            total_samples, expected_samples,
+            "every published sample must reach an aggregation worker"
         );
         let rate = total_samples as f64 / (wall_ns / 1e9);
         t.row(vec![
             n_sessions.to_string(),
+            workers.to_string(),
             total_samples.to_string(),
             decisions.to_string(),
             human_ns(wall_ns as u64),
             format!("{:.0}", rate),
             human_ns((wall_ns / total_samples as f64) as u64),
         ]);
+    };
+
+    // the classic section: thread-per-session, single aggregation worker
+    for &n_sessions in &[1usize, 8, 64] {
+        let (reports, wall_ns) = bench_thread_per_session(&db, n_sessions, 1);
+        row(n_sessions, 1, SAMPLES_PER_SESSION as u64 * n_sessions as u64, reports, wall_ns);
     }
 
+    // fleet scale: 1K and 8K concurrent sessions, worker counts 1..8
+    for &(n_sessions, samples_per) in &[(1024usize, 100u32), (8192, 50)] {
+        for &workers in &[1usize, 2, 4, 8] {
+            let (reports, wall_ns) = bench_fleet(&db, n_sessions, samples_per, workers);
+            row(n_sessions, workers, samples_per as u64 * n_sessions as u64, reports, wall_ns);
+        }
+    }
+
+    drop(row); // release the table borrow
     t.print();
     t.to_csv(&results_dir().join("telemetry_ingest.csv"))?;
     Ok(())

@@ -196,10 +196,12 @@ impl TunaDb {
         }
     }
 
-    /// A fresh query backend over the same database. Queries run on the
-    /// service's single aggregation thread; the lazy backend scans its
-    /// shards serially there (fan-out threads would fight the sweep's
-    /// own worker pool), which changes nothing about the answers.
+    /// A fresh query backend over the same database — called once per
+    /// aggregation worker, so sharded services never share a backend.
+    /// Queries run on their worker's aggregation thread; the lazy
+    /// backend scans its shards serially there (fan-out threads would
+    /// fight the sweep's own worker pool), which changes nothing about
+    /// the answers.
     pub fn query(&self) -> Box<dyn NnQuery + Send> {
         match self {
             TunaDb::Flat(db) => Box::new(NativeNn::new(db)),
@@ -244,6 +246,10 @@ pub struct SweepSpec {
     /// into the shared tuner service. Disabled by default; cell results
     /// are bit-identical either way.
     pub obs: crate::obs::Recorder,
+    /// Aggregation workers for the shared tuner service; 0 is
+    /// normalized to 1. Sessions are routed by a stable name hash, so
+    /// cell results are bit-identical for any worker count.
+    pub service_workers: usize,
 }
 
 impl Default for SweepSpec {
@@ -261,6 +267,7 @@ impl Default for SweepSpec {
             threads: 0,
             tuna: None,
             obs: crate::obs::Recorder::default(),
+            service_workers: 1,
         }
     }
 }
@@ -340,6 +347,15 @@ impl SweepSpec {
 
     pub fn with_obs(mut self, obs: crate::obs::Recorder) -> Self {
         self.obs = obs;
+        self
+    }
+
+    /// Shard the shared tuner service across `workers` aggregation
+    /// workers (0 is normalized to 1). Cell results are bit-identical
+    /// for any count — sessions are routed by a stable name hash and
+    /// each worker gets its own stateless query backend.
+    pub fn with_service_workers(mut self, workers: usize) -> Self {
+        self.service_workers = workers;
         self
     }
 
@@ -757,10 +773,12 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
 /// Tuna cells do not each build a tuner: every Tuna cell of the sweep is
 /// a session on **one shared channel-mode [`TunerService`]** (stood up
 /// here, torn down when the sweep returns), so baseline simulations and
-/// Tuna runs concurrently feed a single aggregation thread. Decisions
-/// stay bit-identical to the in-loop path for any thread count — the
-/// per-session state is the in-loop tuner's, and the shared
-/// nearest-neighbour backend is stateless.
+/// Tuna runs concurrently feed its aggregation workers
+/// ([`SweepSpec::service_workers`], one by default; sessions are routed
+/// by a stable name hash). Decisions stay bit-identical to the in-loop
+/// path for any thread or worker count — the per-session state is the
+/// in-loop tuner's, and each worker's nearest-neighbour backend is
+/// stateless.
 pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<SweepResult> {
     let cells = spec.expand()?;
     let has_tuna = cells.iter().any(|c| c.policy == SweepPolicy::Tuna);
@@ -768,9 +786,12 @@ pub fn run_sweep_with_cache(spec: &SweepSpec, cache: &BaselineCache) -> Result<S
         bail!("SweepPolicy::Tuna requires SweepSpec::tuna (performance database + TunaConfig)");
     }
     let service = match &spec.tuna {
-        Some((db, _)) if has_tuna => {
-            Some(TunerService::spawn_with_obs(db.source(), db.query(), spec.obs.clone()))
-        }
+        Some((db, _)) if has_tuna => Some(TunerService::spawn_sharded_with_obs(
+            db.source(),
+            |_| db.query(),
+            spec.service_workers,
+            spec.obs.clone(),
+        )),
         _ => None,
     };
     let threads = if spec.threads == 0 { default_threads() } else { spec.threads };

@@ -33,11 +33,22 @@
 //!                               the fully-resident backend)
 //! tuna serve [--db artifacts/perfdb.bin | --store DIR [--name perfdb]
 //!            [--resident-segments N]]
-//!           [--artifacts artifacts] [--target 0.05] [--period 2.5] [FILE...]
+//!           [--artifacts artifacts] [--target 0.05] [--period 2.5]
+//!           [--workers N] [--listen ADDR [--max-conns N] | --connect ADDR]
+//!           [FILE...]
 //!                               tuner-as-a-service ingestion: tail
 //!                               telemetry sample streams from FILEs (or
 //!                               stdin) and print watermark decisions as
-//!                               sessions hit their tuning periods
+//!                               sessions hit their tuning periods;
+//!                               --workers N shards sessions across N
+//!                               aggregation workers (decisions stay
+//!                               bit-identical for any N); --listen ADDR
+//!                               accepts tuna-telemetry v1 connections
+//!                               over TCP and writes decisions back on
+//!                               each client's socket (--max-conns N
+//!                               drains after N connections); --connect
+//!                               ADDR streams FILEs (or stdin) to such a
+//!                               server and prints the reply lines
 //! tuna sweep [--workloads BFS,SSSP] [--fractions 1.0,0.9,0.8,...]
 //!           [--policy tpp,first-touch,memtis,tuna,tpp-nomad,tpp-gated]
 //!           [--seeds 1,2,3]
@@ -627,12 +638,27 @@ fn print_residency(db: &LazyShardedPerfDb) {
 }
 
 /// `tuna serve`: the tuner as a standalone service. Telemetry arrives
-/// from *outside* the process as tuna-telemetry v1 lines (files or
-/// stdin, any number of interleaved sessions); decisions print as the
+/// from *outside* the process as tuna-telemetry v1 lines — files or
+/// stdin (any number of interleaved sessions), or, with `--listen
+/// ADDR`, over TCP from any number of concurrent client connections.
+/// Decisions print (or write back down each client's socket) as the
 /// sessions hit their tuning-period boundaries, and each `close` line
-/// prints the session's final report.
+/// prints the session's final report. `--workers N` shards aggregation
+/// across N workers (decisions are bit-identical for any N); `--connect
+/// ADDR` is the client side, streaming FILEs (or stdin) to a listening
+/// server and printing its replies.
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let exp = load_exp(args)?;
+    let listen = args.get("listen").map(|s| s.to_string());
+    let connect = args.get("connect").map(|s| s.to_string());
+    let workers: usize = args.get_parse("workers", 1usize)?;
+    let max_conns: usize = args.get_parse("max-conns", 0usize)?;
+    if workers == 0 {
+        bail!("--workers must be at least 1");
+    }
+    if listen.is_some() && connect.is_some() {
+        bail!("--listen (server) conflicts with --connect (client)");
+    }
     let store_dir = args.get("store").map(PathBuf::from);
     let named = args.get("name").map(|s| s.to_string());
     if store_dir.is_none() && named.is_some() {
@@ -663,11 +689,42 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         bail!("--resident-segments requires --store DIR (it caps the store's sharded perf DB)");
     }
 
+    // Client mode: no database, no service — stream the files (or
+    // stdin) to a listening server, one connection per stream, and
+    // print every reply line as it arrives.
+    if let Some(addr) = &connect {
+        let mut sent = 0u64;
+        let mut replies = 0u64;
+        if files.is_empty() {
+            let stdin = std::io::stdin();
+            let rep = tuna::service::serve_stream(addr, stdin.lock(), |line| println!("{line}"))?;
+            sent += rep.sent_lines;
+            replies += rep.reply_lines;
+        } else {
+            for file in &files {
+                let f = std::fs::File::open(file)
+                    .map_err(|e| anyhow::anyhow!("opening stream {file}: {e}"))?;
+                let rep = tuna::service::serve_stream(
+                    addr,
+                    std::io::BufReader::new(f),
+                    |line| println!("{line}"),
+                )?;
+                sent += rep.sent_lines;
+                replies += rep.reply_lines;
+            }
+        }
+        println!("streamed {sent} lines to {addr}: {replies} reply lines");
+        return Ok(());
+    }
+
     // The database backend: the store's sharded perf DB — served lazily
     // from a bounded resident set, never materialized whole — when
     // --store is given, else the flat artifact (built on first use).
+    // Each aggregation worker gets its own query backend over the one
+    // shared source, so sharded decision paths never contend on a lock.
     let mut lazy: Option<Arc<LazyShardedPerfDb>> = None;
-    let (source, query, backend): (Arc<dyn PerfSource>, Box<dyn NnQuery + Send>, &str) =
+    type NnFactory = Box<dyn FnMut(usize) -> Box<dyn NnQuery + Send>>;
+    let (source, nn_factory, backend): (Arc<dyn PerfSource>, NnFactory, &str) =
         match &store_dir {
             Some(dir) => {
                 let store = ArtifactStore::open_existing(dir)?;
@@ -678,79 +735,76 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                 db.set_obs(sinks.obs.clone());
                 let db = Arc::new(db);
                 lazy = Some(db.clone());
-                let query: Box<dyn NnQuery + Send> = Box::new(LazyShardedNn::new(db.clone(), 0));
-                (db as Arc<dyn PerfSource>, query, "lazy-sharded")
+                let ldb = db.clone();
+                let factory: NnFactory =
+                    Box::new(move |_| Box::new(LazyShardedNn::new(ldb.clone(), 0)));
+                (db as Arc<dyn PerfSource>, factory, "lazy-sharded")
             }
             None => {
                 let db = Arc::new(ensure_db(&db_path, &params)?);
                 let (query, backend) = tuna::runtime::service_backend(&artifacts, &db);
-                (db as Arc<dyn PerfSource>, query, backend)
+                // worker 0 reuses the probe query; further workers get
+                // a fresh backend of the same flavor
+                let mut first = Some(query);
+                let fdb = db.clone();
+                let artifacts = artifacts.clone();
+                let factory: NnFactory = Box::new(move |_| {
+                    if let Some(q) = first.take() {
+                        return q;
+                    }
+                    if backend == "xla" {
+                        if let Ok(x) = XlaNn::from_manifest(&artifacts, &fdb) {
+                            return Box::new(x);
+                        }
+                    }
+                    Box::new(NativeNn::new(&fdb))
+                });
+                (db as Arc<dyn PerfSource>, factory, backend)
             }
         };
     println!(
-        "tuner service up: {} records x {} fm sizes, backend {backend}, target {}, period {}s",
+        "tuner service up: {} records x {} fm sizes, backend {backend}, target {}, period {}s, {} worker(s)",
         source.n_records(),
         source.fraction_grid().len(),
         pct(tuna_cfg.loss_target),
-        tuna_cfg.period_s
+        tuna_cfg.period_s,
+        workers
     );
 
-    let service = TunerService::spawn_with_obs(source, query, sinks.obs.clone());
+    let service =
+        TunerService::spawn_sharded_with_obs(source, nn_factory, workers, sinks.obs.clone());
+
+    // Server mode: accept tuna-telemetry v1 connections and write
+    // decisions back on each client's socket.
+    if let Some(addr) = &listen {
+        if !files.is_empty() {
+            bail!("--listen takes no FILE arguments (stream them from a client via --connect)");
+        }
+        let server = tuna::service::NetServer::bind(
+            addr,
+            tuna::service::NetServerConfig {
+                cfg: tuna_cfg.clone(),
+                max_conns,
+                obs: sinks.obs.clone(),
+            },
+        )?;
+        // scripts scrape the bound address (--listen 127.0.0.1:0)
+        println!("listening on {}", server.local_addr()?);
+        let stats = server.serve(&service)?;
+        println!(
+            "served {} connection(s), {} lines: {} samples -> {} decisions ({} failed)",
+            stats.connections, stats.lines, stats.samples, stats.decisions, stats.failed
+        );
+        if let Some(db) = &lazy {
+            print_residency(db);
+        }
+        sinks.flush()?;
+        return Ok(());
+    }
+
     let mut ingestor = Ingestor::new_with_obs(&service, tuna_cfg, sinks.obs.clone());
-    let print = |out: IngestOutput| match out {
-        IngestOutput::Decision { session, interval, usable_fm, .. } => {
-            println!("decision {session} interval={interval} usable_fm={usable_fm}");
-        }
-        IngestOutput::Closed(report) => {
-            println!(
-                "closed {}: {} samples, {} decisions, mean FM saving {}, max {}, query path {}",
-                report.name,
-                report.samples,
-                report.decisions.len(),
-                pct(1.0 - report.mean_fraction),
-                pct(1.0 - report.min_fraction),
-                tuna::util::human_ns(report.decide_ns as u64)
-            );
-            // Sessions whose telemetry carried transactional-migration
-            // counters get one extra line; exclusive-mode streams (and
-            // pre-migration-axis recordings) print exactly as before.
-            let vm = |name: &str| {
-                report.vmstat.iter().find(|(k, _)| *k == name).map_or(0, |&(_, v)| v)
-            };
-            let txn = vm("shadow_hits")
-                + vm("shadow_free_demotions")
-                + vm("txn_aborts")
-                + vm("txn_retried_copies");
-            if txn > 0 {
-                println!(
-                    "  migration {}: shadow_hits={} shadow_free_demotions={} txn_aborts={} txn_retried_copies={}",
-                    report.name,
-                    vm("shadow_hits"),
-                    vm("shadow_free_demotions"),
-                    vm("txn_aborts"),
-                    vm("txn_retried_copies")
-                );
-            }
-            // Same contract as the migration line: sessions whose tuner
-            // tracked decision outcomes get one extra line; `--retune
-            // off` streams print exactly as before.
-            if !report.outcomes.is_empty() || report.retunes > 0 {
-                let mean_abs: f64 = if report.outcomes.is_empty() {
-                    0.0
-                } else {
-                    report.outcomes.iter().map(|o| o.abs_err).sum::<f64>()
-                        / report.outcomes.len() as f64
-                };
-                println!(
-                    "  outcomes {}: {} tracked, mean |prediction error| {}, retunes {}",
-                    report.name,
-                    report.outcomes.len(),
-                    pct(mean_abs),
-                    report.retunes
-                );
-            }
-        }
-    };
+    // one rendering shared with the network server's socket write-back
+    let print = |out: IngestOutput| print!("{}", out.render_lines());
     let mut totals = (0u64, 0u64, 0u64); // lines, samples, decisions
     if files.is_empty() {
         let stdin = std::io::stdin();

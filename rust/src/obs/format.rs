@@ -48,6 +48,12 @@ const TAG_INTERVAL_V2: u8 = 7;
 const TAG_OUTCOME: u8 = 8;
 /// Drift-detector transition (PR 9): armed / retune / cooldown.
 const TAG_DRIFT: u8 = 9;
+/// Network-ingestion connection accepted (PR 10, `tuna serve --listen`).
+/// Fresh tags again: journals written before fleet serving never carry
+/// them, so older artifacts decode unchanged.
+const TAG_CONN_OPEN: u8 = 10;
+/// Network-ingestion connection drained and closed, with totals.
+const TAG_CONN_CLOSE: u8 = 11;
 
 fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
     match kind {
@@ -183,6 +189,22 @@ fn encode_kind(out: &mut Vec<u8>, kind: &EventKind) {
             put_f64(out, *ewma_err);
             put_str(out, action);
         }
+        EventKind::ConnOpen { peer } => {
+            put_u8(out, TAG_CONN_OPEN);
+            put_str(out, peer);
+        }
+        EventKind::ConnClose {
+            peer,
+            sessions,
+            samples,
+            decisions,
+        } => {
+            put_u8(out, TAG_CONN_CLOSE);
+            put_str(out, peer);
+            put_u64(out, *sessions);
+            put_u64(out, *samples);
+            put_u64(out, *decisions);
+        }
     }
 }
 
@@ -251,6 +273,13 @@ fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
             interval: r.u32()?,
             ewma_err: r.f64()?,
             action: r.str()?,
+        },
+        TAG_CONN_OPEN => EventKind::ConnOpen { peer: r.str()? },
+        TAG_CONN_CLOSE => EventKind::ConnClose {
+            peer: r.str()?,
+            sessions: r.u64()?,
+            samples: r.u64()?,
+            decisions: r.u64()?,
         },
         other => bail!("unknown obs event tag {other} in journal"),
     })
@@ -436,6 +465,13 @@ mod tests {
             interval: 50,
             ewma_err: 0.013,
             action: "armed".into(),
+        });
+        r.record(EventKind::ConnOpen { peer: "127.0.0.1:40412".into() });
+        r.record(EventKind::ConnClose {
+            peer: "127.0.0.1:40412".into(),
+            sessions: 2,
+            samples: 120,
+            decisions: 8,
         });
         r.warn("fmt.test", "synthetic warning");
         r.journal()

@@ -147,6 +147,16 @@ pub enum EventKind {
         ewma_err: f64,
         action: String,
     },
+    /// A `tuna serve --listen` client connected (network ingestion).
+    ConnOpen { peer: String },
+    /// A network ingestion connection drained and closed, with its
+    /// lifetime totals (mirrors the per-connection `IngestBatch`).
+    ConnClose {
+        peer: String,
+        sessions: u64,
+        samples: u64,
+        decisions: u64,
+    },
 }
 
 impl EventKind {
@@ -162,6 +172,8 @@ impl EventKind {
             EventKind::SweepCell { .. } => "sweep-cell",
             EventKind::Outcome { .. } => "outcome",
             EventKind::Drift { .. } => "drift",
+            EventKind::ConnOpen { .. } => "conn-open",
+            EventKind::ConnClose { .. } => "conn-close",
         }
     }
 
@@ -171,7 +183,9 @@ impl EventKind {
             EventKind::Warn { .. } => "warn",
             EventKind::Interval { .. } => "engine",
             EventKind::Decision { .. } => "tuner",
-            EventKind::IngestBatch { .. } => "service",
+            EventKind::IngestBatch { .. }
+            | EventKind::ConnOpen { .. }
+            | EventKind::ConnClose { .. } => "service",
             EventKind::SegmentLoad { .. } | EventKind::SegmentEvict { .. } => "perfdb",
             EventKind::SweepCell { .. } => "sweep",
             EventKind::Outcome { .. } | EventKind::Drift { .. } => "outcome",
@@ -224,8 +238,16 @@ impl MetricsSnapshot {
         for (name, v) in &self.counters {
             out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
         }
+        let mut typed_gauges: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
         for (name, v) in &self.gauges {
-            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+            // a labeled gauge key is `family{label="…"}`: emit one TYPE
+            // line per family (unlabeled keys are their own family, so
+            // label-free expositions are byte-identical to before)
+            let family = name.split('{').next().unwrap_or(name);
+            if typed_gauges.insert(family) {
+                out.push_str(&format!("# TYPE {family} gauge\n"));
+            }
+            out.push_str(&format!("{name} {v}\n"));
         }
         for (name, h) in &self.hists {
             out.push_str(&format!("# TYPE {name} histogram\n"));
@@ -366,6 +388,22 @@ impl Recorder {
     pub fn gauge(&self, name: &'static str, value: f64) {
         if let Some(inner) = &self.inner {
             inner.gauges.lock().unwrap().insert(name.to_string(), value);
+        }
+    }
+
+    /// Set one time series of a labeled gauge family: the stored key is
+    /// `name{labels}` (e.g. `service_worker_sessions{worker="3"}`).
+    /// Labels must be a well-formed `key="value"` list — the exposition
+    /// and the `TUNAOBS1` encoding store the key verbatim, and
+    /// [`MetricsSnapshot::render_prometheus`] groups every series of a
+    /// family under one `# TYPE` line.
+    pub fn gauge_labeled(&self, name: &'static str, labels: &str, value: f64) {
+        if let Some(inner) = &self.inner {
+            inner
+                .gauges
+                .lock()
+                .unwrap()
+                .insert(format!("{name}{{{labels}}}"), value);
         }
     }
 
@@ -640,6 +678,29 @@ mod tests {
             &j.events[0].kind,
             EventKind::Warn { site, .. } if site == "runtime.artifacts"
         ));
+    }
+
+    #[test]
+    fn labeled_gauges_share_one_type_line_per_family() {
+        let r = Recorder::enabled(4);
+        r.gauge_labeled("service_worker_sessions", "worker=\"0\"", 5.0);
+        r.gauge_labeled("service_worker_sessions", "worker=\"1\"", 3.0);
+        r.gauge("service_total", 8.0);
+        let text = r.snapshot().render_prometheus();
+        assert_eq!(
+            text.matches("# TYPE service_worker_sessions gauge").count(),
+            1,
+            "one TYPE line per family, not per series: {text}"
+        );
+        assert!(text.contains("service_worker_sessions{worker=\"0\"} 5\n"));
+        assert!(text.contains("service_worker_sessions{worker=\"1\"} 3\n"));
+        assert!(text.contains("# TYPE service_total gauge\nservice_total 8\n"));
+        // last-writer-wins per series, independently per label set
+        r.gauge_labeled("service_worker_sessions", "worker=\"1\"", 4.0);
+        assert!(r
+            .snapshot()
+            .render_prometheus()
+            .contains("service_worker_sessions{worker=\"1\"} 4\n"));
     }
 
     #[test]

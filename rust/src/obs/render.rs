@@ -113,6 +113,15 @@ fn event_line(ev: &Event) -> String {
         } => format!(
             "session={session} interval={interval} ewma_err={ewma_err:+.4} action={action}"
         ),
+        EventKind::ConnOpen { peer } => format!("peer={peer}"),
+        EventKind::ConnClose {
+            peer,
+            sessions,
+            samples,
+            decisions,
+        } => format!(
+            "peer={peer} sessions={sessions} samples={samples} decisions={decisions}"
+        ),
     };
     format!("[{:>10}] {:<13} {body}", human_ns(ev.t_ns), ev.kind.name())
 }

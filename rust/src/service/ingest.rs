@@ -119,7 +119,7 @@ impl Event {
                 },
             },
             "close" => Event::Close { name: field(&mut it, "session name")? },
-            other => bail!("unknown telemetry verb `{other}`"),
+            other => bail!("unknown telemetry verb `{other}` (valid verbs: open, sample, close)"),
         };
         if let Some(extra) = it.next() {
             bail!("trailing token `{extra}` after {verb} line");
@@ -182,6 +182,75 @@ pub enum IngestOutput {
     Decision { session: String, interval: u32, usable_fm: u64, watermarks: Watermarks },
     /// A `close` line arrived; the session's final report.
     Closed(SessionReport),
+}
+
+impl IngestOutput {
+    /// Canonical text rendering: the `decision …` / `closed …` lines
+    /// `tuna serve` emits, each newline-terminated. One shared function
+    /// renders both the file/stdin mode's stdout and the network
+    /// server's socket write-back, so a recorded stream served over TCP
+    /// yields byte-identical decision lines to a file replay (the
+    /// socket round-trip test and the CI fleet-serving smoke `cmp` on
+    /// it).
+    pub fn render_lines(&self) -> String {
+        use crate::report::pct;
+        use crate::util::human_ns;
+        match self {
+            IngestOutput::Decision { session, interval, usable_fm, .. } => {
+                format!("decision {session} interval={interval} usable_fm={usable_fm}\n")
+            }
+            IngestOutput::Closed(report) => {
+                let mut out = format!(
+                    "closed {}: {} samples, {} decisions, mean FM saving {}, max {}, query path {}\n",
+                    report.name,
+                    report.samples,
+                    report.decisions.len(),
+                    pct(1.0 - report.mean_fraction),
+                    pct(1.0 - report.min_fraction),
+                    human_ns(report.decide_ns as u64)
+                );
+                // Sessions whose telemetry carried transactional-migration
+                // counters get one extra line; exclusive-mode streams (and
+                // pre-migration-axis recordings) print exactly as before.
+                let vm = |name: &str| {
+                    report.vmstat.iter().find(|(k, _)| *k == name).map_or(0, |&(_, v)| v)
+                };
+                let txn = vm("shadow_hits")
+                    + vm("shadow_free_demotions")
+                    + vm("txn_aborts")
+                    + vm("txn_retried_copies");
+                if txn > 0 {
+                    out.push_str(&format!(
+                        "  migration {}: shadow_hits={} shadow_free_demotions={} txn_aborts={} txn_retried_copies={}\n",
+                        report.name,
+                        vm("shadow_hits"),
+                        vm("shadow_free_demotions"),
+                        vm("txn_aborts"),
+                        vm("txn_retried_copies")
+                    ));
+                }
+                // Same contract as the migration line: sessions whose tuner
+                // tracked decision outcomes get one extra line; `--retune
+                // off` streams print exactly as before.
+                if !report.outcomes.is_empty() || report.retunes > 0 {
+                    let mean_abs: f64 = if report.outcomes.is_empty() {
+                        0.0
+                    } else {
+                        report.outcomes.iter().map(|o| o.abs_err).sum::<f64>()
+                            / report.outcomes.len() as f64
+                    };
+                    out.push_str(&format!(
+                        "  outcomes {}: {} tracked, mean |prediction error| {}, retunes {}\n",
+                        report.name,
+                        report.outcomes.len(),
+                        pct(mean_abs),
+                        report.retunes
+                    ));
+                }
+                out
+            }
+        }
+    }
 }
 
 /// Counters for one ingestion pass.
@@ -322,7 +391,12 @@ impl<'s> Ingestor<'s> {
         let mut names: Vec<String> = self.sessions.keys().cloned().collect();
         names.sort();
         for name in names {
-            let handle = self.sessions.remove(&name).expect("listed above");
+            // never panic here: a handle that vanished between listing
+            // and removal (a racing close) is a per-session error the
+            // caller can report, not a process abort
+            let handle = self.sessions.remove(&name).ok_or_else(|| {
+                anyhow!("session `{name}` closed while draining remaining sessions")
+            })?;
             sink(IngestOutput::Closed(handle.finish()?));
         }
         Ok(())
@@ -426,6 +500,15 @@ mod tests {
         // a present-but-malformed optional field is an error, not a 0
         let bad = format!("{} nope", old);
         assert!(Event::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_verb_error_lists_the_valid_verbs() {
+        let err = Event::parse("frobnicate x 1").unwrap_err().to_string();
+        assert!(err.contains("unknown telemetry verb `frobnicate`"), "got: {err}");
+        for verb in ["open", "sample", "close"] {
+            assert!(err.contains(verb), "error must catalogue `{verb}`: {err}");
+        }
     }
 
     #[test]

@@ -24,10 +24,24 @@
 //!   the channel path bit-identical to the classic in-loop tuner for
 //!   any number of concurrent sessions (proven in the integration
 //!   suite's determinism tests).
+//! * Fleet scale: [`TunerService::spawn_sharded`] splits aggregation
+//!   across N workers, each owning the sessions whose stable name hash
+//!   routes to it (FNV-1a mod N), with one bounded channel and one
+//!   query backend per worker over the shared [`PerfSource`]. Sessions
+//!   share nothing but the database, so sharding is invisible to
+//!   decisions: `workers = 1` is exactly [`TunerService::spawn`], and
+//!   any worker count is bit-identical to [`TunerService::inline`].
+//!   Each worker drains its channel in batches and coalesces the
+//!   decision queries that arrived together, amortizing perf-DB
+//!   fan-out across same-boundary sessions (safe because a session
+//!   blocks on its mailbox after requesting a decision — nothing of
+//!   its own can queue behind an unanswered `Decide`).
 //!
-//! The text ingestion protocol (`tuna serve`) lives in [`ingest`].
+//! The text ingestion protocol (`tuna serve`) lives in [`ingest`];
+//! the TCP ingestion server/client (`tuna serve --listen`) in [`net`].
 
 pub mod ingest;
+pub mod net;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,6 +60,7 @@ use crate::tpp::Watermarks;
 use crate::tuner::{Decision, TunerState};
 
 pub use ingest::{Event, IngestOutput, IngestStats, Ingestor};
+pub use net::{serve_stream, NetClientReport, NetServer, NetServerConfig, NetStats};
 
 /// Default bound on the sample channel: deep enough that publishers never
 /// stall on aggregation hiccups, small enough that a wedged service
@@ -143,9 +158,28 @@ struct Core {
     /// state (so decisions journal through it) and counted for session
     /// lifecycle. Disabled by default — the plain constructors.
     obs: crate::obs::Recorder,
+    /// Pre-rendered `worker="N"` gauge label for this core's shard
+    /// (worker 0 in inline mode), so the per-worker balance gauges
+    /// don't allocate on every update.
+    worker_label: String,
 }
 
 impl Core {
+    fn new(
+        db: Arc<dyn PerfSource>,
+        query: Box<dyn NnQuery + Send>,
+        obs: crate::obs::Recorder,
+        worker: usize,
+    ) -> Self {
+        Core {
+            db,
+            query,
+            sessions: HashMap::new(),
+            obs,
+            worker_label: format!("worker=\"{worker}\""),
+        }
+    }
+
     fn open(&mut self, id: u64, spec: SessionSpec, mailbox: Option<SyncSender<DecisionReply>>) {
         let mut state = TunerState::new(
             self.db.clone(),
@@ -161,6 +195,11 @@ impl Core {
         self.sessions.insert(
             id,
             Session { name: spec.name, state, mailbox, samples: 0, last_interval: 0 },
+        );
+        self.obs.gauge_labeled(
+            "service_worker_sessions",
+            &self.worker_label,
+            self.sessions.len() as f64,
         );
     }
 
@@ -184,6 +223,11 @@ impl Core {
     fn close(&mut self, id: u64) -> Option<SessionReport> {
         let mut sess = self.sessions.remove(&id)?;
         self.obs.count("service_sessions_closed_total", 1);
+        self.obs.gauge_labeled(
+            "service_worker_sessions",
+            &self.worker_label,
+            self.sessions.len() as f64,
+        );
         // settle the last decision's outcome window before reporting
         sess.state.finish_outcome(sess.last_interval);
         let mean_fraction = sess.state.mean_fraction();
@@ -204,17 +248,17 @@ impl Core {
         })
     }
 
-    fn handle(&mut self, msg: Msg) {
+    /// Apply one message, deferring decision queries into `pending`.
+    /// Deferral never reorders a session against itself: after sending
+    /// `Decide` the session's publisher blocks on its mailbox, so no
+    /// later message from that session can be in the queue — only
+    /// *other* sessions' traffic slides past, and sessions share
+    /// nothing but the (order-insensitive) query backend.
+    fn absorb(&mut self, msg: Msg, pending: &mut Vec<(u64, u32)>) {
         match msg {
             Msg::Open(id, spec, mailbox) => self.open(id, spec, Some(mailbox)),
             Msg::Sample(id, s) => self.sample(id, &s),
-            Msg::Decide(id, interval) => {
-                if let Some((wm, next_wait)) = self.decide(id, interval) {
-                    if let Some(mb) = self.sessions.get(&id).and_then(|s| s.mailbox.as_ref()) {
-                        mb.send(DecisionReply { wm, next_wait }).ok();
-                    }
-                }
-            }
+            Msg::Decide(id, interval) => pending.push((id, interval)),
             Msg::Close(id, reply) => {
                 if let Some(report) = self.close(id) {
                     reply.send(report).ok();
@@ -224,27 +268,70 @@ impl Core {
             }
         }
     }
+
+    /// Run the deferred decision queries back-to-back, in arrival
+    /// order, and answer each session's mailbox. Executing them as one
+    /// batch amortizes the perf-DB fan-out (segment touches, query
+    /// setup) across every session that hit its boundary in the same
+    /// channel drain.
+    fn flush_decides(&mut self, pending: &mut Vec<(u64, u32)>) {
+        if pending.len() > 1 {
+            self.obs
+                .count("service_ingest_batched_queries_total", pending.len() as u64);
+        }
+        for (id, interval) in pending.drain(..) {
+            if let Some((wm, next_wait)) = self.decide(id, interval) {
+                if let Some(mb) = self.sessions.get(&id).and_then(|s| s.mailbox.as_ref()) {
+                    mb.send(DecisionReply { wm, next_wait }).ok();
+                }
+            }
+        }
+    }
+
+    /// One aggregation worker's life: block for traffic, drain whatever
+    /// else is already queued, then flush the coalesced decisions. The
+    /// queue-depth gauge tracks how much each drain absorbed — the
+    /// worker-balance signal `tuna obs summary` surfaces.
+    fn run(mut self, rx: Receiver<Msg>) {
+        let mut pending: Vec<(u64, u32)> = Vec::new();
+        while let Ok(first) = rx.recv() {
+            let mut drained = 1u64;
+            self.absorb(first, &mut pending);
+            while let Ok(msg) = rx.try_recv() {
+                drained += 1;
+                self.absorb(msg, &mut pending);
+            }
+            self.obs
+                .gauge_labeled("service_worker_queue_depth", &self.worker_label, drained as f64);
+            self.flush_decides(&mut pending);
+        }
+    }
 }
 
 enum Mode {
     Inline(Mutex<Core>),
     Channel {
-        /// `None` after shutdown; cloned into every registered handle.
-        tx: Mutex<Option<SyncSender<Msg>>>,
-        join: Mutex<Option<JoinHandle<()>>>,
+        /// One bounded sender per aggregation worker; `None` after
+        /// shutdown. A session's sender (picked by stable name hash)
+        /// is cloned into its handle at registration.
+        txs: Mutex<Option<Vec<SyncSender<Msg>>>>,
+        joins: Mutex<Vec<JoinHandle<()>>>,
     },
 }
 
 /// The tuner service. Construct with [`Self::inline`] (synchronous, the
-/// reference mode) or [`Self::spawn`] (background aggregation thread,
-/// bounded channel); register any number of concurrent sessions with
-/// [`Self::register`]. Decisions are bit-identical across both modes and
-/// any session interleaving because the per-session state and the
-/// decision code are exactly the in-loop tuner's.
+/// reference mode), [`Self::spawn`] (one background aggregation worker,
+/// bounded channel), or [`Self::spawn_sharded`] (N workers, sessions
+/// routed by stable name hash); register any number of concurrent
+/// sessions with [`Self::register`]. Decisions are bit-identical across
+/// all modes, worker counts and session interleavings because the
+/// per-session state and the decision code are exactly the in-loop
+/// tuner's — sessions share nothing but the database.
 pub struct TunerService {
     mode: Mode,
     next_id: AtomicU64,
     backend: &'static str,
+    workers: usize,
 }
 
 impl TunerService {
@@ -266,9 +353,10 @@ impl TunerService {
     ) -> Self {
         let backend = query.backend();
         TunerService {
-            mode: Mode::Inline(Mutex::new(Core { db, query, sessions: HashMap::new(), obs })),
+            mode: Mode::Inline(Mutex::new(Core::new(db, query, obs, 0))),
             next_id: AtomicU64::new(1),
             backend,
+            workers: 1,
         }
     }
 
@@ -298,29 +386,94 @@ impl TunerService {
         Self::spawn_with_capacity_and_obs(db, query, capacity, crate::obs::Recorder::default())
     }
 
-    /// The full-control channel constructor: explicit channel capacity
-    /// and observability recorder.
+    /// As [`Self::spawn`], with an explicit channel capacity and
+    /// observability recorder (the single-worker special case of
+    /// [`Self::spawn_workers`]).
     pub fn spawn_with_capacity_and_obs(
         db: Arc<dyn PerfSource>,
         query: Box<dyn NnQuery + Send>,
         capacity: usize,
         obs: crate::obs::Recorder,
     ) -> Self {
-        let backend = query.backend();
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(capacity.max(1));
-        let mut core = Core { db, query, sessions: HashMap::new(), obs };
-        let join = std::thread::Builder::new()
-            .name("tuna-tuner-service".into())
-            .spawn(move || {
-                while let Ok(msg) = rx.recv() {
-                    core.handle(msg);
-                }
-            })
-            .expect("spawning tuner-service aggregation thread");
+        Self::spawn_workers(db, vec![query], capacity, obs)
+    }
+
+    /// Sharded channel service: one aggregation worker per entry of
+    /// `nn_factory(0..workers)`, each behind its own bounded channel
+    /// (default capacity) over the shared database. Sessions route to
+    /// workers by stable name hash, so placement — and therefore every
+    /// decision — is independent of scheduling: `workers = 1` is
+    /// exactly [`Self::spawn`], and any count is bit-identical to
+    /// [`Self::inline`].
+    pub fn spawn_sharded(
+        db: Arc<dyn PerfSource>,
+        nn_factory: impl FnMut(usize) -> Box<dyn NnQuery + Send>,
+        workers: usize,
+    ) -> Self {
+        Self::spawn_sharded_with_capacity_and_obs(
+            db,
+            nn_factory,
+            workers,
+            DEFAULT_CHANNEL_CAPACITY,
+            crate::obs::Recorder::default(),
+        )
+    }
+
+    /// As [`Self::spawn_sharded`], with an observability recorder for
+    /// the hosted sessions and per-worker balance gauges.
+    pub fn spawn_sharded_with_obs(
+        db: Arc<dyn PerfSource>,
+        nn_factory: impl FnMut(usize) -> Box<dyn NnQuery + Send>,
+        workers: usize,
+        obs: crate::obs::Recorder,
+    ) -> Self {
+        Self::spawn_sharded_with_capacity_and_obs(
+            db,
+            nn_factory,
+            workers,
+            DEFAULT_CHANNEL_CAPACITY,
+            obs,
+        )
+    }
+
+    /// The full-control sharded constructor: explicit worker count,
+    /// per-worker channel capacity and observability recorder.
+    pub fn spawn_sharded_with_capacity_and_obs(
+        db: Arc<dyn PerfSource>,
+        mut nn_factory: impl FnMut(usize) -> Box<dyn NnQuery + Send>,
+        workers: usize,
+        capacity: usize,
+        obs: crate::obs::Recorder,
+    ) -> Self {
+        let queries: Vec<_> = (0..workers.max(1)).map(&mut nn_factory).collect();
+        Self::spawn_workers(db, queries, capacity, obs)
+    }
+
+    fn spawn_workers(
+        db: Arc<dyn PerfSource>,
+        queries: Vec<Box<dyn NnQuery + Send>>,
+        capacity: usize,
+        obs: crate::obs::Recorder,
+    ) -> Self {
+        let workers = queries.len();
+        let backend = queries[0].backend();
+        let mut txs = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for (w, query) in queries.into_iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(capacity.max(1));
+            let core = Core::new(db.clone(), query, obs.clone(), w);
+            let join = std::thread::Builder::new()
+                .name(format!("tuna-tuner-w{w}"))
+                .spawn(move || core.run(rx))
+                .expect("spawning tuner-service aggregation worker");
+            txs.push(tx);
+            joins.push(join);
+        }
         TunerService {
-            mode: Mode::Channel { tx: Mutex::new(Some(tx)), join: Mutex::new(Some(join)) },
+            mode: Mode::Channel { txs: Mutex::new(Some(txs)), joins: Mutex::new(joins) },
             next_id: AtomicU64::new(1),
             backend,
+            workers,
         }
     }
 
@@ -332,6 +485,19 @@ impl TunerService {
     /// Whether this service runs the background-channel wiring.
     pub fn is_channel(&self) -> bool {
         matches!(self.mode, Mode::Channel { .. })
+    }
+
+    /// Aggregation workers this service runs (1 in inline mode).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The worker a session of this name would route to: FNV-1a of the
+    /// name, mod the worker count. Stable across runs and processes —
+    /// session placement (and so decision state) never depends on
+    /// registration order or scheduling.
+    pub fn worker_for(&self, name: &str) -> usize {
+        (crate::artifact::fnv1a64(name.as_bytes()) % self.workers.max(1) as u64) as usize
     }
 
     fn with_core<R>(&self, f: impl FnOnce(&mut Core) -> R) -> Option<R> {
@@ -360,12 +526,14 @@ impl TunerService {
                 core.lock().unwrap().open(id, spec, None);
                 HandleConn::Inline
             }
-            Mode::Channel { tx, .. } => {
-                let tx = tx
-                    .lock()
-                    .unwrap()
-                    .clone()
-                    .ok_or_else(|| anyhow!("tuner service is shut down"))?;
+            Mode::Channel { txs, .. } => {
+                let tx = {
+                    let guard = txs.lock().unwrap();
+                    let txs = guard
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("tuner service is shut down"))?;
+                    txs[self.worker_for(&name)].clone()
+                };
                 let (mb_tx, mb_rx) = std::sync::mpsc::sync_channel(1);
                 tx.send(Msg::Open(id, spec, mb_tx))
                     .map_err(|_| anyhow!("tuner service thread is gone"))?;
@@ -385,13 +553,14 @@ impl TunerService {
         })
     }
 
-    /// Stop accepting new sessions and join the aggregation thread
+    /// Stop accepting new sessions and join every aggregation worker
     /// (channel mode; a no-op inline). Every registered handle must be
-    /// finished first — their channel clones keep the thread alive.
+    /// finished first — their channel clones keep their worker alive.
     pub fn shutdown(&self) {
-        if let Mode::Channel { tx, join } = &self.mode {
-            tx.lock().unwrap().take();
-            if let Some(j) = join.lock().unwrap().take() {
+        if let Mode::Channel { txs, joins } = &self.mode {
+            txs.lock().unwrap().take();
+            let joins: Vec<_> = joins.lock().unwrap().drain(..).collect();
+            for j in joins {
                 j.join().ok();
             }
         }
@@ -639,6 +808,82 @@ mod tests {
         }
         assert_eq!(a.mean_fraction.to_bits(), b.mean_fraction.to_bits());
         assert_eq!(a.vmstat, b.vmstat);
+    }
+
+    #[test]
+    fn sharded_workers_match_inline_bitwise_at_any_count() {
+        let db = db();
+        // sequential inline reference, one fresh service per session
+        let reference: Vec<SessionReport> = (0..6u64)
+            .map(|i| {
+                let svc = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+                drive(&svc, &format!("s{i}"), 25, i * 7)
+            })
+            .collect();
+        for workers in [1usize, 3, 8] {
+            let service =
+                TunerService::spawn_sharded(db.clone(), |_| Box::new(NativeNn::new(&db)), workers);
+            assert_eq!(service.workers(), workers);
+            let sharded: Vec<SessionReport> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..6u64)
+                    .map(|i| {
+                        let service = &service;
+                        s.spawn(move || drive(service, &format!("s{i}"), 25, i * 7))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (a, b) in reference.iter().zip(&sharded) {
+                assert_eq!(a.samples, b.samples, "workers={workers}");
+                assert_eq!(a.decisions.len(), b.decisions.len(), "workers={workers}");
+                for (x, y) in a.decisions.iter().zip(&b.decisions) {
+                    assert_eq!(x.interval, y.interval);
+                    assert_eq!(x.record, y.record);
+                    assert_eq!(x.fraction.to_bits(), y.fraction.to_bits());
+                    assert_eq!(x.new_fm, y.new_fm);
+                    assert_eq!(x.predicted_loss.to_bits(), y.predicted_loss.to_bits());
+                }
+                assert_eq!(a.vmstat, b.vmstat, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn session_routing_is_a_stable_name_hash() {
+        let db = db();
+        let service = TunerService::spawn_sharded(db.clone(), |_| Box::new(NativeNn::new(&db)), 4);
+        // FNV-1a is a process-independent function of the name alone
+        assert_eq!(service.worker_for("alpha"), service.worker_for("alpha"));
+        let spread: std::collections::HashSet<usize> =
+            (0..64).map(|i| service.worker_for(&format!("sess-{i}"))).collect();
+        assert!(spread.len() > 1, "64 names must not all land on one of 4 workers");
+        assert!(spread.iter().all(|&w| w < 4));
+        // inline services report one worker and route everything to it
+        let inline = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        assert_eq!(inline.workers(), 1);
+        assert_eq!(inline.worker_for("anything"), 0);
+    }
+
+    #[test]
+    fn batched_decides_answer_every_mailbox() {
+        // Overlapping sessions whose boundaries coincide: decisions for
+        // several sessions land in one drain on the same worker, so the
+        // deferred-flush path must answer each mailbox exactly once.
+        let db = db();
+        let service = TunerService::spawn_sharded(db.clone(), |_| Box::new(NativeNn::new(&db)), 1);
+        let reports: Vec<SessionReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let service = &service;
+                    s.spawn(move || drive(service, &format!("batch{i}"), 20, 0))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &reports {
+            assert_eq!(r.samples, 20);
+            assert_eq!(r.decisions.len(), 4, "one decision per 5-interval period");
+        }
     }
 
     #[test]

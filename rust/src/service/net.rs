@@ -1,0 +1,442 @@
+//! Network ingestion for the tuner service: `tuna serve --listen`.
+//!
+//! A [`NetServer`] is a `std::net` TCP listener accepting any number of
+//! concurrent tuna-telemetry v1 connections. Each accepted connection
+//! gets one reader thread that parses the line protocol ([`super::ingest`])
+//! and feeds the shared — typically sharded — [`TunerService`];
+//! decisions and close reports are written back on the same socket as
+//! the exact `decision …` / `closed …` lines the file mode prints
+//! ([`IngestOutput::render_lines`] is the single rendering for both, so
+//! a stream served over TCP is byte-identical to `tuna serve FILE`).
+//!
+//! Backpressure is strictly per connection: a connection's samples are
+//! in flight only between its reader thread and its sessions' bounded
+//! worker channels, so a slow consumer (or a stalled socket write-back)
+//! blocks *its own* reader thread and nothing else — the service and
+//! every other connection keep running. Graceful drain on shutdown:
+//! when a client half-closes (EOF) its remaining sessions are closed
+//! and their reports flushed down the socket before the server closes
+//! it; when the configured connection budget is reached the listener
+//! stops accepting and [`NetServer::serve`] joins every reader before
+//! returning, so the aggregation workers see a quiet service.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{IngestOutput, IngestStats, Ingestor, TunerService};
+use crate::config::experiment::TunaConfig;
+use crate::obs::{EventKind, Recorder};
+
+/// Configuration of a [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Tuner parameters every connection's sessions share (the same
+    /// role the flag-derived config plays in file mode).
+    pub cfg: TunaConfig,
+    /// Stop accepting once this many connections have been accepted and
+    /// drain (0 = serve until the process dies). The CI smoke serves
+    /// exactly one client this way and exits cleanly.
+    pub max_conns: usize,
+    /// Observability: connection open/close journal events, the
+    /// `service_net_*` counters, and everything the service itself
+    /// records. Disabled by default.
+    pub obs: Recorder,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { cfg: TunaConfig::default(), max_conns: 0, obs: Recorder::default() }
+    }
+}
+
+/// Whole-server totals across all drained connections.
+#[derive(Debug, Default)]
+struct NetTotals {
+    connections: AtomicU64,
+    lines: AtomicU64,
+    samples: AtomicU64,
+    decisions: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// What a finished [`NetServer::serve`] drained, summed over every
+/// connection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub connections: u64,
+    pub lines: u64,
+    pub samples: u64,
+    pub decisions: u64,
+    /// Connections that died on a protocol or socket error (their
+    /// sessions were still closed server-side).
+    pub failed: u64,
+}
+
+/// The TCP ingestion server. Bind, then [`NetServer::serve`] blocks the
+/// calling thread on the accept loop; reader threads are scoped to the
+/// call, so the borrowed [`TunerService`] outlives every connection.
+pub struct NetServer {
+    listener: TcpListener,
+    config: NetServerConfig,
+}
+
+impl NetServer {
+    /// Bind the listener (use port 0 to let the OS pick — the bound
+    /// address is reported by [`Self::local_addr`], and `tuna serve
+    /// --listen` prints it for scripts to scrape).
+    pub fn bind(addr: &str, config: NetServerConfig) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        Ok(NetServer { listener, config })
+    }
+
+    /// The address the listener actually bound.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound listener address")
+    }
+
+    /// Accept and serve connections until the connection budget is
+    /// exhausted (forever when `max_conns == 0`), then drain: stop
+    /// accepting, join every reader thread, and return the totals.
+    /// Each connection's protocol/socket failures are contained to that
+    /// connection (counted in [`NetStats::failed`], warned on stderr).
+    pub fn serve(&self, service: &TunerService) -> Result<NetStats> {
+        let config = &self.config;
+        let totals = NetTotals::default();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut accepted = 0usize;
+            for conn in self.listener.incoming() {
+                let stream = conn.context("accepting connection")?;
+                accepted += 1;
+                let totals = &totals;
+                scope.spawn(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".to_string());
+                    totals.connections.fetch_add(1, Ordering::Relaxed);
+                    config.obs.count("service_net_connections_total", 1);
+                    config.obs.record_with(|| EventKind::ConnOpen { peer: peer.clone() });
+                    match handle_conn(stream, service, config, totals) {
+                        Ok(stats) => {
+                            config.obs.record_with(|| EventKind::ConnClose {
+                                peer: peer.clone(),
+                                sessions: stats.sessions_opened,
+                                samples: stats.samples,
+                                decisions: stats.decisions,
+                            });
+                        }
+                        Err(e) => {
+                            totals.failed.fetch_add(1, Ordering::Relaxed);
+                            config.obs.count("service_net_conn_errors_total", 1);
+                            config
+                                .obs
+                                .warn("service.net", &format!("connection {peer} failed: {e:#}"));
+                        }
+                    }
+                });
+                if config.max_conns > 0 && accepted >= config.max_conns {
+                    break; // stop accepting; the scope joins the readers
+                }
+            }
+            Ok(())
+        })?;
+        Ok(NetStats {
+            connections: totals.connections.load(Ordering::Relaxed),
+            lines: totals.lines.load(Ordering::Relaxed),
+            samples: totals.samples.load(Ordering::Relaxed),
+            decisions: totals.decisions.load(Ordering::Relaxed),
+            failed: totals.failed.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// One connection's life: parse lines into the service, write every
+/// output back down the socket, and on EOF close whatever the client
+/// left open so its reports still flush before the socket does.
+fn handle_conn(
+    stream: TcpStream,
+    service: &TunerService,
+    config: &NetServerConfig,
+    totals: &NetTotals,
+) -> Result<IngestStats> {
+    let reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+    let mut writer = BufWriter::new(stream);
+    let mut ingestor = Ingestor::new_with_obs(service, config.cfg.clone(), config.obs.clone());
+    // Socket write errors can't surface through the sink closure;
+    // capture the first one and fail the connection after the stream
+    // is drained (sessions are still closed below either way).
+    let mut write_err: Option<std::io::Error> = None;
+    let mut sink = |out: IngestOutput| {
+        if write_err.is_none() {
+            let r = writer
+                .write_all(out.render_lines().as_bytes())
+                .and_then(|()| writer.flush());
+            if let Err(e) = r {
+                write_err = Some(e);
+            }
+        }
+    };
+    let ingested = ingestor.ingest(reader, &mut sink);
+    // Graceful drain: whatever the stream's outcome, close the
+    // connection's remaining sessions so the shared service never
+    // accumulates orphaned state from failed clients.
+    let finished = ingestor.finish_all(&mut sink);
+    let stats = ingested?;
+    finished?;
+    if let Some(e) = write_err {
+        return Err(anyhow!(e).context("writing decisions back to client"));
+    }
+    totals.lines.fetch_add(stats.lines, Ordering::Relaxed);
+    totals.samples.fetch_add(stats.samples, Ordering::Relaxed);
+    totals.decisions.fetch_add(stats.decisions, Ordering::Relaxed);
+    Ok(stats)
+}
+
+/// What [`serve_stream`] (the client side) pushed and got back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetClientReport {
+    /// Lines uploaded (comments and blanks included — the server skips
+    /// them exactly as the file reader does).
+    pub sent_lines: u64,
+    /// Reply lines received (`decision …`, `closed …` and their
+    /// continuation lines).
+    pub reply_lines: u64,
+}
+
+/// The client side of the protocol: stream `input`'s lines to a
+/// serving `tuna serve --listen` at `addr`, half-close the write side,
+/// and hand every reply line to `on_reply` as it arrives. The reply
+/// reader runs concurrently with the upload, so a server that answers
+/// while the client is still writing back-pressures the upload instead
+/// of deadlocking both sides on full socket buffers.
+pub fn serve_stream(
+    addr: &str,
+    input: impl BufRead,
+    on_reply: impl FnMut(&str) + Send,
+) -> Result<NetClientReport> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to tuner service {addr}"))?;
+    let read_half = stream.try_clone().context("cloning client stream")?;
+    let mut writer = BufWriter::new(&stream);
+    std::thread::scope(|scope| -> Result<NetClientReport> {
+        let replies = scope.spawn(move || -> Result<u64> {
+            let mut on_reply = on_reply;
+            let mut n = 0u64;
+            for line in BufReader::new(read_half).lines() {
+                let line = line.context("reading service reply")?;
+                on_reply(&line);
+                n += 1;
+            }
+            Ok(n)
+        });
+        let mut sent_lines = 0u64;
+        for line in input.lines() {
+            let line = line.context("reading input stream")?;
+            writer.write_all(line.as_bytes()).context("uploading stream line")?;
+            writer.write_all(b"\n").context("uploading stream line")?;
+            sent_lines += 1;
+        }
+        writer.flush().context("flushing upload")?;
+        drop(writer);
+        // half-close: the server sees EOF, drains, replies, closes
+        stream.shutdown(Shutdown::Write).context("half-closing upload side")?;
+        let reply_lines = replies
+            .join()
+            .map_err(|_| anyhow!("reply reader thread panicked"))??;
+        Ok(NetClientReport { sent_lines, reply_lines })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::native::NativeNn;
+    use crate::perfdb::{normalize, PerfDb, Record};
+    use crate::service::ingest::{Event, STREAM_HEADER};
+    use std::io::Cursor;
+    use std::sync::Arc;
+
+    fn db() -> Arc<PerfDb> {
+        let fractions = vec![1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5];
+        let tolerant_raw = [10_000.0, 500.0, 20.0, 20.0, 4.0, 8_000.0, 2.0, 16.0];
+        let hungry_raw = [200_000.0, 40_000.0, 300.0, 300.0, 0.05, 30_000.0, 2.0, 16.0];
+        Arc::new(PerfDb {
+            fractions,
+            records: vec![
+                Record {
+                    raw: tolerant_raw,
+                    vec: normalize(&tolerant_raw),
+                    times_ns: vec![100.0, 100.5, 101.0, 102.0, 104.0, 130.0],
+                },
+                Record {
+                    raw: hungry_raw,
+                    vec: normalize(&hungry_raw),
+                    times_ns: vec![100.0, 115.0, 140.0, 180.0, 240.0, 320.0],
+                },
+            ],
+        })
+    }
+
+    fn sample_line(name: &str, interval: u32) -> String {
+        format!(
+            "sample {name} {interval} 10000 500 10000 500 1344000 1344000 20 0 20 0 100 \
+             0 0 0 0 0 0 0 0 1000000"
+        )
+    }
+
+    /// A two-session stream; `b` has no trailing close (drain must
+    /// report it anyway).
+    fn stream_text(intervals: u32) -> String {
+        let mut s = format!("{STREAM_HEADER}\n");
+        s.push_str("open a 8200 8000 2 16\n");
+        s.push_str("open b 8200 8000 2 16\n");
+        for i in 1..=intervals {
+            s.push_str(&sample_line("a", i));
+            s.push('\n');
+            s.push_str(&sample_line("b", i));
+            s.push('\n');
+        }
+        s.push_str("close a\n");
+        s
+    }
+
+    fn cfg() -> TunaConfig {
+        TunaConfig { period_s: 0.5, max_step_down: 0.04, ..TunaConfig::default() }
+    }
+
+    /// Reference rendering: the same stream through the in-process
+    /// ingestor (what `tuna serve FILE` prints).
+    fn file_mode_output(text: &str) -> String {
+        let db = db();
+        let service = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let mut ing = Ingestor::new(&service, cfg());
+        let mut out = String::new();
+        ing.ingest(Cursor::new(text), |o| out.push_str(&o.render_lines())).unwrap();
+        ing.finish_all(|o| out.push_str(&o.render_lines())).unwrap();
+        out
+    }
+
+    #[test]
+    fn tcp_round_trip_is_byte_identical_to_file_mode() {
+        let text = stream_text(20);
+        let reference = file_mode_output(&text);
+        assert!(reference.contains("decision a "));
+        assert!(reference.contains("closed b:"), "drained session must report");
+
+        let db = db();
+        let service =
+            TunerService::spawn_sharded(db.clone(), |_| Box::new(NativeNn::new(&db)), 3);
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            NetServerConfig { cfg: cfg(), max_conns: 1, ..NetServerConfig::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let (stats, client, replies) = std::thread::scope(|s| {
+            let service = &service;
+            let server = &server;
+            let srv = s.spawn(move || server.serve(service).unwrap());
+            let mut replies = String::new();
+            let client = serve_stream(&addr, Cursor::new(text.as_bytes()), |line| {
+                replies.push_str(line);
+                replies.push('\n');
+            })
+            .unwrap();
+            (srv.join().unwrap(), client, replies)
+        });
+        assert_eq!(replies, reference, "socket replies must match file-mode bytes");
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.samples, 40);
+        assert_eq!(client.sent_lines as usize, text.lines().count());
+        assert_eq!(client.reply_lines as usize, reference.lines().count());
+    }
+
+    #[test]
+    fn concurrent_connections_stay_independent() {
+        let db = db();
+        let service =
+            TunerService::spawn_sharded(db.clone(), |_| Box::new(NativeNn::new(&db)), 2);
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            NetServerConfig { cfg: cfg(), max_conns: 3, ..NetServerConfig::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stats = std::thread::scope(|s| {
+            let service = &service;
+            let server = &server;
+            let srv = s.spawn(move || server.serve(service).unwrap());
+            for c in 0..3u32 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut text = format!("open conn{c} 8200 8000 2 16\n");
+                    for i in 1..=10u32 {
+                        text.push_str(&sample_line(&format!("conn{c}"), i));
+                        text.push('\n');
+                    }
+                    text.push_str(&format!("close conn{c}\n"));
+                    let mut got_close = false;
+                    serve_stream(&addr, Cursor::new(text), |line| {
+                        got_close |= line.starts_with(&format!("closed conn{c}:"));
+                    })
+                    .unwrap();
+                    assert!(got_close, "conn{c} must get its own close report");
+                });
+            }
+            srv.join().unwrap()
+        });
+        assert_eq!(stats.connections, 3);
+        assert_eq!(stats.samples, 30);
+        assert_eq!(stats.failed, 0);
+    }
+
+    #[test]
+    fn protocol_garbage_fails_only_its_own_connection() {
+        let db = db();
+        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            NetServerConfig { cfg: cfg(), max_conns: 2, ..NetServerConfig::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stats = std::thread::scope(|s| {
+            let service = &service;
+            let server = &server;
+            let srv = s.spawn(move || server.serve(service).unwrap());
+            // bad connection: unknown verb kills it
+            serve_stream(&addr, Cursor::new("frobnicate x\n"), |_| {}).unwrap();
+            // good connection afterwards still serves
+            let mut text = String::from("open ok 8200 8000 2 16\n");
+            for i in 1..=5u32 {
+                text.push_str(&sample_line("ok", i));
+                text.push('\n');
+            }
+            text.push_str("close ok\n");
+            let mut closed = false;
+            serve_stream(&addr, Cursor::new(text), |line| {
+                closed |= line.starts_with("closed ok:");
+            })
+            .unwrap();
+            assert!(closed);
+            srv.join().unwrap()
+        });
+        assert_eq!(stats.connections, 2);
+        assert_eq!(stats.failed, 1, "the garbage connection must be the only failure");
+        assert_eq!(stats.samples, 5);
+    }
+
+    #[test]
+    fn render_lines_matches_event_protocol() {
+        // spot-check the Event writer side against the reader used by
+        // the server (`sample_line` above must stay a valid 21-field
+        // line for the other tests to mean anything)
+        let parsed = Event::parse(&sample_line("s", 3)).unwrap();
+        assert!(matches!(parsed, Some(Event::Sample { .. })));
+    }
+}

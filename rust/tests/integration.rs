@@ -21,7 +21,9 @@ use tuna::perfdb::builder::{build_database, sample_config, BuildParams};
 use tuna::perfdb::native::{dist2, NativeNn, NnQuery};
 use tuna::perfdb::{normalize, store, PerfDb};
 use tuna::runtime::XlaNn;
-use tuna::service::{IngestOutput, Ingestor, TunerService};
+use tuna::service::{
+    serve_stream, IngestOutput, Ingestor, NetServer, NetServerConfig, TunerService,
+};
 use tuna::sim::{Engine, IntervalModel, MachineModel, MigrationModel, RunResult};
 use tuna::tpp::{Tpp, Watermarks};
 use tuna::trace::{format as trace_format, gen as trace_gen};
@@ -316,6 +318,148 @@ fn serve_replay_reproduces_recorded_decisions() {
         assert_eq!(d.interval, *interval);
         assert_eq!(d.new_fm, *usable_fm);
     }
+}
+
+// ---------------------------------------------------------------------------
+// fleet-scale serving: sharded aggregation workers + network ingestion
+// ---------------------------------------------------------------------------
+
+/// Acceptance (ISSUE 10): the sharded service is bit-identical to
+/// [`TunerService::inline`] across the full matrix — worker counts
+/// {1, 3, 8} × migration models {exclusive, non-exclusive} × retune
+/// {off, observe} — in decisions, engine traces, vmstat and session
+/// reports. Session names (`workload@seed`) hash-route across workers,
+/// so the 4-session set genuinely spans the shards at 3 and 8.
+#[test]
+fn sharded_service_matrix_is_bit_identical_to_inline() {
+    let db = Arc::new(tiny_db());
+    let sessions: Vec<RunSpec> = ["BFS", "kv-drift"]
+        .iter()
+        .flat_map(|w| [1u64, 2].map(|seed| RunSpec::new(*w).with_intervals(40).with_seed(seed)))
+        .collect();
+    for migration in [MigrationModel::Exclusive, MigrationModel::non_exclusive_default()] {
+        for mode in [RetuneMode::Off, RetuneMode::Observe] {
+            let cfg = TunaConfig {
+                period_s: 1.0,
+                retune: RetuneConfig { mode, ..RetuneConfig::default() },
+                ..TunaConfig::default()
+            };
+            // reference: every session on its own inline service
+            let reference: Vec<_> = sessions
+                .iter()
+                .map(|s| {
+                    let spec = s.clone().with_migration(migration);
+                    let service =
+                        TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+                    coordinator::run_tuna_service(&spec, &service, &cfg).unwrap()
+                })
+                .collect();
+            assert!(
+                reference.iter().all(|r| !r.decisions.is_empty()),
+                "reference sessions must decide"
+            );
+            for workers in [1usize, 3, 8] {
+                let service = TunerService::spawn_sharded(
+                    db.clone(),
+                    |_| Box::new(NativeNn::new(&db)),
+                    workers,
+                );
+                assert_eq!(service.workers(), workers);
+                for (s, want) in sessions.iter().zip(&reference) {
+                    let spec = s.clone().with_migration(migration);
+                    let got = coordinator::run_tuna_service(&spec, &service, &cfg).unwrap();
+                    let ctx = format!(
+                        "{}@{} {migration:?}/{mode:?} workers={workers}",
+                        spec.workload, spec.seed
+                    );
+                    assert_decisions_bit_identical(&want.decisions, &got.decisions, &ctx);
+                    assert_eq!(
+                        run_digest(&want.result),
+                        run_digest(&got.result),
+                        "{ctx}: engine trace"
+                    );
+                    assert_eq!(want.vmstat, got.vmstat, "{ctx}: vmstat");
+                    assert_eq!(
+                        want.mean_fraction.to_bits(),
+                        got.mean_fraction.to_bits(),
+                        "{ctx}: mean fraction"
+                    );
+                    assert_eq!(
+                        want.min_fraction.to_bits(),
+                        got.min_fraction.to_bits(),
+                        "{ctx}: min fraction"
+                    );
+                    assert_eq!(want.outcomes.len(), got.outcomes.len(), "{ctx}: outcomes");
+                    assert_eq!(want.retunes, got.retunes, "{ctx}: retunes");
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance (ISSUE 10): a recorded telemetry stream served over TCP
+/// (`tuna serve --listen`, 4 aggregation workers) yields byte-identical
+/// decision lines to single-worker file replay (`tuna serve FILE`).
+#[test]
+fn net_serve_round_trip_matches_file_replay_on_recorded_streams() {
+    let db = Arc::new(tiny_db());
+    let cfg = TunaConfig { period_s: 1.0, ..TunaConfig::default() };
+
+    // record two live sessions exactly as `tuna tune --record` does
+    let mut stream = String::new();
+    for (name, seed) in [("Btree", 7u64), ("BFS", 9)] {
+        let spec = RunSpec::new(name).with_intervals(50).with_seed(seed);
+        let service = TunerService::inline(db.clone(), Box::new(NativeNn::new(&db)));
+        let live = coordinator::run_tuna_service_tapped(&spec, &service, &cfg, |ev| {
+            stream.push_str(&ev.to_line());
+            stream.push('\n');
+        })
+        .unwrap();
+        assert!(!live.decisions.is_empty());
+    }
+
+    // reference: single-worker file-mode replay, rendered with the same
+    // `IngestOutput::render_lines` the network server writes back
+    let mut file_mode = String::new();
+    {
+        let service = TunerService::spawn(db.clone(), Box::new(NativeNn::new(&db)));
+        let mut ingestor = Ingestor::new(&service, cfg.clone());
+        let mut sink = |out: IngestOutput| file_mode.push_str(&out.render_lines());
+        ingestor.ingest(stream.as_bytes(), &mut sink).unwrap();
+        ingestor.finish_all(&mut sink).unwrap();
+    }
+    assert!(file_mode.contains("decision ") && file_mode.contains("closed "));
+
+    // network: the same stream through one TCP connection against a
+    // 4-worker sharded service
+    let service =
+        TunerService::spawn_sharded(db.clone(), |_| Box::new(NativeNn::new(&db)), 4);
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetServerConfig { cfg: cfg.clone(), max_conns: 1, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut replies = String::new();
+    std::thread::scope(|scope| {
+        let server = &server;
+        let service = &service;
+        let handle = scope.spawn(move || server.serve(service).unwrap());
+        let report = serve_stream(&addr, stream.as_bytes(), |line| {
+            replies.push_str(line);
+            replies.push('\n');
+        })
+        .unwrap();
+        assert!(report.sent_lines > 0 && report.reply_lines > 0);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.samples, 100);
+    });
+    assert_eq!(
+        replies, file_mode,
+        "TCP round trip must be byte-identical to file-mode replay"
+    );
 }
 
 // ---------------------------------------------------------------------------
